@@ -1,0 +1,81 @@
+//! Fig. 1 — per-layer activation maxima across training windows:
+//! stable early, sporadic large outliers late (once alignment has
+//! progressed). Reproduced with the seeded-alignment run: a 50-step
+//! window at the start vs a 50-step window at the end of training,
+//! recording the SwiGLU-product amax per layer per step.
+
+use std::sync::Arc;
+
+use fp8_trainer::config::TrainConfig;
+use fp8_trainer::coordinator::runner::bench_steps;
+use fp8_trainer::coordinator::Trainer;
+use fp8_trainer::runtime::Runtime;
+use fp8_trainer::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let steps = bench_steps(300);
+    let window = 50usize.min(steps / 3);
+    let rt = Arc::new(Runtime::new("artifacts")?);
+    let cfg = TrainConfig {
+        size: "s1m".into(),
+        recipe: "fp8_noq3".into(), // converging config so late window exists
+        steps,
+        warmup_steps: 20,
+        lr: 8e-4,
+        weight_decay: 0.3,
+        seed_outlier_channel: true,
+        seed_outlier_gain: 3.0,
+        out_dir: "runs/bench_fig1".into(),
+        ..Default::default()
+    };
+    let mut t = Trainer::new(rt, cfg)?;
+
+    let mut csv = CsvWriter::create(
+        "results/fig1_actmax.csv",
+        &["window", "step", "layer", "swiglu_amax"],
+    )?;
+    let mut early_max = 0.0f32;
+    let mut late_max = 0.0f32;
+    let mut early_med = Vec::new();
+    let mut late_med = Vec::new();
+    for s in 0..steps {
+        let o = t.step()?;
+        let win = if s < window {
+            "early"
+        } else if s >= steps - window {
+            "late"
+        } else {
+            continue;
+        };
+        for (l, m) in o.monitor.iter().enumerate() {
+            csv.row_mixed(&[win.into(), s.to_string(), l.to_string(), m[0].to_string()])?;
+            if win == "early" {
+                early_max = early_max.max(m[0]);
+                early_med.push(m[0]);
+            } else {
+                late_max = late_max.max(m[0]);
+                late_med.push(m[0]);
+            }
+        }
+    }
+    csv.flush()?;
+    let med = |v: &mut Vec<f32>| {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    };
+    let em = med(&mut early_med);
+    let lm = med(&mut late_med);
+    println!("Fig. 1 — SwiGLU activation maxima across layers:");
+    println!("  early window: median {em:.3}, max {early_max:.3}");
+    println!("  late window:  median {lm:.3}, max {late_max:.3}");
+    println!(
+        "  late/early peak ratio: {:.1}x (paper: z-axis rescales ~10x after 200B tokens)",
+        late_max / early_max.max(1e-9)
+    );
+    assert!(
+        late_max > early_max,
+        "late-training outliers must exceed the early-window peak"
+    );
+    println!("Fig. 1 shape ✓ — data in results/fig1_actmax.csv");
+    Ok(())
+}

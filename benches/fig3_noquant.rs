@@ -1,0 +1,50 @@
+//! Fig. 3 — disabling quantization of the SwiGLU output (the w3
+//! matmul input) rescues standard FP8: the instability is located at
+//! that single tensor, not in RMSNorm/MHA/etc.
+
+use std::sync::Arc;
+
+use fp8_trainer::config::TrainConfig;
+use fp8_trainer::coordinator::runner::{bench_steps, print_summary, run_curve, write_curves_csv};
+use fp8_trainer::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let steps = bench_steps(400);
+    let rt = Arc::new(Runtime::new("artifacts")?);
+    let base = TrainConfig {
+        size: "s1m".into(),
+        steps,
+        warmup_steps: 20,
+        lr: 8e-4,
+        weight_decay: 0.3,
+        seed_outlier_channel: true,
+        seed_outlier_gain: 3.0,
+        skip_nonfinite_updates: false,
+        out_dir: "runs/bench_fig3".into(),
+        ..Default::default()
+    };
+    let mut curves = Vec::new();
+    for recipe in ["fp8_nosat", "fp8", "fp8_noq3"] {
+        println!("running {recipe} ...");
+        curves.push(run_curve(
+            &rt,
+            TrainConfig { recipe: recipe.into(), ..base.clone() },
+            5,
+            10,
+        )?);
+    }
+    write_curves_csv("results/fig3_loss.csv", &curves)?;
+    print_summary("Fig. 3 — w3-input quantization on/off", &curves);
+
+    let noq3 = &curves[2];
+    assert!(
+        noq3.diverged_at.is_none(),
+        "FP8 with SwiGLU output in BF16 must converge (paper Fig. 3)"
+    );
+    assert!(
+        curves[..2].iter().any(|c| c.diverged_at.is_some()),
+        "standard FP8 must destabilize under the outlier channel"
+    );
+    println!("Fig. 3 shape ✓ — the w3 input is the unstable tensor");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! §Perf — L3 coordinator micro/meso benchmarks: where does a training
+//! step's wall-clock go, and is the Rust side ever the bottleneck?
+//! (Target from DESIGN.md: coordinator overhead < 5% of execute time.)
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fp8_trainer::config::TrainConfig;
+use fp8_trainer::coordinator::allreduce::{allreduce_mean, global_norm};
+use fp8_trainer::coordinator::Trainer;
+use fp8_trainer::fp8::{self, E4M3};
+use fp8_trainer::runtime::Runtime;
+use fp8_trainer::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::new("artifacts")?);
+
+    // ---- end-to-end step vs pure artifact execute (s1m)
+    let cfg = TrainConfig {
+        size: "s1m".into(),
+        recipe: "fp8_full".into(),
+        steps: 1,
+        out_dir: "runs/bench_perf".into(),
+        ..Default::default()
+    };
+    let mut t = Trainer::new(rt.clone(), cfg)?;
+    t.step()?; // warm caches
+
+    let full = bench("trainer.step (s1m fp8_full)", 1, 20, Duration::from_secs(15), || {
+        t.step().unwrap();
+    });
+    full.report();
+
+    let grad = rt.load("grad_s1m_fp8_smooth")?;
+    let mut inputs: Vec<_> = t.params.tensors.to_vec();
+    inputs.push(t.scales_tensor());
+    inputs.push(t.batch_tensor(0));
+    let exec = bench("grad artifact execute only", 1, 20, Duration::from_secs(15), || {
+        grad.run(&inputs).unwrap();
+    });
+    exec.report();
+
+    let n_params = t.params.total_elems();
+
+    // ---- coordinator primitives at m100 scale (97M params)
+    let big = 97_000_000usize;
+    let mut bufs: Vec<Vec<f32>> = (0..2).map(|r| vec![r as f32 * 0.1 + 0.5; big / 8]).collect();
+    let ar = bench("allreduce_mean 2x12M f32", 1, 10, Duration::from_secs(10), || {
+        allreduce_mean(&mut bufs);
+    });
+    ar.report();
+
+    let flat = vec![0.01f32; big / 8];
+    let gn = bench("global_norm 12M f32", 1, 20, Duration::from_secs(10), || {
+        std::hint::black_box(global_norm(&flat));
+    });
+    gn.report();
+
+    let data = vec![0.0123f32; 1_000_000];
+    let pk = bench("fp8 pack 1M f32 -> u8", 1, 20, Duration::from_secs(10), || {
+        std::hint::black_box(fp8::pack_scaled(E4M3, &data));
+    });
+    pk.report();
+
+    // ---- the §Perf headline ratio
+    let overhead = (full.mean_secs() - exec.mean_secs()).max(0.0)
+        / full.mean_secs().max(1e-12);
+    println!(
+        "\ncoordinator share of step time (s1m, grad+adam+scaling+data): {:.1}%  \
+         [grad execute {:.1}ms of {:.1}ms step; adam artifact calls included in remainder]",
+        overhead * 100.0,
+        exec.mean_secs() * 1e3,
+        full.mean_secs() * 1e3
+    );
+    println!("params: {n_params}; step tokens: {}", t.tokens_per_step());
+    Ok(())
+}

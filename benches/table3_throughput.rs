@@ -1,0 +1,71 @@
+//! Table 3: throughput by precision configuration on Gaudi2.
+//!
+//! Two halves:
+//! 1. the analytic Gaudi2 model (absolute samples/s, speedup %, TFLOPS
+//!    — the paper's numbers; hardware substitution per DESIGN.md);
+//! 2. measured CPU step times for the same four configs on the s8m
+//!    preset. The CPU *cannot* show the FP8 speedup (fake-quant adds
+//!    work instead of removing it) — what it shows is the per-config
+//!    relative overhead ordering of the quantization machinery, which
+//!    is reported for transparency.
+
+use std::sync::Arc;
+
+use fp8_trainer::config::TrainConfig;
+use fp8_trainer::coordinator::runner::bench_steps;
+use fp8_trainer::coordinator::Trainer;
+use fp8_trainer::perfmodel::{throughput_table, Workload, GAUDI2};
+use fp8_trainer::runtime::Runtime;
+use fp8_trainer::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    // ---- analytic table (the paper's numbers)
+    println!("Table 3 — Gaudi2 model (paper: 12.65 / +27.0% / +33.5% / +37.1%):");
+    println!("{:34} {:>11} {:>9} {:>8}  status", "configuration", "samples/s", "speedup", "TFLOPS");
+    let mut csv = CsvWriter::create(
+        "results/table3_gaudi2.csv",
+        &["config", "samples_per_s", "speedup_pct", "tflops", "converges"],
+    )?;
+    for row in throughput_table(&GAUDI2, &Workload::llama7b(), 8.0) {
+        println!(
+            "{:34} {:>11.2} {:>8.1}% {:>8.0}  {}",
+            row.config.label(),
+            row.throughput,
+            row.speedup_pct,
+            row.tflops,
+            if row.converges { "converge" } else { "DIVERGE" }
+        );
+        csv.row_mixed(&[
+            row.config.label().into(),
+            row.throughput.to_string(),
+            row.speedup_pct.to_string(),
+            row.tflops.to_string(),
+            row.converges.to_string(),
+        ])?;
+    }
+    csv.flush()?;
+
+    // ---- measured CPU relative step times (simulation overhead)
+    let steps = bench_steps(8).min(16);
+    let rt = Arc::new(Runtime::new("artifacts")?);
+    println!("\nmeasured CPU step time (s8m, {steps} steps each; fake-quant overhead, not HPU speedup):");
+    for recipe in ["bf16", "fp8_noq3", "fp8_smooth", "fp8"] {
+        let cfg = TrainConfig {
+            size: "s8m".into(),
+            recipe: recipe.into(),
+            steps,
+            warmup_steps: 2,
+            out_dir: format!("runs/bench_table3/{recipe}"),
+            ..Default::default()
+        };
+        let mut t = Trainer::new(rt.clone(), cfg)?;
+        t.step()?; // warmup (compile/caches)
+        let t0 = std::time::Instant::now();
+        for _ in 1..steps {
+            t.step()?;
+        }
+        let per = t0.elapsed().as_secs_f64() / (steps - 1) as f64;
+        println!("  {:12} {:>8.3} s/step  {:>9.0} tok/s", recipe, per, t.tokens_per_step() as f64 / per);
+    }
+    Ok(())
+}

@@ -1,0 +1,144 @@
+//! Theorem 1 validation — the paper's analytical core, tested on the
+//! structure the proof actually establishes.
+//!
+//! With A_j = −μ⁻¹ Σ_n δ_nj σ(a2_nj) x_n x_nᵀ (the proof's symmetric
+//! matrix), the derivation's two equations are, *at any point*:
+//!
+//! * eq. I:  (w1_j − A_j w2_j) ≡ ∇w1_j / μ            — checked to
+//!   machine precision against autodiff (`id1` ≈ 0);
+//! * eq. II: (w2_j − A_j w1_j) ≡ ∇w2_j / μ + SP_j     — likewise
+//!   (`id2` ≈ 0), where SP is the σ′ term the theorem assumes away.
+//!
+//! At stationarity (∇→0) these become the paper's w1 = A w2 and
+//! w2 = A w1 + SP: so the bench (a) validates the identities exactly,
+//! (b) shows the eq.-I residual r1 shrinking as gnorm decays, and
+//! (c) shows the σ′ defect SP shrinking as the gate sharpens (τ→0 —
+//! the paper notes the proof covers every GLU variant), which is the
+//! condition under which the symmetric-eigenvector argument forces
+//! w1 → ±w2. Channel cosines are reported alongside; full alignment
+//! additionally needs the ±1-eigenspace non-degeneracy the paper
+//! observes empirically at 7B scale (see EXPERIMENTS.md).
+
+use std::sync::Arc;
+
+use fp8_trainer::coordinator::runner::bench_steps;
+use fp8_trainer::runtime::tensor::HostTensor;
+use fp8_trainer::runtime::Runtime;
+use fp8_trainer::util::csv::CsvWriter;
+use fp8_trainer::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // floor at 1500: the stationarity-trend assertions need enough SGD
+    // steps regardless of the global FP8_BENCH_STEPS budget
+    let steps = bench_steps(6_000).max(1_500);
+    let rt = Arc::new(Runtime::new("artifacts")?);
+    let art = rt.load("theorem1")?;
+    let m = &art.manifest.raw;
+    let (d, f, n_out, n) = (
+        m.usize_of("d").unwrap(),
+        m.usize_of("f").unwrap(),
+        m.usize_of("n_out").unwrap(),
+        m.usize_of("n").unwrap(),
+    );
+
+    let mut csv = CsvWriter::create(
+        "results/theorem1.csv",
+        &["tau", "step", "loss", "gnorm", "id1", "id2", "sp", "r1", "max_abs_cos"],
+    )?;
+    println!("Theorem 1 — identities + asymptotics (d={d}, f={f}, N={n}, {steps} SGD steps/τ):");
+    println!(
+        "{:>6} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "tau", "gnorm", "id1", "id2", "sp (σ')", "r1 (eq I)", "max |cos|"
+    );
+
+    let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+    let mut summary = Vec::new();
+    for &tau in &[1.0f32, 0.25, 0.1] {
+        let mu = 1e-2f32;
+        let mut rng = Rng::new(777);
+        let mut mk = |shape: &[usize], std: f32| {
+            let mut v = vec![0.0f32; shape.iter().product()];
+            rng.fill_normal(&mut v, std);
+            HostTensor::from_f32(shape, v)
+        };
+        let mut w1 = mk(&[d, f], 1.0);
+        let mut w2 = mk(&[d, f], 1.0);
+        let mut w3 = mk(&[f, n_out], 1.0 / f as f32);
+        let x = mk(&[n, d], 1.0);
+        let y = mk(&[n, n_out], 10.0);
+        let mu_t = HostTensor::scalar(mu);
+        let tau_t = HostTensor::scalar(tau);
+
+        let mut r1_early = 0.0f32;
+        let mut last = vec![0.0f32; 7];
+        let mut max_id = 0.0f32;
+        for s in 0..steps {
+            let lr = if s < steps / 2 { 5e-3 } else { 1e-3 };
+            let out = art.run(&[
+                w1.clone(),
+                w2.clone(),
+                w3.clone(),
+                x.clone(),
+                y.clone(),
+                HostTensor::scalar(lr),
+                mu_t.clone(),
+                tau_t.clone(),
+            ])?;
+            w1 = out[1].clone();
+            w2 = out[2].clone();
+            w3 = out[3].clone();
+            let corr = out[4].f32s();
+            let max_cos = corr.iter().fold(0.0f32, |a, &c| a.max(c.abs()));
+            last = vec![
+                out[0].scalar_f32(),
+                out[9].scalar_f32(),
+                mean(out[5].f32s()),
+                mean(out[6].f32s()),
+                mean(out[7].f32s()),
+                mean(out[8].f32s()),
+                max_cos,
+            ];
+            // identities hold only after δ is meaningful; track their max
+            if s > 10 {
+                max_id = max_id.max(last[2]).max(last[3]);
+            }
+            if s == 50 {
+                r1_early = last[5];
+            }
+            if s % (steps / 40).max(1) == 0 || s + 1 == steps {
+                csv.row(&[
+                    tau as f64, s as f64, last[0] as f64, last[1] as f64,
+                    last[2] as f64, last[3] as f64, last[4] as f64,
+                    last[5] as f64, last[6] as f64,
+                ])?;
+            }
+        }
+        println!(
+            "{:>6} {:>10.2e} {:>10.2e} {:>10.2e} {:>10.3} {:>10.3} {:>10.3}",
+            tau, last[1], last[2], last[3], last[4], last[5], last[6]
+        );
+        summary.push((tau, r1_early, last, max_id));
+    }
+    csv.flush()?;
+
+    for (tau, r1_early, last, max_id) in &summary {
+        // (a) the proof's algebra must match autodiff to numerical noise
+        assert!(
+            *max_id < 1e-3,
+            "tau={tau}: identity residual {max_id} — eq. I/II algebra must match autodiff"
+        );
+        // (b) approaching stationarity must shrink the eq.-I residual
+        assert!(
+            last[5] < *r1_early,
+            "tau={tau}: r1 must decrease toward stationarity ({r1_early} -> {})",
+            last[5]
+        );
+    }
+    // (c) sharpening the gate must shrink the σ′ defect (theorem's limit)
+    let sp_swish = summary[0].2[4];
+    let sp_sharp = summary[2].2[4];
+    println!("\nσ′ defect: swish(τ=1) {sp_swish:.3} -> sharp gate(τ=0.1) {sp_sharp:.3}");
+    assert!(sp_sharp < sp_swish, "σ'→0 must be realized by the sharp gate");
+    println!("Theorem 1 ✓ — proof identities verified; data in results/theorem1.csv");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+"""L2: the exported AdamW chunk update (FP8 moments, paper §5).
+
+The optimizer artifact is **model-agnostic**: it updates one flat f32
+chunk of the parameter space. The Rust coordinator range-shards the
+flat space across data-parallel workers (ZeRO-1) and streams chunks
+through this artifact; each chunk's moments get their own JIT pow2
+scale, which is strictly finer than the paper's per-tensor scaling (a
+chunk never spans more dynamic range than its parent tensor).
+
+Runtime scalars arrive in one f32[4] vector: [lr, weight_decay, step,
+grad_scale]; ``grad_scale`` folds global-norm clipping (computed by
+Rust over all shards) into the same pass. Moment formats are static
+per artifact variant (the Fig. 5 grid).
+"""
+
+import jax.numpy as jnp
+
+from .formats import FORMATS
+from .kernels.adam_fp8 import adam_fp8_pallas
+
+
+def make_adam_step(
+    m_fmt: str,
+    v_fmt: str,
+    beta1: float = 0.9,
+    beta2: float = 0.95,
+    eps: float = 1e-8,
+    use_pallas: bool = True,
+    block: int = 65536,
+):
+    """Returns adam_step(p, m, v, g, scalars[4]) -> (p', m', v').
+
+    ``m_fmt``/``v_fmt``: 'e4m3' | 'e5m2' | '' (fp32).
+    """
+    mf = FORMATS.get(m_fmt)
+    vf = FORMATS.get(v_fmt)
+
+    def adam_step(p, m, v, g, scalars):
+        lr, wd, step, grad_scale = (scalars[i] for i in range(4))
+        g = g * grad_scale
+        if use_pallas:
+            return adam_fp8_pallas(
+                p, m, v, g, lr,
+                beta1=beta1, beta2=beta2, eps=eps, weight_decay=wd,
+                step=step, m_fmt=mf, v_fmt=vf, block=block,
+            )
+        from .kernels.ref import adam_fp8_ref
+
+        return adam_fp8_ref(
+            p, m, v, g, lr,
+            beta1=beta1, beta2=beta2, eps=eps, weight_decay=wd,
+            step=step, m_fmt=mf, v_fmt=vf,
+        )
+
+    return adam_step

@@ -1,0 +1,313 @@
+"""AOT exporter: lower every artifact to HLO **text** + JSON manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact gets:
+
+* ``artifacts/<name>.hlo.txt``   — the lowered module
+* ``artifacts/<name>.manifest.json`` — input/output layout, parameter
+  init specs, scale-site table, model config, FLOPs estimate. This is
+  the single contract the Rust runtime parses; nothing about tensor
+  ordering is implicit.
+
+Artifacts are content-stamped: re-running is a no-op unless the
+``python/compile`` sources changed (``make artifacts`` idempotence).
+
+Run: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import fnmatch
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .adam import make_adam_step
+from .train_step import make_eval_step, make_grad_step, make_probe_step, make_theorem1_step
+
+# ---------------------------------------------------------------- registry
+
+# batch size per model size (training-step token counts)
+BATCH = {"tiny": 2, "s1m": 8, "s8m": 8, "m100": 2}
+
+# grad/eval graph depends only on these Recipe fields; dedupe variants
+GRAD_RECIPES = {
+    "tiny": ["bf16", "fp8", "fp8_smooth"],
+    "s1m": ["bf16", "bf16_smooth", "fp8", "fp8_nosat", "fp8_noq3",
+            "fp8_noq3_nosat", "fp8_smooth", "fp8_smooth_nosat",
+            "gelu_fp8", "gelu_bf16"],
+    "s8m": ["bf16", "fp8", "fp8_noq3", "fp8_smooth"],
+    "m100": ["bf16", "fp8_smooth"],
+}
+EVAL_RECIPES = {
+    "tiny": ["bf16"],
+    "s1m": ["bf16", "fp8_noq3", "fp8_smooth"],
+    "m100": ["fp8_smooth"],
+}
+# Adam variants: (m_fmt, v_fmt) — '' means fp32 (the Fig. 5 grid + baseline)
+ADAM_VARIANTS = [("", ""), ("e4m3", "e5m2"), ("e4m3", "e4m3"),
+                 ("e5m2", "e5m2"), ("e5m2", "e4m3")]
+ADAM_CHUNKS = [262144, 4194304]
+
+THEOREM1_SHAPE = dict(d=16, f=4, n_out=4, n=512)
+
+
+def flops_per_grad_step(cfg: M.ModelConfig, batch: int, activation: str) -> int:
+    """6·params·tokens rule (fwd 2 + bwd 4), attention excluded —
+    matches how the paper's TFLOPS column is computed."""
+    tokens = batch * cfg.seq_len
+    return 6 * cfg.param_count(activation) * tokens
+
+
+# ---------------------------------------------------------------- lowering
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_tree_specs(cfg, recipe):
+    specs = M.param_specs(cfg, recipe)
+    return {k: _spec(shape) for k, (shape, _) in specs.items()}
+
+
+def _manifest_params(cfg, recipe):
+    """Parameter entries in jax pytree-flatten order (sorted names)."""
+    specs = M.param_specs(cfg, recipe)
+    out = []
+    for k in sorted(specs):
+        shape, std = specs[k]
+        out.append({"name": k, "shape": list(shape), "init_std": std})
+    return out
+
+
+def build_grad(size: str, recipe_name: str):
+    cfg = M.SIZES[size]
+    recipe = M.RECIPES[recipe_name]
+    batch = BATCH[size]
+    ns = M.n_scale_sites(cfg)
+    fn = make_grad_step(cfg, recipe)
+    lowered = jax.jit(fn).lower(
+        _param_tree_specs(cfg, recipe),
+        _spec((ns,)),
+        _spec((batch, cfg.seq_len + 1), jnp.int32),
+    )
+    params = _manifest_params(cfg, recipe)
+    manifest = {
+        "kind": "grad",
+        "size": size,
+        "recipe": recipe_name,
+        "batch": batch,
+        "seq_len": cfg.seq_len,
+        "n_scales": ns,
+        "n_layers": cfg.n_layers,
+        "sites_per_layer": M.SITES_PER_LAYER,
+        "params": params,
+        "inputs": [f"param:{p['name']}" for p in params] + ["scales", "batch"],
+        "outputs": ["loss"] + [f"grad:{p['name']}" for p in params]
+                   + ["amax", "monitor"],
+        "monitor_shape": [cfg.n_layers, 3],
+        "model": cfg.__dict__,
+        "param_count": cfg.param_count(recipe.activation),
+        "flops_per_step": flops_per_grad_step(cfg, batch, recipe.activation),
+    }
+    return lowered, manifest
+
+
+def build_eval(size: str, recipe_name: str):
+    cfg = M.SIZES[size]
+    recipe = M.RECIPES[recipe_name]
+    batch = BATCH[size]
+    ns = M.n_scale_sites(cfg)
+    fn = make_eval_step(cfg, recipe)
+    lowered = jax.jit(fn).lower(
+        _param_tree_specs(cfg, recipe),
+        _spec((ns,)),
+        _spec((batch, cfg.seq_len + 1), jnp.int32),
+    )
+    params = _manifest_params(cfg, recipe)
+    manifest = {
+        "kind": "eval",
+        "size": size,
+        "recipe": recipe_name,
+        "batch": batch,
+        "seq_len": cfg.seq_len,
+        "n_scales": ns,
+        "params": params,
+        "inputs": [f"param:{p['name']}" for p in params] + ["scales", "batch"],
+        "outputs": ["nll_sum", "n_correct", "n_tokens"],
+        "model": cfg.__dict__,
+    }
+    return lowered, manifest
+
+
+def build_adam(m_fmt: str, v_fmt: str, chunk: int):
+    # block == chunk: one grid step. Interpret-mode pallas materializes a
+    # full-buffer dynamic-update-slice per grid step, so multi-step grids
+    # are quadratic in chunk size on CPU (measured 3.2s vs 25ms/call).
+    # On real hardware the BlockSpec would tile VMEM instead.
+    # The big (4M) perf variant lowers through the pure-jnp reference —
+    # native f8 converts vectorize far better on the runtime's XLA than
+    # the arithmetic RNE chain; the Pallas kernel path stays in the 256K
+    # variant (validated bit-identical by python/tests).
+    fn = make_adam_step(m_fmt, v_fmt, block=chunk, use_pallas=(chunk <= 262144))
+    s = _spec((chunk,))
+    lowered = jax.jit(fn).lower(s, s, s, s, _spec((4,)))
+    manifest = {
+        "kind": "adam",
+        "m_fmt": m_fmt or "fp32",
+        "v_fmt": v_fmt or "fp32",
+        "chunk": chunk,
+        "beta1": 0.9,
+        "beta2": 0.95,
+        "eps": 1e-8,
+        "inputs": ["p", "m", "v", "g", "scalars[lr,wd,step,grad_scale]"],
+        "outputs": ["p", "m", "v"],
+    }
+    return lowered, manifest
+
+
+def build_probe(size: str, layer: int):
+    cfg = M.SIZES[size]
+    recipe = M.RECIPES["bf16"]
+    batch = BATCH[size]
+    ns = M.n_scale_sites(cfg)
+    fn = make_probe_step(cfg, recipe, layer)
+    lowered = jax.jit(fn).lower(
+        _param_tree_specs(cfg, recipe),
+        _spec((ns,)),
+        _spec((batch, cfg.seq_len + 1), jnp.int32),
+    )
+    params = _manifest_params(cfg, recipe)
+    manifest = {
+        "kind": "probe",
+        "size": size,
+        "layer": layer,
+        "batch": batch,
+        "n_scales": ns,
+        "params": params,
+        "inputs": [f"param:{p['name']}" for p in params] + ["scales", "batch"],
+        "outputs": ["preact2", "product"],
+        "tokens": batch * cfg.seq_len,
+        "d_ff": cfg.d_ff,
+        "model": cfg.__dict__,
+    }
+    return lowered, manifest
+
+
+def build_theorem1():
+    sh = THEOREM1_SHAPE
+    fn = make_theorem1_step(sh["d"], sh["f"], sh["n_out"])
+    lowered = jax.jit(fn).lower(
+        _spec((sh["d"], sh["f"])),
+        _spec((sh["d"], sh["f"])),
+        _spec((sh["f"], sh["n_out"])),
+        _spec((sh["n"], sh["d"])),
+        _spec((sh["n"], sh["n_out"])),
+        _spec(()),
+        _spec(()),
+        _spec(()),
+    )
+    manifest = {
+        "kind": "theorem1",
+        **sh,
+        "inputs": ["w1", "w2", "w3", "x", "y", "lr", "mu", "tau"],
+        "outputs": ["loss", "w1", "w2", "w3", "corr", "id1", "id2", "sp", "r1", "gnorm"],
+    }
+    return lowered, manifest
+
+
+def registry():
+    """name -> builder thunk."""
+    reg = {}
+    for size, recipes in GRAD_RECIPES.items():
+        for r in recipes:
+            reg[f"grad_{size}_{r}"] = (lambda s=size, rr=r: build_grad(s, rr))
+    for size, recipes in EVAL_RECIPES.items():
+        for r in recipes:
+            reg[f"eval_{size}_{r}"] = (lambda s=size, rr=r: build_eval(s, rr))
+    for m_fmt, v_fmt in ADAM_VARIANTS:
+        for chunk in ADAM_CHUNKS:
+            mf = m_fmt or "fp32"
+            vf = v_fmt or "fp32"
+            reg[f"adam_{mf}_{vf}_c{chunk}"] = (
+                lambda m=m_fmt, v=v_fmt, c=chunk: build_adam(m, v, c)
+            )
+    for layer in range(M.SIZES["s1m"].n_layers):
+        reg[f"probe_s1m_l{layer}"] = (lambda l=layer: build_probe("s1m", l))
+    reg["theorem1"] = build_theorem1
+    return reg
+
+
+# ---------------------------------------------------------------- driver
+
+
+def _source_stamp() -> str:
+    root = pathlib.Path(__file__).parent
+    h = hashlib.sha256()
+    for p in sorted(root.rglob("*.py")):
+        h.update(p.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="*", help="glob over artifact names")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    reg = registry()
+    names = sorted(n for n in reg if fnmatch.fnmatch(n, args.only))
+    if args.list:
+        print("\n".join(names))
+        return 0
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    stamp = _source_stamp()
+
+    n_built = n_skipped = 0
+    for name in names:
+        hlo_path = out / f"{name}.hlo.txt"
+        man_path = out / f"{name}.manifest.json"
+        if not args.force and hlo_path.exists() and man_path.exists():
+            try:
+                if json.loads(man_path.read_text()).get("_stamp") == stamp:
+                    n_skipped += 1
+                    continue
+            except json.JSONDecodeError:
+                pass
+        print(f"[aot] building {name} ...", flush=True)
+        lowered, manifest = reg[name]()
+        text = to_hlo_text(lowered)
+        manifest["_stamp"] = stamp
+        hlo_path.write_text(text)
+        man_path.write_text(json.dumps(manifest, indent=1))
+        print(f"[aot]   wrote {hlo_path.name} ({len(text)//1024} KiB)", flush=True)
+        n_built += 1
+
+    print(f"[aot] done: {n_built} built, {n_skipped} up-to-date")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,170 @@
+"""FP8 format definitions and quantization primitives.
+
+Two FP8 formats standardized by Micikevicius et al. (2022) and used
+throughout the paper:
+
+* **E4M3** (4 exponent bits, 3 mantissa bits, bias 7, max 448, no inf,
+  NaN only): forward-path weights/activations and the Adam first moment.
+* **E5M2** (5 exponent bits, 2 mantissa bits, bias 15, max 57344, IEEE
+  inf/NaN): gradients and the Adam second moment (needs the extra
+  exponent bit because of the inverse-sqrt in the update).
+
+Two interchangeable quantizers are provided:
+
+* :func:`quantize_grid` — XLA's native ``convert`` to the fp8 dtype and
+  back. Fast, used on the AOT model path.
+* :func:`quantize_grid_arith` — an arithmetic round-to-nearest-even
+  implementation via int32 bit manipulation. This is the form authored
+  inside the Pallas kernels (bitcast + integer ops vectorize on the VPU)
+  and is verified bit-exact against ``quantize_grid`` by
+  ``python/tests/test_formats.py``.
+
+Both return *dequantized* float32 values lying exactly on the fp8 grid;
+the fp8-ness of a tensor in this codebase is the value grid, matching how
+Gaudi2/TE-style mixed precision keeps an f32/bf16 compute type around
+fp8 storage.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Fp8Format:
+    """Static description of an FP8 binary interchange format."""
+
+    name: str
+    exp_bits: int
+    man_bits: int
+    bias: int
+    max: float  # largest finite magnitude
+    min_normal: float  # smallest normal magnitude
+    min_subnormal: float  # smallest subnormal magnitude (= grid step at 0)
+    has_inf: bool  # E5M2 keeps IEEE inf; E4M3(FN) does not
+
+    @property
+    def dtype(self):
+        return {"e4m3": jnp.float8_e4m3fn, "e5m2": jnp.float8_e5m2}[self.name]
+
+
+E4M3 = Fp8Format(
+    name="e4m3",
+    exp_bits=4,
+    man_bits=3,
+    bias=7,
+    max=448.0,
+    min_normal=2.0**-6,
+    min_subnormal=2.0**-9,
+    has_inf=False,
+)
+
+E5M2 = Fp8Format(
+    name="e5m2",
+    exp_bits=5,
+    man_bits=2,
+    bias=15,
+    max=57344.0,
+    min_normal=2.0**-14,
+    min_subnormal=2.0**-16,
+    has_inf=True,
+)
+
+FORMATS = {"e4m3": E4M3, "e5m2": E5M2}
+
+
+def quantize_grid(x: jax.Array, fmt: Fp8Format) -> jax.Array:
+    """Round ``x`` (f32) to the fp8 value grid via native XLA convert.
+
+    Overflow follows the format semantics: E4M3 → NaN, E5M2 → ±inf
+    (matching both ml_dtypes and XLA ``convert``).
+    """
+    return x.astype(fmt.dtype).astype(jnp.float32)
+
+
+def quantize_grid_arith(x: jax.Array, fmt: Fp8Format) -> jax.Array:
+    """Arithmetic RNE rounding of f32 onto the fp8 grid.
+
+    Bit-exact equivalent of :func:`quantize_grid`, written with
+    ``bitcast_convert_type`` + integer ops only, so the identical code
+    runs inside Pallas kernels (interpret mode and, structurally, on the
+    TPU VPU).
+    """
+    assert x.dtype == jnp.float32, f"expected f32, got {x.dtype}"
+    man_shift = 23 - fmt.man_bits
+
+    i = jax.lax.bitcast_convert_type(x, jnp.int32)
+    sign = i & jnp.int32(-0x80000000)
+    mag = i & jnp.int32(0x7FFFFFFF)
+
+    # Round-to-nearest-even on the f32 mantissa, keeping man_bits bits.
+    round_bias = ((1 << (man_shift - 1)) - 1) + ((mag >> man_shift) & 1)
+    mag_r = (mag + round_bias) & ~jnp.int32((1 << man_shift) - 1)
+    v = jax.lax.bitcast_convert_type(sign | mag_r, jnp.float32)
+
+    # Subnormal region of the fp8 format: uniform grid of min_subnormal.
+    # jnp.round is round-half-to-even, matching the normal-path RNE.
+    sub = jnp.round(x / fmt.min_subnormal) * fmt.min_subnormal
+
+    absx = jnp.abs(x)
+    out = jnp.where(absx < fmt.min_normal, sub, v)
+
+    # Overflow handling (compare the *rounded* magnitude).
+    overflow = jnp.abs(v) > fmt.max
+    if fmt.has_inf:
+        ovf_val = jnp.sign(x) * jnp.inf
+    else:
+        ovf_val = jnp.float32(jnp.nan)
+    out = jnp.where(overflow, ovf_val, out)
+
+    # Non-finite inputs.
+    out = jnp.where(jnp.isnan(x), jnp.nan, out)
+    inf_val = jnp.sign(x) * jnp.inf if fmt.has_inf else jnp.float32(jnp.nan)
+    out = jnp.where(jnp.isinf(x), inf_val, out)
+    return out
+
+
+def saturate(x: jax.Array, fmt: Fp8Format) -> jax.Array:
+    """Clamp to ±fmt.max. TE-style saturating conversion applies this
+    before the grid rounding so overflow clips instead of NaN/inf-ing."""
+    return jnp.clip(x, -fmt.max, fmt.max)
+
+
+def qdq(
+    x: jax.Array,
+    fmt: Fp8Format,
+    scale: jax.Array | float = 1.0,
+    saturating: bool = True,
+) -> jax.Array:
+    """Quantize-dequantize: ``Q(x·scale)/scale`` on the fp8 grid.
+
+    ``scale`` is the (externally chosen, e.g. delayed) scaling factor
+    that positions the tensor inside the format's dynamic range.
+    ``saturating`` selects clamp-vs-NaN overflow, per recipe.
+    """
+    y = x * scale
+    if saturating:
+        y = saturate(y, fmt)
+    return quantize_grid(y, fmt) / scale
+
+
+def compute_scale(
+    amax: jax.Array, fmt: Fp8Format, margin: float = 1.0, pow2: bool = True
+) -> jax.Array:
+    """Just-in-time scale from an amax: 2^floor(log2(max/(margin·amax))).
+
+    Matches the Rust delayed-scaling policy (`rust/src/scaling/policy.rs`);
+    used where the paper computes scales just-in-time (Smooth-SwiGLU
+    channels, Adam moments). ``pow2=False`` returns the exact ratio
+    (used by the BF16 Smooth-SwiGLU study, Fig 10, where the point is
+    renormalizing channel magnitudes rather than hitting an FP8 grid).
+    """
+    amax = jnp.maximum(amax, 1e-12)
+    if not pow2:
+        return fmt.max / (margin * amax)
+    # ldexp with an integer exponent is exact; exp2 on f32 is not.
+    e = jnp.floor(jnp.log2(fmt.max / (margin * amax))).astype(jnp.int32)
+    s = jnp.ldexp(jnp.float32(1.0), e)
+    # guard against log2 rounding up across an integer boundary
+    return jnp.where(amax * s > fmt.max, s * 0.5, s)

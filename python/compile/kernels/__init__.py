@@ -1,0 +1,20 @@
+"""L1 Pallas kernels for the FP8-training hot spots.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); their BlockSpecs encode the TPU HBM↔VMEM schedule and are
+costed structurally in ``rust/src/perfmodel`` / DESIGN.md §Perf.
+"""
+
+from .adam_fp8 import adam_fp8_pallas
+from .fp8_quant import fp8_amax_pallas, fp8_qdq_pallas
+from .matmul_fp8 import fp8_matmul_pallas
+from .smooth_swiglu import smooth_swiglu_pallas, swiglu_pallas
+
+__all__ = [
+    "adam_fp8_pallas",
+    "fp8_amax_pallas",
+    "fp8_qdq_pallas",
+    "fp8_matmul_pallas",
+    "smooth_swiglu_pallas",
+    "swiglu_pallas",
+]

@@ -1,0 +1,92 @@
+"""Pallas kernel: FP8 quantize-dequantize with a per-tensor scale.
+
+The paper's FP8 recipe quantizes every matmul operand (E4M3 forward,
+E5M2 backward) with delayed per-tensor scales. On Gaudi2 this is fused
+into the MME pipeline; the TPU-style mapping here tiles the tensor
+through VMEM and applies the arithmetic RNE grid rounding on the VPU
+(integer bitcast ops — see ``formats.quantize_grid_arith``), so the
+conversion never round-trips HBM at full precision.
+
+Grid: 1-D over row-tiles. Block shape (block_rows, cols): the minor
+(lane) axis is kept whole so the VPU sees contiguous vectors.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..formats import Fp8Format, quantize_grid_arith
+
+
+def _qdq_kernel(x_ref, scale_ref, o_ref, *, fmt: Fp8Format, saturating: bool):
+    x = x_ref[...]
+    scale = scale_ref[0]
+    y = x * scale
+    if saturating:
+        y = jnp.clip(y, -fmt.max, fmt.max)
+    q = quantize_grid_arith(y, fmt)
+    o_ref[...] = q / scale
+
+
+def fp8_qdq_pallas(
+    x: jax.Array,
+    scale: jax.Array,
+    fmt: Fp8Format,
+    saturating: bool = True,
+    block_rows: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Quantize-dequantize ``x`` (2-D f32) on the fp8 grid.
+
+    ``scale`` is a shape-(1,) f32 array (the delayed scale chosen by the
+    Rust scaling manager). Returns f32 values exactly on the
+    ``Q(x·scale)/scale`` grid.
+    """
+    assert x.ndim == 2, f"expected 2-D input, got {x.shape}"
+    rows, cols = x.shape
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    kernel = functools.partial(_qdq_kernel, fmt=fmt, saturating=saturating)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(x, scale)
+
+
+def _amax_kernel(x_ref, o_ref):
+    # Per-tile amax; the host-side jnp.max over tiles completes the
+    # reduction (two-pass pattern, cf. smooth_swiglu kernel).
+    o_ref[0] = jnp.max(jnp.abs(x_ref[...]))
+
+
+def fp8_amax_pallas(x: jax.Array, block_rows: int = 128, interpret: bool = True) -> jax.Array:
+    """Tensor amax via a tiled Pallas reduction (reported to the Rust
+    delayed-scaling history alongside each quantization)."""
+    assert x.ndim == 2
+    rows, cols = x.shape
+    block_rows = min(block_rows, rows)
+    # Interpret mode NaN-pads ragged tiles; zero-pad explicitly so the
+    # reduction is unaffected (|0| never wins a max against real data).
+    rem = rows % block_rows
+    if rem:
+        x = jnp.pad(x, ((0, block_rows - rem), (0, 0)))
+        rows = x.shape[0]
+    n_tiles = pl.cdiv(rows, block_rows)
+    partial = pl.pallas_call(
+        _amax_kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles,), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return jnp.max(partial)

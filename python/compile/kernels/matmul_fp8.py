@@ -1,0 +1,78 @@
+"""Pallas kernel: tiled FP8 matmul (quantize → MXU dot → f32 accumulate).
+
+The Gaudi2 MME consumes FP8 operands with per-tensor scales and
+accumulates in f32. TPU mapping: (i, j, k) grid over (M, N, K) tiles;
+each (bm×bk) x-tile and (bk×bn) w-tile is quantized to the E4M3 grid in
+VMEM (arithmetic RNE — same VPU code as fp8_quant), fed to the MXU dot,
+and accumulated into the (bm×bn) output tile that stays resident in
+VMEM across the K loop (K is the innermost/sequential grid axis, the
+standard Pallas accumulation pattern).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..formats import E4M3, Fp8Format, quantize_grid_arith
+
+
+def _mm_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, *, fmt: Fp8Format, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    sx = sx_ref[0]
+    sw = sw_ref[0]
+    xq = quantize_grid_arith(jnp.clip(x_ref[...] * sx, -fmt.max, fmt.max), fmt) / sx
+    wq = quantize_grid_arith(jnp.clip(w_ref[...] * sw, -fmt.max, fmt.max), fmt) / sw
+    o_ref[...] += jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def fp8_matmul_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    sx: jax.Array,
+    sw: jax.Array,
+    fmt: Fp8Format = E4M3,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """``dequant(Q(x·sx)) @ dequant(Q(w·sw))`` with f32 accumulation.
+
+    ``sx``/``sw`` are shape-(1,) delayed scales from the Rust manager.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+
+    # Zero-pad ragged tiles (interpret mode NaN-pads out-of-bounds reads,
+    # which would poison the K-axis accumulation; zeros are additive
+    # identity and Q(0)=0). Padded output rows/cols are sliced away.
+    def pad_to(t, b0, b1):
+        p0 = (-t.shape[0]) % b0
+        p1 = (-t.shape[1]) % b1
+        return jnp.pad(t, ((0, p0), (0, p1))) if (p0 or p1) else t
+
+    x = pad_to(x, bm, bk)
+    w = pad_to(w, bk, bn)
+    mp, kp = x.shape
+    _, np_ = w.shape
+    grid = (pl.cdiv(mp, bm), pl.cdiv(np_, bn), pl.cdiv(kp, bk))
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, fmt=fmt, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(x, w, sx, sw)[:m, :n]

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: each function here is the
+simplest possible jnp expression of the kernel's contract, and pytest
+(``python/tests/``) asserts the Pallas implementations match bit-exactly
+(quantization grids) or to f32 tolerance (accumulations).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..formats import E4M3, E5M2, Fp8Format, compute_scale, qdq, quantize_grid, saturate
+
+
+def swish(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def swiglu(a1: jax.Array, a2: jax.Array) -> jax.Array:
+    """SwiGLU product given the two linear-branch outputs a1 = x·w1,
+    a2 = x·w2 (paper §4.1)."""
+    return a1 * swish(a2)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def fp8_quantize_ref(x: jax.Array, fmt: Fp8Format, scale, saturating: bool = True) -> jax.Array:
+    """qdq with a per-tensor scale — oracle for kernels/fp8_quant.py."""
+    return qdq(x, fmt, scale, saturating)
+
+
+def smooth_swiglu_ref(
+    a1: jax.Array, a2: jax.Array, fmt: Fp8Format = E4M3, margin: float = 1.0,
+    pow2: bool = True,
+):
+    """Oracle for the fused Smooth-SwiGLU kernel (paper eq. 3).
+
+    Returns ``(q, s)`` where ``s[i]`` is the per-channel pow2 scale from
+    the channel's JIT amax and ``q = Q(h·s)`` lies on the E4M3 grid
+    *still scaled* — the w3 matmul consumes ``q`` and folds ``s⁻¹`` into
+    its dequant (zero-cost at inference, §4.4).
+    """
+    h = swiglu(a1, a2)  # [tokens, channels]
+    amax = jnp.max(jnp.abs(h), axis=0)  # per-channel
+    s = compute_scale(amax, fmt, margin, pow2)  # [channels]
+    q = quantize_grid(saturate(h * s[None, :], fmt), fmt)
+    return q, s
+
+
+def fp8_matmul_ref(
+    x: jax.Array,
+    w: jax.Array,
+    sx,
+    sw,
+    fmt: Fp8Format = E4M3,
+) -> jax.Array:
+    """Oracle for the tiled fp8 matmul kernel: quantize both operands
+    with their scales, dequantize, accumulate in f32."""
+    xq = qdq(x, fmt, sx)
+    wq = qdq(w, fmt, sw)
+    return jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def adam_fp8_ref(
+    p: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    g: jax.Array,
+    lr,
+    beta1: float = 0.9,
+    beta2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    step=1,
+    m_fmt: Fp8Format | None = E4M3,
+    v_fmt: Fp8Format | None = E5M2,
+):
+    """Oracle for the FP8-moment Adam kernel (paper §5).
+
+    Moments are stored on an fp8 grid with a per-tensor JIT scale
+    (E4M3 for m: precision; E5M2 for v: range under the inverse sqrt).
+    ``None`` format keeps the moment in f32 (the BF16-baseline recipe).
+    Decoupled weight decay (AdamW), as Llama-2 training uses.
+    """
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    if m_fmt is not None:
+        sm = compute_scale(jnp.max(jnp.abs(m_new)), m_fmt)
+        m_new = qdq(m_new, m_fmt, sm)
+    if v_fmt is not None:
+        sv = compute_scale(jnp.max(jnp.abs(v_new)), v_fmt)
+        v_new = qdq(v_new, v_fmt, sv)
+    step = jnp.asarray(step, jnp.float32)
+    mhat = m_new / (1.0 - beta1**step)
+    vhat = v_new / (1.0 - beta2**step)
+    update = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p
+    p_new = p - lr * update
+    return p_new, m_new, v_new

@@ -1,0 +1,125 @@
+"""Pallas kernels: SwiGLU and the fused Smooth-SwiGLU (paper §4.4).
+
+Smooth-SwiGLU is the paper's core fix: the SwiGLU product
+``h = (x·w1) ⊙ swish(x·w2)`` develops per-channel outliers late in
+training (Theorem 1 weight alignment), so quantizing it with one
+delayed per-tensor scale overflows. Instead each channel i gets a
+just-in-time scale s_i from its own amax; ``Q(h·s)`` is handed to the
+w3 matmul which folds ``s⁻¹`` into its dequantization. The function is
+unchanged; only the quantization grid is per-channel.
+
+Hardware adaptation (Gaudi2 MME epilogue → TPU Pallas):
+
+* channels ride the minor/lane axis, so the per-channel |·| max is a
+  lane-parallel VPU reduce;
+* a per-channel max needs *all* tokens, so the kernel is two-pass over
+  token-tiles: pass 1 accumulates per-tile channel maxima into a small
+  [n_tiles, channels] buffer, the (cheap) cross-tile max and pow2 scale
+  happen at f32, pass 2 re-streams the tiles to scale+quantize. Each
+  pass touches a tile of VMEM once — the BlockSpec is the HBM↔VMEM
+  schedule the paper expressed with per-channel chunk parallelism.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..formats import E4M3, Fp8Format, quantize_grid_arith
+
+
+def _swiglu_kernel(a1_ref, a2_ref, o_ref):
+    a1 = a1_ref[...]
+    a2 = a2_ref[...]
+    o_ref[...] = a1 * a2 * jax.nn.sigmoid(a2)
+
+
+def swiglu_pallas(
+    a1: jax.Array, a2: jax.Array, block_rows: int = 128, interpret: bool = True
+) -> jax.Array:
+    """Plain SwiGLU product (the unstable original, for the `fp8` recipe)."""
+    assert a1.shape == a2.shape and a1.ndim == 2
+    rows, cols = a1.shape
+    block_rows = min(block_rows, rows)
+    spec = pl.BlockSpec((block_rows, cols), lambda i: (i, 0))
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=(pl.cdiv(rows, block_rows),),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(a1, a2)
+
+
+def _channel_max_kernel(a1_ref, a2_ref, o_ref):
+    a1 = a1_ref[...]
+    a2 = a2_ref[...]
+    h = a1 * a2 * jax.nn.sigmoid(a2)
+    o_ref[...] = jnp.max(jnp.abs(h), axis=0, keepdims=True)
+
+
+def _scale_quant_kernel(a1_ref, a2_ref, s_ref, o_ref, *, fmt: Fp8Format):
+    a1 = a1_ref[...]
+    a2 = a2_ref[...]
+    h = a1 * a2 * jax.nn.sigmoid(a2)
+    y = h * s_ref[...]  # s broadcasts over the token axis
+    y = jnp.clip(y, -fmt.max, fmt.max)
+    o_ref[...] = quantize_grid_arith(y, fmt)
+
+
+def smooth_swiglu_pallas(
+    a1: jax.Array,
+    a2: jax.Array,
+    fmt: Fp8Format = E4M3,
+    margin: float = 1.0,
+    block_rows: int = 128,
+    interpret: bool = True,
+    pow2: bool = True,
+):
+    """Fused Smooth-SwiGLU: returns ``(q, s)``.
+
+    ``q`` [tokens, channels] — E4M3-grid values of ``h·s`` (still
+    scaled; the consumer folds ``s⁻¹``), ``s`` [channels] — pow2
+    per-channel scales.
+    """
+    assert a1.shape == a2.shape and a1.ndim == 2
+    rows, cols = a1.shape
+    block_rows = min(block_rows, rows)
+    # Zero-pad ragged token tiles (interpret mode NaN-pads otherwise);
+    # swiglu(0,0)=0 so padded rows never win the per-channel max, and the
+    # padded output rows are sliced away below.
+    rem = rows % block_rows
+    padded_rows = rows if rem == 0 else rows + (block_rows - rem)
+    if rem:
+        a1 = jnp.pad(a1, ((0, padded_rows - rows), (0, 0)))
+        a2 = jnp.pad(a2, ((0, padded_rows - rows), (0, 0)))
+    n_tiles = pl.cdiv(padded_rows, block_rows)
+    in_spec = pl.BlockSpec((block_rows, cols), lambda i: (i, 0))
+
+    # Pass 1: per-tile, per-channel amax of the SwiGLU product.
+    tile_max = pl.pallas_call(
+        _channel_max_kernel,
+        grid=(n_tiles,),
+        in_specs=[in_spec, in_spec],
+        out_specs=pl.BlockSpec((1, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, cols), jnp.float32),
+        interpret=interpret,
+    )(a1, a2)
+
+    amax = jnp.max(tile_max, axis=0)  # [channels]
+    from ..formats import compute_scale
+
+    s = compute_scale(amax, fmt, margin, pow2)  # JIT scale, exact via ldexp
+
+    # Pass 2: scale + quantize each tile with the channel scales.
+    q = pl.pallas_call(
+        functools.partial(_scale_quant_kernel, fmt=fmt),
+        grid=(n_tiles,),
+        in_specs=[in_spec, in_spec, pl.BlockSpec((1, cols), lambda i: (0, 0))],
+        out_specs=in_spec,
+        out_shape=jax.ShapeDtypeStruct((padded_rows, cols), jnp.float32),
+        interpret=interpret,
+    )(a1, a2, s[None, :])
+    return q[:rows], s

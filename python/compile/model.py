@@ -1,0 +1,411 @@
+"""L2: Llama-style decoder with a pluggable FP8 precision recipe.
+
+Architecture follows the paper's experimental setup (Llama-2 /
+Touvron et al. 2023): pre-norm RMSNorm, rotary position embeddings,
+multi-head attention, SwiGLU MLP, untied LM head. A GeLU-MLP variant
+(GPT-3-like, paper Fig. 12) shares everything but the MLP.
+
+The **precision recipe** decides what gets quantized and how — it is
+the axis the paper's experiments sweep:
+
+=============  =====================================================
+recipe field   effect
+=============  =====================================================
+quant_linear   quantize every linear-layer matmul: E4M3 operands fwd
+               (``ste_qdq``), E5M2 cotangents bwd (``grad_q``)
+w3_input       'fp8'  — quantize the SwiGLU product with a *delayed
+                        per-tensor* scale (the configuration that
+                        diverges after enough tokens, Fig. 2a)
+               'bf16' — leave it in bf16 ("FP8(1)", Fig. 3)
+               'smooth' — per-channel JIT scaling, the paper's
+                        Smooth-SwiGLU (Fig. 4b / eq. 3)
+saturating     clamp-to-±max vs NaN-on-overflow conversion
+activation     'swiglu' | 'gelu' (Fig. 12 control)
+smooth_pallas  route Smooth-SwiGLU through the Pallas kernel (L1) or
+               the pure-jnp reference — bit-identical (tested), so
+               this is a lowering/perf choice only
+smooth_pow2    pow2 vs exact per-channel scales (exact is the BF16
+               Fig. 10 variant)
+=============  =====================================================
+
+Scale/amax plumbing: every quantization site has an index into one flat
+``scales`` f32[NS] input vector, and reports an amax into the matching
+slot of the ``amax`` f32[NS] output vector (forward sites directly,
+gradient sites via the cotangent trick in ``quant_ops.grad_q``). The
+Rust coordinator owns the amax→scale policy between steps. Site layout
+is defined here and exported in the artifact manifest so both sides
+agree by construction.
+
+Everything is f32 "master" with bf16 casts at matmuls (matching
+BF16-mixed-precision baselines); FP8 lives on value grids (DESIGN.md).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .formats import E4M3, compute_scale
+from .kernels.ref import gelu, smooth_swiglu_ref, swiglu
+from .kernels.smooth_swiglu import smooth_swiglu_pallas
+from .quant_ops import grad_q, ste_attach, ste_qdq
+
+# --------------------------------------------------------------------------
+# configuration
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description (one of DESIGN.md's size presets)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    rope_base: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self, activation: str = "swiglu") -> int:
+        d, f, L, V = self.d_model, self.d_ff, self.n_layers, self.vocab
+        per_layer = 4 * d * d + 2 * d
+        per_layer += (3 if activation == "swiglu" else 2) * d * f
+        return L * per_layer + 2 * V * d + d
+
+
+@dataclass(frozen=True)
+class Recipe:
+    """Precision recipe — the paper's experimental axis."""
+
+    name: str
+    quant_linear: bool = True
+    w3_input: str = "fp8"  # 'fp8' | 'bf16' | 'smooth'
+    saturating: bool = True
+    activation: str = "swiglu"  # 'swiglu' | 'gelu'
+    smooth_pallas: bool = True
+    smooth_pow2: bool = True
+    # Adam moment formats ('' = fp32); consumed by adam.py/aot.py.
+    m_fmt: str = "e4m3"
+    v_fmt: str = "e5m2"
+    # matmul compute dtype when not quantizing (and for attention core)
+    compute_dtype: str = "bfloat16"
+
+
+RECIPES = {
+    # paper BF16 mixed-precision baseline
+    "bf16": Recipe("bf16", quant_linear=False, w3_input="bf16", m_fmt="", v_fmt=""),
+    # BF16 + Smooth-SwiGLU (Fig. 10/11 study; exact per-channel scales)
+    "bf16_smooth": Recipe(
+        "bf16_smooth", quant_linear=False, w3_input="smooth",
+        smooth_pow2=False, m_fmt="", v_fmt="",
+    ),
+    # standard FP8 — the configuration that diverges (Fig. 2a)
+    "fp8": Recipe("fp8", m_fmt="", v_fmt=""),
+    # standard FP8 with NaN-on-overflow conversion (no saturation):
+    # the hard-failure mode of a stale delayed scale, for ablations
+    "fp8_nosat": Recipe("fp8_nosat", saturating=False, m_fmt="", v_fmt=""),
+    # FP8 with the SwiGLU output kept in BF16 — "FP8(1)" (Fig. 3)
+    "fp8_noq3": Recipe("fp8_noq3", w3_input="bf16", m_fmt="", v_fmt=""),
+    # nosat counterparts: identical overflow semantics to fp8_nosat with
+    # only the w3-input handling changed — isolates the paper's claim
+    # that the instability lives in that single tensor
+    "fp8_noq3_nosat": Recipe("fp8_noq3_nosat", w3_input="bf16",
+                             saturating=False, m_fmt="", v_fmt=""),
+    "fp8_smooth_nosat": Recipe("fp8_smooth_nosat", w3_input="smooth",
+                               saturating=False, m_fmt="", v_fmt=""),
+    # FP8 + Smooth-SwiGLU, FP32 Adam moments
+    "fp8_smooth": Recipe("fp8_smooth", w3_input="smooth", m_fmt="", v_fmt=""),
+    # the paper's full scheme — "FP8(2)": Smooth-SwiGLU + FP8 Adam moments
+    "fp8_full": Recipe("fp8_full", w3_input="smooth"),
+    # GPT-3-like GeLU control (Fig. 12): FP8 is stable without SwiGLU
+    "gelu_fp8": Recipe("gelu_fp8", activation="gelu", m_fmt="", v_fmt=""),
+    "gelu_bf16": Recipe(
+        "gelu_bf16", quant_linear=False, activation="gelu", m_fmt="", v_fmt="",
+    ),
+}
+# Fig. 5 grid: Adam moment format combinations on top of fp8_smooth.
+for _m in ("e4m3", "e5m2"):
+    for _v in ("e4m3", "e5m2"):
+        RECIPES[f"fp8_adam_{_m}_{_v}"] = Recipe(
+            f"fp8_adam_{_m}_{_v}", w3_input="smooth", m_fmt=_m, v_fmt=_v,
+        )
+
+
+SIZES = {
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_layers=2, n_heads=4,
+                        d_ff=172, seq_len=64),
+    "s1m": ModelConfig("s1m", vocab=512, d_model=128, n_layers=3, n_heads=4,
+                       d_ff=344, seq_len=128),
+    "s8m": ModelConfig("s8m", vocab=2048, d_model=256, n_layers=4, n_heads=8,
+                       d_ff=688, seq_len=128),
+    "m100": ModelConfig("m100", vocab=8192, d_model=768, n_layers=12, n_heads=12,
+                        d_ff=2048, seq_len=256),
+}
+
+# --------------------------------------------------------------------------
+# scale-site layout (shared contract with rust/src/scaling via the manifest)
+
+FWD_SITES = [
+    "x_attn", "wq", "wk", "wv", "x_wo", "wo",
+    "x_mlp", "w1", "w2", "w3_in", "w3",
+]
+GRAD_SITES = ["g_qkv", "g_wo", "g_w1", "g_w2", "g_w3"]
+SITES_PER_LAYER = FWD_SITES + GRAD_SITES
+
+
+def n_scale_sites(cfg: ModelConfig) -> int:
+    return cfg.n_layers * len(SITES_PER_LAYER)
+
+
+def site_index(layer: int, site: str) -> int:
+    return layer * len(SITES_PER_LAYER) + SITES_PER_LAYER.index(site)
+
+
+# --------------------------------------------------------------------------
+# parameter tree (canonical ordering = sorted names; the AOT manifest
+# freezes it for the Rust side)
+
+
+def param_specs(cfg: ModelConfig, recipe: Recipe) -> dict:
+    """name -> (shape, init_std). Layer params are stacked on axis 0.
+
+    init_std == -1.0 marks "init to ones" (norm gains).
+    """
+    d, f, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+    std = 0.02
+    resid_std = std / (2 * L) ** 0.5  # GPT-2-style residual-out scaling
+    specs = {
+        "embed": ((V, d), std),
+        "head": ((d, V), std),
+        "ln_f": ((d,), -1.0),
+        "ln_1": ((L, d), -1.0),
+        "ln_2": ((L, d), -1.0),
+        "wq": ((L, d, d), std),
+        "wk": ((L, d, d), std),
+        "wv": ((L, d, d), std),
+        "wo": ((L, d, d), resid_std),
+        "w1": ((L, d, f), std),
+        "w3": ((L, f, d), resid_std),
+    }
+    if recipe.activation == "swiglu":
+        specs["w2"] = ((L, d, f), std)
+    return specs
+
+
+# --------------------------------------------------------------------------
+# building blocks
+
+
+def rmsnorm(x, gain, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def rope(x, base):
+    """Rotary embeddings over [B, S, H, hd]."""
+    b, s, h, hd = x.shape
+    half = hd // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]  # [S, half]
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _cast_mm(x, w, dtype):
+    """Unquantized matmul in the recipe's compute dtype, f32 accumulate."""
+    return jnp.dot(
+        x.astype(dtype), w.astype(dtype), preferred_element_type=jnp.float32
+    )
+
+
+class _QuantCtx:
+    """Per-block quantization context: slices the flat scales vector and
+    collects forward amaxes (grad amaxes arrive via cotangents)."""
+
+    def __init__(self, scales_vec, recipe: Recipe, layer_offset):
+        self.scales = scales_vec
+        self.recipe = recipe
+        self.off = layer_offset  # dynamic: layer index * stride
+        self.fwd_amax = {}  # site_local_idx -> amax value
+
+    def scale(self, site):
+        idx = self.off + SITES_PER_LAYER.index(site)
+        return jax.lax.dynamic_index_in_dim(self.scales, idx, keepdims=False)
+
+    def report(self, site, tensor):
+        self.fwd_amax[SITES_PER_LAYER.index(site)] = jnp.max(
+            jnp.abs(jax.lax.stop_gradient(tensor))
+        ).astype(jnp.float32)
+
+    def q_fwd(self, x, site):
+        """E4M3-quantize a forward operand (and report its amax)."""
+        self.report(site, x)
+        if not self.recipe.quant_linear:
+            return x.astype(self.recipe.compute_dtype).astype(jnp.float32)
+        return ste_qdq(x, self.scale(site), "e4m3", self.recipe.saturating)
+
+    def q_grad(self, y, site):
+        """Mark a matmul output: its cotangent is E5M2-quantized in bwd."""
+        if not self.recipe.quant_linear:
+            return y
+        return grad_q(y, self.scale(site), "e5m2", self.recipe.saturating)
+
+    def amax_vector(self):
+        out = jnp.zeros((len(SITES_PER_LAYER),), jnp.float32)
+        for idx, val in self.fwd_amax.items():
+            out = out.at[idx].set(val)
+        return out
+
+
+def _mlp(x2, p, ctx: _QuantCtx, recipe: Recipe, dtype):
+    """MLP with the three w3-input handling modes (the paper's core).
+
+    Returns (mlp_out, swiglu_product) — the product is monitored for
+    the Fig. 1 activation-max signal.
+    """
+    xq = ctx.q_fwd(x2, "x_mlp")
+    w1q = ctx.q_fwd(p["w1"], "w1")
+    a1 = ctx.q_grad(jnp.dot(xq, w1q, preferred_element_type=jnp.float32), "g_w1")
+
+    if recipe.activation == "gelu":
+        h = gelu(a1)
+        ctx.report("w3_in", h)  # monitored even though GeLU never spikes
+        if recipe.quant_linear:
+            hq = ste_qdq(h, ctx.scale("w3_in"), "e4m3", recipe.saturating)
+        else:
+            hq = h.astype(dtype).astype(jnp.float32)
+        w3q = ctx.q_fwd(p["w3"], "w3")
+        y = ctx.q_grad(jnp.dot(hq, w3q, preferred_element_type=jnp.float32), "g_w3")
+        return y, h
+
+    w2q = ctx.q_fwd(p["w2"], "w2")
+    a2 = ctx.q_grad(jnp.dot(xq, w2q, preferred_element_type=jnp.float32), "g_w2")
+    h = swiglu(a1, a2)
+    ctx.report("w3_in", h)  # Fig. 1's per-layer activation-max signal
+    w3q = ctx.q_fwd(p["w3"], "w3")
+
+    if recipe.w3_input == "bf16":
+        # FP8(1): leave the SwiGLU product unquantized (Fig. 3)
+        hq = h.astype(dtype).astype(jnp.float32)
+    elif recipe.w3_input == "fp8":
+        # standard FP8: delayed per-tensor scale — the diverging path
+        hq = ste_qdq(h, ctx.scale("w3_in"), "e4m3", recipe.saturating)
+    else:  # 'smooth'
+        # Smooth-SwiGLU (eq. 3 / Fig. 4b): per-channel JIT scaling
+        shape = h.shape
+        tokens = h.reshape(-1, shape[-1])
+        if recipe.quant_linear:
+            a1f = jax.lax.stop_gradient(a1).reshape(-1, shape[-1])
+            a2f = jax.lax.stop_gradient(a2).reshape(-1, shape[-1])
+            fn = smooth_swiglu_pallas if recipe.smooth_pallas else smooth_swiglu_ref
+            q, s = fn(a1f, a2f, pow2=recipe.smooth_pow2)
+            hq = ste_attach(tokens, q / s[None, :]).reshape(shape)
+        else:
+            # BF16 variant (Fig. 10): per-channel normalize → bf16 → undo
+            amax = jnp.max(jnp.abs(jax.lax.stop_gradient(tokens)), axis=0)
+            s = compute_scale(amax, E4M3, pow2=recipe.smooth_pow2)
+            hn = (tokens * s[None, :]).astype(dtype).astype(jnp.float32) / s[None, :]
+            hq = ste_attach(tokens, hn).reshape(shape)
+    y = ctx.q_grad(jnp.dot(hq, w3q, preferred_element_type=jnp.float32), "g_w3")
+    return y, h
+
+
+def _block(x, p, scales_vec, layer_idx, cfg: ModelConfig, recipe: Recipe):
+    """One transformer block. Returns (x_out, local_amax, monitor[3])."""
+    dtype = recipe.compute_dtype
+    stride = len(SITES_PER_LAYER)
+    ctx = _QuantCtx(scales_vec, recipe, layer_idx * stride)
+
+    # ---- attention
+    xn = rmsnorm(x, p["ln_1"], cfg.norm_eps)
+    xq = ctx.q_fwd(xn, "x_attn")
+    q = ctx.q_grad(jnp.dot(xq, ctx.q_fwd(p["wq"], "wq"),
+                           preferred_element_type=jnp.float32), "g_qkv")
+    k = ctx.q_grad(jnp.dot(xq, ctx.q_fwd(p["wk"], "wk"),
+                           preferred_element_type=jnp.float32), "g_qkv")
+    v = ctx.q_grad(jnp.dot(xq, ctx.q_fwd(p["wv"], "wv"),
+                           preferred_element_type=jnp.float32), "g_qkv")
+
+    b, s, d = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    q = rope(q.reshape(b, s, nh, hd), cfg.rope_base)
+    k = rope(k.reshape(b, s, nh, hd), cfg.rope_base)
+    v = v.reshape(b, s, nh, hd)
+
+    # attention core in the compute dtype (unquantized, as in the paper)
+    att = jnp.einsum("bqhe,bkhe->bhqk", q.astype(dtype), k.astype(dtype),
+                     preferred_element_type=jnp.float32)
+    att = att / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, jnp.float32(-1e30))
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bkhe->bqhe", att.astype(dtype), v.astype(dtype),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, s, d)
+
+    oq = ctx.q_fwd(out, "x_wo")
+    woq = ctx.q_fwd(p["wo"], "wo")
+    x = x + ctx.q_grad(jnp.dot(oq, woq, preferred_element_type=jnp.float32), "g_wo")
+
+    # ---- MLP
+    x2 = rmsnorm(x, p["ln_2"], cfg.norm_eps)
+    mlp_out, h_act = _mlp(x2, p, ctx, recipe, dtype)
+    x = x + mlp_out
+
+    local_amax = ctx.amax_vector()
+    monitor = jnp.stack([
+        jnp.max(jnp.abs(jax.lax.stop_gradient(h_act))),    # SwiGLU product amax (Fig. 1)
+        jnp.max(jnp.abs(jax.lax.stop_gradient(x))),        # residual-stream amax
+        jnp.max(jnp.abs(jax.lax.stop_gradient(mlp_out))),  # MLP output amax
+    ])
+    return x, local_amax, monitor
+
+
+LAYER_PARAMS = ("ln_1", "ln_2", "wq", "wk", "wv", "wo", "w1", "w2", "w3")
+
+
+def forward(params, scales_vec, tokens, cfg: ModelConfig, recipe: Recipe):
+    """Full forward pass.
+
+    tokens: i32 [B, S]. Returns (logits f32 [B, S, V],
+    amax_vec f32 [NS], monitor f32 [L, 3]).
+    """
+    x = params["embed"][tokens]  # [B, S, d]
+
+    layer_params = {k: params[k] for k in LAYER_PARAMS if k in params}
+
+    def body(carry, inputs):
+        layer_idx, lp = inputs
+        y, local_amax, monitor = _block(carry, lp, scales_vec, layer_idx, cfg, recipe)
+        return y, (local_amax, monitor)
+
+    x, (amax_stack, monitor) = jax.lax.scan(
+        body, x, (jnp.arange(cfg.n_layers), layer_params)
+    )
+
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = _cast_mm(x, params["head"], recipe.compute_dtype)
+
+    amax_vec = amax_stack.reshape(-1)  # scan order == site-layout order
+    return logits, amax_vec, monitor
+
+
+def loss_fn(params, scales_vec, batch, cfg: ModelConfig, recipe: Recipe):
+    """Causal-LM cross entropy over batch i32 [B, S+1].
+
+    Returns (loss, (amax_vec, monitor)).
+    """
+    tokens, targets = batch[:, :-1], batch[:, 1:]
+    logits, amax_vec, monitor = forward(params, scales_vec, tokens, cfg, recipe)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll), (amax_vec, monitor)

@@ -1,0 +1,72 @@
+"""Differentiable FP8 quantization ops for the training graph.
+
+Three primitives implement the paper's mixed-precision recipe inside a
+single ``jax.grad``:
+
+* :func:`ste_qdq` — quantize-dequantize with a straight-through
+  estimator backward. Used on E4M3 forward operands (activations and
+  weights entering matmuls).
+* :func:`grad_q` — identity forward; backward quantizes the incoming
+  cotangent to E5M2 **and reports its amax as the cotangent of the
+  scale argument** (the Transformer-Engine JAX trick). One grad call
+  therefore yields parameter grads *and* every gradient amax the Rust
+  delayed-scaling manager needs, with no extra passes.
+* :func:`ste_attach` — generic straight-through value attachment,
+  used to splice Pallas-kernel outputs (e.g. Smooth-SwiGLU's per-channel
+  quantized product) into the autodiff graph.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .formats import FORMATS, qdq
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def ste_qdq(x, scale, fmt_name: str, saturating: bool = True):
+    """``Q(x·scale)/scale`` forward, identity backward (STE)."""
+    return qdq(x, FORMATS[fmt_name], scale, saturating)
+
+
+def _ste_qdq_fwd(x, scale, fmt_name, saturating):
+    return ste_qdq(x, scale, fmt_name, saturating), None
+
+
+def _ste_qdq_bwd(fmt_name, saturating, _res, g):
+    return g, jnp.zeros((), jnp.float32)
+
+
+ste_qdq.defvjp(_ste_qdq_fwd, _ste_qdq_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def grad_q(y, scale_g, fmt_name: str = "e5m2", saturating: bool = True):
+    """Identity fwd; bwd quantizes the cotangent to ``fmt_name`` with
+    ``scale_g`` and emits ``amax(g)`` as the cotangent of ``scale_g``."""
+    del scale_g
+    return y
+
+
+def _grad_q_fwd(y, scale_g, fmt_name, saturating):
+    return y, scale_g
+
+
+def _grad_q_bwd(fmt_name, saturating, scale_g, g):
+    amax_g = jnp.max(jnp.abs(g)).astype(jnp.float32)
+    gq = qdq(g, FORMATS[fmt_name], scale_g, saturating)
+    return gq, amax_g
+
+
+grad_q.defvjp(_grad_q_fwd, _grad_q_bwd)
+
+
+def ste_attach(value_diff: jax.Array, value_exact: jax.Array) -> jax.Array:
+    """Forward ``value_exact``, backward d/d(value_diff) (straight-through).
+
+    ``value_exact`` is typically a Pallas kernel output whose
+    quantization step has no useful derivative; ``value_diff`` is the
+    differentiable jnp expression of the same quantity.
+    """
+    return value_diff + jax.lax.stop_gradient(value_exact - value_diff)

@@ -1,0 +1,208 @@
+"""L2: the exported computations (gradient step, eval, probes).
+
+Three artifact families, all pure functions of their inputs so Rust owns
+every piece of state between calls:
+
+* ``grad_step`` — fwd+bwd. One ``jax.value_and_grad`` over
+  ``model.loss_fn`` returns the loss, parameter grads, forward amaxes
+  (aux) and gradient amaxes (cotangent of the scales vector — see
+  ``quant_ops.grad_q``). Note the ``g_qkv`` slot is shared by the three
+  QKV matmuls, so its cotangent is the *sum* of three amaxes — a ≤4×
+  conservative (pow2) scale, documented here and accounted for in the
+  Rust policy.
+* ``eval_step`` — fwd only: summed NLL + top-1 hits for perplexity /
+  accuracy suites (Table 2 substitute).
+* ``probe_step`` — fwd with per-layer SwiGLU pre-activations exposed
+  (|w2ᵀx| histograms, paper Fig. 9; channel data for Fig. 2c/d).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .kernels.ref import swiglu
+
+
+def make_grad_step(cfg: M.ModelConfig, recipe: M.Recipe):
+    """Returns grad_step(params_dict, scales, batch) ->
+    (loss, grads_dict, amax_vec, monitor)."""
+
+    def grad_step(params, scales_vec, batch):
+        (loss, (fwd_amax, monitor)), (gparams, gscales) = jax.value_and_grad(
+            M.loss_fn, argnums=(0, 1), has_aux=True
+        )(params, scales_vec, batch, cfg, recipe)
+        # fwd slots carry zeros in gscales and vice versa → sum merges.
+        # The `0·scales` term pins the scales argument in the jaxpr even
+        # for recipes that never quantize (bf16) — without it jax prunes
+        # the parameter and the artifact arity diverges from the manifest.
+        amax_vec = fwd_amax + gscales + 0.0 * scales_vec
+        return loss, gparams, amax_vec, monitor
+
+    return grad_step
+
+
+def make_eval_step(cfg: M.ModelConfig, recipe: M.Recipe):
+    """Returns eval_step(params, scales, batch) -> (nll_sum, n_correct, n_tokens)."""
+
+    def eval_step(params, scales_vec, batch):
+        tokens, targets = batch[:, :-1], batch[:, 1:]
+        logits, _, _ = M.forward(params, scales_vec, tokens, cfg, recipe)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        correct = (jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32)
+        n = jnp.float32(targets.size)
+        # pin the scales argument (see make_grad_step)
+        return jnp.sum(nll) + 0.0 * scales_vec[0], jnp.sum(correct), n
+
+    return eval_step
+
+
+def make_probe_step(cfg: M.ModelConfig, recipe: M.Recipe, layer: int):
+    """Returns probe_step(params, scales, batch) ->
+    (preact2 [T, ff], product [T, ff]) at the given layer.
+
+    ``preact2 = x·w2`` is the gate input whose |·| distribution Fig. 9
+    histograms; ``product`` is the SwiGLU output whose channels Fig. 2
+    tracks. Runs the unquantized forward (probing is an analysis pass).
+    """
+
+    def probe_step(params, scales_vec, batch):
+        tokens = batch[:, :-1]
+        # pin every parameter in the jaxpr (the probe's truncated forward
+        # would otherwise let jax prune head/ln_f/w3 and change the
+        # artifact arity vs the manifest)
+        pin = sum(0.0 * p.reshape(-1)[0] for p in params.values())
+        x = params["embed"][tokens] + pin
+        # run layers 0..layer-1 fully, then recompute the MLP entry of
+        # `layer` to expose its internals
+        bf16_recipe = M.RECIPES["bf16"]
+        for li in range(layer + 1):
+            lp = {k: params[k][li] for k in M.LAYER_PARAMS if k in params}
+            if li < layer:
+                x, _, _ = M._block(x, lp, scales_vec, li, cfg, bf16_recipe)
+            else:
+                # replicate the attention half to land exactly at the
+                # MLP input of the target layer, then expose internals
+                x2 = M.rmsnorm(x + _attn_half(x, lp, cfg), lp["ln_2"], cfg.norm_eps)
+                a1 = jnp.dot(x2, lp["w1"], preferred_element_type=jnp.float32)
+                a2 = jnp.dot(x2, lp["w2"], preferred_element_type=jnp.float32)
+                prod = swiglu(a1, a2)
+                f = cfg.d_ff
+                # pin the scales argument (see make_grad_step)
+                return a2.reshape(-1, f) + 0.0 * scales_vec[0], prod.reshape(-1, f)
+        raise AssertionError("unreachable")
+
+    def _attn_half(x, lp, cfg):
+        """Attention residual branch only (f32), to position the probe
+        exactly at the MLP input of the target layer."""
+        recipe = M.RECIPES["bf16"]
+        dtype = recipe.compute_dtype
+        xn = M.rmsnorm(x, lp["ln_1"], cfg.norm_eps)
+        q = jnp.dot(xn, lp["wq"], preferred_element_type=jnp.float32)
+        k = jnp.dot(xn, lp["wk"], preferred_element_type=jnp.float32)
+        v = jnp.dot(xn, lp["wv"], preferred_element_type=jnp.float32)
+        b, s, d = x.shape
+        nh, hd = cfg.n_heads, cfg.head_dim
+        q = M.rope(q.reshape(b, s, nh, hd), cfg.rope_base)
+        k = M.rope(k.reshape(b, s, nh, hd), cfg.rope_base)
+        v = v.reshape(b, s, nh, hd)
+        att = jnp.einsum("bqhe,bkhe->bhqk", q.astype(dtype), k.astype(dtype),
+                         preferred_element_type=jnp.float32) / jnp.sqrt(jnp.float32(hd))
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        att = jax.nn.softmax(jnp.where(mask[None, None], att, jnp.float32(-1e30)), axis=-1)
+        out = jnp.einsum("bhqk,bkhe->bqhe", att.astype(dtype), v.astype(dtype),
+                         preferred_element_type=jnp.float32).reshape(b, s, d)
+        return jnp.dot(out, lp["wo"], preferred_element_type=jnp.float32)
+
+    return probe_step
+
+
+# --------------------------------------------------------------------------
+# Theorem-1 microbench: a single SwiGLU layer trained with explicit ℓ2
+# (paper §4.2) — exported so the Rust harness can sweep μ and watch
+# w1 → ±w2.
+
+
+def make_theorem1_step(d: int, f: int, n_out: int):
+    """Returns step(w1, w2, w3, x, y, lr, mu, tau) ->
+    (loss, w1', w2', w3', corr, r1, r2, sp, gnorm).
+
+    Model: ŷ = (x·w1) ⊙ a2 ⊙ σ(a2/τ) @ w3 with a2 = x·w2 — SwiGLU at
+    τ=1, and a harder-gated GLU variant as τ→0 (the paper notes the
+    theorem covers all GLU variants since no Swish-specific property is
+    used; τ controls the σ′-activity the theorem assumes away).
+    Squared loss + explicit μ/2·Σ‖w‖² (paper eq. 1), full-batch SGD.
+
+    Per-channel diagnostics of Theorem 1's stationary-point structure,
+    with A_j = −μ⁻¹ Σ_n δ_nj σ(a2_nj/τ) x_n x_nᵀ:
+
+    * ``corr[j]`` — cosine(w1_j, w2_j) (the alignment observable);
+    * ``r1[j]``  — ‖A_j w2_j − w1_j‖/‖w1_j‖ (eq. I: exact at any
+      stationary point, ∝ the remaining gradient otherwise);
+    * ``r2[j]``  — ‖A_j w1_j − w2_j‖/‖w2_j‖ (eq. II *without* the σ′
+      term: its residual at stationarity measures exactly the defect
+      the theorem's σ′→0 assumption removes);
+    * ``sp[j]``  — relative magnitude of the neglected σ′ term.
+    """
+
+    def gated(a1, a2, tau):
+        return a1 * a2 * jax.nn.sigmoid(a2 / tau)
+
+    def loss(w1, w2, w3, x, y, mu, tau):
+        h = gated(x @ w1, x @ w2, tau)  # [N, f]
+        pred = h @ w3  # [N, n_out]
+        data = 0.5 * jnp.mean(jnp.sum((pred - y) ** 2, axis=-1))
+        reg = 0.5 * mu * (jnp.sum(w1**2) + jnp.sum(w2**2) + jnp.sum(w3**2))
+        return data + reg
+
+    def step(w1, w2, w3, x, y, lr, mu, tau):
+        l, grads = jax.value_and_grad(loss, argnums=(0, 1, 2))(
+            w1, w2, w3, x, y, mu, tau
+        )
+        gnorm = jnp.sqrt(sum(jnp.sum(g**2) for g in grads))
+
+        # --- Theorem-1 diagnostics at the *current* point (pre-update),
+        # so the autodiff grads above are the exact ground truth.
+        n = x.shape[0]
+        a1 = x @ w1
+        a2 = x @ w2
+        sig = jax.nn.sigmoid(a2 / tau)
+        h = a1 * a2 * sig
+        delta = ((h @ w3) - y) @ w3.T / n  # [N, f] = ∂data/∂h
+
+        # Eq. I: ∇_{w1_j} = Σ_n δ_nj g(a2_nj) x_n + μ w1_j with
+        # g(a2_nj) = σ_nj·(x_nᵀw2_j) ⇒ (w1_j − A_j w2_j) ≡ ∇_{w1_j}/μ,
+        # A_j = −μ⁻¹ Σ_n δ_nj σ_nj x_n x_nᵀ (the proof's symmetric matrix).
+        w_eq = -delta * sig / mu  # [N, f]
+
+        def apply_A(v):  # v: [d, f], applies each channel's A_j to v_j
+            xv = x @ v  # [N, f]
+            return jnp.einsum("nj,nd->dj", w_eq * xv, x)
+
+        Aw2 = apply_A(w2)
+        Aw1 = apply_A(w1)
+        n1 = jnp.linalg.norm(w1, axis=0) + 1e-12
+        n2 = jnp.linalg.norm(w2, axis=0) + 1e-12
+
+        # neglected σ′ term of eq. II: SP_j = −μ⁻¹ Σ_n δ a1 a2 σ′ x_n
+        sigp = sig * (1.0 - sig) / tau
+        sp_term = jnp.einsum("nj,nd->dj", (-delta * a2 * sigp / mu) * a1, x)
+        sp = jnp.linalg.norm(sp_term, axis=0) / n2
+
+        # exact identities (validate the proof's algebra against autodiff):
+        #   id1_j = ‖(w1_j − A_j w2_j) − ∇w1_j/μ‖ / ‖w1_j‖  → 0
+        #   id2_j = ‖(w2_j − A_j w1_j) − ∇w2_j/μ − SP_j‖ / ‖w2_j‖ → 0
+        id1 = jnp.linalg.norm((w1 - Aw2) - grads[0] / mu, axis=0) / n1
+        id2 = jnp.linalg.norm((w2 - Aw1) - grads[1] / mu - sp_term, axis=0) / n2
+
+        # eq. I residual itself (→ 0 as stationarity is approached)
+        r1 = jnp.linalg.norm(w1 - Aw2, axis=0) / n1
+
+        corr = jnp.sum(w1 * w2, axis=0) / (n1 * n2)
+
+        w1n = w1 - lr * grads[0]
+        w2n = w2 - lr * grads[1]
+        w3n = w3 - lr * grads[2]
+        return l, w1n, w2n, w3n, corr, id1, id2, sp, r1, gnorm
+
+    return step

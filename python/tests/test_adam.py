@@ -1,0 +1,101 @@
+"""Adam step builder (the exported optimizer artifact's function)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.adam import make_adam_step
+from compile.kernels.ref import adam_fp8_ref
+
+
+def _state(n=1000, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 4)
+    p = jax.random.normal(ks[0], (n,))
+    m = 0.01 * jax.random.normal(ks[1], (n,))
+    v = jnp.abs(1e-4 * jax.random.normal(ks[2], (n,)))
+    g = 0.02 * jax.random.normal(ks[3], (n,))
+    return p, m, v, g
+
+
+@pytest.mark.parametrize("fmts", [("", ""), ("e4m3", "e5m2")])
+def test_matches_ref(fmts):
+    m_fmt, v_fmt = fmts
+    p, m, v, g = _state()
+    step = make_adam_step(m_fmt, v_fmt, use_pallas=True, block=256)
+    scalars = jnp.asarray([1e-3, 0.1, 7.0, 1.0], jnp.float32)
+    p1, m1, v1 = step(p, m, v, g, scalars)
+    from compile.formats import FORMATS
+
+    p2, m2, v2 = adam_fp8_ref(
+        p, m, v, g, 1e-3, beta1=0.9, beta2=0.95, eps=1e-8, weight_decay=0.1,
+        step=7, m_fmt=FORMATS.get(m_fmt), v_fmt=FORMATS.get(v_fmt),
+    )
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-6, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6, atol=1e-12)
+
+
+def test_grad_scale_folds_clipping():
+    p, m, v, g = _state()
+    step = make_adam_step("", "")
+    full = step(p, m, v, g, jnp.asarray([1e-3, 0.0, 1.0, 1.0], jnp.float32))
+    halved = step(p, m, v, 0.5 * g, jnp.asarray([1e-3, 0.0, 1.0, 1.0], jnp.float32))
+    scaled = step(p, m, v, g, jnp.asarray([1e-3, 0.0, 1.0, 0.5], jnp.float32))
+    np.testing.assert_allclose(np.asarray(scaled[0]), np.asarray(halved[0]), rtol=1e-6)
+    with np.testing.assert_raises(AssertionError):
+        np.testing.assert_allclose(np.asarray(scaled[0]), np.asarray(full[0]), rtol=1e-6)
+
+
+def test_zero_grad_pure_decay():
+    p, m, v, _ = _state()
+    m = jnp.zeros_like(m)
+    v = jnp.zeros_like(v)
+    step = make_adam_step("", "")
+    scalars = jnp.asarray([1e-2, 0.5, 1.0, 1.0], jnp.float32)
+    p1, m1, v1 = step(p, m, v, jnp.zeros_like(p), scalars)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p) * (1 - 1e-2 * 0.5), rtol=1e-6)
+    assert float(jnp.max(jnp.abs(m1))) == 0.0
+    assert float(jnp.max(jnp.abs(v1))) == 0.0
+
+
+def test_padding_chunk_is_inert():
+    """Zero-padded tail (how Rust pads the last chunk) must stay zero."""
+    p, m, v, g = _state(512)
+    pad = 128
+    z = jnp.zeros((pad,))
+    pp = jnp.concatenate([p, z])
+    mm = jnp.concatenate([m, z])
+    vv = jnp.concatenate([v, z])
+    gg = jnp.concatenate([g, z])
+    step = make_adam_step("e4m3", "e5m2")
+    scalars = jnp.asarray([1e-3, 0.1, 3.0, 1.0], jnp.float32)
+    p1, m1, v1 = step(pp, mm, vv, gg, scalars)
+    assert float(jnp.max(jnp.abs(p1[-pad:]))) == 0.0
+    assert float(jnp.max(jnp.abs(m1[-pad:]))) == 0.0
+    # and the live head must match the unpadded run
+    p2, _, _ = step(p, m, v, g, scalars)
+    np.testing.assert_allclose(np.asarray(p1[:512]), np.asarray(p2), rtol=1e-6, atol=1e-8)
+
+
+def test_fp8_moments_drift_bounded():
+    """Long-run moment quantization must not bias the trajectory badly:
+    100 steps of fp8-moment Adam stays close to fp32-moment Adam."""
+    p, m, v, _ = _state(256, seed=3)
+    m = jnp.zeros_like(m)
+    v = jnp.zeros_like(v)
+    fp32 = make_adam_step("", "")
+    fp8 = make_adam_step("e4m3", "e5m2")
+    p_a = p_b = p
+    m_a = m_b = m
+    v_a = v_b = v
+    key = jax.random.key(9)
+    for t in range(100):
+        key, sub = jax.random.split(key)
+        g = 0.02 * jax.random.normal(sub, p.shape)
+        scal = jnp.asarray([1e-3, 0.0, t + 1.0, 1.0], jnp.float32)
+        p_a, m_a, v_a = fp32(p_a, m_a, v_a, g, scal)
+        p_b, m_b, v_b = fp8(p_b, m_b, v_b, g, scal)
+    drift = float(jnp.linalg.norm(p_a - p_b) / jnp.linalg.norm(p_a - p))
+    assert drift < 0.2, f"fp8-moment trajectory drift {drift}"

@@ -1,0 +1,99 @@
+"""AOT exporter contracts: registry coverage, manifest consistency,
+and the HLO-text interchange invariants the Rust loader depends on."""
+
+import json
+import pathlib
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile import model as M
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_registry_covers_every_experiment():
+    reg = aot.registry()
+    # every grad/eval recipe listed must resolve to a known Recipe
+    for size, recipes in {**aot.GRAD_RECIPES, **aot.EVAL_RECIPES}.items():
+        assert size in M.SIZES
+        for r in recipes:
+            assert r in M.RECIPES, r
+    # the Fig. 5 grid and the fp32 baseline must be among adam variants
+    fmts = {(m or "fp32", v or "fp32") for m, v in aot.ADAM_VARIANTS}
+    assert ("fp32", "fp32") in fmts
+    for m in ("e4m3", "e5m2"):
+        for v in ("e4m3", "e5m2"):
+            assert (m, v) in fmts
+    assert "theorem1" in reg
+
+
+def test_grad_build_manifest_is_consistent():
+    lowered, manifest = aot.build_grad("tiny", "fp8")
+    cfg = M.SIZES["tiny"]
+    assert manifest["n_scales"] == M.n_scale_sites(cfg)
+    assert manifest["sites_per_layer"] == M.SITES_PER_LAYER
+    names = [p["name"] for p in manifest["params"]]
+    assert names == sorted(names), "manifest order must be the pytree (sorted) order"
+    assert manifest["inputs"][-2:] == ["scales", "batch"]
+    assert manifest["outputs"][0] == "loss"
+    # flops: 6 * params * tokens
+    assert manifest["flops_per_step"] == 6 * manifest["param_count"] * (
+        manifest["batch"] * cfg.seq_len
+    )
+
+
+def _entry_param_count(text: str) -> int:
+    """Number of parameters of the ENTRY computation (what the Rust
+    runtime feeds positionally). In this HLO text dialect the ENTRY
+    block lists them as `%name = ty[dims] parameter(K)` instructions."""
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    count = 0
+    for l in lines[start + 1:]:
+        if l.strip() == "}":
+            break
+        if " parameter(" in l:
+            count += 1
+    return count
+
+
+def test_hlo_text_has_expected_parameter_count():
+    lowered, manifest = aot.build_grad("tiny", "bf16")
+    text = aot.to_hlo_text(lowered)
+    expected = len(manifest["params"]) + 2  # + scales + batch
+    got = _entry_param_count(text)
+    assert got == expected, f"{got} vs {expected} (argument pruning?)"
+
+
+def test_fp8_recipe_lowers_fp8_converts():
+    lowered, _ = aot.build_grad("tiny", "fp8")
+    text = aot.to_hlo_text(lowered)
+    assert "f8e4m3" in text, "forward quantization must lower to f8e4m3 converts"
+    assert "f8e5m2" in text, "gradient quantization must lower to f8e5m2 converts"
+
+
+def test_bf16_recipe_has_no_fp8_ops():
+    lowered, _ = aot.build_grad("tiny", "bf16")
+    text = aot.to_hlo_text(lowered)
+    assert "f8e4m3" not in text and "f8e5m2" not in text
+
+
+@pytest.mark.skipif(not ARTIFACTS.is_dir(), reason="run `make artifacts` first")
+def test_on_disk_manifests_parse_and_pair():
+    hlos = {p.stem.replace(".hlo", "") for p in ARTIFACTS.glob("*.hlo.txt")}
+    mans = {p.stem.replace(".manifest", "") for p in ARTIFACTS.glob("*.manifest.json")}
+    assert hlos == mans, f"unpaired artifacts: {hlos ^ mans}"
+    for p in ARTIFACTS.glob("*.manifest.json"):
+        m = json.loads(p.read_text())
+        assert "kind" in m and "inputs" in m and "outputs" in m, p.name
+
+
+def test_adam_artifact_signature():
+    lowered, manifest = aot.build_adam("e4m3", "e5m2", 1024)
+    text = aot.to_hlo_text(lowered)
+    assert manifest["chunk"] == 1024
+    assert _entry_param_count(text) == 5  # p, m, v, g, scalars

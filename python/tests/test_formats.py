@@ -1,0 +1,114 @@
+"""Format-level correctness: the arithmetic RNE quantizer must be
+bit-exact against the native XLA/ml_dtypes conversion, everywhere."""
+
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from compile.formats import E4M3, E5M2, FORMATS, compute_scale, qdq, quantize_grid, quantize_grid_arith
+
+FMTS = [E4M3, E5M2]
+NP_DTYPES = {"e4m3": ml_dtypes.float8_e4m3fn, "e5m2": ml_dtypes.float8_e5m2}
+
+
+def _assert_bitwise_equal(a, b):
+    a = np.asarray(a)
+    b = np.asarray(b)
+    both_nan = np.isnan(a) & np.isnan(b)
+    eq = (a == b) | both_nan
+    # +0/-0 compare equal under ==, which is what we want.
+    assert eq.all(), f"mismatch at {np.argwhere(~eq)[:10]}: {a[~eq][:10]} vs {b[~eq][:10]}"
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+def test_all_grid_points_roundtrip(fmt):
+    """Every representable fp8 value must be a fixed point of both quantizers."""
+    codes = np.arange(256, dtype=np.uint8).view(NP_DTYPES[fmt.name])
+    vals = codes.astype(np.float32)
+    finite = vals[np.isfinite(vals)]
+    _assert_bitwise_equal(quantize_grid(jnp.asarray(finite), fmt), finite)
+    _assert_bitwise_equal(quantize_grid_arith(jnp.asarray(finite), fmt), finite)
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+def test_midpoints_round_to_even(fmt):
+    """Exact midpoints between adjacent grid points must round to even
+    (the tie-break delayed scaling relies on for unbiasedness)."""
+    codes = np.arange(0, 254, dtype=np.uint8).view(NP_DTYPES[fmt.name])
+    vals = codes.astype(np.float32)
+    ok = np.isfinite(vals) & np.isfinite(np.roll(vals, -1)) & (np.roll(vals, -1) > vals)
+    lo, hi = vals[:-1][ok[:-1]], np.roll(vals, -1)[:-1][ok[:-1]]
+    mid = (lo.astype(np.float64) + hi) / 2.0
+    mid = mid.astype(np.float32)
+    want = mid.astype(NP_DTYPES[fmt.name]).astype(np.float32)
+    got = np.asarray(quantize_grid_arith(jnp.asarray(mid), fmt))
+    _assert_bitwise_equal(got, want)
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+def test_special_values(fmt):
+    x = np.array([0.0, -0.0, np.inf, -np.inf, np.nan, fmt.max, -fmt.max,
+                  fmt.max * 1.0001, fmt.min_subnormal / 2, fmt.min_subnormal * 0.75],
+                 np.float32)
+    want = x.astype(NP_DTYPES[fmt.name]).astype(np.float32)
+    got = np.asarray(quantize_grid_arith(jnp.asarray(x), fmt))
+    _assert_bitwise_equal(got, want)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.lists(
+        st.floats(width=32, allow_nan=True, allow_infinity=True),
+        min_size=1,
+        max_size=64,
+    ),
+    st.sampled_from(["e4m3", "e5m2"]),
+)
+def test_arith_matches_native_hypothesis(vals, fmt_name):
+    """Property: arithmetic quantizer == ml_dtypes cast for arbitrary f32."""
+    fmt = FORMATS[fmt_name]
+    x = np.asarray(vals, np.float32)
+    want = x.astype(NP_DTYPES[fmt_name]).astype(np.float32)
+    got = np.asarray(quantize_grid_arith(jnp.asarray(x), fmt))
+    _assert_bitwise_equal(got, want)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.lists(st.floats(-1e4, 1e4, width=32), min_size=1, max_size=64),
+    st.sampled_from(["e4m3", "e5m2"]),
+    st.integers(-8, 8),
+)
+def test_qdq_error_bound(vals, fmt_name, log2_scale):
+    """Property: saturating qdq error ≤ half a grid step at the value's
+    binade (the bound the paper's scaling policy is designed around)."""
+    fmt = FORMATS[fmt_name]
+    scale = float(2.0**log2_scale)
+    x = np.asarray(vals, np.float32)
+    q = np.asarray(qdq(jnp.asarray(x), fmt, scale))
+    assert np.isfinite(q).all()
+    y = np.clip(x * scale, -fmt.max, fmt.max)
+    step = np.maximum(2.0 ** (np.floor(np.log2(np.maximum(np.abs(y), fmt.min_normal)))) * 2.0**-fmt.man_bits,
+                      fmt.min_subnormal)
+    err = np.abs(q * scale - y)
+    assert (err <= step / 2 + 1e-12).all()
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+def test_compute_scale_positions_amax_in_range(fmt):
+    """scale(amax)·amax must land in (max/4, max] for pow2 scales."""
+    for amax in [1e-8, 1e-3, 0.5, 1.0, 37.0, 448.0, 1e6]:
+        s = float(compute_scale(jnp.float32(amax), fmt))
+        assert s == 2.0 ** round(np.log2(s)), "scale must be a power of two"
+        assert amax * s <= fmt.max * (1 + 1e-6)
+        assert amax * s > fmt.max / 4
+
+
+def test_formats_constants():
+    assert E4M3.max == 448.0 and E5M2.max == 57344.0
+    assert E4M3.min_subnormal == 2.0**-9 and E5M2.min_subnormal == 2.0**-16
+    assert not E4M3.has_inf and E5M2.has_inf

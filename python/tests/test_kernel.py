@@ -1,0 +1,186 @@
+"""Kernel-vs-oracle: every Pallas kernel against its pure-jnp ref.
+
+Quantization grids must match *bit-exactly*; matmul accumulation is
+compared to f32 tolerance (tile-order-dependent summation).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.formats import E4M3, E5M2, FORMATS
+from compile.kernels import (
+    adam_fp8_pallas,
+    fp8_amax_pallas,
+    fp8_matmul_pallas,
+    fp8_qdq_pallas,
+    smooth_swiglu_pallas,
+    swiglu_pallas,
+)
+from compile.kernels import ref
+
+
+def _rand(key, shape, scale=3.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+def _bitwise_equal(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return ((a == b) | (np.isnan(a) & np.isnan(b))).all()
+
+
+# ---------------------------------------------------------------- fp8_qdq
+
+
+@pytest.mark.parametrize("fmt", [E4M3, E5M2], ids=lambda f: f.name)
+@pytest.mark.parametrize("shape", [(8, 16), (128, 64), (100, 33), (1, 7)])
+def test_qdq_kernel_matches_ref(fmt, shape):
+    x = _rand(jax.random.key(0), shape, scale=100.0)
+    scale = jnp.asarray([0.5], jnp.float32)
+    got = fp8_qdq_pallas(x, scale, fmt)
+    want = ref.fp8_quantize_ref(x, fmt, scale[0])
+    assert _bitwise_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 70),
+    cols=st.integers(1, 40),
+    log2_scale=st.integers(-6, 6),
+    fmt_name=st.sampled_from(["e4m3", "e5m2"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qdq_kernel_hypothesis(rows, cols, log2_scale, fmt_name, seed):
+    fmt = FORMATS[fmt_name]
+    x = _rand(jax.random.key(seed), (rows, cols), scale=500.0)
+    scale = jnp.asarray([2.0**log2_scale], jnp.float32)
+    got = fp8_qdq_pallas(x, scale, fmt, block_rows=32)
+    want = ref.fp8_quantize_ref(x, fmt, scale[0])
+    assert _bitwise_equal(got, want)
+
+
+@pytest.mark.parametrize("shape", [(8, 16), (130, 17)])
+def test_amax_kernel(shape):
+    x = _rand(jax.random.key(3), shape, scale=7.0)
+    got = fp8_amax_pallas(x, block_rows=32)
+    assert float(got) == float(jnp.max(jnp.abs(x)))
+
+
+# ------------------------------------------------------------ swiglu path
+
+
+@pytest.mark.parametrize("shape", [(16, 32), (128, 344), (65, 11)])
+def test_swiglu_kernel_matches_ref(shape):
+    k1, k2 = jax.random.split(jax.random.key(1))
+    a1, a2 = _rand(k1, shape), _rand(k2, shape)
+    got = swiglu_pallas(a1, a2, block_rows=32)
+    want = ref.swiglu(a1, a2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(16, 32), (128, 344), (65, 11), (256, 128)])
+def test_smooth_swiglu_matches_ref(shape):
+    k1, k2 = jax.random.split(jax.random.key(2))
+    a1, a2 = _rand(k1, shape, scale=5.0), _rand(k2, shape, scale=5.0)
+    q_got, s_got = smooth_swiglu_pallas(a1, a2, block_rows=32)
+    q_want, s_want = ref.smooth_swiglu_ref(a1, a2)
+    assert _bitwise_equal(s_got, s_want)
+    assert _bitwise_equal(q_got, q_want)
+
+
+def test_smooth_swiglu_no_overflow_with_outlier():
+    """The paper's motivating property: even a 1e6 outlier channel stays
+    finite and on-grid after per-channel scaling (plain per-tensor
+    quantization would NaN the whole tensor)."""
+    k1, k2 = jax.random.split(jax.random.key(4))
+    a1, a2 = _rand(k1, (64, 16)), _rand(k2, (64, 16))
+    a1 = a1.at[:, 3].mul(1e6)  # outlier channel, as alignment produces
+    q, s = smooth_swiglu_pallas(a1, a2, block_rows=16)
+    assert np.isfinite(np.asarray(q)).all()
+    assert (np.abs(np.asarray(q)) <= E4M3.max).all()
+    # and the dequantized product still reconstructs the outlier scale
+    h = np.asarray(ref.swiglu(a1, a2))
+    deq = np.asarray(q) / np.asarray(s)[None, :]
+    rel = np.abs(deq - h) / (np.abs(h) + 1e-3)
+    assert np.median(rel) < 0.1
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(2, 80),
+    cols=st.integers(1, 48),
+    amp=st.floats(0.1, 1e4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_smooth_swiglu_hypothesis(rows, cols, amp, seed):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    a1 = _rand(k1, (rows, cols), scale=amp)
+    a2 = _rand(k2, (rows, cols))
+    q_got, s_got = smooth_swiglu_pallas(a1, a2, block_rows=32)
+    q_want, s_want = ref.smooth_swiglu_ref(a1, a2)
+    assert _bitwise_equal(s_got, s_want)
+    assert _bitwise_equal(q_got, q_want)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(16, 16, 16), (128, 64, 32), (33, 65, 17), (256, 128, 256)]
+)
+def test_fp8_matmul_matches_ref(m, k, n):
+    k1, k2 = jax.random.split(jax.random.key(5))
+    x, w = _rand(k1, (m, k)), _rand(k2, (k, n), scale=0.5)
+    sx = jnp.asarray([2.0], jnp.float32)
+    sw = jnp.asarray([8.0], jnp.float32)
+    got = fp8_matmul_pallas(x, w, sx, sw, block_m=32, block_n=32, block_k=32)
+    want = ref.fp8_matmul_ref(x, w, sx[0], sw[0])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+# ------------------------------------------------------------------ adam
+
+
+@pytest.mark.parametrize("mv", [(E4M3, E5M2), (None, None), (E4M3, E4M3), (E5M2, E5M2)],
+                         ids=["e4m3-e5m2", "fp32", "e4m3-e4m3", "e5m2-e5m2"])
+@pytest.mark.parametrize("n", [64, 4097])
+def test_adam_kernel_matches_ref(mv, n):
+    m_fmt, v_fmt = mv
+    keys = jax.random.split(jax.random.key(6), 4)
+    p, m, v, g = (_rand(k, (n,), s) for k, s in zip(keys, (1.0, 0.01, 1e-4, 0.02)))
+    v = jnp.abs(v)
+    args = dict(lr=1e-3, beta1=0.9, beta2=0.95, eps=1e-8, weight_decay=0.1, step=7,
+                m_fmt=m_fmt, v_fmt=v_fmt)
+    p1, m1, v1 = adam_fp8_pallas(p, m, v, g, block=1024, **args)
+    p2, m2, v2 = ref.adam_fp8_ref(p, m, v, g, **args)
+    if m_fmt is not None:
+        # grid snapping makes the comparison exact
+        assert _bitwise_equal(m1, m2)
+        assert _bitwise_equal(v1, v2)
+    else:
+        # pure-f32 path: XLA may fuse mul+add differently in the two
+        # lowerings, so allow last-ulp drift
+        np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-6, atol=1e-9)
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-6, atol=1e-7)
+
+
+def test_adam_moments_on_fp8_grid():
+    """Stored moments must be exactly representable in their formats —
+    this is what lets the Rust checkpointer pack them into u8."""
+    import ml_dtypes
+
+    keys = jax.random.split(jax.random.key(7), 4)
+    p, m, v, g = (_rand(k, (512,), s) for k, s in zip(keys, (1.0, 0.01, 1e-4, 0.02)))
+    v = jnp.abs(v)
+    _, m1, v1 = adam_fp8_pallas(p, m, v, g, lr=1e-3)
+    # scale by the same JIT pow2 scale and check fixed-point under cast
+    for t, fmt, np_dt in ((m1, E4M3, ml_dtypes.float8_e4m3fn), (v1, E5M2, ml_dtypes.float8_e5m2)):
+        amax = float(jnp.max(jnp.abs(t)))
+        s = 2.0 ** np.floor(np.log2(fmt.max / max(amax, 1e-12)))
+        scaled = np.asarray(t) * s
+        assert _bitwise_equal(scaled.astype(np_dt).astype(np.float32), scaled)

@@ -1,0 +1,75 @@
+"""quant_ops: STE semantics and the amax-as-cotangent trick."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.formats import E4M3, E5M2, qdq
+from compile.quant_ops import grad_q, ste_attach, ste_qdq
+
+
+def test_ste_qdq_forward_matches_qdq():
+    x = jnp.linspace(-500, 500, 101, dtype=jnp.float32)
+    s = jnp.float32(0.5)
+    np.testing.assert_array_equal(
+        np.asarray(ste_qdq(x, s, "e4m3", True)), np.asarray(qdq(x, E4M3, s))
+    )
+
+
+def test_ste_qdq_backward_is_identity():
+    x = jnp.asarray([0.3, -2.0, 100.0], jnp.float32)
+    g = jax.grad(lambda t: jnp.sum(ste_qdq(t, jnp.float32(1.0), "e4m3", True) * 3.0))(x)
+    np.testing.assert_array_equal(np.asarray(g), np.full(3, 3.0, np.float32))
+
+
+def test_ste_qdq_scale_gets_zero_cotangent():
+    x = jnp.ones((4,), jnp.float32)
+    gs = jax.grad(
+        lambda s: jnp.sum(ste_qdq(x, s, "e4m3", True)), argnums=0
+    )(jnp.float32(2.0))
+    assert float(gs) == 0.0
+
+
+def test_grad_q_forward_identity():
+    y = jnp.asarray([1.0, -2.0], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(grad_q(y, jnp.float32(4.0))), np.asarray(y))
+
+
+def test_grad_q_quantizes_cotangent_and_reports_amax():
+    y = jnp.asarray([1.0, 2.0, 3.0], jnp.float32)
+    w = jnp.asarray([0.37, -1.4, 2.2], jnp.float32)  # cotangent of y will be w
+    scale = jnp.float32(8.0)
+
+    def f(y, s):
+        return jnp.sum(grad_q(y, s, "e5m2", True) * w)
+
+    gy, gs = jax.grad(f, argnums=(0, 1))(y, scale)
+    # cotangent quantized on the E5M2 grid at the given scale
+    np.testing.assert_array_equal(np.asarray(gy), np.asarray(qdq(w, E5M2, scale)))
+    # scale cotangent = amax of the raw cotangent
+    assert float(gs) == pytest.approx(2.2)
+
+
+def test_grad_q_amax_sums_over_shared_scale():
+    # two grad_q sites sharing one scale slot -> cotangents add
+    y = jnp.ones((2,), jnp.float32)
+
+    def f(s):
+        a = grad_q(y, s, "e5m2", True) * 3.0
+        b = grad_q(y, s, "e5m2", True) * 5.0
+        return jnp.sum(a) + jnp.sum(b)
+
+    gs = jax.grad(f)(jnp.float32(1.0))
+    assert float(gs) == pytest.approx(8.0)  # 3 + 5 (documented conservatism)
+
+
+def test_ste_attach_value_and_grad():
+    xd = jnp.asarray([1.0, 2.0], jnp.float32)
+    xe = jnp.asarray([1.5, 2.5], jnp.float32)
+    out = ste_attach(xd, xe)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(xe))
+    g = jax.grad(lambda t: jnp.sum(ste_attach(t, xe) ** 2))(xd)
+    # d/dxd of sum(xe_attached²) with value xe: 2·xe (chain through value)
+    np.testing.assert_allclose(np.asarray(g), 2 * np.asarray(xe), rtol=1e-6)

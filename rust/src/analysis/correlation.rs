@@ -1,0 +1,88 @@
+//! Per-channel w1/w2 alignment statistics (paper §4.2–4.3).
+//!
+//! For SwiGLU weights w1, w2 ∈ R^{d×f} (stored row-major [d, f]),
+//! channel j is the column pair (w1[:, j], w2[:, j]). Theorem 1 says
+//! training with ℓ2 drives cos(w1_j, w2_j) → ±1 for driven channels;
+//! these are the series Figs. 2b/2c/7 plot.
+
+#[derive(Clone, Debug)]
+pub struct ChannelStats {
+    pub channel: usize,
+    pub norm1: f32,
+    pub norm2: f32,
+    pub cosine: f32,
+}
+
+/// Compute per-channel stats for column-paired weights.
+///
+/// `w1`, `w2`: row-major `[d, f]` flats.
+pub fn channel_correlations(w1: &[f32], w2: &[f32], d: usize, f: usize) -> Vec<ChannelStats> {
+    assert_eq!(w1.len(), d * f, "w1 shape");
+    assert_eq!(w2.len(), d * f, "w2 shape");
+    let mut out = Vec::with_capacity(f);
+    for j in 0..f {
+        let (mut n1, mut n2, mut dot) = (0.0f64, 0.0f64, 0.0f64);
+        for i in 0..d {
+            let a = w1[i * f + j] as f64;
+            let b = w2[i * f + j] as f64;
+            n1 += a * a;
+            n2 += b * b;
+            dot += a * b;
+        }
+        let n1 = n1.sqrt();
+        let n2 = n2.sqrt();
+        out.push(ChannelStats {
+            channel: j,
+            norm1: n1 as f32,
+            norm2: n2 as f32,
+            cosine: (dot / (n1 * n2 + 1e-30)) as f32,
+        });
+    }
+    out
+}
+
+/// The channel with the strongest |cosine|·norm product — the "outlier
+/// channel" the paper tracks.
+pub fn strongest_channel(stats: &[ChannelStats]) -> &ChannelStats {
+    stats
+        .iter()
+        .max_by(|a, b| {
+            let ka = a.cosine.abs() * a.norm1 * a.norm2;
+            let kb = b.cosine.abs() * b.norm1 * b.norm2;
+            ka.partial_cmp(&kb).unwrap()
+        })
+        .expect("non-empty stats")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_channel_detected() {
+        let d = 8;
+        let f = 3;
+        let mut w1 = vec![0.0f32; d * f];
+        let mut w2 = vec![0.0f32; d * f];
+        for i in 0..d {
+            // channel 0: aligned; channel 1: anti-aligned; channel 2: orthogonal-ish
+            w1[i * f] = i as f32 + 1.0;
+            w2[i * f] = 2.0 * (i as f32 + 1.0);
+            w1[i * f + 1] = i as f32 + 1.0;
+            w2[i * f + 1] = -(i as f32 + 1.0);
+            w1[i * f + 2] = if i % 2 == 0 { 1.0 } else { 0.0 };
+            w2[i * f + 2] = if i % 2 == 1 { 1.0 } else { 0.0 };
+        }
+        let s = channel_correlations(&w1, &w2, d, f);
+        assert!((s[0].cosine - 1.0).abs() < 1e-6);
+        assert!((s[1].cosine + 1.0).abs() < 1e-6);
+        assert!(s[2].cosine.abs() < 1e-6);
+        assert_eq!(strongest_channel(&s).channel, 0);
+    }
+
+    #[test]
+    fn norms_match() {
+        let s = channel_correlations(&[3.0, 4.0], &[1.0, 1.0], 2, 1);
+        assert!((s[0].norm1 - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,98 @@
+//! Log-scale histograms (Fig. 9's |w2ᵀx| distribution and weight-value
+//! histograms, Fig. 2d).
+
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    pub log_min: f64,
+    pub log_max: f64,
+    pub bins: Vec<u64>,
+    pub underflow: u64, // zeros / below-range
+    pub total: u64,
+}
+
+impl LogHistogram {
+    /// Natural-log bins over [e^log_min, e^log_max] (Fig. 9 uses ln x).
+    pub fn new(log_min: f64, log_max: f64, n_bins: usize) -> Self {
+        assert!(log_max > log_min && n_bins > 0);
+        Self { log_min, log_max, bins: vec![0; n_bins], underflow: 0, total: 0 }
+    }
+
+    pub fn add(&mut self, x: f32) {
+        self.total += 1;
+        let a = x.abs() as f64;
+        if a <= 0.0 {
+            self.underflow += 1;
+            return;
+        }
+        let l = a.ln();
+        if l < self.log_min {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((l - self.log_min) / (self.log_max - self.log_min)
+            * self.bins.len() as f64) as usize;
+        let idx = idx.min(self.bins.len() - 1);
+        self.bins[idx] += 1;
+    }
+
+    pub fn add_all(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    /// Fraction of samples with |x| < threshold — the paper's Fig. 9
+    /// metric (≈1% of |w2ᵀx| below 1 for the outlier channel).
+    pub fn fraction_below(&self, threshold: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let lt = threshold.ln();
+        let mut count = self.underflow;
+        for (i, &c) in self.bins.iter().enumerate() {
+            let bin_hi =
+                self.log_min + (i as f64 + 1.0) / self.bins.len() as f64 * (self.log_max - self.log_min);
+            if bin_hi <= lt {
+                count += c;
+            }
+        }
+        count as f64 / self.total as f64
+    }
+
+    /// (bin_center_ln, count) rows for CSV export.
+    pub fn rows(&self) -> Vec<(f64, u64)> {
+        let w = (self.log_max - self.log_min) / self.bins.len() as f64;
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (self.log_min + (i as f64 + 0.5) * w, c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fraction_below_threshold() {
+        let mut h = LogHistogram::new(-10.0, 10.0, 200);
+        // 10 values below 1.0, 90 above
+        for i in 0..10 {
+            h.add(0.01 + i as f32 * 0.05);
+        }
+        for i in 0..90 {
+            h.add(2.0 + i as f32);
+        }
+        let f = h.fraction_below(1.0);
+        assert!((f - 0.1).abs() < 0.03, "fraction {f}");
+    }
+
+    #[test]
+    fn zeros_counted_as_underflow() {
+        let mut h = LogHistogram::new(-5.0, 5.0, 10);
+        h.add(0.0);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.total, 1);
+    }
+}

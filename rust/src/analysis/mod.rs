@@ -1,0 +1,17 @@
+//! Analysis tooling for the paper's diagnostic figures.
+//!
+//! * [`correlation`] — per-channel w1/w2 alignment tracking (Theorem 1
+//!   empirics; Figs. 2b-d and 7).
+//! * [`histogram`] — log-scale histograms (|w2ᵀx| distribution, Fig. 9;
+//!   activation-max landscapes, Fig. 1).
+//! * [`outliers`] — channel outlier scanner over monitor traces.
+
+pub mod correlation;
+pub mod histogram;
+pub mod outliers;
+pub mod report;
+
+pub use correlation::{channel_correlations, ChannelStats};
+pub use histogram::LogHistogram;
+pub use outliers::OutlierScanner;
+pub use report::{analyze_checkpoint, analyze_run};

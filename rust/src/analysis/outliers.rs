@@ -1,0 +1,74 @@
+//! Outlier detection over monitor traces (the per-layer SwiGLU-product
+//! amax the grad artifact reports every step — Fig. 1's raw data).
+
+/// Streaming detector: keeps a robust baseline (EMA of the median-ish
+//  layer amax) and flags steps whose amax jumps a factor above it.
+#[derive(Clone, Debug)]
+pub struct OutlierScanner {
+    pub factor: f32,
+    ema: Vec<f32>,
+    alpha: f32,
+    pub events: Vec<OutlierEvent>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct OutlierEvent {
+    pub step: usize,
+    pub layer: usize,
+    pub amax: f32,
+    pub baseline: f32,
+}
+
+impl OutlierScanner {
+    pub fn new(n_layers: usize, factor: f32) -> Self {
+        Self { factor, ema: vec![0.0; n_layers], alpha: 0.05, events: Vec::new() }
+    }
+
+    /// Feed one step's per-layer amax vector; returns events fired now.
+    pub fn observe(&mut self, step: usize, per_layer_amax: &[f32]) -> usize {
+        assert_eq!(per_layer_amax.len(), self.ema.len());
+        let mut fired = 0;
+        for (layer, &a) in per_layer_amax.iter().enumerate() {
+            let base = self.ema[layer];
+            if base > 0.0 && a > base * self.factor {
+                self.events.push(OutlierEvent { step, layer, amax: a, baseline: base });
+                fired += 1;
+                // don't fold the spike into the baseline at full weight
+                self.ema[layer] = base + self.alpha * (base * self.factor - base);
+            } else {
+                self.ema[layer] = if base == 0.0 { a } else { base + self.alpha * (a - base) };
+            }
+        }
+        fired
+    }
+
+    pub fn baseline(&self, layer: usize) -> f32 {
+        self.ema[layer]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_spikes_only() {
+        let mut s = OutlierScanner::new(2, 8.0);
+        for step in 0..50 {
+            assert_eq!(s.observe(step, &[1.0, 2.0]), 0);
+        }
+        assert_eq!(s.observe(50, &[20.0, 2.0]), 1);
+        assert_eq!(s.events.len(), 1);
+        assert_eq!(s.events[0].layer, 0);
+        assert_eq!(s.events[0].step, 50);
+    }
+
+    #[test]
+    fn baseline_tracks_slow_growth() {
+        let mut s = OutlierScanner::new(1, 8.0);
+        for step in 0..200 {
+            let v = 1.0 + step as f32 * 0.01; // slow drift: never flagged
+            assert_eq!(s.observe(step, &[v]), 0, "step {step}");
+        }
+    }
+}

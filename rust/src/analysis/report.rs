@@ -1,0 +1,167 @@
+//! Checkpoint analysis reports: the offline half of the Fig. 2/7
+//! diagnostics — load a run's checkpoints, track per-channel w1/w2
+//! statistics over time, rank outlier channels, and emit CSV.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::util::csv::CsvWriter;
+
+use super::correlation::{channel_correlations, strongest_channel, ChannelStats};
+
+/// Per-checkpoint snapshot of one layer's SwiGLU weight pairing.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub step: usize,
+    pub layer: usize,
+    pub top: ChannelStats,
+    pub mean_abs_cosine: f32,
+    pub n_aligned: usize, // |cos| > 0.9
+}
+
+/// Analyze one checkpoint file: w1/w2 channel stats for every layer.
+///
+/// Works on any checkpoint written by the trainer (stacked `[L, d, f]`
+/// weights named `w1`/`w2`); errors on GeLU models (no w2).
+pub fn analyze_checkpoint(path: &Path) -> Result<Vec<Snapshot>> {
+    let ckpt = Checkpoint::load(path)?;
+    let step = ckpt.meta.get("step").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
+    let w1 = ckpt.tensor("w1")?;
+    let w2 = ckpt.tensor("w2")?;
+    // infer [L, d, f] from the model echo if present, else fail loudly
+    let (l, d, f) = dims_from_meta(&ckpt)
+        .ok_or_else(|| anyhow!("checkpoint meta lacks model dims (size '{}')",
+                               ckpt.meta.str_or("size", "?")))?;
+    if w1.len() != l * d * f {
+        return Err(anyhow!("w1 numel {} != L·d·f {}", w1.len(), l * d * f));
+    }
+    let mut out = Vec::with_capacity(l);
+    for layer in 0..l {
+        let s = layer * d * f;
+        let stats = channel_correlations(&w1[s..s + d * f], &w2[s..s + d * f], d, f);
+        let mean_abs = stats.iter().map(|c| c.cosine.abs()).sum::<f32>() / f as f32;
+        let n_aligned = stats.iter().filter(|c| c.cosine.abs() > 0.9).count();
+        out.push(Snapshot {
+            step,
+            layer,
+            top: strongest_channel(&stats).clone(),
+            mean_abs_cosine: mean_abs,
+            n_aligned,
+        });
+    }
+    Ok(out)
+}
+
+fn dims_from_meta(ckpt: &Checkpoint) -> Option<(usize, usize, usize)> {
+    // the trainer writes size names; map through the known presets
+    let (d, f, l) = match ckpt.meta.str_or("size", "").as_str() {
+        "tiny" => (64, 172, 2),
+        "s1m" => (128, 344, 3),
+        "s8m" => (256, 688, 4),
+        "m100" => (768, 2048, 12),
+        _ => return None,
+    };
+    Some((l, d, f))
+}
+
+/// Analyze every `step*.ckpt` in a run directory → CSV + the top
+/// outlier trajectory (the Fig. 2b series).
+pub fn analyze_run(dir: &Path, out_csv: &Path) -> Result<Vec<Snapshot>> {
+    let mut paths: Vec<_> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|s| s.to_str())
+                .map(|s| s.starts_with("step") && s.ends_with(".ckpt"))
+                .unwrap_or(false)
+        })
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        return Err(anyhow!("no step*.ckpt files in {}", dir.display()));
+    }
+    let mut csv = CsvWriter::create(
+        out_csv,
+        &["step", "layer", "top_channel", "norm1", "norm2", "cosine",
+          "mean_abs_cosine", "n_aligned"],
+    )?;
+    let mut all = Vec::new();
+    for p in &paths {
+        for snap in analyze_checkpoint(p)? {
+            csv.row(&[
+                snap.step as f64,
+                snap.layer as f64,
+                snap.top.channel as f64,
+                snap.top.norm1 as f64,
+                snap.top.norm2 as f64,
+                snap.top.cosine as f64,
+                snap.mean_abs_cosine as f64,
+                snap.n_aligned as f64,
+            ])?;
+            all.push(snap);
+        }
+    }
+    csv.flush()?;
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::{Dtype, Writer};
+    use crate::util::json::{obj, Json};
+    use crate::util::prng::Rng;
+
+    fn write_fake_ckpt(dir: &Path, step: usize, cosine_boost: f32) {
+        // tiny preset dims: L=2, d=64, f=172
+        let (l, d, f) = (2, 64, 172);
+        let mut rng = Rng::new(step as u64);
+        let mut w1 = vec![0.0f32; l * d * f];
+        let mut w2 = vec![0.0f32; l * d * f];
+        rng.fill_normal(&mut w1, 0.1);
+        rng.fill_normal(&mut w2, 0.1);
+        // plant an aligned channel in layer 1 whose strength grows
+        for i in 0..d {
+            let v = (i as f32 * 0.1).sin() * (2.0 + cosine_boost);
+            w1[d * f + i * f + 7] = v;
+            w2[d * f + i * f + 7] = v;
+        }
+        let meta = obj(vec![
+            ("step", Json::Num(step as f64)),
+            ("size", Json::Str("tiny".into())),
+        ]);
+        let mut w = Writer::new(&meta);
+        w.tensor("w1", Dtype::F32, &w1).tensor("w2", Dtype::F32, &w2);
+        w.finish(dir.join(format!("step{step:06}.ckpt"))).unwrap();
+    }
+
+    #[test]
+    fn finds_planted_outlier_and_orders_steps() {
+        let dir = std::env::temp_dir().join("fp8_report_test");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fake_ckpt(&dir, 10, 0.0);
+        write_fake_ckpt(&dir, 20, 5.0);
+        let out = dir.join("report.csv");
+        let snaps = analyze_run(&dir, &out).unwrap();
+        assert_eq!(snaps.len(), 4); // 2 ckpts x 2 layers
+        let late_l1 = snaps.iter().find(|s| s.step == 20 && s.layer == 1).unwrap();
+        assert_eq!(late_l1.top.channel, 7);
+        assert!(late_l1.top.cosine > 0.95);
+        assert!(late_l1.n_aligned >= 1);
+        let csv = std::fs::read_to_string(&out).unwrap();
+        assert!(csv.lines().count() == 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_empty_dir() {
+        let dir = std::env::temp_dir().join("fp8_report_empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(analyze_run(&dir, &dir.join("x.csv")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

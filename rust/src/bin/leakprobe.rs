@@ -1,0 +1,51 @@
+// Leak isolation probe for the PJRT execute path. Not shipped.
+use fp8_trainer::runtime::{HostTensor, Runtime};
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1048576.0
+}
+
+fn main() -> anyhow::Result<()> {
+    let mode = std::env::args().nth(1).unwrap_or_else(|| "all".into());
+    let iters: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let rt = Runtime::new("artifacts")?;
+    let art = rt.load("grad_tiny_bf16")?;
+    let man = &art.manifest;
+    let mut inputs: Vec<HostTensor> = man
+        .params
+        .iter()
+        .map(|p| HostTensor::zeros(&p.shape))
+        .collect();
+    inputs.push(HostTensor::zeros(&[man.n_scales.max(1)]));
+    inputs.push(HostTensor::from_i32(
+        &[man.batch, man.seq_len + 1],
+        vec![1; man.batch * (man.seq_len + 1)],
+    ));
+
+    println!("mode={mode} start rss={:.0}MB", rss_mb());
+    match mode.as_str() {
+        "literals" => {
+            for i in 0..iters * 10 {
+                for t in &inputs {
+                    std::hint::black_box(t.to_literal()?);
+                }
+                if i % 500 == 0 {
+                    println!("iter {i}: rss={:.0}MB", rss_mb());
+                }
+            }
+        }
+        _ => {
+            for i in 0..iters {
+                std::hint::black_box(art.run(&inputs)?);
+                if i % 25 == 0 {
+                    println!("iter {i}: rss={:.0}MB", rss_mb());
+                }
+            }
+        }
+    }
+    println!("end rss={:.0}MB", rss_mb());
+    Ok(())
+}

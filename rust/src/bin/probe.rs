@@ -1,0 +1,23 @@
+// Toolchain probe: check which HLO feature files parse+compile+execute
+// on xla_extension 0.5.1 CPU. Not part of the shipped library.
+fn main() {
+    let client = xla::PjRtClient::cpu().expect("client");
+    for name in ["f8", "bitcast", "scan", "bf16"] {
+        let path = format!("/tmp/probe_{name}.hlo.txt");
+        let r = (|| -> Result<String, xla::Error> {
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            let n: usize = if name == "scan" { 12 } else { 16 };
+            let data: Vec<f32> = (0..n).map(|i| i as f32 * 0.37 - 2.0).collect();
+            let dims: &[usize] = if name == "scan" { &[3, 4] } else { &[4, 4] };
+            let x = xla::Literal::vec1(&data).reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())?;
+            let result = exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+            Ok(format!("{:?}", result.shape()?))
+        })();
+        match r {
+            Ok(s) => println!("{name}: OK {s}"),
+            Err(e) => println!("{name}: FAIL {e}"),
+        }
+    }
+}

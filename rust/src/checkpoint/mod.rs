@@ -1,0 +1,259 @@
+//! Binary checkpoints with format-true storage.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "FP8CKPT1" | meta_len u32 | meta JSON |
+//!   per tensor: name_len u16 | name | dtype u8 | scale f32 | len u64 | payload
+//! ```
+//! dtype: 0 = f32, 1 = f16, 2 = bf16 (stored as u16), 3 = E4M3 u8,
+//! 4 = E5M2 u8. FP8 payloads are **real bytes** — checkpoint sizes are
+//! the Table 4 measurement, and the w1/w2 correlation analysis
+//! (Figs. 2, 7) reads checkpoints through this module.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::fp8::{self, E4M3, E5M2};
+use crate::util::json::Json;
+use crate::util::{bf16_round, f16_bits_to_f32, f32_to_f16_bits};
+
+const MAGIC: &[u8; 8] = b"FP8CKPT1";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F16,
+    Bf16,
+    E4M3,
+    E5M2,
+}
+
+impl Dtype {
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "f16" => Dtype::F16,
+            "bf16" => Dtype::Bf16,
+            "e4m3" => Dtype::E4M3,
+            "e5m2" => Dtype::E5M2,
+            _ => bail!("unknown checkpoint dtype '{s}'"),
+        })
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::F16 => 1,
+            Dtype::Bf16 => 2,
+            Dtype::E4M3 => 3,
+            Dtype::E5M2 => 4,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => Dtype::F32,
+            1 => Dtype::F16,
+            2 => Dtype::Bf16,
+            3 => Dtype::E4M3,
+            4 => Dtype::E5M2,
+            _ => bail!("bad dtype code {c}"),
+        })
+    }
+
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F16 | Dtype::Bf16 => 2,
+            Dtype::E4M3 | Dtype::E5M2 => 1,
+        }
+    }
+}
+
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new(meta: &Json) -> Self {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        let meta_s = meta.to_string();
+        buf.extend_from_slice(&(meta_s.len() as u32).to_le_bytes());
+        buf.extend_from_slice(meta_s.as_bytes());
+        Self { buf }
+    }
+
+    pub fn tensor(&mut self, name: &str, dtype: Dtype, data: &[f32]) -> &mut Self {
+        self.buf.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        self.buf.extend_from_slice(name.as_bytes());
+        self.buf.push(dtype.code());
+        let (scale, payload): (f32, Vec<u8>) = match dtype {
+            Dtype::F32 => (1.0, data.iter().flat_map(|x| x.to_le_bytes()).collect()),
+            Dtype::F16 => (
+                1.0,
+                data.iter().flat_map(|&x| f32_to_f16_bits(x).to_le_bytes()).collect(),
+            ),
+            Dtype::Bf16 => (
+                1.0,
+                data.iter()
+                    .flat_map(|&x| ((bf16_round(x).to_bits() >> 16) as u16).to_le_bytes())
+                    .collect(),
+            ),
+            Dtype::E4M3 => {
+                let (b, s) = fp8::pack_scaled(E4M3, data);
+                (s, b)
+            }
+            Dtype::E5M2 => {
+                let (b, s) = fp8::pack_scaled(E5M2, data);
+                (s, b)
+            }
+        };
+        self.buf.extend_from_slice(&scale.to_le_bytes());
+        self.buf.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        self.buf.extend_from_slice(&payload);
+        self
+    }
+
+    pub fn finish<P: AsRef<Path>>(&self, path: P) -> Result<u64> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        f.write_all(&self.buf)?;
+        Ok(self.buf.len() as u64)
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+pub struct Checkpoint {
+    pub meta: Json,
+    pub tensors: BTreeMap<String, (Dtype, Vec<f32>)>,
+    pub file_bytes: u64,
+}
+
+impl Checkpoint {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let mut f = std::fs::File::open(&path)
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        let file_bytes = buf.len() as u64;
+        if buf.len() < 12 || &buf[..8] != MAGIC {
+            bail!("not an FP8CKPT1 file");
+        }
+        let meta_len = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+        let mut i = 12 + meta_len;
+        let meta = Json::parse(
+            std::str::from_utf8(&buf[12..i]).context("meta utf8")?,
+        )
+        .map_err(|e| anyhow!("meta json: {e}"))?;
+
+        let mut tensors = BTreeMap::new();
+        while i < buf.len() {
+            let name_len = u16::from_le_bytes(buf[i..i + 2].try_into().unwrap()) as usize;
+            i += 2;
+            let name = String::from_utf8(buf[i..i + name_len].to_vec())?;
+            i += name_len;
+            let dtype = Dtype::from_code(buf[i])?;
+            i += 1;
+            let scale = f32::from_le_bytes(buf[i..i + 4].try_into().unwrap());
+            i += 4;
+            let n = u64::from_le_bytes(buf[i..i + 8].try_into().unwrap()) as usize;
+            i += 8;
+            let nbytes = n * dtype.bytes_per_elem();
+            if i + nbytes > buf.len() {
+                bail!("truncated tensor '{name}'");
+            }
+            let payload = &buf[i..i + nbytes];
+            i += nbytes;
+            let data: Vec<f32> = match dtype {
+                Dtype::F32 => payload
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+                Dtype::F16 => payload
+                    .chunks_exact(2)
+                    .map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+                    .collect(),
+                Dtype::Bf16 => payload
+                    .chunks_exact(2)
+                    .map(|c| {
+                        f32::from_bits((u16::from_le_bytes(c.try_into().unwrap()) as u32) << 16)
+                    })
+                    .collect(),
+                Dtype::E4M3 => payload.iter().map(|&b| E4M3.decode(b) / scale).collect(),
+                Dtype::E5M2 => payload.iter().map(|&b| E5M2.decode(b) / scale).collect(),
+            };
+            tensors.insert(name, (dtype, data));
+        }
+        Ok(Self { meta, tensors, file_bytes })
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&[f32]> {
+        self.tensors
+            .get(name)
+            .map(|(_, d)| d.as_slice())
+            .ok_or_else(|| anyhow!("checkpoint missing tensor '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let dir = std::env::temp_dir().join("fp8_ckpt_test");
+        let path = dir.join("t.ckpt");
+        let data: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.037).collect();
+        let meta = obj(vec![("step", Json::Num(7.0))]);
+        let mut w = Writer::new(&meta);
+        w.tensor("a_f32", Dtype::F32, &data)
+            .tensor("b_f16", Dtype::F16, &data)
+            .tensor("c_bf16", Dtype::Bf16, &data)
+            .tensor("d_e4m3", Dtype::E4M3, &data)
+            .tensor("e_e5m2", Dtype::E5M2, &data);
+        w.finish(&path).unwrap();
+
+        let c = Checkpoint::load(&path).unwrap();
+        assert_eq!(c.meta.f64_of("step").unwrap(), 7.0);
+        assert_eq!(c.tensor("a_f32").unwrap(), data.as_slice());
+        for (name, tol) in [("b_f16", 1e-3), ("c_bf16", 1e-2), ("d_e4m3", 0.07), ("e_e5m2", 0.13)] {
+            let got = c.tensor(name).unwrap();
+            for (x, y) in data.iter().zip(got) {
+                assert!((x - y).abs() <= x.abs() as f64 as f32 * tol as f32 + 1e-4,
+                        "{name}: {x} vs {y}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fp8_payload_is_one_byte_per_elem() {
+        let data = vec![0.5f32; 1000];
+        let mut w = Writer::new(&obj(vec![]));
+        let before = w.size_bytes();
+        w.tensor("m", Dtype::E4M3, &data);
+        let delta = w.size_bytes() - before;
+        assert!(delta < 1000 + 64, "fp8 tensor must store ~1 byte/elem, got {delta}");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("fp8_ckpt_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"nope").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

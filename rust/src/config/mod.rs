@@ -1,0 +1,239 @@
+//! Configuration system: a TOML-subset parser plus typed configs for
+//! model size, precision recipe, and the training run.
+//!
+//! Configs compose like the launcher configs of Megatron/MaxText-style
+//! frameworks: a `[model]`/`[train]`/`[precision]` file (see
+//! `configs/*.toml`) plus CLI `key=value` overrides.
+
+pub mod toml;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+use toml::TomlValue;
+
+/// The paper's precision configurations (mirrors `python/compile/model.py`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecipeConfig {
+    /// recipe name as exported (selects the grad/eval artifact)
+    pub name: String,
+    /// Adam moment formats: "fp32" | "e4m3" | "e5m2" (selects adam artifact)
+    pub m_fmt: String,
+    pub v_fmt: String,
+    /// master-weight storage in checkpoints: "f32" | "f16" | "bf16"
+    pub master_dtype: String,
+}
+
+impl RecipeConfig {
+    pub fn by_name(name: &str) -> Self {
+        let (m, v, master) = match name {
+            // FP8(2): Smooth-SwiGLU + both Adam moments FP8 + f16 master
+            "fp8_full" => ("e4m3", "e5m2", "f16"),
+            "fp8_full_nosat" => {
+                return Self {
+                    name: "fp8_smooth_nosat".into(),
+                    m_fmt: "e4m3".into(),
+                    v_fmt: "e5m2".into(),
+                    master_dtype: "f16".into(),
+                }
+            }
+            n if n.starts_with("fp8_adam_") => {
+                // fp8_adam_<mfmt>_<vfmt>
+                let rest = &n["fp8_adam_".len()..];
+                let (m, v) = rest.split_once('_').unwrap_or(("e4m3", "e5m2"));
+                return Self {
+                    name: "fp8_smooth".into(), // shares the grad artifact
+                    m_fmt: m.into(),
+                    v_fmt: v.into(),
+                    master_dtype: "f32".into(),
+                };
+            }
+            _ => ("fp32", "fp32", "f32"),
+        };
+        Self { name: grad_recipe_of(name).into(), m_fmt: m.into(), v_fmt: v.into(), master_dtype: master.into() }
+    }
+}
+
+/// The grad artifact a logical recipe runs on (fp8_full trains on the
+/// fp8_smooth graph — moment formats only affect the optimizer artifact).
+pub fn grad_recipe_of(name: &str) -> &str {
+    match name {
+        "fp8_full" => "fp8_smooth",
+        n if n.starts_with("fp8_adam_") => "fp8_smooth",
+        n => n,
+    }
+}
+
+/// Training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub size: String,
+    pub recipe: String,
+    pub steps: usize,
+    pub warmup_steps: usize,
+    pub lr: f32,
+    pub min_lr_frac: f32,
+    pub weight_decay: f32,
+    pub grad_clip: f32,
+    pub seed: u64,
+    /// data-parallel worker count (simulated Gaudi2 pool)
+    pub dp_workers: usize,
+    /// gradient-accumulation microbatches per step
+    pub grad_accum: usize,
+    /// delayed-scaling amax history length
+    pub amax_history: usize,
+    /// scale margin: 2^margin headroom below the format max (TE-style)
+    pub margin_pow2: i32,
+    /// synthetic-corpus knobs (see data::corpus)
+    pub corpus_order: usize,
+    pub corpus_skew: f64,
+    /// plant a partially-aligned SwiGLU channel at init (mechanism
+    /// reproduction mode; see DESIGN.md §Substitutions)
+    pub seed_outlier_channel: bool,
+    pub seed_outlier_gain: f32,
+    /// skip optimizer updates whose global grad-norm is non-finite
+    /// (production protection). Disable to expose the paper's hard
+    /// divergence: one poisoned update permanently corrupts training.
+    pub skip_nonfinite_updates: bool,
+    /// log / checkpoint cadence
+    pub log_every: usize,
+    pub ckpt_every: usize,
+    pub out_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            size: "s1m".into(),
+            recipe: "bf16".into(),
+            steps: 500,
+            warmup_steps: 50,
+            lr: 2.5e-4,
+            min_lr_frac: 0.1,
+            weight_decay: 0.1,
+            grad_clip: 1.0,
+            seed: 20260711,
+            dp_workers: 1,
+            grad_accum: 1,
+            amax_history: 16,
+            margin_pow2: 1,
+            corpus_order: 2,
+            corpus_skew: 1.2,
+            seed_outlier_channel: false,
+            seed_outlier_gain: 3.0,
+            skip_nonfinite_updates: true,
+            log_every: 10,
+            ckpt_every: 0,
+            out_dir: "runs/default".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load from a TOML file then apply `key=value` overrides.
+    pub fn load(path: Option<&Path>, overrides: &[(String, String)]) -> Result<Self, String> {
+        let mut kv: BTreeMap<String, TomlValue> = BTreeMap::new();
+        if let Some(p) = path {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| format!("config {}: {e}", p.display()))?;
+            kv = toml::parse(&text)?;
+        }
+        for (k, v) in overrides {
+            kv.insert(k.clone(), toml::parse_scalar(v));
+        }
+        Self::from_kv(&kv)
+    }
+
+    pub fn from_kv(kv: &BTreeMap<String, TomlValue>) -> Result<Self, String> {
+        let mut c = Self::default();
+        for (k, v) in kv {
+            match k.as_str() {
+                "train.size" | "size" => c.size = v.as_str()?,
+                "train.recipe" | "recipe" => c.recipe = v.as_str()?,
+                "train.steps" | "steps" => c.steps = v.as_usize()?,
+                "train.warmup_steps" | "warmup_steps" => c.warmup_steps = v.as_usize()?,
+                "train.lr" | "lr" => c.lr = v.as_f64()? as f32,
+                "train.min_lr_frac" | "min_lr_frac" => c.min_lr_frac = v.as_f64()? as f32,
+                "train.weight_decay" | "weight_decay" => c.weight_decay = v.as_f64()? as f32,
+                "train.grad_clip" | "grad_clip" => c.grad_clip = v.as_f64()? as f32,
+                "train.seed" | "seed" => c.seed = v.as_usize()? as u64,
+                "train.dp_workers" | "dp_workers" => c.dp_workers = v.as_usize()?,
+                "train.grad_accum" | "grad_accum" => c.grad_accum = v.as_usize()?,
+                "scaling.amax_history" | "amax_history" => c.amax_history = v.as_usize()?,
+                "scaling.margin_pow2" | "margin_pow2" => c.margin_pow2 = v.as_f64()? as i32,
+                "data.corpus_order" | "corpus_order" => c.corpus_order = v.as_usize()?,
+                "data.corpus_skew" | "corpus_skew" => c.corpus_skew = v.as_f64()?,
+                "train.seed_outlier_channel" | "seed_outlier_channel" => {
+                    c.seed_outlier_channel = v.as_bool()?
+                }
+                "train.seed_outlier_gain" | "seed_outlier_gain" => {
+                    c.seed_outlier_gain = v.as_f64()? as f32
+                }
+                "train.skip_nonfinite_updates" | "skip_nonfinite_updates" => {
+                    c.skip_nonfinite_updates = v.as_bool()?
+                }
+                "train.log_every" | "log_every" => c.log_every = v.as_usize()?,
+                "train.ckpt_every" | "ckpt_every" => c.ckpt_every = v.as_usize()?,
+                "train.out_dir" | "out_dir" => c.out_dir = v.as_str()?,
+                _ => return Err(format!("unknown config key '{k}'")),
+            }
+        }
+        if c.dp_workers == 0 || c.grad_accum == 0 {
+            return Err("dp_workers and grad_accum must be >= 1".into());
+        }
+        Ok(c)
+    }
+
+    pub fn recipe_config(&self) -> RecipeConfig {
+        RecipeConfig::by_name(&self.recipe)
+    }
+
+    /// JSON echo for run metadata.
+    pub fn to_json(&self) -> Json {
+        crate::util::json::obj(vec![
+            ("size", Json::Str(self.size.clone())),
+            ("recipe", Json::Str(self.recipe.clone())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("lr", Json::Num(self.lr as f64)),
+            ("weight_decay", Json::Num(self.weight_decay as f64)),
+            ("grad_clip", Json::Num(self.grad_clip as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("dp_workers", Json::Num(self.dp_workers as f64)),
+            ("grad_accum", Json::Num(self.grad_accum as f64)),
+            ("amax_history", Json::Num(self.amax_history as f64)),
+            ("seed_outlier_channel", Json::Bool(self.seed_outlier_channel)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_overrides() {
+        let c = TrainConfig::load(None, &[("lr".into(), "0.001".into()),
+                                          ("recipe".into(), "fp8_full".into())]).unwrap();
+        assert_eq!(c.lr, 0.001);
+        assert_eq!(c.recipe, "fp8_full");
+        let rc = c.recipe_config();
+        assert_eq!(rc.name, "fp8_smooth"); // grad artifact aliasing
+        assert_eq!(rc.m_fmt, "e4m3");
+        assert_eq!(rc.v_fmt, "e5m2");
+        assert_eq!(rc.master_dtype, "f16");
+    }
+
+    #[test]
+    fn adam_grid_recipes() {
+        let rc = RecipeConfig::by_name("fp8_adam_e5m2_e4m3");
+        assert_eq!(rc.name, "fp8_smooth");
+        assert_eq!(rc.m_fmt, "e5m2");
+        assert_eq!(rc.v_fmt, "e4m3");
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(TrainConfig::load(None, &[("nope".into(), "1".into())]).is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! TOML-subset parser (offline build: no toml crate).
+//!
+//! Supports what launcher configs need: `[section]` headers (flattened
+//! to `section.key`), `key = value` with string / integer / float /
+//! bool values, comments, and blank lines. No arrays-of-tables, dates,
+//! or multi-line strings — config files in `configs/` stay inside this
+//! subset by construction.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<String, String> {
+        match self {
+            TomlValue::Str(s) => Ok(s.clone()),
+            v => Err(format!("expected string, got {v:?}")),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize, String> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            v => Err(format!("expected non-negative integer, got {v:?}")),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64, String> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            v => Err(format!("expected number, got {v:?}")),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool, String> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            v => Err(format!("expected bool, got {v:?}")),
+        }
+    }
+}
+
+/// Parse a scalar the way a TOML value position would (used for CLI
+/// `key=value` overrides).
+pub fn parse_scalar(s: &str) -> TomlValue {
+    let t = s.trim();
+    if t == "true" {
+        return TomlValue::Bool(true);
+    }
+    if t == "false" {
+        return TomlValue::Bool(false);
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return TomlValue::Int(i);
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return TomlValue::Float(f);
+    }
+    let t = t.trim_matches('"').trim_matches('\'');
+    TomlValue::Str(t.to_string())
+}
+
+pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>, String> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(format!("line {}: malformed section header", lineno + 1));
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        out.insert(key, parse_scalar(v));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let src = r#"
+# run config
+[train]
+size = "s1m"     # model preset
+steps = 2000
+lr = 2.5e-4
+seed_outlier_channel = true
+
+[scaling]
+margin = 1.0
+"#;
+        let kv = parse(src).unwrap();
+        assert_eq!(kv["train.size"], TomlValue::Str("s1m".into()));
+        assert_eq!(kv["train.steps"], TomlValue::Int(2000));
+        assert_eq!(kv["train.lr"], TomlValue::Float(2.5e-4));
+        assert_eq!(kv["train.seed_outlier_channel"], TomlValue::Bool(true));
+        assert_eq!(kv["scaling.margin"], TomlValue::Float(1.0));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let kv = parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(kv["name"], TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(parse("[oops").is_err());
+        assert!(parse("keyonly").is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! Gradient all-reduce over the simulated data-parallel pool.
+//!
+//! Workers produce per-replica gradient buffers; the collective is a
+//! binary-tree reduction (⌈log2 W⌉ rounds, matching how a real pod's
+//! ring/tree collective combines partial sums deterministically) then
+//! an average. Reduction order is *fixed* regardless of thread timing,
+//! so runs are bit-reproducible at any worker count.
+
+/// Tree-reduce in place: buffers[0] ends up holding the elementwise sum.
+pub fn tree_reduce_sum(buffers: &mut [Vec<f32>]) {
+    let w = buffers.len();
+    assert!(w >= 1);
+    let n = buffers[0].len();
+    for b in buffers.iter() {
+        assert_eq!(b.len(), n, "replica gradient size mismatch");
+    }
+    let mut stride = 1;
+    while stride < w {
+        let mut i = 0;
+        while i + stride < w {
+            // combine pair (i, i+stride) — fixed order
+            let (left, right) = buffers.split_at_mut(i + stride);
+            let dst = &mut left[i];
+            let src = &right[0];
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                *d += *s;
+            }
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+}
+
+/// All-reduce average: tree-sum then scale by 1/W, broadcast into all
+/// replicas (the coordinator keeps one canonical copy; this mirrors
+/// the collective's output being identical on every rank).
+pub fn allreduce_mean(buffers: &mut [Vec<f32>]) {
+    let w = buffers.len() as f32;
+    tree_reduce_sum(buffers);
+    let inv = 1.0 / w;
+    // scale rank 0 ...
+    for x in buffers[0].iter_mut() {
+        *x *= inv;
+    }
+    // ... broadcast
+    let (canon, rest) = buffers.split_at_mut(1);
+    for b in rest {
+        b.copy_from_slice(&canon[0]);
+    }
+}
+
+/// Global L2 norm over a flat gradient (for clipping).
+pub fn global_norm(flat: &[f32]) -> f32 {
+    (flat.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32
+}
+
+/// Clip multiplier for max-norm clipping (1.0 when under the limit).
+pub fn clip_factor(norm: f32, max_norm: f32) -> f32 {
+    if !norm.is_finite() {
+        return 0.0; // drop the update entirely on a non-finite grad
+    }
+    if norm <= max_norm || max_norm <= 0.0 {
+        1.0
+    } else {
+        max_norm / norm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_matches_sequential_sum() {
+        for w in 1..=9 {
+            let mut bufs: Vec<Vec<f32>> =
+                (0..w).map(|r| (0..17).map(|i| (r * 100 + i) as f32).collect()).collect();
+            let expect: Vec<f32> = (0..17)
+                .map(|i| (0..w).map(|r| (r * 100 + i) as f32).sum())
+                .collect();
+            tree_reduce_sum(&mut bufs);
+            assert_eq!(bufs[0], expect, "w={w}");
+        }
+    }
+
+    #[test]
+    fn mean_broadcasts() {
+        let mut bufs = vec![vec![2.0f32, 4.0], vec![4.0, 8.0]];
+        allreduce_mean(&mut bufs);
+        assert_eq!(bufs[0], vec![3.0, 6.0]);
+        assert_eq!(bufs[1], vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn clip_semantics() {
+        assert_eq!(clip_factor(0.5, 1.0), 1.0);
+        assert_eq!(clip_factor(2.0, 1.0), 0.5);
+        assert_eq!(clip_factor(f32::NAN, 1.0), 0.0);
+        assert_eq!(clip_factor(f32::INFINITY, 1.0), 0.0);
+    }
+
+    #[test]
+    fn norm_is_l2() {
+        assert!((global_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+}

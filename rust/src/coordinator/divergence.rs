@@ -1,0 +1,105 @@
+//! Divergence detection — how a long FP8 run knows it has hit the
+//! paper's Fig. 2a failure. Signals:
+//!
+//! * non-finite loss (hard failure),
+//! * loss exceeding a multiple of its trailing EMA (the Fig. 2a spike),
+//! * sustained overflow events in the scaling manager.
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Verdict {
+    Healthy,
+    /// spike factor over the EMA
+    LossSpike(f32),
+    NonFiniteLoss,
+    OverflowStorm(usize),
+}
+
+#[derive(Clone, Debug)]
+pub struct DivergenceDetector {
+    ema: f32,
+    alpha: f32,
+    pub spike_factor: f32,
+    pub overflow_limit: usize,
+    warmed: bool,
+    pub diverged_at: Option<usize>,
+}
+
+impl Default for DivergenceDetector {
+    fn default() -> Self {
+        Self {
+            ema: 0.0,
+            alpha: 0.02,
+            spike_factor: 1.5,
+            overflow_limit: 64,
+            warmed: false,
+            diverged_at: None,
+        }
+    }
+}
+
+impl DivergenceDetector {
+    pub fn observe(&mut self, step: usize, loss: f32, overflow_events: usize) -> Verdict {
+        if !loss.is_finite() {
+            self.diverged_at.get_or_insert(step);
+            return Verdict::NonFiniteLoss;
+        }
+        if overflow_events > self.overflow_limit {
+            self.diverged_at.get_or_insert(step);
+            return Verdict::OverflowStorm(overflow_events);
+        }
+        let verdict = if self.warmed && loss > self.ema * self.spike_factor {
+            self.diverged_at.get_or_insert(step);
+            Verdict::LossSpike(loss / self.ema)
+        } else {
+            Verdict::Healthy
+        };
+        self.ema = if self.warmed { self.ema + self.alpha * (loss - self.ema) } else { loss };
+        self.warmed = true;
+        verdict
+    }
+
+    pub fn has_diverged(&self) -> bool {
+        self.diverged_at.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_descent() {
+        let mut d = DivergenceDetector::default();
+        for step in 0..100 {
+            let loss = 6.0 - step as f32 * 0.01;
+            assert_eq!(d.observe(step, loss, 0), Verdict::Healthy);
+        }
+        assert!(!d.has_diverged());
+    }
+
+    #[test]
+    fn spike_detected() {
+        let mut d = DivergenceDetector::default();
+        for step in 0..50 {
+            d.observe(step, 5.0, 0);
+        }
+        match d.observe(50, 9.0, 0) {
+            Verdict::LossSpike(f) => assert!(f > 1.5),
+            v => panic!("expected spike, got {v:?}"),
+        }
+        assert_eq!(d.diverged_at, Some(50));
+    }
+
+    #[test]
+    fn nan_is_hard_failure() {
+        let mut d = DivergenceDetector::default();
+        d.observe(0, 5.0, 0);
+        assert_eq!(d.observe(1, f32::NAN, 0), Verdict::NonFiniteLoss);
+    }
+
+    #[test]
+    fn overflow_storm() {
+        let mut d = DivergenceDetector::default();
+        assert_eq!(d.observe(0, 5.0, 1000), Verdict::OverflowStorm(1000));
+    }
+}

@@ -1,0 +1,155 @@
+//! Smooth-SwiGLU inference folding (paper §4.4, Fig. 4): absorb the
+//! per-channel training scales into the stored weights so inference
+//! runs the *plain* SwiGLU graph at zero extra cost:
+//!
+//!   w̃1[:, i] = s_i · w1[:, i]      (linear branch pre-scaled)
+//!   w̃3[i, :] = s_i⁻¹ · w3[i, :]    (undone after the product)
+//!
+//! The paper derives this for the quantized weights; here it is applied
+//! to a checkpoint's master weights, with pow2 scales so the fold is
+//! bit-exact in f32 (each element's mantissa is untouched).
+
+use anyhow::{anyhow, Result};
+
+/// Fold per-channel scales into stacked `[L, d, f]` w1 and `[L, f, d]`
+/// w3 buffers in place. `scales[l][i]` is channel i's scale in layer l.
+pub fn fold_scales(
+    w1: &mut [f32],
+    w3: &mut [f32],
+    scales: &[Vec<f32>],
+    d: usize,
+    f: usize,
+) -> Result<()> {
+    let l = scales.len();
+    if w1.len() != l * d * f || w3.len() != l * f * d {
+        return Err(anyhow!(
+            "shape mismatch: w1 {} vs {}, w3 {} vs {}",
+            w1.len(),
+            l * d * f,
+            w3.len(),
+            l * f * d
+        ));
+    }
+    for (layer, s) in scales.iter().enumerate() {
+        if s.len() != f {
+            return Err(anyhow!("layer {layer}: {} scales for {f} channels", s.len()));
+        }
+        if s.iter().any(|&x| !(x > 0.0) || !x.is_finite()) {
+            return Err(anyhow!("layer {layer}: non-positive/non-finite scale"));
+        }
+        let w1l = &mut w1[layer * d * f..(layer + 1) * d * f];
+        for row in 0..d {
+            for (i, &si) in s.iter().enumerate() {
+                w1l[row * f + i] *= si;
+            }
+        }
+        let w3l = &mut w3[layer * f * d..(layer + 1) * f * d];
+        for (i, &si) in s.iter().enumerate() {
+            let inv = 1.0 / si;
+            for col in 0..d {
+                w3l[i * d + col] *= inv;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Verify the fold is function-preserving: for token activations `x`
+/// (shape `[t, d]`, one layer), SwiGLU(x; w̃1, w2) @ w̃3 must equal
+/// SwiGLU(x; w1, w2) @ w3 — exactly for pow2 scales at f32.
+pub fn fold_residual(
+    x: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    w3: &[f32],
+    w1f: &[f32],
+    w3f: &[f32],
+    t: usize,
+    d: usize,
+    f: usize,
+    n_out: usize,
+) -> f32 {
+    let y0 = swiglu_mlp(x, w1, w2, w3, t, d, f, n_out);
+    let y1 = swiglu_mlp(x, w1f, w2, w3f, t, d, f, n_out);
+    y0.iter()
+        .zip(&y1)
+        .map(|(a, b)| (a - b).abs() / (a.abs() + 1e-6))
+        .fold(0.0f32, f32::max)
+}
+
+fn swiglu_mlp(
+    x: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    w3: &[f32],
+    t: usize,
+    d: usize,
+    f: usize,
+    n_out: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; t * n_out];
+    for ti in 0..t {
+        for j in 0..f {
+            let (mut a1, mut a2) = (0.0f32, 0.0f32);
+            for i in 0..d {
+                a1 += x[ti * d + i] * w1[i * f + j];
+                a2 += x[ti * d + i] * w2[i * f + j];
+            }
+            let h = a1 * a2 / (1.0 + (-a2).exp());
+            for k in 0..n_out {
+                out[ti * n_out + k] += h * w3[j * d + k];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn pow2_fold_is_function_preserving() {
+        let (d, f, t) = (16, 8, 12);
+        let mut rng = Rng::new(11);
+        let mut w1 = vec![0.0f32; d * f];
+        let mut w2 = vec![0.0f32; d * f];
+        let mut w3 = vec![0.0f32; f * d];
+        let mut x = vec![0.0f32; t * d];
+        rng.fill_normal(&mut w1, 0.5);
+        rng.fill_normal(&mut w2, 0.5);
+        rng.fill_normal(&mut w3, 0.5);
+        rng.fill_normal(&mut x, 1.0);
+        let scales: Vec<f32> = (0..f).map(|i| 2f32.powi((i as i32 % 9) - 4)).collect();
+
+        let mut w1f = w1.clone();
+        let mut w3f = w3.clone();
+        fold_scales(&mut w1f, &mut w3f, &[scales], d, f).unwrap();
+        let res = fold_residual(&x, &w1, &w2, &w3, &w1f, &w3f, t, d, f, d);
+        // pow2 scaling is exact in f32 except where swish's exp path
+        // re-associates — bound tightly
+        assert!(res < 1e-4, "fold residual {res}");
+    }
+
+    #[test]
+    fn fold_changes_w1_w3_reciprocally() {
+        let (d, f) = (4, 2);
+        let mut w1 = vec![1.0f32; d * f];
+        let mut w3 = vec![1.0f32; f * d];
+        fold_scales(&mut w1, &mut w3, &[vec![2.0, 8.0]], d, f).unwrap();
+        assert_eq!(w1[0], 2.0);
+        assert_eq!(w1[1], 8.0);
+        assert_eq!(w3[0], 0.5);
+        assert_eq!(w3[d], 0.125);
+    }
+
+    #[test]
+    fn rejects_bad_scales() {
+        let (d, f) = (2, 2);
+        let mut w1 = vec![1.0f32; d * f];
+        let mut w3 = vec![1.0f32; f * d];
+        assert!(fold_scales(&mut w1, &mut w3, &[vec![1.0, 0.0]], d, f).is_err());
+        assert!(fold_scales(&mut w1, &mut w3, &[vec![1.0]], d, f).is_err());
+    }
+}

@@ -1,0 +1,29 @@
+//! L3 coordinator: the training orchestrator.
+//!
+//! Per step:
+//! 1. each data-parallel worker runs `grad_accum` microbatches through
+//!    the grad artifact (its own shard of the deterministic corpus);
+//! 2. gradients are averaged by a tree all-reduce over the worker
+//!    results (simulating the Gaudi2 pod's collective);
+//! 3. the global grad-norm clip factor is computed in Rust;
+//! 4. each worker applies AdamW to its ZeRO-1 shard via the chunked
+//!    `adam_*` artifact (FP8 moments per recipe) and shards are
+//!    all-gathered back into the replicated parameter buffer;
+//! 5. the delayed-scaling manager ingests the step's amax report and
+//!    emits next-step scales; the divergence detector watches the loss
+//!    and overflow counters.
+//!
+//! The paper's contribution shows up in (5) + which artifact (1) runs.
+
+pub mod allreduce;
+pub mod divergence;
+pub mod folding;
+pub mod params;
+pub mod runner;
+pub mod schedule;
+pub mod trainer;
+
+pub use divergence::DivergenceDetector;
+pub use params::ParamStore;
+pub use schedule::LrSchedule;
+pub use trainer::{StepOutcome, Trainer};

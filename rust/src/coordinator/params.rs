@@ -1,0 +1,180 @@
+//! Parameter store: the replicated model parameters as named host
+//! tensors (manifest order) plus flat-space views for the optimizer.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::manifest::{Manifest, ParamSpec};
+use crate::runtime::tensor::HostTensor;
+use crate::util::prng::Rng;
+
+pub struct ParamStore {
+    pub specs: Vec<ParamSpec>,
+    pub tensors: Vec<HostTensor>,
+}
+
+impl ParamStore {
+    /// Deterministic init from the manifest specs: N(0, std²) per
+    /// tensor (independent split streams), ones for norm gains.
+    pub fn init(manifest: &Manifest, seed: u64) -> Self {
+        let root = Rng::new(seed);
+        let mut tensors = Vec::with_capacity(manifest.params.len());
+        for (i, spec) in manifest.params.iter().enumerate() {
+            let n = spec.numel();
+            let mut data = vec![0.0f32; n];
+            if spec.init_std < 0.0 {
+                data.fill(1.0);
+            } else {
+                root.split(i as u64 + 1).fill_normal(&mut data, spec.init_std);
+            }
+            tensors.push(HostTensor::from_f32(&spec.shape, data));
+        }
+        Self { specs: manifest.params.clone(), tensors }
+    }
+
+    /// Plant a partially-aligned, large-norm SwiGLU channel in layer 0
+    /// (mechanism-reproduction mode; DESIGN.md §Substitutions). Sets
+    /// w2[:, ch] := gain · u and w1[:, ch] := gain · (αu + √(1-α²)v)
+    /// for random unit u ⊥ v with α = 0.7 — past the Theorem-1
+    /// threshold so training completes the alignment quickly.
+    pub fn seed_outlier_channel(&mut self, gain: f32, seed: u64) -> Result<usize> {
+        let (w1_idx, w1_shape) = self.index_of("w1")?;
+        let (w2_idx, _) = self.index_of("w2")?;
+        let (d, f) = (w1_shape[1], w1_shape[2]);
+        let ch = f / 2;
+        let mut rng = Rng::new(seed ^ 0x0071_u64).split(99);
+        let mut u: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let mut v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        normalize(&mut u);
+        // Gram-Schmidt v against u
+        let dot: f32 = u.iter().zip(&v).map(|(a, b)| a * b).sum();
+        for i in 0..d {
+            v[i] -= dot * u[i];
+        }
+        normalize(&mut v);
+        let alpha = 0.7f32;
+        let beta = (1.0 - alpha * alpha).sqrt();
+        {
+            let w2 = self.tensors[w2_idx].f32s_mut();
+            for i in 0..d {
+                w2[i * f + ch] = gain * u[i]; // layer 0 slab
+            }
+        }
+        {
+            let w1 = self.tensors[w1_idx].f32s_mut();
+            for i in 0..d {
+                w1[i * f + ch] = gain * (alpha * u[i] + beta * v[i]);
+            }
+        }
+        Ok(ch)
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<(usize, Vec<usize>)> {
+        self.specs
+            .iter()
+            .position(|s| s.name == name)
+            .map(|i| (i, self.specs[i].shape.clone()))
+            .ok_or_else(|| anyhow!("no parameter named '{name}'"))
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.specs.iter().map(|s| s.numel()).sum()
+    }
+
+    /// Copy all tensors into one flat f32 buffer (manifest order).
+    pub fn flatten_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.total_elems());
+        for t in &self.tensors {
+            out.extend_from_slice(t.f32s());
+        }
+    }
+
+    /// Scatter a flat buffer back into the named tensors.
+    pub fn unflatten_from(&mut self, flat: &[f32]) {
+        let mut off = 0;
+        for t in self.tensors.iter_mut() {
+            let n = t.len();
+            t.f32s_mut().copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        assert_eq!(off, flat.len(), "flat parameter size mismatch");
+    }
+
+    /// Extract a layer slice of a stacked [L, d, f] weight (for the
+    /// correlation analysis).
+    pub fn layer_slice(&self, name: &str, layer: usize) -> Result<(Vec<f32>, usize, usize)> {
+        let (idx, shape) = self.index_of(name)?;
+        if shape.len() != 3 {
+            return Err(anyhow!("'{name}' is not a stacked [L, d, f] weight"));
+        }
+        let (d, f) = (shape[1], shape[2]);
+        let per = d * f;
+        let data = self.tensors[idx].f32s();
+        Ok((data[layer * per..(layer + 1) * per].to_vec(), d, f))
+    }
+}
+
+fn normalize(v: &mut [f32]) {
+    let n = (v.iter().map(|x| x * x).sum::<f32>()).sqrt().max(1e-12);
+    for x in v.iter_mut() {
+        *x /= n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamSpec;
+
+    fn manifest_like() -> Manifest {
+        let j = crate::util::json::Json::parse(
+            r#"{"kind":"grad","params":[
+                {"name":"ln_1","shape":[2,8],"init_std":-1.0},
+                {"name":"w1","shape":[2,8,6],"init_std":0.02},
+                {"name":"w2","shape":[2,8,6],"init_std":0.02}]}"#,
+        )
+        .unwrap();
+        Manifest::from_json("t".into(), j).unwrap()
+    }
+
+    #[test]
+    fn init_is_deterministic_and_typed() {
+        let m = manifest_like();
+        let a = ParamStore::init(&m, 1);
+        let b = ParamStore::init(&m, 1);
+        let c = ParamStore::init(&m, 2);
+        assert_eq!(a.tensors[1].f32s(), b.tensors[1].f32s());
+        assert_ne!(a.tensors[1].f32s(), c.tensors[1].f32s());
+        assert!(a.tensors[0].f32s().iter().all(|&x| x == 1.0), "norm gains init to 1");
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let m = manifest_like();
+        let mut p = ParamStore::init(&m, 3);
+        let mut flat = Vec::new();
+        p.flatten_into(&mut flat);
+        assert_eq!(flat.len(), p.total_elems());
+        flat[0] = 42.0;
+        p.unflatten_from(&flat);
+        assert_eq!(p.tensors[0].f32s()[0], 42.0);
+    }
+
+    #[test]
+    fn outlier_channel_is_aligned_and_large() {
+        let m = manifest_like();
+        let mut p = ParamStore::init(&m, 3);
+        let ch = p.seed_outlier_channel(8.0, 3).unwrap();
+        let (w1, d, f) = p.layer_slice("w1", 0).unwrap();
+        let (w2, _, _) = p.layer_slice("w2", 0).unwrap();
+        let stats = crate::analysis::correlation::channel_correlations(&w1, &w2, d, f);
+        assert!(stats[ch].cosine > 0.65 && stats[ch].cosine < 0.75);
+        assert!(stats[ch].norm2 > 7.0);
+    }
+
+    #[test]
+    fn numel_helper() {
+        let s = ParamSpec { name: "x".into(), shape: vec![3, 4, 5], init_std: 0.1 };
+        assert_eq!(s.numel(), 60);
+    }
+}

@@ -1,0 +1,130 @@
+//! High-level experiment runner shared by the examples and the bench
+//! harness: run a training curve, record the series, dump CSV.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::Trainer;
+use crate::runtime::Runtime;
+use crate::util::csv::CsvWriter;
+
+/// One recorded training curve.
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub label: String,
+    /// (step, loss, grad_norm, swiglu_amax_max, overflow_events)
+    pub rows: Vec<(usize, f32, f32, f32, usize)>,
+    pub diverged_at: Option<usize>,
+    pub wall_s: f64,
+    pub mean_step_s: f64,
+}
+
+impl Curve {
+    pub fn final_loss(&self) -> f32 {
+        self.rows.last().map(|r| r.1).unwrap_or(f32::NAN)
+    }
+
+    /// Mean loss over the last k recorded rows (noise-robust).
+    pub fn tail_loss(&self, k: usize) -> f32 {
+        let n = self.rows.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let take = k.min(n);
+        self.rows[n - take..].iter().map(|r| r.1).sum::<f32>() / take as f32
+    }
+}
+
+/// Run `cfg` to completion (or divergence), sampling every
+/// `record_every` steps. `stop_on_divergence` keeps curves comparable
+/// while letting the diverging config show its spike first.
+pub fn run_curve(
+    rt: &Arc<Runtime>,
+    cfg: TrainConfig,
+    record_every: usize,
+    extra_after_divergence: usize,
+) -> Result<Curve> {
+    let label = format!("{}_{}", cfg.size, cfg.recipe);
+    let steps = cfg.steps;
+    let mut t = Trainer::new(rt.clone(), cfg)?;
+    let mut curve = Curve { label, ..Default::default() };
+    let mut after_div = 0usize;
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        let o = t.step()?;
+        if o.step % record_every == 0 || o.step + 1 == steps {
+            let swiglu = o.monitor.iter().map(|m| m[0]).fold(0.0f32, f32::max);
+            curve.rows.push((
+                o.step,
+                o.loss,
+                o.grad_norm,
+                swiglu,
+                t.scale_mgr.overflow_events,
+            ));
+        }
+        if t.detector.has_diverged() {
+            curve.diverged_at = curve.diverged_at.or(t.detector.diverged_at);
+            after_div += 1;
+            if after_div > extra_after_divergence {
+                break;
+            }
+        }
+    }
+    curve.wall_s = t0.elapsed().as_secs_f64();
+    curve.mean_step_s = curve.wall_s / (t.step.max(1) as f64);
+    Ok(curve)
+}
+
+/// Dump curves side by side (long format) for re-plotting.
+pub fn write_curves_csv<P: AsRef<Path>>(path: P, curves: &[Curve]) -> Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &["series", "step", "loss", "grad_norm", "swiglu_amax", "overflows"],
+    )?;
+    for c in curves {
+        for &(step, loss, gnorm, amax, ovf) in &c.rows {
+            w.row_mixed(&[
+                c.label.clone(),
+                step.to_string(),
+                loss.to_string(),
+                gnorm.to_string(),
+                amax.to_string(),
+                ovf.to_string(),
+            ])?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Pretty-print a curve summary block (what the bench harness emits so
+/// the paper-vs-measured comparison is one screen).
+pub fn print_summary(title: &str, curves: &[Curve]) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:28} {:>10} {:>10} {:>12} {:>10}",
+        "series", "final", "tail(5)", "diverged@", "s/step"
+    );
+    for c in curves {
+        println!(
+            "{:28} {:>10.4} {:>10.4} {:>12} {:>10.3}",
+            c.label,
+            c.final_loss(),
+            c.tail_loss(5),
+            c.diverged_at.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+            c.mean_step_s,
+        );
+    }
+}
+
+/// Env-tunable step budget so `cargo bench` stays tractable:
+/// FP8_BENCH_STEPS overrides the per-curve default.
+pub fn bench_steps(default: usize) -> usize {
+    std::env::var("FP8_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}

@@ -1,0 +1,58 @@
+//! Learning-rate schedule: linear warmup + cosine decay to
+//! `min_frac · peak` (the Llama-2 recipe the paper keeps).
+
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub peak: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub min_frac: f32,
+}
+
+impl LrSchedule {
+    pub fn lr(&self, step: usize) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.peak * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        let span = self.total_steps.saturating_sub(self.warmup_steps).max(1);
+        let t = (step - self.warmup_steps).min(span) as f32 / span as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+        let min = self.peak * self.min_frac;
+        min + (self.peak - min) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> LrSchedule {
+        LrSchedule { peak: 1e-3, warmup_steps: 10, total_steps: 110, min_frac: 0.1 }
+    }
+
+    #[test]
+    fn warmup_is_linear() {
+        let s = sched();
+        assert!((s.lr(0) - 1e-4).abs() < 1e-9);
+        assert!((s.lr(9) - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decays_to_min() {
+        let s = sched();
+        assert!((s.lr(10) - 1e-3).abs() < 1e-6);
+        assert!((s.lr(110) - 1e-4).abs() < 1e-6);
+        assert!(s.lr(500) >= 1e-4 - 1e-9, "clamps after total_steps");
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = sched();
+        let mut prev = f32::MAX;
+        for step in 10..=110 {
+            let lr = s.lr(step);
+            assert!(lr <= prev + 1e-9);
+            prev = lr;
+        }
+    }
+}

@@ -1,0 +1,361 @@
+//! The training loop: grad artifact → all-reduce → clip → chunked
+//! AdamW artifact → delayed-scaling update → divergence check.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::allreduce::{allreduce_mean, clip_factor, global_norm};
+use crate::coordinator::divergence::{DivergenceDetector, Verdict};
+use crate::coordinator::params::ParamStore;
+use crate::coordinator::schedule::LrSchedule;
+use crate::data::{Batcher, Corpus, CorpusConfig};
+use crate::metrics::{StepMeter, StepStats};
+use crate::optimizer::{decay_groups, DecayGroup, ShardLayout};
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::{Artifact, Runtime};
+use crate::scaling::{Policy, ScaleManager};
+
+/// Everything one completed step reports to the caller.
+#[derive(Clone, Debug)]
+pub struct StepOutcome {
+    pub step: usize,
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub lr: f32,
+    pub verdict: Verdict,
+    /// per-layer [swiglu_amax, resid_amax, mlp_out_amax]
+    pub monitor: Vec<[f32; 3]>,
+    pub stats: StepStats,
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    rt: Arc<Runtime>,
+    grad_art: Arc<Artifact>,
+    adam_art: Arc<Artifact>,
+    pub params: ParamStore,
+    pub scale_mgr: ScaleManager,
+    pub detector: DivergenceDetector,
+    batcher: Batcher,
+    sched: LrSchedule,
+    pub shards: ShardLayout,
+    groups: Vec<DecayGroup>,
+    /// flat AdamW moments (values lie on the recipe's fp8 grid; the
+    /// checkpointer stores them as real u8 — see checkpoint::Dtype)
+    pub m_flat: Vec<f32>,
+    pub v_flat: Vec<f32>,
+    meter: StepMeter,
+    pub step: usize,
+    // reusable step buffers
+    worker_grads: Vec<Vec<f32>>,
+}
+
+impl Trainer {
+    pub fn new(rt: Arc<Runtime>, cfg: TrainConfig) -> Result<Self> {
+        let rc = cfg.recipe_config();
+        let grad_name = format!("grad_{}_{}", cfg.size, rc.name);
+        let grad_art = rt
+            .load(&grad_name)
+            .with_context(|| format!("loading grad artifact '{grad_name}'"))?;
+        let man = &grad_art.manifest;
+        let model = man
+            .model
+            .as_ref()
+            .ok_or_else(|| anyhow!("grad manifest missing model dims"))?;
+
+        // 256K chunks: measured fastest on this runtime (the 4M variant
+        // costs ~1.7x more per element through xla_extension 0.5.1, and
+        // many small chunks parallelize across the shard worker pool —
+        // see apply_adam and EXPERIMENTS.md §Perf)
+        let adam_name = format!("adam_{}_{}_c262144", rc.m_fmt, rc.v_fmt);
+        let adam_art = rt
+            .load(&adam_name)
+            .with_context(|| format!("loading adam artifact '{adam_name}'"))?;
+
+        let mut params = ParamStore::init(man, cfg.seed);
+        if cfg.seed_outlier_channel {
+            params
+                .seed_outlier_channel(cfg.seed_outlier_gain, cfg.seed)
+                .context("seeding outlier channel")?;
+        }
+
+        let corpus = Corpus::new(CorpusConfig {
+            vocab: model.vocab,
+            order: cfg.corpus_order,
+            skew: cfg.corpus_skew,
+            seed: cfg.seed ^ 0xda7a,
+        });
+        let batcher = Batcher::new(corpus, man.batch, man.seq_len);
+
+        let scale_mgr = ScaleManager::new(
+            man.n_layers,
+            &man.sites_per_layer,
+            Policy {
+                history_len: cfg.amax_history,
+                margin_pow2: cfg.margin_pow2,
+                ..Default::default()
+            },
+        );
+
+        let total = params.total_elems();
+        let sched = LrSchedule {
+            peak: cfg.lr,
+            warmup_steps: cfg.warmup_steps,
+            total_steps: cfg.steps,
+            min_frac: cfg.min_lr_frac,
+        };
+        let flops = man.flops_per_step * (cfg.dp_workers * cfg.grad_accum) as f64;
+        Ok(Self {
+            shards: ShardLayout::new(total, cfg.dp_workers),
+            groups: decay_groups(&man.params),
+            m_flat: vec![0.0; total],
+            v_flat: vec![0.0; total],
+            worker_grads: vec![Vec::new(); cfg.dp_workers],
+            meter: StepMeter::new(flops),
+            step: 0,
+            params,
+            scale_mgr,
+            detector: DivergenceDetector::default(),
+            batcher,
+            sched,
+            rt,
+            grad_art,
+            adam_art,
+            cfg,
+        })
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    pub fn manifest(&self) -> &crate::runtime::Manifest {
+        &self.grad_art.manifest
+    }
+
+    pub fn tokens_per_step(&self) -> usize {
+        let m = &self.grad_art.manifest;
+        m.batch * m.seq_len * self.cfg.dp_workers * self.cfg.grad_accum
+    }
+
+    /// A training batch tensor (for probe/analysis passes that re-run
+    /// the model outside the step loop).
+    pub fn batch_tensor(&self, step: usize) -> HostTensor {
+        HostTensor::from_i32(&self.batcher.shape(), self.batcher.batch(step, 0, 0))
+    }
+
+    /// Current scales as a tensor (probe passes).
+    pub fn scales_tensor(&self) -> HostTensor {
+        HostTensor::from_f32(&[self.scale_mgr.n_sites()], self.scale_mgr.scales().to_vec())
+    }
+
+    /// Run one full training step.
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        let man = self.grad_art.manifest.clone();
+        let n_params = self.params.total_elems();
+        let ns = self.scale_mgr.n_sites();
+        let scales = HostTensor::from_f32(&[ns], self.scale_mgr.scales().to_vec());
+
+        let mut loss_sum = 0.0f64;
+        let mut amax = vec![0.0f32; ns];
+        let mut monitor = vec![[0.0f32; 3]; man.n_layers];
+
+        // ---- (1) per-worker microbatched grads
+        for w in 0..self.cfg.dp_workers {
+            let buf = &mut self.worker_grads[w];
+            buf.clear();
+            buf.resize(n_params, 0.0);
+            for micro in 0..self.cfg.grad_accum {
+                let tokens = self.batcher.batch(self.step, w, micro);
+                let batch = HostTensor::from_i32(&self.batcher.shape(), tokens);
+                let mut inputs: Vec<HostTensor> =
+                    self.params.tensors.iter().cloned().collect();
+                inputs.push(scales.clone());
+                inputs.push(batch);
+                let out = self.grad_art.run(&inputs)?;
+                let p = man.params.len();
+                loss_sum += out[0].scalar_f32() as f64;
+                let mut off = 0;
+                for g in &out[1..=p] {
+                    let src = g.f32s();
+                    for (d, s) in buf[off..off + src.len()].iter_mut().zip(src) {
+                        *d += *s;
+                    }
+                    off += src.len();
+                }
+                for (a, &x) in amax.iter_mut().zip(out[p + 1].f32s()) {
+                    *a = a.max(x);
+                }
+                for (l, row) in out[p + 2].f32s().chunks(3).enumerate() {
+                    for k in 0..3 {
+                        monitor[l][k] = monitor[l][k].max(row[k]);
+                    }
+                }
+            }
+            // mean over microbatches
+            let inv = 1.0 / self.cfg.grad_accum as f32;
+            for g in buf.iter_mut() {
+                *g *= inv;
+            }
+        }
+        let loss =
+            (loss_sum / (self.cfg.dp_workers * self.cfg.grad_accum) as f64) as f32;
+
+        // ---- (2) all-reduce
+        allreduce_mean(&mut self.worker_grads);
+
+        // ---- (3) global-norm clip. Non-finite grads either skip the
+        //      update (production protection) or pass through at clip 1
+        //      (exposing the paper's hard divergence), per config.
+        let gnorm = global_norm(&self.worker_grads[0]);
+        let clip = if !gnorm.is_finite() && !self.cfg.skip_nonfinite_updates {
+            1.0
+        } else {
+            clip_factor(gnorm, self.cfg.grad_clip)
+        };
+
+        // ---- (4) chunked AdamW over decay groups (C-aligned so FP8
+        //      moment scales are per-absolute-chunk, see optimizer::)
+        let lr = self.sched.lr(self.step);
+        if clip > 0.0 {
+            self.apply_adam(lr, clip)?;
+        }
+
+        // ---- (5) scaling + divergence bookkeeping
+        self.scale_mgr.update(&amax);
+        let verdict = self
+            .detector
+            .observe(self.step, loss, self.scale_mgr.overflow_events);
+
+        self.step += 1;
+        let stats = self.meter.tick(self.tokens_per_step());
+        Ok(StepOutcome {
+            step: self.step - 1,
+            loss,
+            grad_norm: gnorm,
+            lr,
+            verdict,
+            monitor,
+            stats,
+        })
+    }
+
+    /// Chunked AdamW through the `adam_*` artifact. Chunks are aligned
+    /// to absolute multiples of the artifact chunk size so per-chunk
+    /// FP8 moment scales are stable across group boundaries, and are
+    /// executed **in parallel** across a worker pool — the ZeRO-1
+    /// optimizer step really is embarrassingly parallel over shards,
+    /// and the PJRT CPU client accepts concurrent executions.
+    fn apply_adam(&mut self, lr: f32, clip: f32) -> Result<()> {
+        let chunk = self.adam_art.manifest.chunk;
+        let grads = std::mem::take(&mut self.worker_grads); // borrow dance
+        let g_flat = &grads[0];
+        let mut p_flat = Vec::new();
+        self.params.flatten_into(&mut p_flat);
+
+        // build the chunk work list: (offset, len, weight_decay)
+        let mut work: Vec<(usize, usize, f32)> = Vec::new();
+        for group in &self.groups {
+            let wd = if group.decay { self.cfg.weight_decay } else { 0.0 };
+            for &(off, len) in &group.ranges {
+                let mut pos = off;
+                let end = off + len;
+                while pos < end {
+                    let cend = (((pos / chunk) + 1) * chunk).min(end);
+                    work.push((pos, cend - pos, wd));
+                    pos = cend;
+                }
+            }
+        }
+
+        let step_f = (self.step + 1) as f32;
+        let art = &self.adam_art;
+        let m_flat = &self.m_flat;
+        let v_flat = &self.v_flat;
+        let p_ref = &p_flat;
+        // 4 shard workers: enough to hide transfer latency without
+        // thrashing the PJRT intra-op pool (measured; §Perf)
+        let n_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(work.len().max(1))
+            .min(4);
+
+        type ChunkOut = (usize, usize, Vec<f32>, Vec<f32>, Vec<f32>);
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let results: Result<Vec<ChunkOut>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n_threads)
+                .map(|_| {
+                    s.spawn(|| -> Result<Vec<ChunkOut>> {
+                        let mut out = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            if i >= work.len() {
+                                return Ok(out);
+                            }
+                            let (off, len, wd) = work[i];
+                            let pad = |src: &[f32]| {
+                                let mut b = Vec::with_capacity(chunk);
+                                b.extend_from_slice(src);
+                                b.resize(chunk, 0.0);
+                                b
+                            };
+                            let inputs = vec![
+                                HostTensor::from_f32(&[chunk], pad(&p_ref[off..off + len])),
+                                HostTensor::from_f32(&[chunk], pad(&m_flat[off..off + len])),
+                                HostTensor::from_f32(&[chunk], pad(&v_flat[off..off + len])),
+                                HostTensor::from_f32(&[chunk], pad(&g_flat[off..off + len])),
+                                HostTensor::from_f32(&[4], vec![lr, wd, step_f, clip]),
+                            ];
+                            let res = art.run(&inputs)?;
+                            let take = |t: &HostTensor| t.f32s()[..len].to_vec();
+                            out.push((off, len, take(&res[0]), take(&res[1]), take(&res[2])));
+                        }
+                    })
+                })
+                .collect();
+            let mut all = Vec::with_capacity(work.len());
+            for h in handles {
+                all.extend(h.join().expect("adam worker panicked")?);
+            }
+            Ok(all)
+        });
+
+        for (off, len, p, m, v) in results? {
+            p_flat[off..off + len].copy_from_slice(&p);
+            self.m_flat[off..off + len].copy_from_slice(&m);
+            self.v_flat[off..off + len].copy_from_slice(&v);
+        }
+        self.params.unflatten_from(&p_flat);
+        self.worker_grads = grads;
+        Ok(())
+    }
+
+    /// Held-out evaluation through an eval artifact (perplexity + top-1
+    /// accuracy over `n_batches` deterministic eval batches).
+    pub fn eval(&self, recipe: &str, n_batches: usize) -> Result<(f64, f64)> {
+        let name = format!("eval_{}_{}", self.cfg.size, recipe);
+        let art = self.rt.load(&name)?;
+        let ns = self.scale_mgr.n_sites();
+        let scales = HostTensor::from_f32(&[ns], self.scale_mgr.scales().to_vec());
+        let (mut nll, mut correct, mut total) = (0.0f64, 0.0f64, 0.0f64);
+        for i in 0..n_batches {
+            let tokens = self.batcher.eval_batch(i);
+            let batch = HostTensor::from_i32(&self.batcher.shape(), tokens);
+            let mut inputs: Vec<HostTensor> = self.params.tensors.iter().cloned().collect();
+            inputs.push(scales.clone());
+            inputs.push(batch);
+            let out = art.run(&inputs)?;
+            nll += out[0].scalar_f32() as f64;
+            correct += out[1].scalar_f32() as f64;
+            total += out[2].scalar_f32() as f64;
+        }
+        Ok(((nll / total).exp(), correct / total))
+    }
+
+    pub fn wall_s(&self) -> f64 {
+        self.meter.wall_s()
+    }
+}

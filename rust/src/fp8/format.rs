@@ -1,0 +1,255 @@
+//! Bit-level E4M3/E5M2 encode/decode.
+//!
+//! E4M3 is the "fn" (finite + NaN) variant standardized in Micikevicius
+//! et al. 2022: no infinities, one NaN pattern (S.1111.111), max 448.
+//! E5M2 follows IEEE-754 conventions: inf at S.11111.00, NaNs above,
+//! max 57344.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fp8Format {
+    E4M3,
+    E5M2,
+}
+
+pub const E4M3: Fp8Format = Fp8Format::E4M3;
+pub const E5M2: Fp8Format = Fp8Format::E5M2;
+
+impl Fp8Format {
+    pub const fn exp_bits(self) -> u32 {
+        match self {
+            Fp8Format::E4M3 => 4,
+            Fp8Format::E5M2 => 5,
+        }
+    }
+
+    pub const fn man_bits(self) -> u32 {
+        match self {
+            Fp8Format::E4M3 => 3,
+            Fp8Format::E5M2 => 2,
+        }
+    }
+
+    pub const fn bias(self) -> i32 {
+        match self {
+            Fp8Format::E4M3 => 7,
+            Fp8Format::E5M2 => 15,
+        }
+    }
+
+    pub fn max(self) -> f32 {
+        match self {
+            Fp8Format::E4M3 => 448.0,
+            Fp8Format::E5M2 => 57344.0,
+        }
+    }
+
+    pub fn min_normal(self) -> f32 {
+        match self {
+            Fp8Format::E4M3 => 2f32.powi(-6),
+            Fp8Format::E5M2 => 2f32.powi(-14),
+        }
+    }
+
+    pub fn min_subnormal(self) -> f32 {
+        match self {
+            Fp8Format::E4M3 => 2f32.powi(-9),
+            Fp8Format::E5M2 => 2f32.powi(-16),
+        }
+    }
+
+    pub const fn has_inf(self) -> bool {
+        matches!(self, Fp8Format::E5M2)
+    }
+
+    /// f32 → fp8 byte, round-to-nearest-even, ml_dtypes-compatible
+    /// overflow semantics (E4M3 → NaN 0x7f/0xff, E5M2 → ±inf).
+    pub fn encode(self, x: f32) -> u8 {
+        let mb = self.man_bits();
+        let bias = self.bias();
+        let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+        if x.is_nan() {
+            return sign | self.nan_code();
+        }
+        if x.is_infinite() {
+            return sign | if self.has_inf() { 0x7c } else { self.nan_code() };
+        }
+        let ax = x.abs();
+        if ax == 0.0 {
+            return sign;
+        }
+
+        // Scale into the fp8 subnormal grid to round once, exactly:
+        // units of min_subnormal for the subnormal range; normals get
+        // mantissa rounding at their own binade below.
+        if ax < self.min_normal() {
+            // subnormal: round ax / min_subnormal RNE to an integer
+            let q = rne_round(ax / self.min_subnormal());
+            if q == 0 {
+                return sign;
+            }
+            if q < (1 << mb) {
+                return sign | q as u8;
+            }
+            // rounded up into the first normal binade
+            return sign | (1 << mb);
+        }
+
+        // normal path: decompose into exponent + mantissa
+        let bits = ax.to_bits();
+        let e32 = ((bits >> 23) & 0xff) as i32 - 127;
+        let man32 = bits & 0x7f_ffff;
+        // RNE the 23-bit mantissa down to mb bits
+        let shift = 23 - mb;
+        let lsb = (man32 >> shift) & 1;
+        let half = (1u32 << (shift - 1)) - 1 + lsb;
+        let mut man = (man32 + half) >> shift;
+        let mut e = e32;
+        if man == (1 << mb) {
+            man = 0;
+            e += 1;
+        }
+        let emax = match self {
+            Fp8Format::E4M3 => 8,  // 448 = 2^8 * 1.75
+            Fp8Format::E5M2 => 15, // 57344 = 2^15 * 1.75
+        };
+        if e > emax || (e == emax && self.is_overflow_mantissa(man)) {
+            return sign | if self.has_inf() { 0x7c } else { self.nan_code() };
+        }
+        let biased = (e + bias) as u32;
+        sign | ((biased << mb) as u8) | (man as u8)
+    }
+
+    fn is_overflow_mantissa(self, man: u32) -> bool {
+        // E4M3: exponent 8 with mantissa 111 is the NaN pattern, so the
+        // largest finite is 1.110 * 2^8 = 448; mantissa 111 overflows.
+        // E5M2: exponent 15 with any mantissa is inf/NaN, so *all*
+        // mantissas overflow at e=15 except... 1.11*2^15 = 57344 uses
+        // biased exponent 30 (e=15): representable. Overflow only past
+        // the all-ones biased exponent.
+        match self {
+            Fp8Format::E4M3 => man == 0b111,
+            Fp8Format::E5M2 => false,
+        }
+    }
+
+    fn nan_code(self) -> u8 {
+        match self {
+            Fp8Format::E4M3 => 0x7f,
+            Fp8Format::E5M2 => 0x7e, // a quiet NaN pattern (exp=31, man!=0)
+        }
+    }
+
+    /// fp8 byte → f32 (exact).
+    pub fn decode(self, b: u8) -> f32 {
+        let mb = self.man_bits();
+        let eb = self.exp_bits();
+        let bias = self.bias();
+        let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+        let exp = ((b >> mb) & ((1 << eb) - 1)) as i32;
+        let man = (b & ((1 << mb) - 1)) as u32;
+
+        match self {
+            Fp8Format::E4M3 => {
+                if exp == 0b1111 && man == 0b111 {
+                    return f32::NAN;
+                }
+            }
+            Fp8Format::E5M2 => {
+                if exp == 0b11111 {
+                    return if man == 0 { sign * f32::INFINITY } else { f32::NAN };
+                }
+            }
+        }
+        if exp == 0 {
+            return sign * (man as f32) * self.min_subnormal();
+        }
+        let frac = 1.0 + (man as f32) / (1 << mb) as f32;
+        sign * frac * exp2f(exp - bias)
+    }
+}
+
+fn exp2f(e: i32) -> f32 {
+    if (-126..=127).contains(&e) {
+        f32::from_bits(((e + 127) as u32) << 23)
+    } else {
+        (e as f32).exp2()
+    }
+}
+
+fn rne_round(x: f32) -> u32 {
+    let fl = x.floor();
+    let frac = x - fl;
+    let base = fl as u32;
+    if frac > 0.5 {
+        base + 1
+    } else if frac < 0.5 {
+        base
+    } else if base % 2 == 0 {
+        base
+    } else {
+        base + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_wheel() {
+        // decode every code, re-encode, expect identity (except NaN)
+        for code in 0u16..=255 {
+            let v = E4M3.decode(code as u8);
+            if v.is_nan() {
+                continue;
+            }
+            let back = E4M3.encode(v);
+            assert_eq!(back, code as u8, "code {code:#x} -> {v} -> {back:#x}");
+        }
+    }
+
+    #[test]
+    fn e5m2_wheel() {
+        for code in 0u16..=255 {
+            let v = E5M2.decode(code as u8);
+            if v.is_nan() {
+                continue;
+            }
+            let back = E5M2.encode(v);
+            if v.is_infinite() {
+                assert_eq!(back & 0x7f, 0x7c);
+                assert_eq!(back & 0x80, (code as u8) & 0x80);
+            } else {
+                assert_eq!(back, code as u8, "code {code:#x} -> {v} -> {back:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn midpoint_rounding_even() {
+        // between 1.0 (mantissa 000) and 1.125 (mantissa 001) for e4m3:
+        // midpoint 1.0625 must round to even mantissa -> 1.0
+        assert_eq!(E4M3.decode(E4M3.encode(1.0625)), 1.0);
+        // between 1.125 and 1.25 midpoint 1.1875 -> 1.25 (odd -> up to even)
+        assert_eq!(E4M3.decode(E4M3.encode(1.1875)), 1.25);
+    }
+
+    #[test]
+    fn subnormal_boundary() {
+        // largest e4m3 subnormal: 7 * 2^-9; min normal 2^-6
+        let sub_max = 7.0 * 2f32.powi(-9);
+        assert_eq!(E4M3.decode(E4M3.encode(sub_max)), sub_max);
+        // halfway between sub_max and min_normal rounds to even (min normal)
+        let mid = (sub_max + 2f32.powi(-6)) / 2.0;
+        assert_eq!(E4M3.decode(E4M3.encode(mid)), 2f32.powi(-6));
+    }
+
+    #[test]
+    fn signs() {
+        assert_eq!(E4M3.encode(-0.0) & 0x80, 0x80);
+        assert_eq!(E4M3.decode(0x80), 0.0);
+        assert!(E4M3.decode(0x80).is_sign_negative());
+        assert_eq!(E5M2.encode(-1e9) & 0x80, 0x80);
+        assert!(E5M2.decode(E5M2.encode(-1e9)).is_infinite());
+    }
+}

@@ -1,0 +1,127 @@
+//! Real u8 FP8 codecs — E4M3 (fn variant) and E5M2.
+//!
+//! The Python layer simulates FP8 on f32 value grids; *this* module is
+//! where FP8 becomes one actual byte: optimizer-moment storage and
+//! checkpoints are packed through these codecs, so the Table 4 memory
+//! reduction is measured, not estimated. Conversion semantics match
+//! ml_dtypes/XLA exactly (RNE; E4M3 overflow → NaN, E5M2 overflow → ±inf),
+//! which `python/tests/test_formats.py` pins on the Python side and
+//! `tests/codec.rs` pins here.
+
+pub mod format;
+pub mod stochastic;
+pub use format::{Fp8Format, E4M3, E5M2};
+pub use stochastic::{encode_sr, qdq_sr};
+
+/// Encode an f32 to the format's u8 representation (RNE).
+pub fn encode(fmt: Fp8Format, x: f32) -> u8 {
+    fmt.encode(x)
+}
+
+/// Decode a u8 back to f32.
+pub fn decode(fmt: Fp8Format, b: u8) -> f32 {
+    fmt.decode(b)
+}
+
+/// Quantize-dequantize on the f32 grid (must agree with the Python
+/// `formats.quantize_grid`).
+pub fn qdq(fmt: Fp8Format, x: f32) -> f32 {
+    fmt.decode(fmt.encode(x))
+}
+
+/// Pack a slice of f32 (assumed to lie on `scale`-scaled fp8 grid or
+/// not — values are rounded) into bytes. Returns (bytes, scale) where
+/// scale is the pow2 JIT scale chosen from the slice amax, matching
+/// `python/compile/formats.compute_scale`.
+pub fn pack_scaled(fmt: Fp8Format, xs: &[f32]) -> (Vec<u8>, f32) {
+    let amax = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let scale = compute_scale(fmt, amax);
+    let bytes = xs.iter().map(|&x| fmt.encode((x * scale).clamp(-fmt.max(), fmt.max()))).collect();
+    (bytes, scale)
+}
+
+/// Unpack bytes produced by [`pack_scaled`].
+pub fn unpack_scaled(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(bytes.iter().map(|&b| fmt.decode(b) / scale));
+}
+
+/// Pow2 JIT scale positioning `amax` inside the format range — the
+/// same policy as the Python side and `scaling::policy`.
+pub fn compute_scale(fmt: Fp8Format, amax: f32) -> f32 {
+    let amax = amax.max(1e-12);
+    let e = (fmt.max() / amax).log2().floor() as i32;
+    let s = exp2i(e);
+    if amax * s > fmt.max() {
+        s * 0.5
+    } else {
+        s
+    }
+}
+
+/// Exact 2^e for f32 (ldexp).
+pub fn exp2i(e: i32) -> f32 {
+    let e = e.clamp(-126, 127);
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qdq_fixed_points() {
+        for fmt in [E4M3, E5M2] {
+            for code in 0u16..=255 {
+                let v = fmt.decode(code as u8);
+                if v.is_finite() {
+                    assert_eq!(qdq(fmt, v).to_bits(), v.to_bits(), "{fmt:?} code={code}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn known_values_e4m3() {
+        assert_eq!(qdq(E4M3, 448.0), 448.0);
+        assert!(qdq(E4M3, 1000.0).is_nan()); // overflow -> NaN (fn variant)
+        assert_eq!(qdq(E4M3, 0.3), 0.3125);
+        assert_eq!(qdq(E4M3, 2f32.powi(-9)), 2f32.powi(-9)); // min subnormal
+        assert_eq!(qdq(E4M3, 2f32.powi(-10)), 0.0); // ties to even -> 0
+    }
+
+    #[test]
+    fn known_values_e5m2() {
+        assert_eq!(qdq(E5M2, 57344.0), 57344.0);
+        assert!(qdq(E5M2, 1e9).is_infinite()); // overflow -> inf
+        assert_eq!(qdq(E5M2, 2f32.powi(-16)), 2f32.powi(-16));
+        assert_eq!(qdq(E5M2, 1000.0), 1024.0);
+    }
+
+    #[test]
+    fn pack_roundtrip_error_bounded() {
+        let xs: Vec<f32> = (0..1000).map(|i| ((i as f32) * 0.37 - 180.0) * 1e-4).collect();
+        for fmt in [E4M3, E5M2] {
+            let (bytes, scale) = pack_scaled(fmt, &xs);
+            let mut out = Vec::new();
+            unpack_scaled(fmt, &bytes, scale, &mut out);
+            let step = 2f32.powi(-(fmt.man_bits() as i32));
+            for (&x, &y) in xs.iter().zip(&out) {
+                let tol = x.abs() * step + fmt.min_subnormal() / scale;
+                assert!((x - y).abs() <= tol, "{fmt:?}: {x} -> {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn compute_scale_is_pow2_and_in_range() {
+        for fmt in [E4M3, E5M2] {
+            for amax in [1e-9f32, 1e-3, 1.0, 447.9, 448.0, 1e7] {
+                let s = compute_scale(fmt, amax);
+                assert_eq!(s, exp2i(s.log2().round() as i32), "pow2");
+                assert!(amax * s <= fmt.max() * 1.000001);
+                assert!(amax * s > fmt.max() / 4.0);
+            }
+        }
+    }
+}

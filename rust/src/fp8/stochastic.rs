@@ -1,0 +1,160 @@
+//! Stochastic rounding for FP8 — an extension beyond the paper.
+//!
+//! The paper's scheme uses round-to-nearest-even everywhere. For the
+//! *optimizer moments* (§5), SR is the natural next step: RNE
+//! systematically loses sub-ulp gradient mass in the first-moment EMA
+//! (`β·m` barely moves for |Δ| below half an ulp), whereas SR is
+//! unbiased in expectation. This module provides an SR encoder wired
+//! to the deterministic PRNG so runs stay reproducible, plus the
+//! statistical machinery the ablation bench uses.
+
+use crate::util::prng::Rng;
+
+use super::format::Fp8Format;
+
+/// Stochastically round `x` onto the fp8 grid: the two bracketing grid
+/// values are chosen with probability proportional to proximity.
+/// Overflow saturates to ±max (SR between max and inf is meaningless).
+pub fn encode_sr(fmt: Fp8Format, x: f32, rng: &mut Rng) -> u8 {
+    if x.is_nan() {
+        return fmt.encode(x);
+    }
+    let max = fmt.max();
+    let x = x.clamp(-max, max);
+    let lo = round_down(fmt, x);
+    let lo_v = fmt.decode(lo);
+    if lo_v == x {
+        return lo;
+    }
+    let hi = next_up(fmt, lo);
+    let hi_v = fmt.decode(hi);
+    let t = ((x - lo_v) / (hi_v - lo_v)) as f64;
+    if rng.uniform() < t {
+        hi
+    } else {
+        lo
+    }
+}
+
+/// qdq with stochastic rounding.
+pub fn qdq_sr(fmt: Fp8Format, x: f32, rng: &mut Rng) -> f32 {
+    fmt.decode(encode_sr(fmt, x, rng))
+}
+
+/// Largest grid value ≤ x (x finite, |x| ≤ max).
+fn round_down(fmt: Fp8Format, x: f32) -> u8 {
+    // encode rounds to nearest; step down if it overshot
+    let e = fmt.encode(x);
+    let v = fmt.decode(e);
+    if v <= x {
+        e
+    } else {
+        prev_down(fmt, e)
+    }
+}
+
+/// Next representable value above the one encoded by `b` (same sign
+/// walk on the code wheel; crosses zero correctly).
+fn next_up(fmt: Fp8Format, b: u8) -> u8 {
+    let v = fmt.decode(b);
+    // monotone scan is fine at 256 codes; called on the cold path only
+    let mut best = b;
+    let mut best_v = f32::INFINITY;
+    for c in 0u16..=255 {
+        let w = fmt.decode(c as u8);
+        if w.is_finite() && w > v && w < best_v {
+            best = c as u8;
+            best_v = w;
+        }
+    }
+    best
+}
+
+fn prev_down(fmt: Fp8Format, b: u8) -> u8 {
+    let v = fmt.decode(b);
+    let mut best = b;
+    let mut best_v = f32::NEG_INFINITY;
+    for c in 0u16..=255 {
+        let w = fmt.decode(c as u8);
+        if w.is_finite() && w < v && w > best_v {
+            best = c as u8;
+            best_v = w;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::{E4M3, E5M2};
+
+    #[test]
+    fn sr_hits_only_bracketing_values() {
+        let mut rng = Rng::new(1);
+        let x = 0.3f32; // between 0.28125 and 0.3125 on E4M3
+        for _ in 0..100 {
+            let v = qdq_sr(E4M3, x, &mut rng);
+            assert!(v == 0.28125 || v == 0.3125, "{v}");
+        }
+    }
+
+    #[test]
+    fn sr_is_unbiased() {
+        let mut rng = Rng::new(2);
+        let x = 0.29f32;
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| qdq_sr(E4M3, x, &mut rng) as f64).sum::<f64>() / n as f64;
+        assert!(
+            (mean - x as f64).abs() < 3e-4,
+            "SR must be unbiased: mean {mean} vs {x}"
+        );
+    }
+
+    #[test]
+    fn sr_exact_values_stay_fixed() {
+        let mut rng = Rng::new(3);
+        for fmt in [E4M3, E5M2] {
+            for code in 0u16..=255 {
+                let v = fmt.decode(code as u8);
+                if v.is_finite() {
+                    assert_eq!(qdq_sr(fmt, v, &mut rng).to_bits(), v.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sr_saturates_overflow() {
+        let mut rng = Rng::new(4);
+        assert_eq!(qdq_sr(E4M3, 1e9, &mut rng), 448.0);
+        assert_eq!(qdq_sr(E4M3, -1e9, &mut rng), -448.0);
+    }
+
+    #[test]
+    fn sr_ema_preserves_small_updates_where_rne_stalls() {
+        // the motivating property: EMA m' = 0.9 m + 0.1 g with g one
+        // tenth of an ulp — RNE freezes, SR drifts toward the target
+        let fmt = E4M3;
+        let m0 = 1.0f32;
+        let g = 1.0 + 8.0 * 0.125; // target far above
+        let step = |m: f32, rng: &mut Option<&mut Rng>| {
+            let raw = 0.9 * m + 0.1 * g;
+            match rng {
+                Some(r) => qdq_sr(fmt, raw, r),
+                None => fmt.decode(fmt.encode(raw)),
+            }
+        };
+        let mut rng = Rng::new(5);
+        let mut m_sr = m0;
+        let mut m_rne = m0;
+        for _ in 0..200 {
+            m_sr = step(m_sr, &mut Some(&mut rng));
+            m_rne = step(m_rne, &mut None);
+        }
+        // both should approach g; SR must get at least as close
+        assert!((m_sr - g).abs() <= (m_rne - g).abs() + 1e-6);
+        assert!((m_sr - g).abs() < 0.3, "SR EMA must track: {m_sr} vs {g}");
+    }
+}

@@ -1,0 +1,40 @@
+//! # fp8-trainer — Scaling FP8 Training to Trillion-Token LLMs (ICLR 2025)
+//!
+//! Rust coordinator (L3) for the three-layer reproduction of Fishman et
+//! al.'s FP8 training system. Python/JAX/Pallas exists only on the
+//! build path (`python/compile` → `artifacts/*.hlo.txt`); this crate
+//! owns everything at runtime:
+//!
+//! * [`runtime`] — PJRT CPU client: load HLO-text artifacts, execute.
+//! * [`scaling`] — the FP8 delayed-scaling state machine (per-tensor
+//!   amax ring buffers → pow2 scales), the piece the paper's
+//!   instability analysis targets.
+//! * [`coordinator`] — training orchestration: data-parallel workers,
+//!   gradient all-reduce, ZeRO-1 sharded optimizer, LR schedule,
+//!   divergence detection.
+//! * [`fp8`] — real u8 E4M3/E5M2 codecs (checkpoint/optimizer storage;
+//!   the Table 4 memory story is measured bytes, not simulation).
+//! * [`data`] — deterministic synthetic Zipf-Markov corpus (the
+//!   RedPajama stand-in; see DESIGN.md §Substitutions).
+//! * [`analysis`] — w1/w2 channel correlation tracking, activation
+//!   histograms (paper Figs. 1, 2, 7, 9).
+//! * [`perfmodel`] — analytic Gaudi2/A6000 throughput models
+//!   (Tables 3 and 5) and the Pallas kernel VMEM/MXU estimator.
+//!
+//! Offline-build note: only the `xla` crate's vendored closure is
+//! available, so `util` re-implements the small substrates a normal
+//! build would pull from crates.io (JSON, CSV, PRNG, TOML subset,
+//! property testing, bench harness).
+
+pub mod analysis;
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fp8;
+pub mod metrics;
+pub mod optimizer;
+pub mod perfmodel;
+pub mod runtime;
+pub mod scaling;
+pub mod util;

@@ -1,0 +1,208 @@
+//! fp8-trainer CLI — the launcher.
+//!
+//! ```text
+//! fp8-trainer train [--config FILE] [key=value ...]
+//! fp8-trainer eval  [--config FILE] [key=value ...]
+//! fp8-trainer tables            # analytic Tables 3/5 + memory Table 4
+//! fp8-trainer artifacts         # list loadable artifacts
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use fp8_trainer::config::TrainConfig;
+use fp8_trainer::coordinator::Trainer;
+use fp8_trainer::metrics::JsonlSink;
+use fp8_trainer::perfmodel::{throughput_table, Workload, A6000_ADA, GAUDI2};
+use fp8_trainer::runtime::Runtime;
+use fp8_trainer::util::json::Json;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("FP8_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+}
+
+fn parse_args(args: &[String]) -> Result<(Option<PathBuf>, Vec<(String, String)>)> {
+    let mut config = None;
+    let mut overrides = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                config = Some(PathBuf::from(
+                    args.get(i + 1).ok_or_else(|| anyhow!("--config needs a path"))?,
+                ));
+                i += 2;
+            }
+            kv if kv.contains('=') => {
+                let (k, v) = kv.split_once('=').unwrap();
+                overrides.push((k.to_string(), v.to_string()));
+                i += 1;
+            }
+            other => return Err(anyhow!("unexpected argument '{other}'")),
+        }
+    }
+    Ok((config, overrides))
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "train" => {
+            let (config, overrides) = parse_args(&args[1..])?;
+            let cfg = TrainConfig::load(config.as_deref(), &overrides).map_err(|e| anyhow!(e))?;
+            cmd_train(cfg)
+        }
+        "eval" => {
+            let (config, overrides) = parse_args(&args[1..])?;
+            let cfg = TrainConfig::load(config.as_deref(), &overrides).map_err(|e| anyhow!(e))?;
+            cmd_eval(cfg)
+        }
+        "tables" => cmd_tables(),
+        "analyze" => {
+            // fp8-trainer analyze <run-dir> [out.csv]
+            let dir = args.get(1).ok_or_else(|| anyhow!("analyze needs a run dir"))?;
+            let out = args
+                .get(2)
+                .cloned()
+                .unwrap_or_else(|| format!("{dir}/weight_report.csv"));
+            let snaps = fp8_trainer::analysis::analyze_run(
+                std::path::Path::new(dir),
+                std::path::Path::new(&out),
+            )?;
+            println!("{:>8} {:>6} {:>8} {:>9} {:>9} {:>8} {:>10}", "step",
+                     "layer", "channel", "norm1", "norm2", "cosine", "n_aligned");
+            for s in &snaps {
+                println!(
+                    "{:>8} {:>6} {:>8} {:>9.3} {:>9.3} {:>8.3} {:>10}",
+                    s.step, s.layer, s.top.channel, s.top.norm1, s.top.norm2,
+                    s.top.cosine, s.n_aligned
+                );
+            }
+            println!("report at {out}");
+            Ok(())
+        }
+        "artifacts" => {
+            let rt = Runtime::new(artifacts_dir())?;
+            for name in rt.available() {
+                println!("{name}");
+            }
+            Ok(())
+        }
+        _ => {
+            println!(
+                "fp8-trainer — FP8 LLM training coordinator (ICLR 2025 reproduction)\n\n\
+                 usage:\n  fp8-trainer train [--config FILE] [key=value ...]\n  \
+                 fp8-trainer eval  [--config FILE] [key=value ...]\n  \
+                 fp8-trainer tables\n  fp8-trainer artifacts\n\n\
+                 common keys: size=s1m recipe=fp8_full steps=1000 lr=2.5e-4\n\
+                 recipes: bf16 bf16_smooth fp8 fp8_noq3 fp8_smooth fp8_full\n         \
+                 fp8_adam_<m>_<v> gelu_fp8 gelu_bf16"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(cfg: TrainConfig) -> Result<()> {
+    let rt = Arc::new(Runtime::new(artifacts_dir())?);
+    let mut t = Trainer::new(rt, cfg.clone())?;
+    let out_dir = PathBuf::from(&cfg.out_dir);
+    std::fs::create_dir_all(&out_dir)?;
+    let mut sink = JsonlSink::create(out_dir.join("metrics.jsonl"))?;
+    sink.record(vec![("config", cfg.to_json())])?;
+
+    println!(
+        "training {} / {} for {} steps ({} params, {} tokens/step)",
+        cfg.size,
+        cfg.recipe,
+        cfg.steps,
+        t.params.total_elems(),
+        t.tokens_per_step()
+    );
+    for _ in 0..cfg.steps {
+        let o = t.step()?;
+        if o.step % cfg.log_every == 0 || o.step + 1 == cfg.steps {
+            println!(
+                "step {:5}  loss {:.4}  gnorm {:.3}  lr {:.2e}  {:.1} tok/s  verdict {:?}",
+                o.step, o.loss, o.grad_norm, o.lr, o.stats.tokens_per_s, o.verdict
+            );
+            let max_swiglu = o.monitor.iter().map(|m| m[0]).fold(0.0f32, f32::max);
+            sink.record(vec![
+                ("step", Json::Num(o.step as f64)),
+                ("loss", Json::Num(o.loss as f64)),
+                ("grad_norm", Json::Num(o.grad_norm as f64)),
+                ("lr", Json::Num(o.lr as f64)),
+                ("tokens_per_s", Json::Num(o.stats.tokens_per_s)),
+                ("swiglu_amax", Json::Num(max_swiglu as f64)),
+            ])?;
+        }
+        if cfg.ckpt_every > 0 && (o.step + 1) % cfg.ckpt_every == 0 {
+            save_checkpoint(&t, &out_dir, o.step + 1)?;
+        }
+    }
+    sink.flush()?;
+    save_checkpoint(&t, &out_dir, cfg.steps)?;
+    println!("done in {:.1}s — metrics at {}", t.wall_s(), out_dir.display());
+    Ok(())
+}
+
+fn save_checkpoint(t: &Trainer, out_dir: &std::path::Path, step: usize) -> Result<()> {
+    use fp8_trainer::checkpoint::{Dtype, Writer};
+    let rc = t.cfg.recipe_config();
+    let master = Dtype::from_name(&rc.master_dtype)?;
+    let m_dt = Dtype::from_name(if rc.m_fmt == "fp32" { "f32" } else { &rc.m_fmt })?;
+    let v_dt = Dtype::from_name(if rc.v_fmt == "fp32" { "f32" } else { &rc.v_fmt })?;
+    let meta = fp8_trainer::util::json::obj(vec![
+        ("step", Json::Num(step as f64)),
+        ("recipe", Json::Str(t.cfg.recipe.clone())),
+        ("size", Json::Str(t.cfg.size.clone())),
+    ]);
+    let mut w = Writer::new(&meta);
+    for (spec, tensor) in t.params.specs.iter().zip(&t.params.tensors) {
+        w.tensor(&spec.name, master, tensor.f32s());
+    }
+    w.tensor("adam.m", m_dt, &t.m_flat);
+    w.tensor("adam.v", v_dt, &t.v_flat);
+    let path = out_dir.join(format!("step{step:06}.ckpt"));
+    let bytes = w.finish(&path)?;
+    println!("checkpoint {} ({:.1} MiB)", path.display(), bytes as f64 / 1048576.0);
+    Ok(())
+}
+
+fn cmd_eval(cfg: TrainConfig) -> Result<()> {
+    let rt = Arc::new(Runtime::new(artifacts_dir())?);
+    let t = Trainer::new(rt, cfg.clone())?;
+    let rc = cfg.recipe_config();
+    let (ppl, acc) = t.eval(&rc.name, 8)?;
+    println!("{}/{}: held-out ppl {:.3}, next-token acc {:.4}", cfg.size, cfg.recipe, ppl, acc);
+    Ok(())
+}
+
+fn cmd_tables() -> Result<()> {
+    let w = Workload::llama7b();
+    for dev in [&GAUDI2, &A6000_ADA] {
+        println!("\nThroughput model — {} (paper Tables 3/5 shape):", dev.name);
+        println!("{:34} {:>12} {:>10} {:>8}  status", "configuration", "samples/s", "speedup", "TFLOPS");
+        for row in throughput_table(dev, &w, 8.0) {
+            println!(
+                "{:34} {:>12.2} {:>9.1}% {:>8.0}  {}",
+                row.config.label(),
+                row.throughput,
+                row.speedup_pct,
+                row.tflops,
+                if row.converges { "converge" } else { "DIVERGE" }
+            );
+        }
+    }
+    Ok(())
+}

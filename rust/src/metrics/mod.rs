@@ -1,0 +1,106 @@
+//! Metrics: step meter (throughput/TFLOPS estimates) + JSONL sink.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+
+/// Rolling throughput meter.
+pub struct StepMeter {
+    start: Instant,
+    last: Instant,
+    pub steps: usize,
+    pub tokens: usize,
+    flops_per_step: f64,
+}
+
+impl StepMeter {
+    pub fn new(flops_per_step: f64) -> Self {
+        let now = Instant::now();
+        Self { start: now, last: now, steps: 0, tokens: 0, flops_per_step }
+    }
+
+    pub fn tick(&mut self, tokens: usize) -> StepStats {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.steps += 1;
+        self.tokens += tokens;
+        StepStats {
+            step_time_s: dt,
+            tokens_per_s: tokens as f64 / dt.max(1e-9),
+            tflops: self.flops_per_step / dt.max(1e-9) / 1e12,
+        }
+    }
+
+    pub fn wall_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub step_time_s: f64,
+    pub tokens_per_s: f64,
+    pub tflops: f64,
+}
+
+/// Append-only JSONL metrics file (one JSON object per record).
+pub struct JsonlSink {
+    w: BufWriter<File>,
+}
+
+impl JsonlSink {
+    pub fn create<P: AsRef<Path>>(path: P) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Self { w: BufWriter::new(f) })
+    }
+
+    pub fn record(&mut self, fields: Vec<(&str, Json)>) -> std::io::Result<()> {
+        writeln!(self.w, "{}", obj(fields).to_string())
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_counts() {
+        let mut m = StepMeter::new(1e9);
+        let s = m.tick(1024);
+        assert!(s.step_time_s >= 0.0);
+        assert!(s.tokens_per_s > 0.0);
+        assert_eq!(m.steps, 1);
+        assert_eq!(m.tokens, 1024);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_back() {
+        let dir = std::env::temp_dir().join("fp8_jsonl_test");
+        let path = dir.join("m.jsonl");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut s = JsonlSink::create(&path).unwrap();
+            s.record(vec![("step", Json::Num(1.0)), ("loss", Json::Num(5.5))]).unwrap();
+            s.record(vec![("step", Json::Num(2.0)), ("loss", Json::Num(5.4))]).unwrap();
+            s.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            assert!(Json::parse(l).is_ok());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,288 @@
+//! Optimizer state management: the flat parameter space, AdamW moment
+//! storage (f32 or packed-u8 FP8), weight-decay groups, and the ZeRO-1
+//! shard layout — everything around the `adam_*` compute artifact.
+//!
+//! Storage formats follow the paper §5 / Table 4: moments optionally
+//! live as **one real byte per element** (E4M3 first moment, E5M2
+//! second moment, per-chunk pow2 scales) and the memory accounting
+//! below is what the Table 4 bench measures.
+
+use crate::fp8::{self, Fp8Format, E4M3, E5M2};
+use crate::runtime::manifest::ParamSpec;
+
+/// How a moment buffer is stored between steps.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MomentStore {
+    F32,
+    Fp8(Fp8Format),
+}
+
+impl MomentStore {
+    pub fn from_name(name: &str) -> Self {
+        match name {
+            "e4m3" => MomentStore::Fp8(E4M3),
+            "e5m2" => MomentStore::Fp8(E5M2),
+            _ => MomentStore::F32,
+        }
+    }
+
+    pub fn bytes_per_elem(self) -> f64 {
+        match self {
+            MomentStore::F32 => 4.0,
+            // 1 byte + amortized per-chunk f32 scale
+            MomentStore::Fp8(_) => 1.0,
+        }
+    }
+}
+
+/// A moment buffer: f32 working view + optional packed storage.
+///
+/// The artifact consumes/produces f32 values that lie exactly on the
+/// fp8 grid (the kernel quantizes them); `pack()` converts to real u8
+/// between steps and `unpack()` restores before the next step, so the
+/// resident set matches the paper's memory story.
+pub struct MomentBuffer {
+    pub store: MomentStore,
+    pub chunk: usize,
+    /// packed representation (chunked) or f32, depending on `store`
+    packed: Vec<(Vec<u8>, f32)>,
+    f32_buf: Vec<f32>,
+    len: usize,
+}
+
+impl MomentBuffer {
+    pub fn zeros(len: usize, store: MomentStore, chunk: usize) -> Self {
+        Self {
+            store,
+            chunk,
+            packed: Vec::new(),
+            f32_buf: vec![0.0; len],
+            len,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Working f32 view (unpacks if needed).
+    pub fn as_f32(&mut self) -> &mut Vec<f32> {
+        if self.f32_buf.is_empty() && self.len > 0 {
+            // unpack
+            let fmt = match self.store {
+                MomentStore::Fp8(f) => f,
+                MomentStore::F32 => unreachable!("f32 store never packs"),
+            };
+            let mut out = Vec::with_capacity(self.len);
+            let mut tmp = Vec::new();
+            for (bytes, scale) in &self.packed {
+                fp8::unpack_scaled(fmt, bytes, *scale, &mut tmp);
+                out.extend_from_slice(&tmp);
+            }
+            out.truncate(self.len);
+            self.f32_buf = out;
+            self.packed.clear();
+        }
+        &mut self.f32_buf
+    }
+
+    /// Pack to the storage format (no-op for f32).
+    pub fn pack(&mut self) {
+        let fmt = match self.store {
+            MomentStore::F32 => return,
+            MomentStore::Fp8(f) => f,
+        };
+        if self.f32_buf.is_empty() {
+            return; // already packed
+        }
+        self.packed = self
+            .f32_buf
+            .chunks(self.chunk)
+            .map(|c| fp8::pack_scaled(fmt, c))
+            .collect();
+        self.f32_buf = Vec::new();
+    }
+
+    /// Resident bytes in the packed state (the Table 4 measurement).
+    pub fn resident_bytes(&self) -> usize {
+        match self.store {
+            MomentStore::F32 => self.len * 4,
+            MomentStore::Fp8(_) => {
+                if self.packed.is_empty() {
+                    self.len // would-be packed size
+                } else {
+                    self.packed.iter().map(|(b, _)| b.len() + 4).sum()
+                }
+            }
+        }
+    }
+}
+
+/// Weight-decay groups: Llama-2 decays matmul weights but not norm
+/// gains (or embeddings, in most configs). The coordinator calls the
+/// adam artifact once per (shard × group) with the group's wd scalar.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecayGroup {
+    pub decay: bool,
+    /// (offset, len) ranges into the flat parameter space
+    pub ranges: Vec<(usize, usize)>,
+}
+
+pub fn decay_groups(params: &[ParamSpec]) -> Vec<DecayGroup> {
+    let mut decay = Vec::new();
+    let mut no_decay = Vec::new();
+    let mut off = 0;
+    for p in params {
+        let n = p.numel();
+        // norm gains (ln_*) are the no-decay set, matching Llama-2
+        if p.name.starts_with("ln_") {
+            no_decay.push((off, n));
+        } else {
+            decay.push((off, n));
+        }
+        off += n;
+    }
+    vec![
+        DecayGroup { decay: true, ranges: decay },
+        DecayGroup { decay: false, ranges: no_decay },
+    ]
+}
+
+/// ZeRO-1 shard layout: the flat space split into `n_workers`
+/// contiguous ranges (optimizer state lives only on its owner).
+#[derive(Clone, Debug)]
+pub struct ShardLayout {
+    pub total: usize,
+    pub shards: Vec<(usize, usize)>, // (offset, len)
+}
+
+impl ShardLayout {
+    pub fn new(total: usize, n_workers: usize) -> Self {
+        assert!(n_workers >= 1);
+        let base = total / n_workers;
+        let rem = total % n_workers;
+        let mut shards = Vec::with_capacity(n_workers);
+        let mut off = 0;
+        for w in 0..n_workers {
+            let len = base + usize::from(w < rem);
+            shards.push((off, len));
+            off += len;
+        }
+        Self { total, shards }
+    }
+
+    pub fn of_worker(&self, w: usize) -> (usize, usize) {
+        self.shards[w]
+    }
+}
+
+/// Memory accounting for one training configuration (Table 4).
+#[derive(Clone, Debug)]
+pub struct MemoryModel {
+    pub params: usize,
+    pub master_bytes_per_param: f64,
+    pub m_store: MomentStore,
+    pub v_store: MomentStore,
+    pub dp_workers: usize,
+    /// compute copy of the weights (bf16 on device)
+    pub weight_bytes_per_param: f64,
+    /// gradient buffer (bf16/fp8 hybrid on device; bf16 here)
+    pub grad_bytes_per_param: f64,
+}
+
+impl MemoryModel {
+    /// Optimizer-state bytes per worker. Matching the paper's
+    /// DeepSpeed ZeRO-1 measurement (Table 4): the Adam *moments* are
+    /// sharded across workers; the master-weight copy is replicated
+    /// (this is what reproduces the 63.25 → 44.08 GB/HPU numbers —
+    /// 14 GB saved by FP32→FP16 master, ~5.25 GB by FP32→FP8 sharded
+    /// moments on 7B/8 workers).
+    pub fn optimizer_bytes_per_worker(&self) -> f64 {
+        let moments = self.m_store.bytes_per_elem() + self.v_store.bytes_per_elem();
+        self.master_bytes_per_param * self.params as f64
+            + moments * self.params as f64 / self.dp_workers as f64
+    }
+
+    /// Total model-state bytes per worker (weights + grads + optimizer).
+    pub fn total_bytes_per_worker(&self) -> f64 {
+        (self.weight_bytes_per_param + self.grad_bytes_per_param) * self.params as f64
+            + self.optimizer_bytes_per_worker()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, numel: usize) -> ParamSpec {
+        ParamSpec { name: name.into(), shape: vec![numel], init_std: 0.02 }
+    }
+
+    #[test]
+    fn decay_groups_split_norms() {
+        let specs = vec![spec("embed", 10), spec("ln_1", 4), spec("wq", 16)];
+        let gs = decay_groups(&specs);
+        assert_eq!(gs[0].ranges, vec![(0, 10), (14, 16)]);
+        assert_eq!(gs[1].ranges, vec![(10, 4)]);
+    }
+
+    #[test]
+    fn shards_cover_everything() {
+        for total in [10usize, 11, 1000] {
+            for w in [1usize, 3, 8] {
+                let l = ShardLayout::new(total, w);
+                let sum: usize = l.shards.iter().map(|&(_, n)| n).sum();
+                assert_eq!(sum, total);
+                let mut off = 0;
+                for &(o, n) in &l.shards {
+                    assert_eq!(o, off);
+                    off += n;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn moment_pack_roundtrip_error() {
+        let mut m = MomentBuffer::zeros(1000, MomentStore::Fp8(E4M3), 256);
+        for (i, x) in m.as_f32().iter_mut().enumerate() {
+            *x = (i as f32 - 500.0) * 1e-4;
+        }
+        let before = m.as_f32().clone();
+        m.pack();
+        assert!(m.resident_bytes() < 1100); // ~1 byte/elem + scales
+        let after = m.as_f32().clone();
+        for (a, b) in before.iter().zip(&after) {
+            assert!((a - b).abs() <= a.abs() * 0.07 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn memory_model_matches_paper_ratio() {
+        // 7B params, 8 workers, ZeRO-1: fp32 moments + f32 master vs
+        // fp8 moments + f16 master — expect roughly the paper's ~30%
+        // total reduction given fixed weight+grad overhead.
+        let base = MemoryModel {
+            params: 7_000_000_000,
+            master_bytes_per_param: 4.0,
+            m_store: MomentStore::F32,
+            v_store: MomentStore::F32,
+            dp_workers: 8,
+            weight_bytes_per_param: 2.0,
+            grad_bytes_per_param: 2.0,
+        };
+        let ours = MemoryModel {
+            master_bytes_per_param: 2.0,
+            m_store: MomentStore::Fp8(E4M3),
+            v_store: MomentStore::Fp8(E5M2),
+            ..base.clone()
+        };
+        let r = ours.total_bytes_per_worker() / base.total_bytes_per_worker();
+        // paper: 44.08 / 63.25 = 0.697
+        assert!(r < 0.75 && r > 0.62, "reduction ratio {r}");
+    }
+}

@@ -1,0 +1,53 @@
+//! Device descriptions for the analytic model.
+//!
+//! Effective rates are *achieved* (not peak) rates calibrated so the
+//! BF16 row lands at the paper's measured TFLOPS (311 on 8×Gaudi2,
+//! 76 on 8×A6000 — Tables 3/5); the FP8:BF16 rate ratio is the
+//! architectural 2× less a de-rate for scale handling.
+
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    /// achieved bf16 matmul FLOP/s for this 8-device setup
+    pub bf16_flops: f64,
+    /// achieved fp8 matmul FLOP/s
+    pub fp8_flops: f64,
+    /// fractional step-time overhead of per-tensor cast/scale handling
+    pub quant_overhead: f64,
+    /// additional overhead of the per-channel Smooth-SwiGLU pass
+    pub smooth_overhead: f64,
+}
+
+/// 8× Intel Gaudi2 (Table 3). Calibrated: BF16 row = 311 TFLOPS with
+/// a 20% non-matmul slice; achieved FP8:BF16 matmul ratio 1.52×
+/// (architectural 2× de-rated for scale handling — the paper's own
+/// end-to-end gain of +37% at 22% non-matmul implies this ratio).
+pub const GAUDI2: Device = Device {
+    name: "8x Intel Gaudi2",
+    bf16_flops: 389e12,
+    fp8_flops: 589e12,
+    quant_overhead: 0.008,
+    smooth_overhead: 0.025,
+};
+
+/// 8× NVIDIA A6000 Ada (Table 5). Calibrated: BF16 row = 76 TFLOPS.
+pub const A6000_ADA: Device = Device {
+    name: "8x NVIDIA A6000 Ada",
+    bf16_flops: 95e12,
+    fp8_flops: 144e12,
+    quant_overhead: 0.008,
+    smooth_overhead: 0.025,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp8_rate_is_achievable_fraction_of_2x() {
+        for d in [&GAUDI2, &A6000_ADA] {
+            let r = d.fp8_flops / d.bf16_flops;
+            assert!(r > 1.3 && r < 2.0, "{}: {r}", d.name);
+        }
+    }
+}

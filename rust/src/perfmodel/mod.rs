@@ -1,0 +1,160 @@
+//! Analytic performance models for the paper's throughput tables.
+//!
+//! The paper measures Llama-2-7B step throughput on 8× Gaudi2
+//! (Table 3) and 8× A6000 Ada (Table 5). Neither device exists here,
+//! so the tables are regenerated from a roofline model: per-step time =
+//! matmul-FLOPs / effective-MME-rate + non-matmul bytes / vector rate +
+//! quantization overhead, with FP8 doubling the MME rate on the
+//! quantized fraction of the matmul work. The *shape* the benches
+//! check is the paper's ordering and gaps (FP8 +37% > Smooth-SwiGLU
+//! +34% > no-q-w3 +27% > BF16), which falls out of (a) which matmuls
+//! run FP8 per config and (b) the per-channel-scaling overhead.
+//!
+//! [`roofline`] additionally estimates the Pallas kernel's VMEM
+//! footprint and MXU occupancy (DESIGN.md §Perf — interpret-mode
+//! wall-clock is not a TPU proxy, so L1 is costed structurally).
+
+pub mod devices;
+pub mod roofline;
+
+pub use devices::{Device, A6000_ADA, GAUDI2};
+
+/// Which fraction of matmul FLOPs runs at the FP8 rate per config, and
+/// added vector-op overhead per token for scaling machinery.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PrecisionConfig {
+    Bf16,
+    /// FP8 everywhere except the w3 matmul input path stays bf16
+    Fp8NoQ3,
+    /// FP8 everywhere + per-channel smooth scaling overhead
+    Fp8Smooth,
+    /// FP8 everywhere (the diverging config)
+    Fp8Full,
+}
+
+impl PrecisionConfig {
+    pub fn label(self) -> &'static str {
+        match self {
+            PrecisionConfig::Bf16 => "BF16",
+            PrecisionConfig::Fp8NoQ3 => "FP8 + SwiGLU output in BF16",
+            PrecisionConfig::Fp8Smooth => "FP8 + Smooth SwiGLU",
+            PrecisionConfig::Fp8Full => "FP8",
+        }
+    }
+
+    pub fn converges(self) -> bool {
+        !matches!(self, PrecisionConfig::Fp8Full)
+    }
+}
+
+/// Llama-2-7B-like workload description (matmul FLOP split by site).
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub params: f64,
+    pub tokens_per_batch: f64,
+    /// fraction of matmul FLOPs in the w3 (SwiGLU-output) matmul:
+    /// f·d of 4d² + 3fd ≈ 0.268 for Llama-2 (f = 2.6875 d)
+    pub w3_fraction: f64,
+    /// fraction of step time that is not matmul (attention core, norms,
+    /// optimizer, comms) at bf16 — calibrated so BF16 lands at the
+    /// paper's absolute TFLOPS on each device
+    pub non_matmul_fraction: f64,
+}
+
+impl Workload {
+    pub fn llama7b() -> Self {
+        Self {
+            params: 6.74e9,
+            tokens_per_batch: 4096.0,
+            // d=4096, f=11008: w3 share = d·f / (4d² + 3d·f) = 0.223
+            w3_fraction: 0.223,
+            non_matmul_fraction: 0.20,
+        }
+    }
+
+    /// matmul FLOPs per step (fwd+bwd, 6·N·T rule)
+    pub fn matmul_flops(&self) -> f64 {
+        6.0 * self.params * self.tokens_per_batch
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TableRow {
+    pub config: PrecisionConfig,
+    pub throughput: f64, // samples/sec
+    pub speedup_pct: f64,
+    pub tflops: f64,
+    pub converges: bool,
+}
+
+/// Regenerate a Table 3/5-style table for a device.
+pub fn throughput_table(dev: &Device, w: &Workload, batch: f64) -> Vec<TableRow> {
+    let flops = w.matmul_flops();
+    // bf16 step time: matmul at bf16 rate + fixed non-matmul slice
+    let t_mm_bf16 = flops / dev.bf16_flops;
+    let t_fixed = t_mm_bf16 * w.non_matmul_fraction / (1.0 - w.non_matmul_fraction);
+
+    let step_time = |cfg: PrecisionConfig| -> f64 {
+        let (fp8_frac, overhead) = match cfg {
+            PrecisionConfig::Bf16 => (0.0, 0.0),
+            // w3 matmul (fwd+bwd share) stays bf16; quantization of the
+            // rest still pays cast overhead
+            PrecisionConfig::Fp8NoQ3 => (1.0 - w.w3_fraction, dev.quant_overhead),
+            // everything fp8 + per-channel max/scale pass over the
+            // SwiGLU activation (vector-bound)
+            PrecisionConfig::Fp8Smooth => (1.0, dev.quant_overhead + dev.smooth_overhead),
+            PrecisionConfig::Fp8Full => (1.0, dev.quant_overhead),
+        };
+        let t_mm = flops * (1.0 - fp8_frac) / dev.bf16_flops + flops * fp8_frac / dev.fp8_flops;
+        t_mm + t_fixed + t_mm_bf16 * overhead
+    };
+
+    let t_bf16 = step_time(PrecisionConfig::Bf16);
+    [
+        PrecisionConfig::Bf16,
+        PrecisionConfig::Fp8NoQ3,
+        PrecisionConfig::Fp8Smooth,
+        PrecisionConfig::Fp8Full,
+    ]
+    .iter()
+    .map(|&cfg| {
+        let t = step_time(cfg);
+        TableRow {
+            config: cfg,
+            throughput: batch / t,
+            speedup_pct: (t_bf16 / t - 1.0) * 100.0,
+            tflops: flops / t / 1e12,
+            converges: cfg.converges(),
+        }
+    })
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaudi2_reproduces_paper_ordering_and_gaps() {
+        let rows = throughput_table(&GAUDI2, &Workload::llama7b(), 8.0);
+        // ordering: BF16 < noq3 < smooth < fp8
+        assert!(rows[0].throughput < rows[1].throughput);
+        assert!(rows[1].throughput < rows[2].throughput);
+        assert!(rows[2].throughput < rows[3].throughput);
+        // paper gaps: +27.0%, +33.5%, +37.1% — hold within a few points
+        assert!((rows[1].speedup_pct - 27.0).abs() < 5.0, "{}", rows[1].speedup_pct);
+        assert!((rows[2].speedup_pct - 33.5).abs() < 5.0, "{}", rows[2].speedup_pct);
+        assert!((rows[3].speedup_pct - 37.1).abs() < 5.0, "{}", rows[3].speedup_pct);
+        // only standard FP8 diverges
+        assert!(rows.iter().all(|r| r.converges == (r.config != PrecisionConfig::Fp8Full)));
+    }
+
+    #[test]
+    fn a6000_matches_table5_shape() {
+        let rows = throughput_table(&A6000_ADA, &Workload::llama7b(), 8.0);
+        assert!((rows[1].speedup_pct - 27.6).abs() < 6.0);
+        assert!((rows[3].speedup_pct - 37.6).abs() < 6.0);
+        // absolute BF16 TFLOPS near the paper's 76 (calibration check)
+        assert!((rows[0].tflops - 76.0).abs() < 15.0, "{}", rows[0].tflops);
+    }
+}

@@ -1,0 +1,120 @@
+//! Structural cost model for the L1 Pallas kernels (DESIGN.md §Perf).
+//!
+//! Interpret-mode wall-clock says nothing about TPU behaviour, so the
+//! kernels are costed from their BlockSpecs: VMEM footprint per grid
+//! step (must fit the ~16 MiB/core budget with double-buffering) and
+//! arithmetic intensity (FLOPs per HBM byte) against the MXU/VPU
+//! roofline.
+
+/// TPU-like core budget used for the estimates.
+pub const VMEM_BYTES: usize = 16 * 1024 * 1024;
+pub const HBM_GBPS: f64 = 800.0;
+pub const MXU_BF16_TFLOPS: f64 = 180.0;
+pub const VPU_GFLOPS: f64 = 4_000.0;
+
+#[derive(Clone, Debug)]
+pub struct KernelEstimate {
+    pub name: String,
+    pub vmem_bytes: usize,
+    pub vmem_ok: bool,
+    /// FLOPs per byte moved HBM<->VMEM
+    pub arithmetic_intensity: f64,
+    /// min achievable time vs the memory-bound floor (1.0 = at roofline)
+    pub roofline_fraction: f64,
+    pub bound: &'static str,
+}
+
+/// Smooth-SwiGLU fused kernel: two [bt, f] inputs + one output tile +
+/// the [1, f] scale row resident; two passes over the data.
+pub fn smooth_swiglu(block_tokens: usize, d_ff: usize) -> KernelEstimate {
+    let tile = block_tokens * d_ff * 4;
+    let vmem = 2 * tile /* a1,a2 */ + tile /* out */ + d_ff * 4 * 2 /* scales+max */;
+    // per element: swish(~6 flops) + mul + max + scale + quantize(~6) ≈ 15
+    // bytes: 2 passes read a1,a2 (2·2·4) + write q (4) = 20 B/elem
+    let flops_per_elem = 15.0;
+    let bytes_per_elem = 20.0;
+    let ai = flops_per_elem / bytes_per_elem;
+    // vector-bound kernel: time = max(mem, vpu)
+    let t_mem = bytes_per_elem / (HBM_GBPS * 1e9);
+    let t_vpu = flops_per_elem / (VPU_GFLOPS * 1e9);
+    KernelEstimate {
+        name: format!("smooth_swiglu[{block_tokens}x{d_ff}]"),
+        vmem_bytes: vmem,
+        vmem_ok: vmem * 2 <= VMEM_BYTES, // double-buffered
+        arithmetic_intensity: ai,
+        roofline_fraction: t_mem / t_mem.max(t_vpu),
+        bound: if t_mem >= t_vpu { "memory" } else { "vector" },
+    }
+}
+
+/// FP8 matmul kernel: whole-op (m, k) × (k, n) with (bm, bn, bk) VMEM
+/// tiles. HBM traffic is counted at the op level (each operand read
+/// once, output written once — the K-loop keeps the accumulator tile
+/// resident, the BlockSpec re-reads are VMEM-side).
+pub fn fp8_matmul(m: usize, n: usize, k: usize, bm: usize, bn: usize, bk: usize) -> KernelEstimate {
+    let vmem = (bm * bk + bk * bn + bm * bn) * 4;
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let bytes = (m * k + k * n) as f64 * 1.0 /* fp8 operands */ + (m * n) as f64 * 4.0;
+    let ai = flops / bytes;
+    let t_mem = bytes / (HBM_GBPS * 1e9);
+    let t_mxu = flops / (MXU_BF16_TFLOPS * 1e12 * 2.0 /* fp8 2x */);
+    KernelEstimate {
+        name: format!("fp8_matmul[{m}x{n}x{k} @ {bm}x{bn}x{bk}]"),
+        vmem_bytes: vmem,
+        vmem_ok: vmem * 2 <= VMEM_BYTES,
+        arithmetic_intensity: ai,
+        roofline_fraction: t_mxu / t_mxu.max(t_mem),
+        bound: if t_mxu >= t_mem { "mxu" } else { "memory" },
+    }
+}
+
+/// Elementwise Adam: 4 reads + 3 writes of f32 (or 1-byte moments).
+pub fn adam_update(block: usize, fp8_moments: bool) -> KernelEstimate {
+    let vmem = block * 4 * 7;
+    let moment_bytes = if fp8_moments { 1.0 } else { 4.0 };
+    let bytes = 2.0 * 4.0 /* p rw */ + 4.0 /* g */ + 4.0 * moment_bytes /* m,v rw */;
+    let flops = 14.0;
+    let t_mem = bytes / (HBM_GBPS * 1e9);
+    let t_vpu = flops / (VPU_GFLOPS * 1e9);
+    KernelEstimate {
+        name: format!("adam[{block}]{}", if fp8_moments { " fp8-moments" } else { "" }),
+        vmem_bytes: vmem,
+        vmem_ok: vmem * 2 <= VMEM_BYTES,
+        arithmetic_intensity: flops / bytes,
+        roofline_fraction: t_mem / t_mem.max(t_vpu),
+        bound: "memory",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn production_block_shapes_fit_vmem() {
+        assert!(smooth_swiglu(128, 2048).vmem_ok);
+        assert!(fp8_matmul(2048, 2048, 2048, 128, 128, 128).vmem_ok);
+        assert!(adam_update(65536, true).vmem_ok);
+    }
+
+    #[test]
+    fn matmul_is_compute_bound_at_model_shapes() {
+        // m100's d_ff matmul: [tokens=512, d=768] x [768, 2048]
+        let e = fp8_matmul(2048, 2048, 2048, 128, 128, 128);
+        assert_eq!(e.bound, "mxu");
+        assert!(e.roofline_fraction > 0.9);
+    }
+
+    #[test]
+    fn smooth_swiglu_is_memory_bound() {
+        let e = smooth_swiglu(128, 2048);
+        assert_eq!(e.bound, "memory");
+    }
+
+    #[test]
+    fn fp8_moments_cut_adam_traffic() {
+        let a = adam_update(65536, false);
+        let b = adam_update(65536, true);
+        assert!(b.arithmetic_intensity > a.arithmetic_intensity * 1.5);
+    }
+}

@@ -1,0 +1,142 @@
+//! Executable loading + execution: the `/opt/xla-example/load_hlo`
+//! pattern hardened into a cached runtime.
+//!
+//! One [`Runtime`] owns the PJRT CPU client and a lazy cache of
+//! compiled [`Artifact`]s keyed by name. Artifacts are HLO **text**
+//! (see aot.py for why) compiled once per process; execution is
+//! positional literals in, tuple of literals out, with the manifest
+//! defining both orders.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+
+pub struct Artifact {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+// SAFETY: the PJRT API is thread-safe (the TFRT CPU client serializes
+// internally; executions and buffer transfers may be issued from any
+// thread). The `xla` crate just wraps raw pointers without declaring
+// this, so the auto-traits are opted into here once for the runtime.
+unsafe impl Send for Artifact {}
+unsafe impl Sync for Artifact {}
+
+impl Artifact {
+    /// Execute with positional inputs; returns the flattened output
+    /// tuple in manifest order.
+    ///
+    /// Inputs go through `buffer_from_host_literal` + `execute_b`
+    /// rather than `execute`: the crate's C++ `execute` wrapper leaks
+    /// every input device buffer (`buffer.release()` with no matching
+    /// free — ~80 MB/step at s1m, found with rust/src/bin/leakprobe.rs).
+    /// With `execute_b` the buffers are owned on the Rust side and
+    /// freed on drop after the synchronous output transfer completes.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        // input literals must outlive execute_b: BufferFromHostLiteral's
+        // host->device copy is asynchronous and reads the literal memory
+        let mut lits = Vec::with_capacity(inputs.len());
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let lit = t.to_literal().context("building input literal")?;
+            bufs.push(
+                self.client
+                    .buffer_from_host_literal(None, &lit)
+                    .context("host->device transfer")?,
+            );
+            lits.push(lit);
+        }
+        let out = self
+            .exe
+            .execute_b(&bufs)
+            .with_context(|| format!("executing artifact '{}'", self.manifest.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .context("device->host transfer")?;
+        // safe to release inputs: the output transfer synchronized the run
+        drop(bufs);
+        drop(lits);
+        let parts = lit.to_tuple().context("untupling outputs")?;
+        parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()
+    }
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<Artifact>>>,
+}
+
+// SAFETY: see `Artifact` above.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Create the PJRT CPU client rooted at an artifacts directory.
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            return Err(anyhow!(
+                "artifacts directory '{}' not found — run `make artifacts` first",
+                dir.display()
+            ));
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, dir, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load + compile (cached) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Artifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(name) {
+            return Ok(a.clone());
+        }
+        let hlo = self.dir.join(format!("{name}.hlo.txt"));
+        let man = self.dir.join(format!("{name}.manifest.json"));
+        let manifest = Manifest::load(&man)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        let artifact =
+            std::sync::Arc::new(Artifact { manifest, exe, client: self.client.clone() });
+        self.cache.lock().unwrap().insert(name.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+
+    /// Names of all artifacts present on disk.
+    pub fn available(&self) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| {
+                        e.file_name()
+                            .to_str()
+                            .and_then(|s| s.strip_suffix(".hlo.txt"))
+                            .map(str::to_string)
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        names.sort();
+        names
+    }
+}

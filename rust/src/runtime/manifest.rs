@@ -1,0 +1,192 @@
+//! Artifact manifests: the JSON contract emitted by `python/compile/aot.py`
+//! alongside every HLO module. Parsing is strict — a manifest/HLO
+//! mismatch must fail loudly at load time, not corrupt a training run.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// N(0, std²) init; std < 0 means "init to ones" (norm gains)
+    pub init_std: f32,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub kind: String,
+    pub name: String,
+    pub size: String,
+    pub recipe: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub n_scales: usize,
+    pub n_layers: usize,
+    pub sites_per_layer: Vec<String>,
+    pub params: Vec<ParamSpec>,
+    pub model: Option<ModelDims>,
+    pub param_count: usize,
+    pub flops_per_step: f64,
+    /// adam artifacts
+    pub chunk: usize,
+    pub m_fmt: String,
+    pub v_fmt: String,
+    /// probe artifacts
+    pub layer: usize,
+    pub raw: Json,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("manifest {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest {}: {e}", path.display()))?;
+        let name = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .unwrap_or("")
+            .trim_end_matches(".manifest.json")
+            .to_string();
+        Self::from_json(name, j).map_err(|e| anyhow!("manifest {}: {e}", path.display()))
+    }
+
+    pub fn from_json(name: String, j: Json) -> Result<Self, String> {
+        let kind = j.str_of("kind")?.to_string();
+        let params = match j.get("params") {
+            Some(Json::Arr(a)) => a
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.str_of("name")?.to_string(),
+                        shape: p
+                            .arr_of("shape")?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or("bad shape dim".to_string()))
+                            .collect::<Result<_, _>>()?,
+                        init_std: p.f64_of("init_std")? as f32,
+                    })
+                })
+                .collect::<Result<Vec<_>, String>>()?,
+            _ => Vec::new(),
+        };
+        let model = j.get("model").map(|m| -> Result<ModelDims, String> {
+            Ok(ModelDims {
+                vocab: m.usize_of("vocab")?,
+                d_model: m.usize_of("d_model")?,
+                n_layers: m.usize_of("n_layers")?,
+                n_heads: m.usize_of("n_heads")?,
+                d_ff: m.usize_of("d_ff")?,
+                seq_len: m.usize_of("seq_len")?,
+            })
+        });
+        let model = match model {
+            Some(Ok(m)) => Some(m),
+            Some(Err(e)) => return Err(e),
+            None => None,
+        };
+        let sites = j
+            .get("sites_per_layer")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|s| s.as_str().map(str::to_string)).collect())
+            .unwrap_or_default();
+        Ok(Self {
+            kind,
+            name,
+            size: j.str_or("size", ""),
+            recipe: j.str_or("recipe", ""),
+            batch: j.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
+            seq_len: j.get("seq_len").and_then(|v| v.as_usize()).unwrap_or(0),
+            n_scales: j.get("n_scales").and_then(|v| v.as_usize()).unwrap_or(0),
+            n_layers: j.get("n_layers").and_then(|v| v.as_usize()).unwrap_or(0),
+            sites_per_layer: sites,
+            params,
+            model,
+            param_count: j.get("param_count").and_then(|v| v.as_usize()).unwrap_or(0),
+            flops_per_step: j.get("flops_per_step").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            chunk: j.get("chunk").and_then(|v| v.as_usize()).unwrap_or(0),
+            m_fmt: j.str_or("m_fmt", ""),
+            v_fmt: j.str_or("v_fmt", ""),
+            layer: j.get("layer").and_then(|v| v.as_usize()).unwrap_or(0),
+            raw: j,
+        })
+    }
+
+    /// Total parameter element count (from the specs, not the echo).
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Flat-space offset table in manifest (sorted-name) order.
+    pub fn param_offsets(&self) -> Vec<(String, usize, usize)> {
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0;
+        for p in &self.params {
+            out.push((p.name.clone(), off, p.numel()));
+            off += p.numel();
+        }
+        out
+    }
+
+    /// Global site index for (layer, site-name).
+    pub fn site_index(&self, layer: usize, site: &str) -> Option<usize> {
+        let local = self.sites_per_layer.iter().position(|s| s == site)?;
+        Some(layer * self.sites_per_layer.len() + local)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{"kind":"grad","size":"tiny","recipe":"fp8","batch":2,"seq_len":64,
+                "n_scales":32,"n_layers":2,
+                "sites_per_layer":["x_attn","wq","g_qkv"],
+                "params":[{"name":"embed","shape":[256,64],"init_std":0.02},
+                           {"name":"head","shape":[64,256],"init_std":0.02}],
+                "model":{"vocab":256,"d_model":64,"n_layers":2,"n_heads":4,
+                          "d_ff":172,"seq_len":64,"name":"tiny","rope_base":10000.0,
+                          "norm_eps":1e-5},
+                "param_count":100000,"flops_per_step":1.0e9}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_grad_manifest() {
+        let m = Manifest::from_json("grad_tiny_fp8".into(), sample()).unwrap();
+        assert_eq!(m.kind, "grad");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.total_params(), 256 * 64 + 64 * 256);
+        assert_eq!(m.param_offsets()[1].1, 256 * 64);
+        assert_eq!(m.site_index(1, "wq"), Some(4));
+        assert_eq!(m.model.as_ref().unwrap().d_ff, 172);
+    }
+
+    #[test]
+    fn missing_kind_fails() {
+        let j = Json::parse(r#"{"batch":2}"#).unwrap();
+        assert!(Manifest::from_json("x".into(), j).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Runtime: load AOT artifacts (HLO text) and execute them on the PJRT
+//! CPU client. Python never runs here — the artifacts directory is the
+//! entire interface to L1/L2.
+
+pub mod executable;
+pub mod manifest;
+pub mod tensor;
+
+pub use executable::{Artifact, Runtime};
+pub use manifest::Manifest;
+pub use tensor::HostTensor;

@@ -1,0 +1,129 @@
+//! Host-side tensors: flat f32/i32 buffers + shape, with conversions
+//! to/from `xla::Literal`. Kept deliberately simple — the coordinator
+//! moves data through PJRT as raw bytes, no ndarray dependency.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> &mut [f32] {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match self {
+            HostTensor::I32 { data, .. } => data,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
+    /// Build the XLA literal (copies; PJRT owns its buffer after
+    /// transfer anyway).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32 { shape, data } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                l.reshape(&dims)?
+            }
+            HostTensor::I32 { shape, data } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                l.reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.shape()?;
+        match shape {
+            xla::Shape::Array(a) => {
+                let dims: Vec<usize> = a.dims().iter().map(|&d| d as usize).collect();
+                match a.ty() {
+                    xla::ElementType::F32 => {
+                        Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+                    }
+                    xla::ElementType::S32 => {
+                        Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+                    }
+                    ty => bail!("unsupported literal element type {ty:?}"),
+                }
+            }
+            s => bail!("expected array literal, got {s:?}"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> f32 {
+        self.f32s()[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        let t = HostTensor::from_f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn rejects_bad_shape() {
+        HostTensor::from_f32(&[2, 3], vec![0.0; 5]);
+    }
+}

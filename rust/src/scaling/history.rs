@@ -1,0 +1,68 @@
+//! Fixed-capacity amax ring buffer (one per quantization site).
+
+#[derive(Clone, Debug)]
+pub struct AmaxHistory {
+    buf: Vec<f32>,
+    head: usize,
+    len: usize,
+}
+
+impl AmaxHistory {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self { buf: vec![0.0; capacity], head: 0, len: 0 }
+    }
+
+    pub fn push(&mut self, amax: f32) {
+        self.buf[self.head] = amax;
+        self.head = (self.head + 1) % self.buf.len();
+        self.len = (self.len + 1).min(self.buf.len());
+    }
+
+    /// Max over the recorded window (0.0 if empty).
+    pub fn max(&self) -> f32 {
+        self.buf[..self.len].iter().fold(0.0f32, |a, &x| a.max(x))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_evicts_old_peaks() {
+        let mut h = AmaxHistory::new(3);
+        h.push(100.0);
+        h.push(1.0);
+        h.push(1.0);
+        assert_eq!(h.max(), 100.0);
+        h.push(1.0); // evicts the 100.0
+        assert_eq!(h.max(), 1.0);
+    }
+
+    #[test]
+    fn empty_max_is_zero() {
+        assert_eq!(AmaxHistory::new(4).max(), 0.0);
+    }
+
+    #[test]
+    fn len_saturates_at_capacity() {
+        let mut h = AmaxHistory::new(2);
+        for _ in 0..5 {
+            h.push(1.0);
+        }
+        assert_eq!(h.len(), 2);
+    }
+}

@@ -1,0 +1,142 @@
+//! The FP8 delayed-scaling state machine — the L3 half of the paper's
+//! numerics. The grad artifact reports one amax per quantization site
+//! per step; this module turns amax histories into the next step's
+//! scales (TE-style delayed scaling with pow2 scales + margin), and is
+//! exactly the component the paper shows being broken by SwiGLU
+//! outliers: a fresh spike is invisible to the *current* scale, which
+//! was chosen from the history.
+
+pub mod history;
+pub mod policy;
+
+pub use history::AmaxHistory;
+pub use policy::{Policy, ScaleDecision};
+
+use crate::fp8::{Fp8Format, E4M3, E5M2};
+
+/// Scale manager for one training run: a ring-buffer history and a
+/// current scale per site.
+pub struct ScaleManager {
+    histories: Vec<AmaxHistory>,
+    scales: Vec<f32>,
+    site_fmts: Vec<Fp8Format>,
+    policy: Policy,
+    /// count of steps where an amax was non-finite (divergence signal)
+    pub overflow_events: usize,
+}
+
+impl ScaleManager {
+    /// `sites_per_layer` comes from the manifest; gradient sites (name
+    /// starts with "g_") quantize to E5M2, the rest to E4M3.
+    pub fn new(n_layers: usize, sites_per_layer: &[String], policy: Policy) -> Self {
+        let n = n_layers * sites_per_layer.len();
+        let mut site_fmts = Vec::with_capacity(n);
+        for _ in 0..n_layers {
+            for s in sites_per_layer {
+                site_fmts.push(if s.starts_with("g_") { E5M2 } else { E4M3 });
+            }
+        }
+        Self {
+            histories: (0..n).map(|_| AmaxHistory::new(policy.history_len)).collect(),
+            scales: vec![1.0; n],
+            site_fmts,
+            policy,
+            overflow_events: 0,
+        }
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Current scales vector (input to the grad artifact).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Ingest the amax vector reported by a step, then recompute every
+    /// scale for the next step (delayed scaling).
+    pub fn update(&mut self, amax: &[f32]) {
+        assert_eq!(amax.len(), self.histories.len(), "amax arity mismatch");
+        for (i, &a) in amax.iter().enumerate() {
+            if !a.is_finite() {
+                self.overflow_events += 1;
+                // a non-finite amax poisons the history; record the
+                // format max instead so the scale collapses safely
+                self.histories[i].push(self.site_fmts[i].max());
+                continue;
+            }
+            if a > 0.0 {
+                self.histories[i].push(a);
+            }
+        }
+        for i in 0..self.scales.len() {
+            if let ScaleDecision::Set(s) =
+                self.policy.decide(self.site_fmts[i], &self.histories[i])
+            {
+                self.scales[i] = s;
+            }
+        }
+    }
+
+    /// Peak amax over history for a site (monitoring / Fig. 1 data).
+    pub fn site_peak(&self, idx: usize) -> f32 {
+        self.histories[idx].max()
+    }
+
+    pub fn site_format(&self, idx: usize) -> Fp8Format {
+        self.site_fmts[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sites() -> Vec<String> {
+        vec!["x_attn".into(), "w1".into(), "g_w1".into()]
+    }
+
+    #[test]
+    fn formats_assigned_by_site_name() {
+        let m = ScaleManager::new(2, &sites(), Policy::default());
+        assert_eq!(m.site_format(0), E4M3);
+        assert_eq!(m.site_format(2), E5M2);
+        assert_eq!(m.site_format(5), E5M2);
+    }
+
+    #[test]
+    fn scales_track_amax() {
+        let mut m = ScaleManager::new(1, &sites(), Policy::default());
+        m.update(&[1.0, 4.0, 0.01]);
+        let s = m.scales().to_vec();
+        // amax 1.0 with E4M3 max 448 -> scale 256 (pow2 <= 448)
+        assert_eq!(s[0], 256.0);
+        // amax 4.0 -> 64
+        assert_eq!(s[1], 64.0);
+        // E5M2 max 57344, amax 0.01 -> scale <= 5734400, pow2
+        assert!(s[2] >= 2_097_152.0 && s[2] <= 4_194_304.0 * 2.0, "{}", s[2]);
+    }
+
+    #[test]
+    fn delayed_semantics_use_history_max() {
+        let mut m = ScaleManager::new(1, &sites(), Policy { history_len: 4, ..Default::default() });
+        for _ in 0..4 {
+            m.update(&[1.0, 1.0, 1.0]);
+        }
+        let s_before = m.scales()[0];
+        // a single huge amax must shrink the scale on the NEXT step
+        m.update(&[100.0, 1.0, 1.0]);
+        assert!(m.scales()[0] < s_before);
+        // ... and the old scale was what a spike in THIS step would have
+        // been quantized with — the delayed-scaling vulnerability.
+    }
+
+    #[test]
+    fn nonfinite_amax_counts_overflow() {
+        let mut m = ScaleManager::new(1, &sites(), Policy::default());
+        m.update(&[f32::NAN, 1.0, 1.0]);
+        assert_eq!(m.overflow_events, 1);
+        assert!(m.scales()[0] <= 1.0); // collapsed to format max
+    }
+}

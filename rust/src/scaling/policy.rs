@@ -1,0 +1,84 @@
+//! Scale selection policies.
+//!
+//! * `Delayed` — TE-style: scale for step t is computed from the amax
+//!   history of steps < t. This is the paper's (and production FP8's)
+//!   default, and the mechanism SwiGLU outliers defeat.
+//! * `JustInTime` — scale from the current step's amax (impractical on
+//!   real hardware: needs a second pass over the tensor; modeled here
+//!   as "history of length 1 applied retroactively" for ablations).
+
+use crate::fp8::{compute_scale, Fp8Format};
+
+use super::history::AmaxHistory;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Mode {
+    Delayed,
+    JustInTime,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Policy {
+    pub mode: Mode,
+    pub history_len: usize,
+    /// headroom factor: scale targets fmt.max / (2^margin · amax)
+    pub margin_pow2: i32,
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        Self { mode: Mode::Delayed, history_len: 16, margin_pow2: 0 }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScaleDecision {
+    /// keep the previous scale (no history yet)
+    Keep,
+    Set(f32),
+}
+
+impl Policy {
+    pub fn decide(&self, fmt: Fp8Format, history: &AmaxHistory) -> ScaleDecision {
+        if history.is_empty() {
+            return ScaleDecision::Keep;
+        }
+        let amax = match self.mode {
+            Mode::Delayed => history.max(),
+            Mode::JustInTime => history.max(), // caller feeds len-1 history
+        };
+        let mut s = compute_scale(fmt, amax);
+        // apply margin as a pow2 shift (exact)
+        if self.margin_pow2 > 0 {
+            s /= crate::fp8::exp2i(self.margin_pow2);
+        }
+        ScaleDecision::Set(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::E4M3;
+
+    #[test]
+    fn empty_history_keeps_scale() {
+        let p = Policy::default();
+        assert_eq!(p.decide(E4M3, &AmaxHistory::new(4)), ScaleDecision::Keep);
+    }
+
+    #[test]
+    fn margin_shifts_scale_down() {
+        let mut h = AmaxHistory::new(4);
+        h.push(1.0);
+        let s0 = match Policy::default().decide(E4M3, &h) {
+            ScaleDecision::Set(s) => s,
+            _ => panic!(),
+        };
+        let s1 = match (Policy { margin_pow2: 2, ..Default::default() }).decide(E4M3, &h) {
+            ScaleDecision::Set(s) => s,
+            _ => panic!(),
+        };
+        assert_eq!(s1, s0 / 4.0);
+    }
+}

@@ -1,0 +1,74 @@
+//! Micro-bench harness (offline: no criterion). Warmup + timed
+//! iterations with mean / p50 / p95 reporting, criterion-ish output.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:40} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95  {:>10.3?} min  ({} iters)",
+            self.name, self.mean, self.p50, self.p95, self.min, self.iters
+        );
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` for up to `max_iters` iterations or `budget` wall-clock,
+/// whichever ends first, after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, max_iters: usize, budget: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let start = Instant::now();
+    let mut samples = Vec::with_capacity(max_iters);
+    for _ in 0..max_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    samples.sort();
+    let iters = samples.len();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        p50: samples[iters / 2],
+        p95: samples[(iters * 95 / 100).min(iters - 1)],
+        min: samples[0],
+    }
+}
+
+/// Default profile for end-to-end step benches.
+pub fn bench_quick<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench(name, 2, 30, Duration::from_secs(20), &mut f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop-ish", 1, 50, Duration::from_secs(1), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters > 10);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95);
+    }
+}

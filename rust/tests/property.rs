@@ -1,0 +1,316 @@
+//! Property-based tests (custom harness — util::proptest) over the
+//! pure-Rust substrates: fp8 codecs, scaling policy, sharding,
+//! collectives, JSON, f16, corpus determinism.
+
+use fp8_trainer::analysis::correlation::channel_correlations;
+use fp8_trainer::coordinator::allreduce::{allreduce_mean, clip_factor, global_norm, tree_reduce_sum};
+use fp8_trainer::data::corpus::{Corpus, CorpusConfig};
+use fp8_trainer::fp8::{self, E4M3, E5M2};
+use fp8_trainer::optimizer::ShardLayout;
+use fp8_trainer::scaling::{AmaxHistory, Policy, ScaleDecision};
+use fp8_trainer::util::json::Json;
+use fp8_trainer::util::proptest::{gen, Prop};
+use fp8_trainer::util::prng::Rng;
+use fp8_trainer::util::{bf16_round, f16_bits_to_f32, f32_to_f16_bits};
+
+#[test]
+fn prop_fp8_qdq_idempotent() {
+    Prop::new(2048).check("fp8-qdq-idempotent", gen::f32_any, |&x| {
+        for fmt in [E4M3, E5M2] {
+            let q1 = fp8::qdq(fmt, x);
+            let q2 = fp8::qdq(fmt, q1);
+            if !(q1.to_bits() == q2.to_bits() || (q1.is_nan() && q2.is_nan())) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_fp8_qdq_error_within_half_ulp() {
+    Prop::new(2048).check(
+        "fp8-qdq-half-ulp",
+        |r| gen::f32_finite(r, -400.0, 400.0),
+        |&x| {
+            let q = fp8::qdq(E4M3, x);
+            let exp = x.abs().max(E4M3.min_normal()).log2().floor();
+            let ulp = (2f32.powf(exp) * 2f32.powi(-3)).max(E4M3.min_subnormal());
+            (q - x).abs() <= ulp / 2.0 + 1e-12
+        },
+    );
+}
+
+#[test]
+fn prop_fp8_encode_monotone() {
+    // decode(encode(·)) must be monotone non-decreasing
+    Prop::new(512).check(
+        "fp8-monotone",
+        |r| {
+            let a = gen::f32_finite(r, -500.0, 500.0);
+            let b = gen::f32_finite(r, -500.0, 500.0);
+            (a.min(b), a.max(b))
+        },
+        |&(lo, hi)| fp8::qdq(E4M3, lo.clamp(-448.0, 448.0)) <= fp8::qdq(E4M3, hi.clamp(-448.0, 448.0)),
+    );
+}
+
+#[test]
+fn prop_pack_unpack_bounded_error() {
+    Prop::new(200).check(
+        "pack-roundtrip",
+        |r| gen::vec_f32(r, 512, -10.0, 10.0),
+        |xs| {
+            for fmt in [E4M3, E5M2] {
+                let (bytes, scale) = fp8::pack_scaled(fmt, xs);
+                if bytes.len() != xs.len() {
+                    return false;
+                }
+                let mut out = Vec::new();
+                fp8::unpack_scaled(fmt, &bytes, scale, &mut out);
+                let step = 2f32.powi(-(fmt.man_bits() as i32));
+                for (&x, &y) in xs.iter().zip(&out) {
+                    if (x - y).abs() > x.abs() * step + fmt.min_subnormal() / scale {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_compute_scale_invariants() {
+    Prop::new(1024).check(
+        "scale-invariants",
+        |r| 2f32.powf(gen::f32_finite(r, -30.0, 30.0)),
+        |&amax| {
+            for fmt in [E4M3, E5M2] {
+                let s = fp8::compute_scale(fmt, amax);
+                if !(s > 0.0 && s.is_finite()) {
+                    return false;
+                }
+                if amax * s > fmt.max() * 1.000001 {
+                    return false; // never overflow the format
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_scaling_policy_covers_history() {
+    Prop::new(300).check(
+        "policy-covers-history",
+        |r| gen::vec_f32(r, 32, 1e-6, 1e4),
+        |amaxes| {
+            let mut h = AmaxHistory::new(amaxes.len());
+            for &a in amaxes {
+                h.push(a);
+            }
+            match Policy::default().decide(E4M3, &h) {
+                ScaleDecision::Set(s) => h.max() * s <= E4M3.max() * 1.000001,
+                ScaleDecision::Keep => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_shards_partition() {
+    Prop::new(500).check(
+        "shards-partition",
+        |r| (gen::usize_in(r, 1, 100_000), gen::usize_in(r, 1, 64)),
+        |&(total, w)| {
+            let l = ShardLayout::new(total, w);
+            let mut covered = 0usize;
+            let mut expect_off = 0usize;
+            for &(off, len) in &l.shards {
+                if off != expect_off {
+                    return false;
+                }
+                covered += len;
+                expect_off = off + len;
+            }
+            covered == total && l.shards.len() == w
+        },
+    );
+}
+
+#[test]
+fn prop_tree_reduce_equals_sequential() {
+    Prop::new(200).check(
+        "tree-reduce",
+        |r| {
+            let w = gen::usize_in(r, 1, 9);
+            let n = gen::usize_in(r, 1, 64);
+            (0..w)
+                .map(|_| (0..n).map(|_| gen::f32_finite(r, -10.0, 10.0)).collect::<Vec<_>>())
+                .collect::<Vec<_>>()
+        },
+        |bufs| {
+            let n = bufs[0].len();
+            let expect: Vec<f32> =
+                (0..n).map(|i| bufs.iter().map(|b| b[i]).sum()).collect();
+            let mut work = bufs.clone();
+            tree_reduce_sum(&mut work);
+            work[0]
+                .iter()
+                .zip(&expect)
+                .all(|(a, b)| (a - b).abs() <= b.abs() * 1e-5 + 1e-5)
+        },
+    );
+}
+
+#[test]
+fn prop_allreduce_mean_broadcasts_identically() {
+    Prop::new(200).check(
+        "allreduce-broadcast",
+        |r| {
+            let w = gen::usize_in(r, 2, 8);
+            (0..w).map(|_| gen::vec_f32(r, 32, -5.0, 5.0)).collect::<Vec<_>>()
+        },
+        |bufs| {
+            let n = bufs[0].len();
+            if bufs.iter().any(|b| b.len() != n) {
+                // normalize lengths for the generator's sake
+                return true;
+            }
+            let mut work = bufs.clone();
+            allreduce_mean(&mut work);
+            work.iter().all(|b| b == &work[0])
+        },
+    );
+}
+
+#[test]
+fn prop_clip_factor_bounds_norm() {
+    Prop::new(500).check(
+        "clip-bounds",
+        |r| (gen::f32_finite(r, 0.0, 100.0), gen::f32_finite(r, 0.01, 10.0)),
+        |&(norm, max)| {
+            let c = clip_factor(norm, max);
+            norm * c <= max.max(norm.min(max)) * 1.0001 && c <= 1.0
+        },
+    );
+}
+
+#[test]
+fn prop_global_norm_scales_linearly() {
+    Prop::new(300).check(
+        "gnorm-linear",
+        |r| (gen::vec_f32(r, 64, -3.0, 3.0), gen::f32_finite(r, 0.1, 4.0)),
+        |(v, k)| {
+            let scaled: Vec<f32> = v.iter().map(|x| x * k).collect();
+            (global_norm(&scaled) - k * global_norm(v)).abs()
+                <= global_norm(v) * k * 1e-5 + 1e-6
+        },
+    );
+}
+
+#[test]
+fn prop_f16_roundtrip_error() {
+    // log-uniform magnitudes so the subnormal range (|x| < 2^-14) is
+    // actually exercised — a uniform generator never samples it
+    Prop::new(4096).check(
+        "f16-roundtrip",
+        |r| {
+            let mag = 2f32.powf(gen::f32_finite(r, -26.0, 15.9));
+            if r.below(2) == 0 {
+                mag
+            } else {
+                -mag
+            }
+        },
+        |&x| {
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            if x.abs() < 6.2e-5 {
+                // subnormal territory: error bounded by half an ulp
+                (y - x).abs() <= 5.96e-8 * 0.51
+            } else {
+                (y - x).abs() <= x.abs() * (1.0 / 1024.0)
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_bf16_round_is_idempotent_grid() {
+    Prop::new(2048).check("bf16-idempotent", gen::f32_any, |&x| {
+        if x.is_nan() {
+            return bf16_round(x).is_nan();
+        }
+        let y = bf16_round(x);
+        bf16_round(y).to_bits() == y.to_bits()
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_numbers_strings() {
+    Prop::new(500).check(
+        "json-roundtrip",
+        |r| {
+            let n = gen::f32_finite(r, -1e9, 1e9) as f64;
+            let s: String = (0..gen::usize_in(r, 0, 12))
+                .map(|_| char::from_u32(32 + r.below(90) as u32).unwrap_or('x'))
+                .collect();
+            (n, s)
+        },
+        |(n, s)| {
+            let j = fp8_trainer::util::json::obj(vec![
+                ("n", Json::Num(*n)),
+                ("s", Json::Str(s.clone())),
+            ]);
+            match Json::parse(&j.to_string()) {
+                Ok(back) => {
+                    back.f64_of("n").unwrap() == *n && back.str_of("s").unwrap() == s
+                }
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_corpus_deterministic_and_in_range() {
+    Prop::new(100).check(
+        "corpus-determinism",
+        |r| (r.next_u64(), gen::usize_in(r, 2, 512), gen::usize_in(r, 0, 4)),
+        |&(seed, vocab, order)| {
+            let c = Corpus::new(CorpusConfig { vocab, order, skew: 1.2, seed });
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            c.fill_sequence(&mut Rng::new(seed ^ 1), 64, &mut a);
+            c.fill_sequence(&mut Rng::new(seed ^ 1), 64, &mut b);
+            a == b && a.iter().all(|&t| (t as usize) < vocab)
+        },
+    );
+}
+
+#[test]
+fn prop_correlation_bounded_and_symmetric() {
+    Prop::new(200).check(
+        "corr-bounds",
+        |r| {
+            let d = gen::usize_in(r, 2, 16);
+            let f = gen::usize_in(r, 1, 8);
+            let w1 = gen::vec_f32(r, 1, -1.0, 1.0)
+                .into_iter()
+                .cycle()
+                .take(d * f)
+                .map(|_| gen::f32_finite(r, -2.0, 2.0))
+                .collect::<Vec<_>>();
+            let w2: Vec<f32> = (0..d * f).map(|_| gen::f32_finite(r, -2.0, 2.0)).collect();
+            (d, f, w1, w2)
+        },
+        |(d, f, w1, w2)| {
+            let s12 = channel_correlations(w1, w2, *d, *f);
+            let s21 = channel_correlations(w2, w1, *d, *f);
+            s12.iter().zip(&s21).all(|(a, b)| {
+                a.cosine.abs() <= 1.0 + 1e-5 && (a.cosine - b.cosine).abs() < 1e-5
+            })
+        },
+    );
+}
