@@ -6,7 +6,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use fp8_trainer::config::TrainConfig;
-use fp8_trainer::coordinator::allreduce::{allreduce_mean, global_norm};
+use fp8_trainer::coordinator::allreduce::{allreduce_mean, global_norm, reduce_mean_into_rank0};
 use fp8_trainer::coordinator::Trainer;
 use fp8_trainer::fp8::{self, E4M3};
 use fp8_trainer::runtime::Runtime;
@@ -49,6 +49,14 @@ fn main() -> anyhow::Result<()> {
         allreduce_mean(&mut bufs);
     });
     ar.report();
+
+    // the broadcast-free variant the step loop actually uses
+    // (deeper comparison lives in benches/perf_hotpath.rs)
+    let mut bufs0: Vec<Vec<f32>> = (0..2).map(|r| vec![r as f32 * 0.1 + 0.5; big / 8]).collect();
+    let r0 = bench("reduce_mean_into_rank0 2x12M f32", 1, 10, Duration::from_secs(10), || {
+        reduce_mean_into_rank0(&mut bufs0);
+    });
+    r0.report();
 
     let flat = vec![0.01f32; big / 8];
     let gn = bench("global_norm 12M f32", 1, 20, Duration::from_secs(10), || {

@@ -1,0 +1,263 @@
+//! §Perf — hot-path microbenchmarks for the bulk FP8 codec, the
+//! collective, and the parallel step pipeline, emitting
+//! `BENCH_hotpath.json` so future PRs are judged against a
+//! machine-readable trajectory (methodology: rust/EXPERIMENTS.md §Perf).
+//!
+//! Acceptance targets for this harness (ISSUE 1):
+//! * bulk decode ≥ 5x the scalar codec on a 1M-element buffer
+//! * bulk encode ≥ 2x the scalar codec on a 1M-element buffer
+//!
+//! The step-rate section needs `make artifacts`; it is skipped (with a
+//! note) when the artifacts directory is missing so the codec numbers
+//! are still collected on a bare checkout.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fp8_trainer::config::TrainConfig;
+use fp8_trainer::coordinator::allreduce::{allreduce_mean, global_norm, reduce_mean_into_rank0};
+use fp8_trainer::coordinator::Trainer;
+use fp8_trainer::fp8::{self, bulk, Fp8Format, E4M3, E5M2};
+use fp8_trainer::runtime::Runtime;
+use fp8_trainer::util::bench::{bench, write_json_report, BenchResult};
+use fp8_trainer::util::json::Json;
+use fp8_trainer::util::par::max_threads;
+use fp8_trainer::util::prng::Rng;
+
+const N: usize = 1 << 20; // 1M elements
+
+fn codec_data(n: usize) -> Vec<f32> {
+    // deterministic, mostly-normal-range values with a subnormal and
+    // large-magnitude sprinkle — the optimizer-moment distribution shape
+    let mut rng = Rng::new(0xf8f8);
+    (0..n)
+        .map(|i| {
+            let x = (rng.normal() as f32) * 0.02;
+            match i % 97 {
+                0 => x * 1e-6, // subnormal territory after scaling
+                1 => x * 300.0,
+                _ => x,
+            }
+        })
+        .collect()
+}
+
+struct Report {
+    records: Vec<Json>,
+}
+
+impl Report {
+    fn push(&mut self, r: &BenchResult, extra: Vec<(&str, Json)>) {
+        r.report();
+        self.records.push(r.to_json(extra));
+    }
+}
+
+fn gbs(bytes: usize, r: &BenchResult) -> f64 {
+    bytes as f64 / r.mean_secs() / 1e9
+}
+
+/// Returns whether this format met the ISSUE-1 speedup floors
+/// (decode ≥ 5x, encode ≥ 2x vs the scalar codec).
+fn codec_benches(report: &mut Report, fmt: Fp8Format, tag: &str) -> bool {
+    let xs = codec_data(N);
+    let mut bytes = Vec::new();
+    bulk::encode_slice_into(fmt, &xs, &mut bytes);
+    let mut out_f32 = vec![0.0f32; N];
+    let mut out_u8 = vec![0u8; N];
+
+    // ---- encode: scalar reference vs bulk
+    let enc_scalar = bench(&format!("{tag} encode 1M scalar"), 1, 20, Duration::from_secs(8), || {
+        for (d, &x) in out_u8.iter_mut().zip(&xs) {
+            *d = fmt.encode(x);
+        }
+        std::hint::black_box(&out_u8);
+    });
+    report.push(&enc_scalar, vec![("gbs", Json::Num(gbs(N * 4, &enc_scalar)))]);
+
+    let mut enc_buf = Vec::with_capacity(N);
+    let enc_bulk = bench(&format!("{tag} encode 1M bulk"), 1, 50, Duration::from_secs(8), || {
+        bulk::encode_slice_into(fmt, &xs, &mut enc_buf);
+        std::hint::black_box(&enc_buf);
+    });
+    let enc_speedup = enc_scalar.mean_secs() / enc_bulk.mean_secs();
+    report.push(
+        &enc_bulk,
+        vec![
+            ("gbs", Json::Num(gbs(N * 4, &enc_bulk))),
+            ("speedup_vs_scalar", Json::Num(enc_speedup)),
+            ("target_speedup", Json::Num(2.0)),
+            ("pass", Json::Bool(enc_speedup >= 2.0)),
+        ],
+    );
+
+    // ---- decode: scalar reference vs bulk LUT
+    let dec_scalar = bench(&format!("{tag} decode 1M scalar"), 1, 20, Duration::from_secs(8), || {
+        for (d, &b) in out_f32.iter_mut().zip(&bytes) {
+            *d = fmt.decode(b);
+        }
+        std::hint::black_box(&out_f32);
+    });
+    report.push(&dec_scalar, vec![("gbs", Json::Num(gbs(N * 4, &dec_scalar)))]);
+
+    let mut dec_buf = Vec::with_capacity(N);
+    let dec_bulk = bench(&format!("{tag} decode 1M bulk"), 1, 50, Duration::from_secs(8), || {
+        bulk::decode_slice_into(fmt, &bytes, &mut dec_buf);
+        std::hint::black_box(&dec_buf);
+    });
+    let dec_speedup = dec_scalar.mean_secs() / dec_bulk.mean_secs();
+    report.push(
+        &dec_bulk,
+        vec![
+            ("gbs", Json::Num(gbs(N * 4, &dec_bulk))),
+            ("speedup_vs_scalar", Json::Num(dec_speedup)),
+            ("target_speedup", Json::Num(5.0)),
+            ("pass", Json::Bool(dec_speedup >= 5.0)),
+        ],
+    );
+
+    // ---- pack/unpack (amax + scale + scaled encode; LUT + descale)
+    let mut pk_buf = Vec::with_capacity(N);
+    let pk = bench(&format!("{tag} pack_scaled 1M"), 1, 50, Duration::from_secs(8), || {
+        std::hint::black_box(bulk::pack_scaled_into(fmt, &xs, &mut pk_buf));
+    });
+    report.push(&pk, vec![("gbs", Json::Num(gbs(N * 4, &pk)))]);
+
+    let scale = bulk::pack_scaled_into(fmt, &xs, &mut pk_buf);
+    let mut up_buf = Vec::with_capacity(N);
+    let up = bench(&format!("{tag} unpack_scaled 1M"), 1, 50, Duration::from_secs(8), || {
+        bulk::unpack_scaled_into(fmt, &pk_buf, scale, &mut up_buf);
+        std::hint::black_box(&up_buf);
+    });
+    report.push(&up, vec![("gbs", Json::Num(gbs(N * 4, &up)))]);
+
+    let verdict = |ok| if ok { "PASS" } else { "FAIL" };
+    println!(
+        "  {tag} bulk-vs-scalar: decode {:.1}x (target >=5x {}) | encode {:.1}x (target >=2x {})\n",
+        dec_speedup,
+        verdict(dec_speedup >= 5.0),
+        enc_speedup,
+        verdict(enc_speedup >= 2.0),
+    );
+    dec_speedup >= 5.0 && enc_speedup >= 2.0
+}
+
+fn collective_benches(report: &mut Report) {
+    let big = 12_000_000usize;
+    let mk = |w: usize| -> Vec<Vec<f32>> {
+        (0..w).map(|r| vec![r as f32 * 0.1 + 0.5; big]).collect()
+    };
+
+    let mut bufs = mk(4);
+    let ar = bench("allreduce_mean 4x12M (broadcast)", 1, 10, Duration::from_secs(10), || {
+        allreduce_mean(&mut bufs);
+    });
+    report.push(&ar, vec![("gbs", Json::Num(gbs(big * 4 * 4, &ar)))]);
+
+    let mut bufs0 = mk(4);
+    let r0 = bench("reduce_mean_into_rank0 4x12M", 1, 10, Duration::from_secs(10), || {
+        reduce_mean_into_rank0(&mut bufs0);
+    });
+    let ar_speedup = ar.mean_secs() / r0.mean_secs();
+    report.push(
+        &r0,
+        vec![
+            ("gbs", Json::Num(gbs(big * 4 * 4, &r0))),
+            ("speedup_vs_broadcast", Json::Num(ar_speedup)),
+        ],
+    );
+
+    let flat = vec![0.01f32; big];
+    let gn = bench("global_norm 12M (chunked parallel)", 1, 20, Duration::from_secs(8), || {
+        std::hint::black_box(global_norm(&flat));
+    });
+    report.push(&gn, vec![("gbs", Json::Num(gbs(big * 4, &gn)))]);
+
+    println!("  reduce_mean_into_rank0 vs broadcast allreduce: {ar_speedup:.2}x\n");
+}
+
+fn step_benches(report: &mut Report) -> anyhow::Result<()> {
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            println!("  [skip] step-rate section: {e}");
+            return Ok(());
+        }
+    };
+    for dp in [1usize, 2, 4] {
+        let cfg = TrainConfig {
+            size: "s1m".into(),
+            recipe: "fp8_full".into(),
+            steps: 1,
+            dp_workers: dp,
+            out_dir: format!("runs/bench_hotpath/dp{dp}"),
+            ..Default::default()
+        };
+        let mut t = Trainer::new(rt.clone(), cfg)?;
+        t.step()?; // warm caches / compile
+        let tokens = t.tokens_per_step() as f64;
+        let r = bench(
+            &format!("trainer.step s1m dp_workers={dp}"),
+            1,
+            15,
+            Duration::from_secs(15),
+            || {
+                t.step().unwrap();
+            },
+        );
+        let steps_per_s = 1.0 / r.mean_secs();
+        report.push(
+            &r,
+            vec![
+                ("dp_workers", Json::Num(dp as f64)),
+                ("steps_per_s", Json::Num(steps_per_s)),
+                ("tokens_per_s", Json::Num(tokens * steps_per_s)),
+            ],
+        );
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut report = Report { records: Vec::new() };
+
+    println!("== bulk FP8 codec (1M elements) ==");
+    let mut floors_met = true;
+    floors_met &= codec_benches(&mut report, E4M3, "e4m3");
+    floors_met &= codec_benches(&mut report, E5M2, "e5m2");
+
+    // sanity: bulk must agree with the scalar reference before any
+    // number is recorded (belt over the dedicated equivalence tests)
+    let xs = codec_data(1 << 16);
+    for fmt in [E4M3, E5M2] {
+        let mut b = Vec::new();
+        bulk::encode_slice_into(fmt, &xs, &mut b);
+        for (i, (&x, &code)) in xs.iter().zip(&b).enumerate() {
+            assert_eq!(code, fp8::encode(fmt, x), "{fmt:?} mismatch at {i}");
+        }
+    }
+
+    println!("== collective ==");
+    collective_benches(&mut report);
+
+    println!("== step rate (needs artifacts) ==");
+    step_benches(&mut report)?;
+
+    write_json_report(
+        "BENCH_hotpath.json",
+        vec![
+            ("suite", Json::Str("hotpath".into())),
+            ("elements", Json::Num(N as f64)),
+            ("threads", Json::Num(max_threads() as f64)),
+            ("speedup_floors_met", Json::Bool(floors_met)),
+        ],
+        report.records,
+    )?;
+    println!("wrote BENCH_hotpath.json");
+    if !floors_met {
+        // make the acceptance floor enforceable by scripted perf gates
+        eprintln!("FAIL: bulk codec speedup floors not met (>=5x decode, >=2x encode)");
+        std::process::exit(1);
+    }
+    Ok(())
+}

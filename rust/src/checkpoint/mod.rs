@@ -103,6 +103,7 @@ impl Writer {
                     .flat_map(|&x| ((bf16_round(x).to_bits() >> 16) as u16).to_le_bytes())
                     .collect(),
             ),
+            // pack_scaled runs on the bulk table-driven codec (fp8::bulk)
             Dtype::E4M3 => {
                 let (b, s) = fp8::pack_scaled(E4M3, data);
                 (s, b)
@@ -189,8 +190,15 @@ impl Checkpoint {
                         f32::from_bits((u16::from_le_bytes(c.try_into().unwrap()) as u32) << 16)
                     })
                     .collect(),
-                Dtype::E4M3 => payload.iter().map(|&b| E4M3.decode(b) / scale).collect(),
-                Dtype::E5M2 => payload.iter().map(|&b| E5M2.decode(b) / scale).collect(),
+                Dtype::E4M3 | Dtype::E5M2 => {
+                    // bulk LUT decode (parallel above the size
+                    // threshold) — checkpoints are the largest fp8
+                    // buffers in the system
+                    let fmt = if dtype == Dtype::E4M3 { E4M3 } else { E5M2 };
+                    let mut out = Vec::new();
+                    fp8::bulk::unpack_scaled_into(fmt, payload, scale, &mut out);
+                    out
+                }
             };
             tensors.insert(name, (dtype, data));
         }

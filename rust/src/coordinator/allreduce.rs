@@ -4,7 +4,40 @@
 //! binary-tree reduction (⌈log2 W⌉ rounds, matching how a real pod's
 //! ring/tree collective combines partial sums deterministically) then
 //! an average. Reduction order is *fixed* regardless of thread timing,
-//! so runs are bit-reproducible at any worker count.
+//! so runs are bit-reproducible at any worker count: the tree shape
+//! decides which additions happen, threads only decide *where* the
+//! per-element additions run.
+//!
+//! Two averaging variants:
+//! * [`allreduce_mean`] — sum, scale, broadcast into every replica.
+//!   This mirrors collective semantics (every rank holds the result)
+//!   and is what probe/analysis code should use when it reads a
+//!   non-zero replica afterwards.
+//! * [`reduce_mean_into_rank0`] — sum + scale only. `Trainer::step`
+//!   consumes only the canonical rank-0 copy and overwrites every
+//!   replica at the top of the next step, so the broadcast was W-1
+//!   dead memcpys of the full gradient per step.
+
+use crate::util::par::{par_partials, par_zip};
+
+/// Fixed accumulation chunk for [`global_norm`]. This is not a tuning
+/// knob: it *defines* the f64 summation order (per-chunk partials,
+/// folded in chunk index order), so the parallel and serial paths —
+/// and therefore the clip factor — are bit-identical. Changing it
+/// changes rounding in the last ulp of the norm.
+pub const NORM_CHUNK: usize = 1 << 16;
+
+/// Elementwise `dst += src`, fanned out across scoped threads above
+/// the shared `util::par` threshold. Bit-deterministic: per-element
+/// ops, disjoint spans.
+fn add_assign(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len(), "replica gradient size mismatch");
+    par_zip(src, dst, |s_span, d_span| {
+        for (d, x) in d_span.iter_mut().zip(s_span) {
+            *d += *x;
+        }
+    });
+}
 
 /// Tree-reduce in place: buffers[0] ends up holding the elementwise sum.
 pub fn tree_reduce_sum(buffers: &mut [Vec<f32>]) {
@@ -20,14 +53,24 @@ pub fn tree_reduce_sum(buffers: &mut [Vec<f32>]) {
         while i + stride < w {
             // combine pair (i, i+stride) — fixed order
             let (left, right) = buffers.split_at_mut(i + stride);
-            let dst = &mut left[i];
-            let src = &right[0];
-            for (d, s) in dst.iter_mut().zip(src.iter()) {
-                *d += *s;
-            }
+            add_assign(&mut left[i], &right[0]);
             i += stride * 2;
         }
         stride *= 2;
+    }
+}
+
+/// Reduce-mean without the broadcast: buffers[0] holds the average,
+/// the other replicas keep their (now stale) partial-sum state. Use
+/// when only the canonical copy is read before the next overwrite —
+/// the training loop's case. Callers that need collective semantics
+/// (every replica identical) want [`allreduce_mean`].
+pub fn reduce_mean_into_rank0(buffers: &mut [Vec<f32>]) {
+    let w = buffers.len() as f32;
+    tree_reduce_sum(buffers);
+    let inv = 1.0 / w;
+    for x in buffers[0].iter_mut() {
+        *x *= inv;
     }
 }
 
@@ -35,23 +78,30 @@ pub fn tree_reduce_sum(buffers: &mut [Vec<f32>]) {
 /// replicas (the coordinator keeps one canonical copy; this mirrors
 /// the collective's output being identical on every rank).
 pub fn allreduce_mean(buffers: &mut [Vec<f32>]) {
-    let w = buffers.len() as f32;
-    tree_reduce_sum(buffers);
-    let inv = 1.0 / w;
-    // scale rank 0 ...
-    for x in buffers[0].iter_mut() {
-        *x *= inv;
-    }
-    // ... broadcast
+    reduce_mean_into_rank0(buffers);
     let (canon, rest) = buffers.split_at_mut(1);
     for b in rest {
         b.copy_from_slice(&canon[0]);
     }
 }
 
+#[inline]
+fn norm_sq(chunk: &[f32]) -> f64 {
+    chunk.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
 /// Global L2 norm over a flat gradient (for clipping).
+///
+/// Accumulation is chunked at [`NORM_CHUNK`] with f64 partials folded
+/// in chunk index order. The fixed chunking means the fan-out across
+/// threads cannot change the result — each chunk's partial is computed
+/// identically wherever it runs, and the final fold order is the chunk
+/// order either way.
 pub fn global_norm(flat: &[f32]) -> f32 {
-    (flat.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32
+    // par_partials guarantees partial i == norm_sq(chunk i) regardless
+    // of scheduling; the in-order sum below is therefore the (single)
+    // defined reduction order
+    par_partials(flat, NORM_CHUNK, norm_sq).iter().sum::<f64>().sqrt() as f32
 }
 
 /// Clip multiplier for max-norm clipping (1.0 when under the limit).
@@ -92,6 +142,22 @@ mod tests {
     }
 
     #[test]
+    fn rank0_variant_matches_broadcast_variant_on_rank0() {
+        let mk = || -> Vec<Vec<f32>> {
+            (0..5)
+                .map(|r| (0..97).map(|i| ((r * 31 + i) as f32).sin()).collect())
+                .collect()
+        };
+        let mut a = mk();
+        let mut b = mk();
+        allreduce_mean(&mut a);
+        reduce_mean_into_rank0(&mut b);
+        for (x, y) in a[0].iter().zip(&b[0]) {
+            assert_eq!(x.to_bits(), y.to_bits(), "rank0 must be bit-identical");
+        }
+    }
+
+    #[test]
     fn clip_semantics() {
         assert_eq!(clip_factor(0.5, 1.0), 1.0);
         assert_eq!(clip_factor(2.0, 1.0), 0.5);
@@ -102,5 +168,19 @@ mod tests {
     #[test]
     fn norm_is_l2() {
         assert!((global_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn norm_chunking_is_the_definition() {
+        // > 2 chunks, ragged tail: result must equal the explicit
+        // chunk-partial fold, bit for bit, no matter how many threads ran
+        let n = NORM_CHUNK * 3 + 1234;
+        let flat: Vec<f32> = (0..n).map(|i| ((i as f32) * 1e-3).sin() * 0.01).collect();
+        let expect = flat
+            .chunks(NORM_CHUNK)
+            .map(norm_sq)
+            .sum::<f64>()
+            .sqrt() as f32;
+        assert_eq!(global_norm(&flat).to_bits(), expect.to_bits());
     }
 }

@@ -1,18 +1,31 @@
-//! The training loop: grad artifact → all-reduce → clip → chunked
-//! AdamW artifact → delayed-scaling update → divergence check.
+//! The training loop: parallel per-worker grad artifacts → all-reduce
+//! → clip → chunked AdamW artifact → delayed-scaling update →
+//! divergence check.
+//!
+//! Hot-path structure (see rust/EXPERIMENTS.md §Perf):
+//! * the `dp_workers` gradient passes run concurrently on scoped
+//!   threads (the PJRT CPU client accepts concurrent executions), with
+//!   a fixed-order merge of loss/amax/monitor so results are
+//!   bit-identical to the serial schedule at any worker count;
+//! * the gradient average uses the broadcast-free
+//!   `reduce_mean_into_rank0` — only the canonical copy is consumed;
+//! * `apply_adam` runs on persistent per-thread scratch (chunk pads as
+//!   reusable `HostTensor`s, a persistent `p_flat`, a cached chunk work
+//!   list) so the steady-state step makes no per-chunk heap
+//!   allocations on the coordinator side.
 
 use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::TrainConfig;
-use crate::coordinator::allreduce::{allreduce_mean, clip_factor, global_norm};
+use crate::coordinator::allreduce::{clip_factor, global_norm, reduce_mean_into_rank0};
 use crate::coordinator::divergence::{DivergenceDetector, Verdict};
 use crate::coordinator::params::ParamStore;
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::{Batcher, Corpus, CorpusConfig};
 use crate::metrics::{StepMeter, StepStats};
-use crate::optimizer::{decay_groups, DecayGroup, ShardLayout};
+use crate::optimizer::{decay_groups, ShardLayout};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{Artifact, Runtime};
 use crate::scaling::{Policy, ScaleManager};
@@ -30,6 +43,62 @@ pub struct StepOutcome {
     pub stats: StepStats,
 }
 
+/// One worker's per-step reduction state, merged in worker index order
+/// after the (possibly parallel) passes complete. Keeping the merge
+/// out of the passes is what makes thread scheduling invisible to the
+/// numbers: each worker's partials depend only on its own batches.
+struct WorkerPass {
+    loss_sum: f64,
+    amax: Vec<f32>,
+    monitor: Vec<[f32; 3]>,
+}
+
+/// Reusable per-thread chunk pads for the Adam artifact: 4 chunk-sized
+/// f32 tensors (p, m, v, g) plus the 4-scalar tensor, written in place
+/// each chunk. Allocated once in `Trainer::new`, reused every step.
+struct AdamScratch {
+    inputs: Vec<HostTensor>,
+}
+
+impl AdamScratch {
+    fn new(chunk: usize) -> Self {
+        let mut inputs: Vec<HostTensor> = (0..4).map(|_| HostTensor::zeros(&[chunk])).collect();
+        inputs.push(HostTensor::from_f32(&[4], vec![0.0; 4]));
+        Self { inputs }
+    }
+
+    /// Load one chunk into the pads (zero-filling the tail past `len`).
+    fn load(&mut self, p: &[f32], m: &[f32], v: &[f32], g: &[f32], scalars: [f32; 4]) {
+        for (t, src) in self.inputs.iter_mut().zip([p, m, v, g]) {
+            let d = t.f32s_mut();
+            d[..src.len()].copy_from_slice(src);
+            d[src.len()..].fill(0.0);
+        }
+        self.inputs[4].f32s_mut().copy_from_slice(&scalars);
+    }
+}
+
+/// One chunk of optimizer work: disjoint mutable windows into the flat
+/// param/moment buffers plus the matching gradient window.
+struct AdamUnit<'a> {
+    len: usize,
+    wd: f32,
+    p: &'a mut [f32],
+    m: &'a mut [f32],
+    v: &'a mut [f32],
+    g: &'a [f32],
+}
+
+/// Split `skip` then `take` elements off the front of a mutable slice
+/// cursor, returning the taken window.
+fn carve<'a>(cursor: &mut &'a mut [f32], skip: usize, take: usize) -> &'a mut [f32] {
+    let buf = std::mem::take(cursor);
+    let (_, rest) = buf.split_at_mut(skip);
+    let (win, rest) = rest.split_at_mut(take);
+    *cursor = rest;
+    win
+}
+
 pub struct Trainer {
     pub cfg: TrainConfig,
     rt: Arc<Runtime>,
@@ -41,15 +110,31 @@ pub struct Trainer {
     batcher: Batcher,
     sched: LrSchedule,
     pub shards: ShardLayout,
-    groups: Vec<DecayGroup>,
     /// flat AdamW moments (values lie on the recipe's fp8 grid; the
     /// checkpointer stores them as real u8 — see checkpoint::Dtype)
     pub m_flat: Vec<f32>,
     pub v_flat: Vec<f32>,
     meter: StepMeter,
     pub step: usize,
-    // reusable step buffers
+    /// run the per-worker grad passes inline instead of on scoped
+    /// threads — the reference schedule the parallel path must match
+    /// bit-for-bit (pinned by tests/integration.rs)
+    pub force_serial_workers: bool,
+    /// set when apply_adam failed mid-run: chunk results stream into
+    /// `m_flat`/`v_flat` in place (the allocation-free design), so an
+    /// artifact error leaves the moments partially advanced while the
+    /// params are not. Retrying a step from that state would silently
+    /// diverge; every later step() refuses instead.
+    poisoned: bool,
+    // ---- reusable step state (no steady-state allocations) ----
     worker_grads: Vec<Vec<f32>>,
+    /// persistent flat-parameter scratch for apply_adam
+    p_flat: Vec<f32>,
+    /// chunk work list (offset, len, weight_decay), offset-sorted;
+    /// depends only on groups × artifact chunk, so built once
+    adam_work: Vec<(usize, usize, f32)>,
+    /// per-thread chunk pads, one per Adam worker
+    adam_scratch: Vec<AdamScratch>,
 }
 
 impl Trainer {
@@ -107,14 +192,51 @@ impl Trainer {
             min_frac: cfg.min_lr_frac,
         };
         let flops = man.flops_per_step * (cfg.dp_workers * cfg.grad_accum) as f64;
+
+        // Chunk work list: (offset, len, weight_decay), C-aligned to
+        // absolute multiples of the artifact chunk so per-chunk FP8
+        // moment scales are stable across group boundaries. Sorted by
+        // offset so the flat state buffers can be carved into disjoint
+        // windows in one pass. Chunks are independent, so execution
+        // order never matters — only the carve order does.
+        let groups = decay_groups(&man.params);
+        let chunk = adam_art.manifest.chunk;
+        let mut adam_work: Vec<(usize, usize, f32)> = Vec::new();
+        for group in &groups {
+            let wd = if group.decay { cfg.weight_decay } else { 0.0 };
+            for &(off, len) in &group.ranges {
+                let mut pos = off;
+                let end = off + len;
+                while pos < end {
+                    let cend = (((pos / chunk) + 1) * chunk).min(end);
+                    adam_work.push((pos, cend - pos, wd));
+                    pos = cend;
+                }
+            }
+        }
+        adam_work.sort_unstable_by_key(|&(off, _, _)| off);
+
+        // 4 shard workers: enough to hide transfer latency without
+        // thrashing the PJRT intra-op pool (measured; §Perf)
+        let adam_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(adam_work.len().max(1))
+            .min(4);
+        let adam_scratch = (0..adam_threads).map(|_| AdamScratch::new(chunk)).collect();
+
         Ok(Self {
             shards: ShardLayout::new(total, cfg.dp_workers),
-            groups: decay_groups(&man.params),
             m_flat: vec![0.0; total],
             v_flat: vec![0.0; total],
             worker_grads: vec![Vec::new(); cfg.dp_workers],
+            p_flat: Vec::new(),
+            adam_work,
+            adam_scratch,
             meter: StepMeter::new(flops),
             step: 0,
+            force_serial_workers: false,
+            poisoned: false,
             params,
             scale_mgr,
             detector: DivergenceDetector::default(),
@@ -151,60 +273,129 @@ impl Trainer {
         HostTensor::from_f32(&[self.scale_mgr.n_sites()], self.scale_mgr.scales().to_vec())
     }
 
+    /// One worker's microbatched gradient pass: accumulate grads into
+    /// `buf`, return the worker-local loss/amax/monitor partials.
+    /// Pure in the worker index — safe to run on any thread.
+    fn worker_pass(&self, w: usize, scales: &HostTensor, buf: &mut Vec<f32>) -> Result<WorkerPass> {
+        let man = &self.grad_art.manifest;
+        let n_params = self.params.total_elems();
+        let ns = self.scale_mgr.n_sites();
+        buf.clear();
+        buf.resize(n_params, 0.0);
+        let mut pass = WorkerPass {
+            loss_sum: 0.0,
+            amax: vec![0.0; ns],
+            monitor: vec![[0.0; 3]; man.n_layers],
+        };
+        for micro in 0..self.cfg.grad_accum {
+            let tokens = self.batcher.batch(self.step, w, micro);
+            let batch = HostTensor::from_i32(&self.batcher.shape(), tokens);
+            // params are immutable within a step and shared by every
+            // worker: borrow them (run_refs) instead of deep-cloning a
+            // full model copy per worker per microbatch
+            let mut inputs: Vec<&HostTensor> =
+                Vec::with_capacity(self.params.tensors.len() + 2);
+            inputs.extend(self.params.tensors.iter());
+            inputs.push(scales);
+            inputs.push(&batch);
+            let out = self.grad_art.run_refs(&inputs)?;
+            let p = man.params.len();
+            pass.loss_sum += out[0].scalar_f32() as f64;
+            let mut off = 0;
+            for g in &out[1..=p] {
+                let src = g.f32s();
+                for (d, s) in buf[off..off + src.len()].iter_mut().zip(src) {
+                    *d += *s;
+                }
+                off += src.len();
+            }
+            for (a, &x) in pass.amax.iter_mut().zip(out[p + 1].f32s()) {
+                *a = a.max(x);
+            }
+            for (l, row) in out[p + 2].f32s().chunks(3).enumerate() {
+                for k in 0..3 {
+                    pass.monitor[l][k] = pass.monitor[l][k].max(row[k]);
+                }
+            }
+        }
+        // mean over microbatches
+        let inv = 1.0 / self.cfg.grad_accum as f32;
+        for g in buf.iter_mut() {
+            *g *= inv;
+        }
+        Ok(pass)
+    }
+
     /// Run one full training step.
     pub fn step(&mut self) -> Result<StepOutcome> {
+        if self.poisoned {
+            return Err(anyhow!(
+                "trainer state is inconsistent after a failed optimizer step \
+                 (moments partially updated); restart from a checkpoint"
+            ));
+        }
         let man = self.grad_art.manifest.clone();
-        let n_params = self.params.total_elems();
         let ns = self.scale_mgr.n_sites();
         let scales = HostTensor::from_f32(&[ns], self.scale_mgr.scales().to_vec());
 
+        // ---- (1) per-worker microbatched grads, one scoped thread per
+        //      worker (PJRT CPU executions are thread-safe; apply_adam
+        //      already relies on this). `force_serial_workers` runs the
+        //      identical passes inline — same partials, same merge, so
+        //      the two schedules are bit-identical.
+        let mut grads = std::mem::take(&mut self.worker_grads);
+        let passes_res: Result<Vec<WorkerPass>> =
+            if self.cfg.dp_workers == 1 || self.force_serial_workers {
+                grads
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(w, buf)| self.worker_pass(w, &scales, buf))
+                    .collect()
+            } else {
+                let this = &*self;
+                let scales_ref = &scales;
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = grads
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(w, buf)| s.spawn(move || this.worker_pass(w, scales_ref, buf)))
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("grad worker panicked"))
+                        .collect::<Result<Vec<_>>>()
+                })
+            };
+        // restore the buffers before propagating any error: a failed
+        // step must leave the trainer stepable (a second step() should
+        // fail or succeed cleanly, never panic on empty replica state)
+        self.worker_grads = grads;
+        let passes = passes_res?;
+
+        // fixed-order merge (worker index order): f64 loss fold and
+        // elementwise max folds are independent of which thread ran
+        // which worker, so any schedule gives these exact bits
         let mut loss_sum = 0.0f64;
         let mut amax = vec![0.0f32; ns];
         let mut monitor = vec![[0.0f32; 3]; man.n_layers];
-
-        // ---- (1) per-worker microbatched grads
-        for w in 0..self.cfg.dp_workers {
-            let buf = &mut self.worker_grads[w];
-            buf.clear();
-            buf.resize(n_params, 0.0);
-            for micro in 0..self.cfg.grad_accum {
-                let tokens = self.batcher.batch(self.step, w, micro);
-                let batch = HostTensor::from_i32(&self.batcher.shape(), tokens);
-                let mut inputs: Vec<HostTensor> =
-                    self.params.tensors.iter().cloned().collect();
-                inputs.push(scales.clone());
-                inputs.push(batch);
-                let out = self.grad_art.run(&inputs)?;
-                let p = man.params.len();
-                loss_sum += out[0].scalar_f32() as f64;
-                let mut off = 0;
-                for g in &out[1..=p] {
-                    let src = g.f32s();
-                    for (d, s) in buf[off..off + src.len()].iter_mut().zip(src) {
-                        *d += *s;
-                    }
-                    off += src.len();
-                }
-                for (a, &x) in amax.iter_mut().zip(out[p + 1].f32s()) {
-                    *a = a.max(x);
-                }
-                for (l, row) in out[p + 2].f32s().chunks(3).enumerate() {
-                    for k in 0..3 {
-                        monitor[l][k] = monitor[l][k].max(row[k]);
-                    }
-                }
+        for pass in &passes {
+            loss_sum += pass.loss_sum;
+            for (a, &x) in amax.iter_mut().zip(&pass.amax) {
+                *a = a.max(x);
             }
-            // mean over microbatches
-            let inv = 1.0 / self.cfg.grad_accum as f32;
-            for g in buf.iter_mut() {
-                *g *= inv;
+            for (m, row) in monitor.iter_mut().zip(&pass.monitor) {
+                for k in 0..3 {
+                    m[k] = m[k].max(row[k]);
+                }
             }
         }
         let loss =
             (loss_sum / (self.cfg.dp_workers * self.cfg.grad_accum) as f64) as f32;
 
-        // ---- (2) all-reduce
-        allreduce_mean(&mut self.worker_grads);
+        // ---- (2) reduce: sum + scale into rank 0 only. The broadcast
+        //      of the old allreduce_mean was dead work — every replica
+        //      buffer is overwritten by the next step's worker pass.
+        reduce_mean_into_rank0(&mut self.worker_grads);
 
         // ---- (3) global-norm clip. Non-finite grads either skip the
         //      update (production protection) or pass through at clip 1
@@ -242,94 +433,89 @@ impl Trainer {
         })
     }
 
-    /// Chunked AdamW through the `adam_*` artifact. Chunks are aligned
-    /// to absolute multiples of the artifact chunk size so per-chunk
-    /// FP8 moment scales are stable across group boundaries, and are
-    /// executed **in parallel** across a worker pool — the ZeRO-1
-    /// optimizer step really is embarrassingly parallel over shards,
-    /// and the PJRT CPU client accepts concurrent executions.
+    /// Chunked AdamW through the `adam_*` artifact, **in parallel**
+    /// across a worker pool — the ZeRO-1 optimizer step really is
+    /// embarrassingly parallel over shards, and the PJRT CPU client
+    /// accepts concurrent executions.
+    ///
+    /// Allocation discipline: the chunk work list is cached, the flat
+    /// parameter scratch persists across steps, each thread owns a
+    /// reusable `AdamScratch` pad set, and artifact outputs are copied
+    /// straight into pre-carved disjoint windows of the flat state —
+    /// the steady-state loop performs no per-chunk heap allocation on
+    /// the coordinator side.
     fn apply_adam(&mut self, lr: f32, clip: f32) -> Result<()> {
-        let chunk = self.adam_art.manifest.chunk;
         let grads = std::mem::take(&mut self.worker_grads); // borrow dance
         let g_flat = &grads[0];
-        let mut p_flat = Vec::new();
-        self.params.flatten_into(&mut p_flat);
+        let mut p_flat = std::mem::take(&mut self.p_flat);
+        self.params.flatten_into(&mut p_flat); // clear + refill, capacity kept
 
-        // build the chunk work list: (offset, len, weight_decay)
-        let mut work: Vec<(usize, usize, f32)> = Vec::new();
-        for group in &self.groups {
-            let wd = if group.decay { self.cfg.weight_decay } else { 0.0 };
-            for &(off, len) in &group.ranges {
-                let mut pos = off;
-                let end = off + len;
-                while pos < end {
-                    let cend = (((pos / chunk) + 1) * chunk).min(end);
-                    work.push((pos, cend - pos, wd));
-                    pos = cend;
-                }
+        let step_f = (self.step + 1) as f32;
+        let n_threads = self.adam_scratch.len().min(self.adam_work.len().max(1));
+
+        // carve the flat buffers into per-chunk disjoint windows
+        // (offset order) and deal them round-robin to the worker lanes;
+        // chunks are uniform (C-aligned), so static assignment balances
+        let mut lanes: Vec<Vec<AdamUnit>> = (0..n_threads)
+            .map(|_| Vec::with_capacity(self.adam_work.len().div_ceil(n_threads.max(1))))
+            .collect();
+        {
+            let mut pc = &mut p_flat[..];
+            let mut mc = &mut self.m_flat[..];
+            let mut vc = &mut self.v_flat[..];
+            let mut gc = g_flat.as_slice();
+            let mut cursor = 0usize;
+            for (i, &(off, len, wd)) in self.adam_work.iter().enumerate() {
+                let skip = off - cursor;
+                let (g_win, g_rest) = gc[skip..].split_at(len);
+                gc = g_rest;
+                lanes[i % n_threads].push(AdamUnit {
+                    len,
+                    wd,
+                    p: carve(&mut pc, skip, len),
+                    m: carve(&mut mc, skip, len),
+                    v: carve(&mut vc, skip, len),
+                    g: g_win,
+                });
+                cursor = off + len;
             }
         }
 
-        let step_f = (self.step + 1) as f32;
         let art = &self.adam_art;
-        let m_flat = &self.m_flat;
-        let v_flat = &self.v_flat;
-        let p_ref = &p_flat;
-        // 4 shard workers: enough to hide transfer latency without
-        // thrashing the PJRT intra-op pool (measured; §Perf)
-        let n_threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4)
-            .min(work.len().max(1))
-            .min(4);
-
-        type ChunkOut = (usize, usize, Vec<f32>, Vec<f32>, Vec<f32>);
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        let results: Result<Vec<ChunkOut>> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..n_threads)
-                .map(|_| {
-                    s.spawn(|| -> Result<Vec<ChunkOut>> {
-                        let mut out = Vec::new();
-                        loop {
-                            let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            if i >= work.len() {
-                                return Ok(out);
-                            }
-                            let (off, len, wd) = work[i];
-                            let pad = |src: &[f32]| {
-                                let mut b = Vec::with_capacity(chunk);
-                                b.extend_from_slice(src);
-                                b.resize(chunk, 0.0);
-                                b
-                            };
-                            let inputs = vec![
-                                HostTensor::from_f32(&[chunk], pad(&p_ref[off..off + len])),
-                                HostTensor::from_f32(&[chunk], pad(&m_flat[off..off + len])),
-                                HostTensor::from_f32(&[chunk], pad(&v_flat[off..off + len])),
-                                HostTensor::from_f32(&[chunk], pad(&g_flat[off..off + len])),
-                                HostTensor::from_f32(&[4], vec![lr, wd, step_f, clip]),
-                            ];
-                            let res = art.run(&inputs)?;
-                            let take = |t: &HostTensor| t.f32s()[..len].to_vec();
-                            out.push((off, len, take(&res[0]), take(&res[1]), take(&res[2])));
+        let run_res = std::thread::scope(|s| -> Result<()> {
+            let handles: Vec<_> = lanes
+                .into_iter()
+                .zip(self.adam_scratch.iter_mut())
+                .map(|(lane, scratch)| {
+                    s.spawn(move || -> Result<()> {
+                        for u in lane {
+                            scratch.load(u.p, u.m, u.v, u.g, [lr, u.wd, step_f, clip]);
+                            let res = art.run(&scratch.inputs)?;
+                            u.p.copy_from_slice(&res[0].f32s()[..u.len]);
+                            u.m.copy_from_slice(&res[1].f32s()[..u.len]);
+                            u.v.copy_from_slice(&res[2].f32s()[..u.len]);
                         }
+                        Ok(())
                     })
                 })
                 .collect();
-            let mut all = Vec::with_capacity(work.len());
             for h in handles {
-                all.extend(h.join().expect("adam worker panicked")?);
+                h.join().expect("adam worker panicked")?;
             }
-            Ok(all)
+            Ok(())
         });
 
-        for (off, len, p, m, v) in results? {
-            p_flat[off..off + len].copy_from_slice(&p);
-            self.m_flat[off..off + len].copy_from_slice(&m);
-            self.v_flat[off..off + len].copy_from_slice(&v);
-        }
-        self.params.unflatten_from(&p_flat);
+        // restore the reusable buffers unconditionally (no panic on a
+        // later step), but an error here means some chunks already
+        // streamed their results into m_flat/v_flat while params were
+        // not scattered — that state must not be stepped from again
+        self.p_flat = p_flat;
         self.worker_grads = grads;
+        if run_res.is_err() {
+            self.poisoned = true;
+        }
+        run_res?;
+        self.params.unflatten_from(&self.p_flat);
         Ok(())
     }
 
@@ -344,10 +530,12 @@ impl Trainer {
         for i in 0..n_batches {
             let tokens = self.batcher.eval_batch(i);
             let batch = HostTensor::from_i32(&self.batcher.shape(), tokens);
-            let mut inputs: Vec<HostTensor> = self.params.tensors.iter().cloned().collect();
-            inputs.push(scales.clone());
-            inputs.push(batch);
-            let out = art.run(&inputs)?;
+            let mut inputs: Vec<&HostTensor> =
+                Vec::with_capacity(self.params.tensors.len() + 2);
+            inputs.extend(self.params.tensors.iter());
+            inputs.push(&scales);
+            inputs.push(&batch);
+            let out = art.run_refs(&inputs)?;
             nll += out[0].scalar_f32() as f64;
             correct += out[1].scalar_f32() as f64;
             total += out[2].scalar_f32() as f64;

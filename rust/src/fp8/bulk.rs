@@ -1,0 +1,290 @@
+//! Table-driven bulk FP8 codec — the hot-path counterpart to the
+//! scalar reference implementation in [`super::format`].
+//!
+//! Three ideas, in order of payoff:
+//!
+//! 1. **Decode is a 256-entry LUT** per format, built once behind a
+//!    `OnceLock` from the scalar codec (so the table is correct by
+//!    construction). Bulk decode is one indexed load per byte — no
+//!    exponent branches, no `exp2` — and auto-vectorizes.
+//! 2. **Encode rounds in integer bit arithmetic** with a single range
+//!    check per element on the normal path. Adding the RNE bias to the
+//!    raw f32 bits lets the mantissa carry propagate into the exponent
+//!    field for free, and one rebias subtraction produces the fp8 code
+//!    directly. Subnormals, zeros, NaN/inf and overflow fall through to
+//!    the scalar codec, which stays the single source of truth for the
+//!    cold cases. The hot range is chosen so the bit trick is *provably*
+//!    identical to `Fp8Format::encode` (see the equivalence tests in
+//!    `rust/tests/hotpath.rs`: all 256 codes plus a 1M-point PRNG sweep).
+//! 3. **Slice APIs write into caller-owned buffers** and fan out across
+//!    a small scoped-thread pool above `util::par::PAR_THRESHOLD`
+//!    elements. All operations are elementwise (or fixed-order folds),
+//!    so the parallel result is bit-identical to the serial one.
+
+use std::sync::OnceLock;
+
+use crate::util::par::{par_partials, par_zip, PAR_CHUNK};
+
+use super::format::Fp8Format;
+
+/// The 256-entry decode table for `fmt`, built once per process.
+pub fn decode_lut(fmt: Fp8Format) -> &'static [f32; 256] {
+    static E4M3_LUT: OnceLock<[f32; 256]> = OnceLock::new();
+    static E5M2_LUT: OnceLock<[f32; 256]> = OnceLock::new();
+    let cell = match fmt {
+        Fp8Format::E4M3 => &E4M3_LUT,
+        Fp8Format::E5M2 => &E5M2_LUT,
+    };
+    cell.get_or_init(|| {
+        let mut t = [0.0f32; 256];
+        for (code, slot) in t.iter_mut().enumerate() {
+            *slot = fmt.decode(code as u8);
+        }
+        t
+    })
+}
+
+/// Precomputed constants for the branch-light encode path.
+///
+/// Hot range (on |x| as raw f32 bits): `[hot_lo, hot_hi)` where
+/// `hot_lo` is the format's min normal and `hot_hi` is the first
+/// magnitude whose *rounded* exponent would escape the fp8 exponent
+/// field. Inside the range the integer formula below reproduces the
+/// scalar encoder exactly, including the overflow codes: E4M3 values
+/// in (464, 496) round onto the NaN pattern 0x7f, E5M2 values in
+/// (61440, 65536) carry into biased exponent 31 with mantissa 0 —
+/// which *is* the ±inf code 0x7c.
+#[derive(Clone, Copy)]
+struct EncodeParams {
+    shift: u32,
+    rebias: u32,
+    hot_lo: u32,
+    hot_hi: u32,
+}
+
+impl EncodeParams {
+    fn of(fmt: Fp8Format) -> Self {
+        match fmt {
+            // shift = 23 - man_bits; rebias = (127 - bias) << man_bits
+            Fp8Format::E4M3 => EncodeParams {
+                shift: 20,
+                rebias: 120 << 3,
+                hot_lo: 0x3c80_0000, // 2^-6
+                hot_hi: 0x43f8_0000, // 496.0 = first magnitude rounding past e=8
+            },
+            Fp8Format::E5M2 => EncodeParams {
+                shift: 21,
+                rebias: 112 << 2,
+                hot_lo: 0x3880_0000, // 2^-14
+                hot_hi: 0x4780_0000, // 65536.0 = 2^16
+            },
+        }
+    }
+}
+
+/// One element through the table-driven encoder. Exactly equivalent to
+/// `fmt.encode(x)` for every f32 bit pattern (pinned by tests).
+#[inline]
+fn encode_one(fmt: Fp8Format, p: EncodeParams, x: f32) -> u8 {
+    let bits = x.to_bits();
+    let abs = bits & 0x7fff_ffff;
+    if abs >= p.hot_lo && abs < p.hot_hi {
+        // RNE bias addition: half = 2^(shift-1) - 1 + lsb. A mantissa
+        // carry rolls into the exponent field of `abs` itself, which is
+        // precisely the "rounded up a binade" case; the rebias
+        // subtraction then converts the IEEE-754 biased exponent to the
+        // fp8 one in the same move.
+        let sign = ((bits >> 24) & 0x80) as u8;
+        let lsb = (abs >> p.shift) & 1;
+        let rounded = abs + ((1u32 << (p.shift - 1)) - 1) + lsb;
+        sign | ((rounded >> p.shift) - p.rebias) as u8
+    } else {
+        // cold: zero, subnormal, NaN/inf, far overflow — the scalar
+        // codec is the reference for all of these
+        fmt.encode(x)
+    }
+}
+
+/// Bulk encode into a caller-owned buffer (cleared + resized).
+pub fn encode_slice_into(fmt: Fp8Format, xs: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.resize(xs.len(), 0);
+    let p = EncodeParams::of(fmt);
+    par_zip(xs, &mut out[..], |xs, out| {
+        for (d, &x) in out.iter_mut().zip(xs) {
+            *d = encode_one(fmt, p, x);
+        }
+    });
+}
+
+/// Bulk decode into a caller-owned buffer (cleared + resized).
+pub fn decode_slice_into(fmt: Fp8Format, bytes: &[u8], out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(bytes.len(), 0.0);
+    decode_slice_buf(fmt, bytes, &mut out[..]);
+}
+
+/// Bulk decode into an exact-size destination slice.
+pub fn decode_slice_buf(fmt: Fp8Format, bytes: &[u8], out: &mut [f32]) {
+    let lut = decode_lut(fmt);
+    par_zip(bytes, out, |bytes, out| {
+        for (d, &b) in out.iter_mut().zip(bytes) {
+            *d = lut[b as usize];
+        }
+    });
+}
+
+/// Amax of a slice, NaN-ignoring (`f32::max` drops NaN operands): the
+/// JIT scale must stay finite even on a poisoned buffer. NaN *elements*
+/// are propagated explicitly by [`pack_scaled_into`] instead of being
+/// folded into the scale.
+pub fn slice_amax(xs: &[f32]) -> f32 {
+    // chunked partial maxes: max is associative/commutative over the
+    // non-NaN values, so the grouping cannot change the result — the
+    // partials exist purely so the fold can fan out
+    par_partials(xs, PAR_CHUNK, |span| span.iter().fold(0.0f32, |a, &x| a.max(x.abs())))
+        .into_iter()
+        .fold(0.0f32, f32::max)
+}
+
+/// Bulk [`super::pack_scaled`]: amax → pow2 JIT scale → scaled encode,
+/// writing into a caller-owned byte buffer. Returns the scale.
+///
+/// NaN elements encode to the format's NaN byte *explicitly* — they are
+/// invisible to the amax fold (see [`slice_amax`]), so without this
+/// branch a NaN would be quantized against whatever scale its finite
+/// neighbors chose. (`x * scale` keeps NaN NaN, so the scalar encoder
+/// happens to do the right thing — the branch makes the contract
+/// load-bearing rather than incidental, and the regression test in
+/// `rust/tests/hotpath.rs` pins it.)
+pub fn pack_scaled_into(fmt: Fp8Format, xs: &[f32], out: &mut Vec<u8>) -> f32 {
+    let amax = slice_amax(xs);
+    let scale = super::compute_scale(fmt, amax);
+    let max = fmt.max();
+    let p = EncodeParams::of(fmt);
+    out.clear();
+    out.resize(xs.len(), 0);
+    par_zip(xs, &mut out[..], |xs, out| {
+        for (d, &x) in out.iter_mut().zip(xs) {
+            *d = if x.is_nan() {
+                fmt.encode(x) // sign | NaN code, independent of scale
+            } else {
+                encode_one(fmt, p, (x * scale).clamp(-max, max))
+            };
+        }
+    });
+    scale
+}
+
+/// Bulk [`super::unpack_scaled`]: LUT decode + descale into a
+/// caller-owned buffer (cleared + resized).
+pub fn unpack_scaled_into(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(bytes.len(), 0.0);
+    unpack_scaled_buf(fmt, bytes, scale, &mut out[..]);
+}
+
+/// Bulk unpack into an exact-size destination slice (the
+/// `MomentBuffer` unpack path decodes chunk-by-chunk into one flat
+/// buffer without an intermediate Vec).
+pub fn unpack_scaled_buf(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut [f32]) {
+    let lut = decode_lut(fmt);
+    // division (not reciprocal multiply) to stay bit-identical with the
+    // scalar reference `decode(b) / scale` for any scale value
+    par_zip(bytes, out, |bytes, out| {
+        for (d, &b) in out.iter_mut().zip(bytes) {
+            *d = lut[b as usize] / scale;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::{E4M3, E5M2};
+
+    #[test]
+    fn lut_matches_scalar_decode() {
+        for fmt in [E4M3, E5M2] {
+            let lut = decode_lut(fmt);
+            for code in 0u16..=255 {
+                let a = lut[code as usize];
+                let b = fmt.decode(code as u8);
+                assert!(
+                    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()),
+                    "{fmt:?} code {code:#x}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn encode_one_matches_scalar_on_boundaries() {
+        // the seams of the hot range, both sides, both signs
+        let probes = [
+            0.0f32,
+            -0.0,
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE / 2.0,
+            2f32.powi(-6),
+            2f32.powi(-6) - 2f32.powi(-20),
+            2f32.powi(-9),
+            2f32.powi(-14),
+            2f32.powi(-16),
+            447.9,
+            448.0,
+            463.9,
+            464.0,
+            464.1,
+            495.9,
+            496.0,
+            512.0,
+            1000.0,
+            57344.0,
+            61439.9,
+            61440.0,
+            61440.1,
+            65535.9,
+            65536.0,
+            1e9,
+        ];
+        for fmt in [E4M3, E5M2] {
+            let p = EncodeParams::of(fmt);
+            for &v in &probes {
+                for x in [v, -v] {
+                    assert_eq!(
+                        encode_one(fmt, p, x),
+                        fmt.encode(x),
+                        "{fmt:?} x={x}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slice_apis_roundtrip() {
+        let xs: Vec<f32> = (0..5000).map(|i| ((i as f32) - 2500.0) * 0.01).collect();
+        for fmt in [E4M3, E5M2] {
+            let mut bytes = Vec::new();
+            encode_slice_into(fmt, &xs, &mut bytes);
+            assert_eq!(bytes.len(), xs.len());
+            let mut back = Vec::new();
+            decode_slice_into(fmt, &bytes, &mut back);
+            for (i, (&x, &y)) in xs.iter().zip(&back).enumerate() {
+                assert_eq!(y.to_bits(), fmt.decode(fmt.encode(x)).to_bits(), "{fmt:?} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn amax_ignores_nan_and_matches_fold() {
+        let mut xs: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.37).sin()).collect();
+        xs[500] = f32::NAN;
+        let expect = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        assert_eq!(slice_amax(&xs), expect);
+        assert!(slice_amax(&xs).is_finite());
+    }
+}

@@ -6,8 +6,14 @@
 //! reduction is measured, not estimated. Conversion semantics match
 //! ml_dtypes/XLA exactly (RNE; E4M3 overflow → NaN, E5M2 overflow → ±inf),
 //! which `python/tests/test_formats.py` pins on the Python side and
-//! `tests/codec.rs` pins here.
+//! `rust/tests/hotpath.rs` pins here.
+//!
+//! Two implementations, one semantics: [`format`] is the scalar
+//! reference codec; [`bulk`] is the table-driven slice codec the hot
+//! paths use (LUT decode, integer-rounding encode, scoped-thread
+//! fan-out), required bit-equivalent to the reference by test.
 
+pub mod bulk;
 pub mod format;
 pub mod stochastic;
 pub use format::{Fp8Format, E4M3, E5M2};
@@ -33,17 +39,20 @@ pub fn qdq(fmt: Fp8Format, x: f32) -> f32 {
 /// not — values are rounded) into bytes. Returns (bytes, scale) where
 /// scale is the pow2 JIT scale chosen from the slice amax, matching
 /// `python/compile/formats.compute_scale`.
+///
+/// Runs on the table-driven [`bulk`] codec (parallel above the size
+/// threshold); NaN elements encode to the format's NaN byte rather
+/// than folding into the amax. Allocation-sensitive callers should use
+/// [`bulk::pack_scaled_into`] directly with a reused buffer.
 pub fn pack_scaled(fmt: Fp8Format, xs: &[f32]) -> (Vec<u8>, f32) {
-    let amax = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
-    let scale = compute_scale(fmt, amax);
-    let bytes = xs.iter().map(|&x| fmt.encode((x * scale).clamp(-fmt.max(), fmt.max()))).collect();
+    let mut bytes = Vec::new();
+    let scale = bulk::pack_scaled_into(fmt, xs, &mut bytes);
     (bytes, scale)
 }
 
-/// Unpack bytes produced by [`pack_scaled`].
+/// Unpack bytes produced by [`pack_scaled`] (bulk LUT decode).
 pub fn unpack_scaled(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut Vec<f32>) {
-    out.clear();
-    out.extend(bytes.iter().map(|&b| fmt.decode(b) / scale));
+    bulk::unpack_scaled_into(fmt, bytes, scale, out);
 }
 
 /// Pow2 JIT scale positioning `amax` inside the format range — the
@@ -110,6 +119,27 @@ mod tests {
                 let tol = x.abs() * step + fmt.min_subnormal() / scale;
                 assert!((x - y).abs() <= tol, "{fmt:?}: {x} -> {y}");
             }
+        }
+    }
+
+    #[test]
+    fn pack_scaled_propagates_nan() {
+        // regression: a NaN element is invisible to the amax fold
+        // (f32::max drops NaN) — it must still come back as NaN, and
+        // must not perturb the scale its finite neighbors get.
+        let mut xs: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.1).collect();
+        xs[7] = f32::NAN;
+        for fmt in [E4M3, E5M2] {
+            let (bytes, scale) = pack_scaled(fmt, &xs);
+            assert!(fmt.decode(bytes[7]).is_nan(), "{fmt:?}: NaN must survive packing");
+            let clean: Vec<f32> =
+                xs.iter().enumerate().filter(|&(i, _)| i != 7).map(|(_, &x)| x).collect();
+            let (_, clean_scale) = pack_scaled(fmt, &clean);
+            assert_eq!(scale, clean_scale, "{fmt:?}: NaN must not move the scale");
+            let mut out = Vec::new();
+            unpack_scaled(fmt, &bytes, scale, &mut out);
+            assert!(out[7].is_nan());
+            assert!((out[6] - xs[6]).abs() < 0.05, "{fmt:?}: neighbors unharmed");
         }
     }
 

@@ -69,7 +69,8 @@ impl MomentBuffer {
         self.len == 0
     }
 
-    /// Working f32 view (unpacks if needed).
+    /// Working f32 view (unpacks if needed). Bulk LUT decode straight
+    /// into the flat buffer — no per-chunk temporaries.
     pub fn as_f32(&mut self) -> &mut Vec<f32> {
         if self.f32_buf.is_empty() && self.len > 0 {
             // unpack
@@ -77,20 +78,25 @@ impl MomentBuffer {
                 MomentStore::Fp8(f) => f,
                 MomentStore::F32 => unreachable!("f32 store never packs"),
             };
-            let mut out = Vec::with_capacity(self.len);
-            let mut tmp = Vec::new();
+            let mut out = vec![0.0f32; self.len];
+            let mut off = 0;
             for (bytes, scale) in &self.packed {
-                fp8::unpack_scaled(fmt, bytes, *scale, &mut tmp);
-                out.extend_from_slice(&tmp);
+                let n = bytes.len().min(self.len - off);
+                fp8::bulk::unpack_scaled_buf(fmt, &bytes[..n], *scale, &mut out[off..off + n]);
+                off += n;
             }
-            out.truncate(self.len);
             self.f32_buf = out;
-            self.packed.clear();
+            // keep the byte vec capacities for the next pack()
+            for (bytes, _) in self.packed.iter_mut() {
+                bytes.clear();
+            }
         }
         &mut self.f32_buf
     }
 
-    /// Pack to the storage format (no-op for f32).
+    /// Pack to the storage format (no-op for f32). Reuses the packed
+    /// byte vectors across pack/unpack cycles; only the f32 working
+    /// buffer is released (that release *is* the Table 4 story).
     pub fn pack(&mut self) {
         let fmt = match self.store {
             MomentStore::F32 => return,
@@ -99,11 +105,11 @@ impl MomentBuffer {
         if self.f32_buf.is_empty() {
             return; // already packed
         }
-        self.packed = self
-            .f32_buf
-            .chunks(self.chunk)
-            .map(|c| fp8::pack_scaled(fmt, c))
-            .collect();
+        let n_chunks = self.len.div_ceil(self.chunk).max(1);
+        self.packed.resize_with(n_chunks, || (Vec::new(), 1.0));
+        for (c, slot) in self.f32_buf.chunks(self.chunk).zip(self.packed.iter_mut()) {
+            slot.1 = fp8::bulk::pack_scaled_into(fmt, c, &mut slot.0);
+        }
         self.f32_buf = Vec::new();
     }
 
@@ -112,7 +118,10 @@ impl MomentBuffer {
         match self.store {
             MomentStore::F32 => self.len * 4,
             MomentStore::Fp8(_) => {
-                if self.packed.is_empty() {
+                // the packed slots persist across unpack (capacity
+                // reuse), so "currently packed" is keyed off the f32
+                // working buffer, not off `packed` being non-empty
+                if !self.f32_buf.is_empty() || self.packed.is_empty() {
                     self.len // would-be packed size
                 } else {
                     self.packed.iter().map(|(b, _)| b.len() + 4).sum()

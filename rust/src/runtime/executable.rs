@@ -40,11 +40,21 @@ impl Artifact {
     /// With `execute_b` the buffers are owned on the Rust side and
     /// freed on drop after the synchronous output transfer completes.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// [`run`](Self::run) over borrowed inputs. Execution only reads
+    /// the tensors to build literals, so callers with a large shared
+    /// input prefix (the replicated parameters, identical for every
+    /// data-parallel worker) can pass references instead of deep
+    /// `HostTensor` clones.
+    pub fn run_refs(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         // input literals must outlive execute_b: BufferFromHostLiteral's
         // host->device copy is asynchronous and reads the literal memory
         let mut lits = Vec::with_capacity(inputs.len());
         let mut bufs = Vec::with_capacity(inputs.len());
-        for t in inputs {
+        for &t in inputs {
             let lit = t.to_literal().context("building input literal")?;
             bufs.push(
                 self.client

@@ -1,7 +1,12 @@
 //! Micro-bench harness (offline: no criterion). Warmup + timed
-//! iterations with mean / p50 / p95 reporting, criterion-ish output.
+//! iterations with mean / p50 / p95 reporting, criterion-ish output,
+//! plus machine-readable `BENCH_*.json` emission so perf trajectories
+//! survive across PRs (see benches/perf_hotpath.rs).
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::{obj, Json};
 
 pub struct BenchResult {
     pub name: String,
@@ -23,6 +28,39 @@ impl BenchResult {
     pub fn mean_secs(&self) -> f64 {
         self.mean.as_secs_f64()
     }
+
+    /// Record for a `BENCH_*.json` report. `extra` carries derived
+    /// metrics (GB/s, speedup vs a baseline, worker count, …).
+    pub fn to_json(&self, extra: Vec<(&str, Json)>) -> Json {
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_s", Json::Num(self.mean.as_secs_f64())),
+            ("p50_s", Json::Num(self.p50.as_secs_f64())),
+            ("p95_s", Json::Num(self.p95.as_secs_f64())),
+            ("min_s", Json::Num(self.min.as_secs_f64())),
+        ];
+        fields.extend(extra);
+        obj(fields)
+    }
+}
+
+/// Write a `BENCH_*.json` perf report: top-level metadata + a
+/// `benches` array of [`BenchResult::to_json`] records. Future PRs
+/// diff these files to keep the perf trajectory machine-readable.
+pub fn write_json_report<P: AsRef<Path>>(
+    path: P,
+    meta: Vec<(&str, Json)>,
+    records: Vec<Json>,
+) -> std::io::Result<()> {
+    let mut fields = meta;
+    fields.push(("benches", Json::Arr(records)));
+    if let Some(dir) = path.as_ref().parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, obj(fields).to_string())
 }
 
 /// Time `f` for up to `max_iters` iterations or `budget` wall-clock,
@@ -62,6 +100,30 @@ pub fn bench_quick<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_report_roundtrips() {
+        let r = bench("x", 0, 5, Duration::from_secs(1), || {
+            std::hint::black_box(1 + 1);
+        });
+        // per-process path: two concurrent test runs on one host must
+        // not race on the write/remove of a shared fixture dir
+        let dir = std::env::temp_dir().join(format!("fp8_bench_json_{}", std::process::id()));
+        let path = dir.join("BENCH_test.json");
+        write_json_report(
+            &path,
+            vec![("suite", Json::Str("t".into()))],
+            vec![r.to_json(vec![("gbs", Json::Num(1.5))])],
+        )
+        .unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.str_of("suite").unwrap(), "t");
+        let b = &j.arr_of("benches").unwrap()[0];
+        assert_eq!(b.str_of("name").unwrap(), "x");
+        assert_eq!(b.f64_of("gbs").unwrap(), 1.5);
+        assert!(b.f64_of("mean_s").unwrap() >= 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
 
     #[test]
     fn measures_something() {

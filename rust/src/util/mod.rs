@@ -4,6 +4,7 @@
 pub mod bench;
 pub mod csv;
 pub mod json;
+pub mod par;
 pub mod prng;
 pub mod proptest;
 

@@ -1,0 +1,151 @@
+//! Shared scoped-thread fan-out for the hot paths (codec, collective,
+//! norms). One module owns the threshold / thread-cap / span-dealing
+//! policy so the parallel paths cannot silently diverge from each
+//! other — and every helper here is bit-deterministic by construction:
+//! work is split at fixed positions and results land at fixed indices,
+//! so thread scheduling never changes an output.
+
+use std::sync::OnceLock;
+
+/// Below this many elements the helpers stay single-threaded —
+/// thread spawn (~10µs) would dominate the work.
+pub const PAR_THRESHOLD: usize = 1 << 16;
+
+/// Default chunk granularity for partial-based reductions
+/// ([`par_partials`] callers that don't carry their own semantic
+/// chunk size). Purely a scheduling constant for elementwise ops.
+pub const PAR_CHUNK: usize = 1 << 16;
+
+/// Worker cap for the scoped pools. The bulk codec and the collective
+/// saturate memory bandwidth quickly; more than 8 lanes just adds
+/// coherence traffic (see rust/EXPERIMENTS.md §Perf).
+pub fn max_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8)
+    })
+}
+
+/// Run `f` over parallel spans of `(inp, out)` above the size
+/// threshold; single-threaded below it. `f` must be elementwise (it
+/// receives matching subslices at matching offsets), which makes the
+/// fan-out bit-deterministic by construction.
+pub fn par_zip<I: Sync, O: Send>(inp: &[I], out: &mut [O], f: impl Fn(&[I], &mut [O]) + Sync) {
+    debug_assert_eq!(inp.len(), out.len());
+    let n = out.len();
+    let threads = if n < PAR_THRESHOLD {
+        1
+    } else {
+        max_threads().min(n.div_ceil(PAR_CHUNK)).max(1)
+    };
+    if threads <= 1 {
+        f(inp, out);
+        return;
+    }
+    let per = n.div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|s| {
+        // keep one span for the calling thread: spawning `threads`
+        // workers while this thread blocks would waste a spawn and
+        // idle a core on every hot-path call
+        let mut spans = inp.chunks(per).zip(out.chunks_mut(per));
+        let inline = spans.next();
+        for (i_span, o_span) in spans {
+            s.spawn(move || f(i_span, o_span));
+        }
+        if let Some((i_span, o_span)) = inline {
+            f(i_span, o_span);
+        }
+    });
+}
+
+/// Map fixed `chunk`-sized runs of `items` to partial results, in
+/// parallel above the threshold. The partial at index `i` is always
+/// `f(items[i*chunk .. (i+1)*chunk])` no matter how many threads ran,
+/// so a caller's fold over the returned vec has a schedule-independent
+/// — and, for a fixed `chunk`, fully defined — reduction order.
+pub fn par_partials<T: Sync, A: Default + Clone + Send>(
+    items: &[T],
+    chunk: usize,
+    f: impl Fn(&[T]) -> A + Sync,
+) -> Vec<A> {
+    assert!(chunk > 0, "partial chunk size must be positive");
+    let n_chunks = items.len().div_ceil(chunk);
+    let mut partials = vec![A::default(); n_chunks];
+    let threads = if items.len() < PAR_THRESHOLD {
+        1
+    } else {
+        max_threads().min(n_chunks).max(1)
+    };
+    if threads <= 1 {
+        for (p, c) in partials.iter_mut().zip(items.chunks(chunk)) {
+            *p = f(c);
+        }
+        return partials;
+    }
+    // deal whole chunks to threads in contiguous runs so each partial
+    // lands at its chunk index
+    let per = n_chunks.div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|s| {
+        let mut spans = partials.chunks_mut(per).zip(items.chunks(per * chunk));
+        let inline = spans.next(); // calling thread takes one span
+        for (p_span, i_span) in spans {
+            s.spawn(move || {
+                for (p, c) in p_span.iter_mut().zip(i_span.chunks(chunk)) {
+                    *p = f(c);
+                }
+            });
+        }
+        if let Some((p_span, i_span)) = inline {
+            for (p, c) in p_span.iter_mut().zip(i_span.chunks(chunk)) {
+                *p = f(c);
+            }
+        }
+    });
+    partials
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_zip_matches_serial_across_threshold() {
+        for n in [0usize, 5, PAR_THRESHOLD - 1, PAR_THRESHOLD + 12345] {
+            let inp: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+            let mut out = vec![0.0f32; n];
+            par_zip(&inp, &mut out, |i, o| {
+                for (d, &x) in o.iter_mut().zip(i) {
+                    *d = x * 2.0;
+                }
+            });
+            assert!(out.iter().zip(&inp).all(|(&o, &i)| o == i * 2.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn par_partials_land_at_chunk_index() {
+        // big enough to go parallel; values encode their position so a
+        // misplaced partial is visible
+        let n = PAR_THRESHOLD * 3 + 777;
+        let items: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let chunk = 1000;
+        let got = par_partials(&items, chunk, |c| c.iter().sum::<f64>());
+        let want: Vec<f64> = items.chunks(chunk).map(|c| c.iter().sum()).collect();
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "partial {i}");
+        }
+    }
+
+    #[test]
+    fn par_partials_empty_and_ragged() {
+        assert!(par_partials(&[] as &[f32], 64, |c| c.len()).is_empty());
+        let got = par_partials(&[1.0f32; 130], 64, |c| c.len());
+        assert_eq!(got, vec![64, 64, 2]);
+    }
+}

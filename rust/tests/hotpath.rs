@@ -1,0 +1,231 @@
+//! Hot-path equivalence suite: the bulk table-driven codec must be a
+//! bit-exact drop-in for the scalar reference (`Fp8Format::encode` /
+//! `decode`), and the parallel collective/norm paths must be
+//! bit-deterministic. No artifacts needed — pure Rust.
+
+use fp8_trainer::coordinator::allreduce::{
+    allreduce_mean, global_norm, reduce_mean_into_rank0, NORM_CHUNK,
+};
+use fp8_trainer::fp8::{self, bulk, E4M3, E5M2};
+use fp8_trainer::util::prng::Rng;
+
+fn same_f32(a: f32, b: f32) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+// ---------------------------------------------------------------- codec
+
+#[test]
+fn bulk_decode_matches_scalar_on_all_256_codes() {
+    for fmt in [E4M3, E5M2] {
+        let codes: Vec<u8> = (0..=255u8).collect();
+        let mut out = Vec::new();
+        bulk::decode_slice_into(fmt, &codes, &mut out);
+        for (code, &v) in out.iter().enumerate() {
+            let reference = fmt.decode(code as u8);
+            assert!(
+                same_f32(v, reference),
+                "{fmt:?} code {code:#x}: bulk {v} vs scalar {reference}"
+            );
+        }
+    }
+}
+
+#[test]
+fn bulk_encode_roundtrips_all_256_codes() {
+    // decode every code with the scalar codec, bulk-encode the values,
+    // and require the scalar encoder's byte back (identity on the code
+    // wheel except NaN patterns and E5M2 inf canonicalization — the
+    // scalar codec is the oracle for those too)
+    for fmt in [E4M3, E5M2] {
+        let values: Vec<f32> = (0..=255u8).map(|c| fmt.decode(c)).collect();
+        let mut bulk_bytes = Vec::new();
+        bulk::encode_slice_into(fmt, &values, &mut bulk_bytes);
+        for (code, (&v, &back)) in values.iter().zip(&bulk_bytes).enumerate() {
+            assert_eq!(
+                back,
+                fmt.encode(v),
+                "{fmt:?} code {code:#x} (value {v}): bulk disagrees with scalar"
+            );
+        }
+    }
+}
+
+/// 1M deterministic PRNG f32s: raw bit patterns (hits NaN payloads,
+/// infs, subnormals, both zeros) interleaved with scaled normals and a
+/// block of handpicked boundary values.
+fn sweep_inputs() -> Vec<f32> {
+    let mut rng = Rng::new(0x5eed_f8);
+    let specials = [
+        0.0f32,
+        -0.0,
+        f32::NAN,
+        -f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::MIN_POSITIVE,
+        f32::MIN_POSITIVE / 8.0,
+        2f32.powi(-6),
+        2f32.powi(-9),
+        2f32.powi(-10),
+        2f32.powi(-14),
+        2f32.powi(-16),
+        2f32.powi(-17),
+        447.9,
+        448.0,
+        463.99,
+        464.0,
+        464.01,
+        495.99,
+        496.0,
+        512.0,
+        57344.0,
+        61439.9,
+        61440.0,
+        61440.1,
+        65535.9,
+        65536.0,
+        1e9,
+        3.4e38,
+    ];
+    let mut xs = Vec::with_capacity(1_000_000);
+    for i in 0..1_000_000usize {
+        let x = match i % 4 {
+            // raw bit pattern: uniform over the entire f32 space
+            0 => f32::from_bits(rng.next_u64() as u32),
+            // normal-ish magnitudes around the fp8 ranges
+            1 => (rng.normal() as f32) * 30.0,
+            // log-uniform magnitudes: exercises every binade incl.
+            // fp8 subnormal and overflow territory
+            2 => {
+                let e = (rng.uniform() * 90.0 - 45.0) as f32;
+                let sign = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+                sign * 2f32.powf(e)
+            }
+            _ => specials[i % specials.len()],
+        };
+        xs.push(x);
+    }
+    xs
+}
+
+#[test]
+fn bulk_encode_matches_scalar_on_1m_prng_sweep() {
+    let xs = sweep_inputs();
+    for fmt in [E4M3, E5M2] {
+        let mut bytes = Vec::new();
+        bulk::encode_slice_into(fmt, &xs, &mut bytes);
+        assert_eq!(bytes.len(), xs.len());
+        for (i, (&x, &b)) in xs.iter().zip(&bytes).enumerate() {
+            let reference = fmt.encode(x);
+            assert_eq!(
+                b, reference,
+                "{fmt:?} i={i} x={x} ({:#010x}): bulk {b:#04x} vs scalar {reference:#04x}",
+                x.to_bits()
+            );
+        }
+    }
+}
+
+#[test]
+fn bulk_decode_matches_scalar_on_1m_sweep() {
+    // decode the full byte distribution, not just 256 singletons:
+    // exercises the parallel span split at every offset alignment
+    let mut rng = Rng::new(0xdec0de);
+    let bytes: Vec<u8> = (0..1_000_000).map(|_| rng.next_u64() as u8).collect();
+    for fmt in [E4M3, E5M2] {
+        let mut out = Vec::new();
+        bulk::decode_slice_into(fmt, &bytes, &mut out);
+        for (i, (&b, &v)) in bytes.iter().zip(&out).enumerate() {
+            assert!(same_f32(v, fmt.decode(b)), "{fmt:?} i={i} byte {b:#04x}");
+        }
+    }
+}
+
+#[test]
+fn pack_scaled_nan_regression() {
+    // NaN is invisible to the amax fold; it must still (a) come back
+    // as NaN, (b) leave the scale exactly what the finite elements
+    // alone would produce, (c) leave every finite byte unchanged.
+    let mut rng = Rng::new(7);
+    let mut xs: Vec<f32> = (0..10_000).map(|_| (rng.normal() as f32) * 0.1).collect();
+    for idx in [0usize, 4999, 9999] {
+        xs[idx] = if idx % 2 == 0 { f32::NAN } else { -f32::NAN };
+    }
+    // the NaN-free reference: NaNs contribute nothing to the amax, so
+    // zeroing them must give exactly the same scale
+    let clean: Vec<f32> = xs.iter().map(|&x| if x.is_nan() { 0.0 } else { x }).collect();
+    for fmt in [E4M3, E5M2] {
+        let (bytes, scale) = fp8::pack_scaled(fmt, &xs);
+        let (clean_bytes, clean_scale) = fp8::pack_scaled(fmt, &clean);
+        assert_eq!(scale, clean_scale, "{fmt:?}: NaN moved the scale");
+        for idx in [0usize, 4999, 9999] {
+            assert!(fmt.decode(bytes[idx]).is_nan(), "{fmt:?}: NaN lost at {idx}");
+        }
+        for (i, (&b, &cb)) in bytes.iter().zip(&clean_bytes).enumerate() {
+            if ![0usize, 4999, 9999].contains(&i) {
+                assert_eq!(b, cb, "{fmt:?}: finite byte {i} perturbed by NaN neighbor");
+            }
+        }
+        let mut back = Vec::new();
+        fp8::unpack_scaled(fmt, &bytes, scale, &mut back);
+        assert!(back[0].is_nan() && back[4999].is_nan() && back[9999].is_nan());
+    }
+}
+
+#[test]
+fn pack_unpack_into_reuse_buffers_across_sizes() {
+    // caller-owned buffers: shrinking and growing inputs must be exact
+    let mut bytes = Vec::new();
+    let mut back = Vec::new();
+    for n in [10usize, 100_000, 17, 65_536, 0, 3] {
+        let xs: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.031).sin()).collect();
+        let scale = bulk::pack_scaled_into(E4M3, &xs, &mut bytes);
+        assert_eq!(bytes.len(), n);
+        bulk::unpack_scaled_into(E4M3, &bytes, scale, &mut back);
+        assert_eq!(back.len(), n);
+        for (&x, &y) in xs.iter().zip(&back) {
+            assert!((x - y).abs() <= x.abs() * 0.07 + 1e-3, "n={n}: {x} vs {y}");
+        }
+    }
+}
+
+// ----------------------------------------------------------- collective
+
+#[test]
+fn reduce_mean_into_rank0_bit_matches_allreduce() {
+    // large enough to cross the parallel add threshold
+    let n = 200_000;
+    let w = 5;
+    let mk = || -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(42);
+        (0..w)
+            .map(|_| (0..n).map(|_| (rng.normal() as f32) * 0.01).collect())
+            .collect()
+    };
+    let mut a = mk();
+    let mut b = mk();
+    allreduce_mean(&mut a);
+    reduce_mean_into_rank0(&mut b);
+    for (i, (x, y)) in a[0].iter().zip(&b[0]).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "rank0 diverges at {i}");
+    }
+}
+
+#[test]
+fn global_norm_is_bit_deterministic_and_chunk_defined() {
+    // the chunked-parallel norm must equal the explicit fixed-chunk
+    // fold bit-for-bit, and repeated runs must agree exactly
+    let n = NORM_CHUNK * 5 + 321;
+    let mut rng = Rng::new(11);
+    let flat: Vec<f32> = (0..n).map(|_| (rng.normal() as f32) * 0.003).collect();
+    let expect = flat
+        .chunks(NORM_CHUNK)
+        .map(|c| c.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
+        .sum::<f64>()
+        .sqrt() as f32;
+    let g1 = global_norm(&flat);
+    let g2 = global_norm(&flat);
+    assert_eq!(g1.to_bits(), expect.to_bits(), "parallel != chunk definition");
+    assert_eq!(g1.to_bits(), g2.to_bits(), "norm not reproducible");
+}

@@ -142,6 +142,41 @@ fn dp_workers_change_nothing_but_throughput_shape() {
 }
 
 #[test]
+fn parallel_workers_bit_identical_to_serial() {
+    // the scoped-thread worker fan-out must be invisible to the
+    // numbers: same loss, same grad-norm, same amax history (and thus
+    // scales), same parameters as the inline serial schedule.
+    let rt = runtime();
+    let mut cfg = tiny_cfg("fp8_full");
+    cfg.dp_workers = 4;
+    cfg.grad_accum = 2;
+    let mut par = Trainer::new(rt.clone(), cfg.clone()).unwrap();
+    let mut ser = Trainer::new(rt, cfg).unwrap();
+    ser.force_serial_workers = true;
+    for _ in 0..3 {
+        let a = par.step().unwrap();
+        let b = ser.step().unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss must be bit-identical");
+        assert_eq!(
+            a.grad_norm.to_bits(),
+            b.grad_norm.to_bits(),
+            "grad-norm must be bit-identical"
+        );
+        for (ma, mb) in a.monitor.iter().zip(&b.monitor) {
+            for k in 0..3 {
+                assert_eq!(ma[k].to_bits(), mb[k].to_bits(), "monitor must match");
+            }
+        }
+    }
+    assert_eq!(par.scale_mgr.scales(), ser.scale_mgr.scales(), "amax/scale history");
+    for (ta, tb) in par.params.tensors.iter().zip(&ser.params.tensors) {
+        assert_eq!(ta.f32s(), tb.f32s(), "parameter state must be bit-identical");
+    }
+    assert_eq!(par.m_flat, ser.m_flat, "first moment");
+    assert_eq!(par.v_flat, ser.v_flat, "second moment");
+}
+
+#[test]
 fn probe_artifact_exposes_preactivations() {
     let rt = runtime();
     let art = rt.load("probe_s1m_l0").unwrap();
