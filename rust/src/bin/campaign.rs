@@ -1,0 +1,227 @@
+//! `campaign` — the long-horizon training campaign CLI.
+//!
+//! ```text
+//! campaign run     [--dir D] [--config FILE] [key=value ...]
+//! campaign resume  [--dir D] [--config FILE] [key=value ...]
+//! campaign status  [--dir D]
+//! campaign inspect <snapshot.ckpt>
+//! ```
+//!
+//! `run` starts a fresh campaign (snapshots + journal under `--dir`,
+//! default `<out_dir>/campaign`); `resume` continues from the newest
+//! snapshot bit-exactly; `status` summarizes the journal and snapshot
+//! inventory without touching the runtime; `inspect` dumps one
+//! snapshot's metadata and tensor table.
+//!
+//! Extra campaign-only key: `inject_divergence_at=N` (run/resume)
+//! forces one divergence trip at step N — the §Campaigns recovery
+//! drill (see rust/EXPERIMENTS.md).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use fp8_trainer::campaign::{self, journal, store, Campaign};
+use fp8_trainer::checkpoint::Checkpoint;
+use fp8_trainer::config::TrainConfig;
+use fp8_trainer::runtime::Runtime;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("FP8_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+}
+
+struct Args {
+    dir: Option<PathBuf>,
+    config: Option<PathBuf>,
+    overrides: Vec<(String, String)>,
+    inject_divergence_at: Option<usize>,
+    stop_after: Option<usize>,
+}
+
+fn parse_args(args: &[String]) -> Result<Args> {
+    let mut out = Args {
+        dir: None,
+        config: None,
+        overrides: Vec::new(),
+        inject_divergence_at: None,
+        stop_after: None,
+    };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--dir" => {
+                out.dir = Some(PathBuf::from(
+                    args.get(i + 1).ok_or_else(|| anyhow!("--dir needs a path"))?,
+                ));
+                i += 2;
+            }
+            "--config" => {
+                out.config = Some(PathBuf::from(
+                    args.get(i + 1).ok_or_else(|| anyhow!("--config needs a path"))?,
+                ));
+                i += 2;
+            }
+            // GNU equals forms — must match before the generic key=value
+            // arm or they'd surface as "unknown config key '--dir'"
+            flag if flag.starts_with("--dir=") => {
+                out.dir = Some(PathBuf::from(&flag["--dir=".len()..]));
+                i += 1;
+            }
+            flag if flag.starts_with("--config=") => {
+                out.config = Some(PathBuf::from(&flag["--config=".len()..]));
+                i += 1;
+            }
+            kv if kv.contains('=') => {
+                let (k, v) = kv.split_once('=').unwrap();
+                if k == "inject_divergence_at" {
+                    out.inject_divergence_at =
+                        Some(v.parse().map_err(|_| anyhow!("inject_divergence_at needs a step"))?);
+                } else if k == "stop_after" {
+                    out.stop_after =
+                        Some(v.parse().map_err(|_| anyhow!("stop_after needs a step"))?);
+                } else {
+                    out.overrides.push((k.to_string(), v.to_string()));
+                }
+                i += 1;
+            }
+            other => return Err(anyhow!("unexpected argument '{other}'")),
+        }
+    }
+    Ok(out)
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "run" | "resume" => {
+            let a = parse_args(&argv[1..])?;
+            let cfg = TrainConfig::load(a.config.as_deref(), &a.overrides).map_err(|e| anyhow!(e))?;
+            let dir = a.dir.clone().unwrap_or_else(|| campaign::default_dir(&cfg));
+            let rt = Arc::new(Runtime::new(artifacts_dir())?);
+            let mut c = if cmd == "run" {
+                Campaign::new(rt, cfg, &dir)?
+            } else {
+                Campaign::resume(rt, cfg, &dir)?
+            };
+            c.inject_divergence_at = a.inject_divergence_at;
+            c.stop_after = a.stop_after;
+            println!(
+                "campaign {} in {} — {} / {} to step {}",
+                cmd,
+                dir.display(),
+                c.trainer.cfg.size,
+                c.trainer.cfg.recipe,
+                c.trainer.cfg.steps
+            );
+            let report = c.run()?;
+            let outcome = if report.completed {
+                "completed"
+            } else if report.paused {
+                "paused (resumable — rerun with `campaign resume`)"
+            } else {
+                "ABORTED (recovery budget spent)"
+            };
+            println!(
+                "{}: step {} | final loss {:.4} | {} recoveries | {} snapshots",
+                outcome, report.final_step, report.final_loss, report.recoveries, report.snapshots
+            );
+            if !report.completed && !report.paused {
+                // release <dir>/LOCK first: process::exit runs no
+                // destructors, and an aborted campaign must stay
+                // resumable without manual lock cleanup
+                drop(c);
+                std::process::exit(2);
+            }
+            Ok(())
+        }
+        "status" => {
+            // honor the same config/overrides as run/resume so the
+            // derived default dir points at the operator's campaign
+            let a = parse_args(&argv[1..])?;
+            let dir = match a.dir {
+                Some(d) => d,
+                None => {
+                    let cfg = TrainConfig::load(a.config.as_deref(), &a.overrides)
+                        .map_err(|e| anyhow!(e))?;
+                    campaign::default_dir(&cfg)
+                }
+            };
+            cmd_status(&dir)
+        }
+        "inspect" => {
+            let path = argv.get(1).ok_or_else(|| anyhow!("inspect needs a snapshot path"))?;
+            cmd_inspect(PathBuf::from(path))
+        }
+        _ => {
+            println!(
+                "campaign — long-horizon FP8 training with bit-exact resume and\n\
+                 divergence auto-recovery\n\n\
+                 usage:\n  campaign run     [--dir D] [--config FILE] [key=value ...]\n  \
+                 campaign resume  [--dir D] [--config FILE] [key=value ...]\n  \
+                 campaign status  [--dir D]\n  campaign inspect <snapshot.ckpt>\n\n\
+                 campaign keys: snapshot_every=50 snapshot_keep=3 max_recoveries=4\n               \
+                 recovery_margin_backoff=1 recovery_history_shrink=0.5\n\
+                 session keys:  stop_after=N (pause + snapshot at step N, resumable)\n\
+                 drill key:     inject_divergence_at=N\n\
+                 train keys:    as `fp8-train train` (size=, recipe=, steps=, ...)"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_status(dir: &std::path::Path) -> Result<()> {
+    let journal_path = dir.join("journal.jsonl");
+    let snaps = store::list_snapshots(dir.join("snapshots"))?;
+    println!("campaign dir: {}", dir.display());
+    if snaps.is_empty() {
+        println!("snapshots: none");
+    } else {
+        println!("snapshots ({}):", snaps.len());
+        for (step, path) in &snaps {
+            let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+            println!("  step {:8}  {:.1} MiB  {}", step, bytes as f64 / 1048576.0, path.display());
+        }
+    }
+    if !journal_path.is_file() {
+        println!("journal: none");
+        return Ok(());
+    }
+    let events = journal::read(&journal_path)?;
+    println!(
+        "journal: {} events ({} snapshots, {} divergences, {} recoveries)",
+        events.len(),
+        journal::count(&events, "snapshot"),
+        journal::count(&events, "divergence"),
+        journal::count(&events, "recovery"),
+    );
+    for kind in ["divergence", "recovery", "abort", "complete"] {
+        if let Some(e) = journal::last(&events, kind) {
+            println!("  last {kind}: {}", e.to_string());
+        }
+    }
+    if let Some(e) = events.last() {
+        println!("  tail: {}", e.to_string());
+    }
+    Ok(())
+}
+
+fn cmd_inspect(path: PathBuf) -> Result<()> {
+    let c = Checkpoint::load(&path)?;
+    println!("{} ({:.1} MiB)", path.display(), c.file_bytes as f64 / 1048576.0);
+    println!("meta: {}", c.meta.to_string());
+    println!("{:32} {:>10} {:>10}", "tensor", "dtype", "elems");
+    for (name, (dtype, data)) in &c.tensors {
+        println!("{:32} {:>10} {:>10}", name, format!("{dtype:?}"), data.len());
+    }
+    Ok(())
+}

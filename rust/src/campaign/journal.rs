@@ -1,0 +1,202 @@
+//! The campaign journal: an append-only, machine-readable JSONL log
+//! of every operationally significant event (snapshots, divergence
+//! trips, rollbacks, recoveries, completion).
+//!
+//! One JSON object per line, always carrying `event`, `step`, and
+//! `unix_ms`; event-specific fields ride alongside. Append-only means
+//! a resumed campaign extends the same file — the journal is the
+//! single chronological record of the whole campaign across process
+//! restarts, which is what the `status` CLI subcommand and the
+//! §Campaigns analysis read.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::metrics::JsonlSink;
+use crate::util::json::Json;
+
+/// Append-only writer for one campaign's journal file.
+pub struct Journal {
+    sink: JsonlSink,
+    path: PathBuf,
+}
+
+impl Journal {
+    /// Open (creating or appending to) the journal at `path`.
+    ///
+    /// If a previous process crashed mid-flush, the file ends in a
+    /// torn line with no newline; a plain append would glue the next
+    /// event onto that fragment and corrupt *two* records. Open
+    /// repairs this by terminating an unterminated tail first, so the
+    /// tear stays confined to the one line being written at crash
+    /// time (which [`read`] then skips).
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        repair_torn_tail(&path)?;
+        let sink = JsonlSink::create(&path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        Ok(Self { sink, path })
+    }
+
+    /// The journal file location.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one event. `fields` are event-specific extras; `event`,
+    /// `step`, and a wall-clock `unix_ms` stamp are always present.
+    pub fn record(&mut self, event: &str, step: usize, fields: Vec<(&str, Json)>) -> Result<()> {
+        let unix_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as f64)
+            .unwrap_or(0.0);
+        let mut all = vec![
+            ("event", Json::Str(event.to_string())),
+            ("step", Json::Num(step as f64)),
+            ("unix_ms", Json::Num(unix_ms)),
+        ];
+        all.extend(fields);
+        self.sink.record(all)?;
+        Ok(())
+    }
+
+    /// Flush buffered lines to disk (call after every event that a
+    /// crash must not lose — the campaign driver flushes on snapshot
+    /// and recovery boundaries).
+    pub fn flush(&mut self) -> Result<()> {
+        self.sink.flush()?;
+        Ok(())
+    }
+}
+
+/// Terminate an unterminated final line (crash tear) so appends can
+/// never glue onto a fragment. No-op on a missing/empty/clean file.
+fn repair_torn_tail(path: &Path) -> Result<()> {
+    use std::io::{Read as _, Seek as _, SeekFrom, Write as _};
+    let needs_newline = match std::fs::File::open(path) {
+        Ok(mut f) => {
+            let len = f.metadata().map(|m| m.len()).unwrap_or(0);
+            if len == 0 {
+                false
+            } else {
+                let mut b = [0u8; 1];
+                f.seek(SeekFrom::End(-1)).is_ok()
+                    && f.read_exact(&mut b).is_ok()
+                    && b[0] != b'\n'
+            }
+        }
+        Err(_) => false, // no file yet
+    };
+    if needs_newline {
+        std::fs::OpenOptions::new()
+            .append(true)
+            .open(path)
+            .and_then(|mut f| f.write_all(b"\n"))
+            .with_context(|| format!("repairing torn journal tail {}", path.display()))?;
+    }
+    Ok(())
+}
+
+/// Parse a journal file back into its event objects, in order.
+///
+/// Unparseable lines are skipped rather than erroring: the journal is
+/// written one line per event with [`Journal::open`] repairing torn
+/// tails, so a malformed line can only be the fragment of a line
+/// that was being written when a process died — and `status` must
+/// stay usable after the very crashes the campaign layer exists to
+/// survive. All intact events around a tear are returned.
+pub fn read<P: AsRef<Path>>(path: P) -> Result<Vec<Json>> {
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading journal {}", path.as_ref().display()))?;
+    Ok(text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .filter_map(|l| Json::parse(l).ok())
+        .collect())
+}
+
+/// Count events of one kind (`"snapshot"`, `"recovery"`, …) in a
+/// parsed journal.
+pub fn count(events: &[Json], kind: &str) -> usize {
+    events
+        .iter()
+        .filter(|e| e.get("event").and_then(|v| v.as_str()) == Some(kind))
+        .count()
+}
+
+/// The last event of one kind, if any.
+pub fn last<'a>(events: &'a [Json], kind: &str) -> Option<&'a Json> {
+    events
+        .iter()
+        .rev()
+        .find(|e| e.get("event").and_then(|v| v.as_str()) == Some(kind))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_counts() {
+        let dir = std::env::temp_dir().join("fp8_campaign_journal_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("journal.jsonl");
+        {
+            let mut j = Journal::open(&path).unwrap();
+            j.record("campaign_start", 0, vec![]).unwrap();
+            j.record("snapshot", 10, vec![("reason", Json::Str("periodic".into()))]).unwrap();
+            j.record("divergence", 17, vec![("injected", Json::Bool(true))]).unwrap();
+            j.record("recovery", 10, vec![("attempt", Json::Num(1.0))]).unwrap();
+            j.record("snapshot", 20, vec![("reason", Json::Str("final".into()))]).unwrap();
+            j.flush().unwrap();
+        }
+        // append-only across reopen (the resume case)
+        {
+            let mut j = Journal::open(&path).unwrap();
+            j.record("complete", 20, vec![]).unwrap();
+            j.flush().unwrap();
+        }
+        let events = read(&path).unwrap();
+        assert_eq!(events.len(), 6);
+        assert_eq!(count(&events, "snapshot"), 2);
+        assert_eq!(count(&events, "recovery"), 1);
+        let lastsnap = last(&events, "snapshot").unwrap();
+        assert_eq!(lastsnap.usize_of("step").unwrap(), 20);
+        assert_eq!(lastsnap.str_of("reason").unwrap(), "final");
+        assert!(events.iter().all(|e| e.get("unix_ms").is_some()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_repaired_and_skipped() {
+        let dir = std::env::temp_dir().join("fp8_campaign_journal_torn");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("journal.jsonl");
+        {
+            let mut j = Journal::open(&path).unwrap();
+            j.record("campaign_start", 0, vec![]).unwrap();
+            j.record("snapshot", 5, vec![]).unwrap();
+            j.flush().unwrap();
+        }
+        // simulate a crash mid-flush: a torn, newline-less final line
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"event\":\"snapsh").unwrap();
+        }
+        // status stays usable: intact events readable, tear skipped
+        let events = read(&path).unwrap();
+        assert_eq!(events.len(), 2);
+        // reopen (resume path) must not glue onto the fragment
+        {
+            let mut j = Journal::open(&path).unwrap();
+            j.record("resume", 5, vec![]).unwrap();
+            j.flush().unwrap();
+        }
+        let events = read(&path).unwrap();
+        assert_eq!(events.len(), 3, "post-crash append must be its own intact line");
+        assert_eq!(count(&events, "resume"), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,475 @@
+#![warn(missing_docs)]
+//! Long-horizon training campaigns: checkpoint/resume with bit-exact
+//! restarts plus divergence auto-recovery.
+//!
+//! The paper's instabilities only surface over *prolonged* runs —
+//! SwiGLU outlier amplification needs hundreds of billions of tokens
+//! to emerge — so the operational unit this module models is not a
+//! single uninterrupted [`Trainer`] session but a **campaign**: a run
+//! that survives process restarts (stop at step N, resume, and the
+//! loss curve continues bit-for-bit as if never stopped) and survives
+//! divergence trips (roll back to the last good snapshot, re-enter
+//! with a perturbed scaling policy, log everything).
+//!
+//! Pieces:
+//! * [`snapshot`] — the full-training-state snapshot ([`TrainState`]):
+//!   params, FP8 Adam moments (chunked exact-FP8 checkpoint sections),
+//!   delayed-scaling amax rings, detector EMA, LR-schedule position,
+//!   data cursor. Save → load → apply reproduces every bit.
+//! * [`store`] — on-disk snapshot directory with keep-last-K
+//!   retention.
+//! * [`journal`] — append-only machine-readable JSONL campaign journal
+//!   (snapshots, divergences, rollbacks, recoveries, completion).
+//! * [`recovery`] — the backoff policy: per recovery attempt, more
+//!   pow2 scale margin and a shorter amax history.
+//! * [`Campaign`] — the driver tying it together, used by the
+//!   `campaign` CLI binary (`run / resume / status / inspect`).
+//!
+//! Operator docs: `rust/EXPERIMENTS.md` §Campaigns describes the
+//! bit-exact-resume methodology and the divergence-injection recovery
+//! drill; `rust/ARCHITECTURE.md` places this layer in the system.
+
+pub mod journal;
+pub mod recovery;
+pub mod snapshot;
+pub mod store;
+
+pub use journal::Journal;
+pub use recovery::RecoveryPolicy;
+pub use snapshot::{SnapshotMeta, TrainState};
+pub use store::SnapshotStore;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::Trainer;
+use crate::runtime::Runtime;
+use crate::scaling::Policy;
+use crate::util::json::Json;
+
+/// What a finished (or aborted) campaign reports back.
+#[derive(Clone, Debug)]
+pub struct CampaignReport {
+    /// true if the run reached `cfg.steps`; false on an orderly pause
+    /// (`stop_after`) or on recovery-budget exhaustion — the journal's
+    /// last `pause`/`abort` event has the detail
+    pub completed: bool,
+    /// true if the exit was an orderly `stop_after` pause (resumable,
+    /// not a failure); `!completed && !paused` means aborted
+    pub paused: bool,
+    /// step counter at exit (== `cfg.steps` when completed)
+    pub final_step: usize,
+    /// divergence recoveries consumed across the campaign
+    pub recoveries: usize,
+    /// loss of the last executed step (NaN if no step ran)
+    pub final_loss: f32,
+    /// executed steps' (step, loss) in execution order — steps
+    /// replayed after a rollback appear again, which is the honest
+    /// record of what actually ran. Bounded to the most recent
+    /// [`LOSS_RECORD_CAP`] entries so a multi-week campaign's memory
+    /// stays flat; the journal + metrics sink are the durable
+    /// full-history record
+    pub losses: Vec<(usize, f32)>,
+    /// snapshots written (entry + periodic + recovery + pause/final)
+    pub snapshots: usize,
+}
+
+/// A resumable, self-healing long-horizon training run.
+///
+/// Construction either starts fresh ([`Campaign::new`]) or resumes
+/// from the newest snapshot in the campaign directory
+/// ([`Campaign::resume`]); [`Campaign::run`] then drives the trainer
+/// to `cfg.steps`, snapshotting on the configured cadence and
+/// auto-recovering from divergence trips until the recovery budget
+/// (`cfg.max_recoveries`) is spent.
+pub struct Campaign {
+    /// the underlying trainer (public for tests and probes; mutating
+    /// its state mid-campaign voids the bit-exactness contract)
+    pub trainer: Trainer,
+    /// test/drill hook: treat this step's outcome as a divergence trip
+    /// exactly once, even if the detector stayed healthy (the
+    /// §Campaigns recovery drill; campaign state, so it does not
+    /// replay after the rollback it triggers)
+    pub inject_divergence_at: Option<usize>,
+    /// session step bound: pause (snapshot + `pause` journal event +
+    /// orderly `completed: false` return) once the step counter
+    /// reaches this, leaving the campaign resumable — the clean way to
+    /// fit a long campaign into bounded sessions, and how the
+    /// kill-at-step-N resume drill stops deterministically
+    pub stop_after: Option<usize>,
+    store: SnapshotStore,
+    journal: Journal,
+    recovery: RecoveryPolicy,
+    /// exclusive lock on the campaign dir; released on drop
+    _lock: DirLock,
+    /// scaling policy the run started under — recovery backoff is
+    /// always computed relative to this, not compounded
+    base_policy: Policy,
+    recoveries: usize,
+    injected: bool,
+    snapshots_written: usize,
+}
+
+impl Campaign {
+    /// Start a fresh campaign in `dir` (creating `dir/snapshots/` and
+    /// `dir/journal.jsonl`).
+    ///
+    /// Refuses a directory that already holds snapshots: starting
+    /// fresh there would interleave two campaigns in one journal and,
+    /// worse, leave the old campaign's snapshots as rollback/resume
+    /// targets for the new one. Use [`Campaign::resume`] to continue
+    /// the existing campaign, or point `--dir` somewhere clean.
+    pub fn new<P: AsRef<Path>>(rt: Arc<Runtime>, cfg: TrainConfig, dir: P) -> Result<Self> {
+        let dir = dir.as_ref();
+        // lock FIRST so the stale-dir checks can't race another
+        // process finishing a campaign here (a refusal drops the lock
+        // again); then the cheap refusals, before the expensive
+        // trainer build
+        let lock = Self::prepare(dir)?;
+        if let Some((step, path)) = store::list_snapshots(dir.join("snapshots"))?.pop() {
+            return Err(anyhow!(
+                "campaign dir {} already holds snapshots (newest: step {step} at {}) — \
+                 use `campaign resume` to continue it, or choose a fresh --dir \
+                 (or delete the old campaign) to start over",
+                dir.display(),
+                path.display()
+            ));
+        }
+        let journal_path = dir.join("journal.jsonl");
+        if std::fs::metadata(&journal_path).map_or(false, |m| m.len() > 0) {
+            return Err(anyhow!(
+                "campaign dir {} already holds a journal (a previous run started here, \
+                 even if it never snapshotted) — the journal is one campaign's single \
+                 chronological record; choose a fresh --dir or delete the old campaign",
+                dir.display()
+            ));
+        }
+        let mut c = Self::build(rt, cfg, dir, lock)?;
+        c.journal.record(
+            "campaign_start",
+            c.trainer.step,
+            vec![("config", c.trainer.cfg.to_json())],
+        )?;
+        Ok(c)
+    }
+
+    /// Resume a campaign from the newest snapshot in `dir`.
+    ///
+    /// The config must match the one the snapshot was taken under
+    /// (recipe, size, seed, worker topology, schedule length — see
+    /// [`TrainState::apply_to`]); the restored trainer then continues
+    /// the original loss curve bit-exactly.
+    pub fn resume<P: AsRef<Path>>(rt: Arc<Runtime>, cfg: TrainConfig, dir: P) -> Result<Self> {
+        let dir = dir.as_ref();
+        let lock = Self::prepare(dir)?;
+        let mut c = Self::build(rt, cfg, dir, lock)?;
+        let (step, path, st) = c.newest_loadable()?.ok_or_else(|| {
+            anyhow!(
+                "no loadable snapshot to resume from in {} — if the campaign died before \
+                 its first snapshot (or every snapshot is quarantined as .corrupt), there \
+                 is nothing to continue: delete the campaign dir and start a fresh run",
+                c.store.dir().display()
+            )
+        })?;
+        st.apply_to(&mut c.trainer)?;
+        if c.trainer.step >= c.trainer.cfg.steps {
+            return Err(anyhow!(
+                "campaign in {} is already complete (snapshot at step {} of {}) — nothing \
+                 to resume; inspect it with `campaign status`, or start a new campaign in \
+                 a fresh --dir",
+                c.store.dir().display(),
+                c.trainer.step,
+                c.trainer.cfg.steps
+            ));
+        }
+        c.recoveries = st.meta.recoveries;
+        c.journal.record(
+            "resume",
+            c.trainer.step,
+            vec![
+                ("snapshot_step", Json::Num(step as f64)),
+                ("snapshot", Json::Str(path.display().to_string())),
+                ("recoveries", Json::Num(c.recoveries as f64)),
+            ],
+        )?;
+        Ok(c)
+    }
+
+    /// Create the campaign dir and take its exclusive lock — the first
+    /// thing both entry points do, before any state inspection.
+    fn prepare(dir: &Path) -> Result<DirLock> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow!("creating campaign dir {}: {e}", dir.display()))?;
+        DirLock::acquire(dir)
+    }
+
+    fn build(rt: Arc<Runtime>, cfg: TrainConfig, dir: &Path, lock: DirLock) -> Result<Self> {
+        let store = SnapshotStore::new(dir.join("snapshots"), cfg.snapshot_keep)?;
+        let journal = Journal::open(dir.join("journal.jsonl"))?;
+        let recovery = RecoveryPolicy::from_cfg(&cfg);
+        let trainer = Trainer::new(rt, cfg)?;
+        let base_policy = trainer.scale_mgr.policy();
+        Ok(Self {
+            trainer,
+            inject_divergence_at: None,
+            stop_after: None,
+            store,
+            journal,
+            recovery,
+            _lock: lock,
+            base_policy,
+            recoveries: 0,
+            injected: false,
+            snapshots_written: 0,
+        })
+    }
+
+    /// Divergence recoveries consumed so far.
+    pub fn recoveries(&self) -> usize {
+        self.recoveries
+    }
+
+    /// The campaign's snapshot store (status/inspect tooling).
+    pub fn store(&self) -> &SnapshotStore {
+        &self.store
+    }
+
+    /// Drive the trainer to `cfg.steps`, snapshotting and
+    /// auto-recovering along the way. Returns the campaign report;
+    /// `Err` is reserved for infrastructure failures (artifact
+    /// execution, I/O) — a divergence that exhausts the recovery
+    /// budget is an orderly `completed: false` report, not an error.
+    pub fn run(&mut self) -> Result<CampaignReport> {
+        let total = self.trainer.cfg.steps;
+        // mandatory entry snapshot: the rollback target always exists,
+        // and a campaign killed before its first periodic snapshot can
+        // still resume
+        self.snapshot("entry", f32::NAN)?;
+        let mut losses: Vec<(usize, f32)> = Vec::new();
+        while self.trainer.step < total {
+            if self.stop_after.is_some_and(|s| self.trainer.step >= s) {
+                let last = losses.last().map(|&(_, l)| l).unwrap_or(f32::NAN);
+                self.snapshot("pause", last)?;
+                self.journal.record(
+                    "pause",
+                    self.trainer.step,
+                    vec![("stop_after", Json::Num(self.stop_after.unwrap() as f64))],
+                )?;
+                self.journal.flush()?;
+                return Ok(self.report(false, true, losses));
+            }
+            let o = self.trainer.step()?;
+            losses.push((o.step, o.loss));
+            // amortized tail bound: drain in bulk, not per step
+            if losses.len() > 2 * LOSS_RECORD_CAP {
+                losses.drain(..losses.len() - LOSS_RECORD_CAP);
+            }
+            let injected = self.inject_divergence_at == Some(o.step) && !self.injected;
+            if injected {
+                self.injected = true;
+            }
+            if self.trainer.detector.has_diverged() || injected {
+                self.journal.record(
+                    "divergence",
+                    o.step,
+                    vec![
+                        ("loss", Json::Num(o.loss as f64)),
+                        ("verdict", Json::Str(format!("{:?}", o.verdict))),
+                        ("injected", Json::Bool(injected)),
+                        ("overflow_events", Json::Num(self.trainer.scale_mgr.overflow_events as f64)),
+                    ],
+                )?;
+                if self.recoveries >= self.recovery.max_recoveries {
+                    self.journal.record(
+                        "abort",
+                        o.step,
+                        vec![(
+                            "reason",
+                            Json::Str(format!(
+                                "recovery budget exhausted ({} used)",
+                                self.recoveries
+                            )),
+                        )],
+                    )?;
+                    self.journal.flush()?;
+                    return Ok(self.report(false, false, losses));
+                }
+                self.rollback_and_perturb()?;
+                continue;
+            }
+            if self.trainer.cfg.snapshot_every > 0
+                && (o.step + 1) % self.trainer.cfg.snapshot_every == 0
+                && self.trainer.step < total
+            {
+                self.snapshot("periodic", o.loss)?;
+            }
+        }
+        let final_loss = losses.last().map(|&(_, l)| l).unwrap_or(f32::NAN);
+        self.snapshot("final", final_loss)?;
+        self.journal.record(
+            "complete",
+            self.trainer.step,
+            vec![
+                ("final_loss", Json::Num(final_loss as f64)),
+                ("recoveries", Json::Num(self.recoveries as f64)),
+            ],
+        )?;
+        self.journal.flush()?;
+        Ok(self.report(true, false, losses))
+    }
+
+    fn report(&self, completed: bool, paused: bool, mut losses: Vec<(usize, f32)>) -> CampaignReport {
+        // the in-loop drain is amortized (bounds at 2x); enforce the
+        // documented cap exactly at the reporting boundary
+        if losses.len() > LOSS_RECORD_CAP {
+            losses.drain(..losses.len() - LOSS_RECORD_CAP);
+        }
+        CampaignReport {
+            completed,
+            paused,
+            final_step: self.trainer.step,
+            recoveries: self.recoveries,
+            final_loss: losses.last().map(|&(_, l)| l).unwrap_or(f32::NAN),
+            losses,
+            snapshots: self.snapshots_written,
+        }
+    }
+
+    /// Write a snapshot of the current trainer state and journal it.
+    fn snapshot(&mut self, reason: &str, loss: f32) -> Result<()> {
+        let st = TrainState::capture(&self.trainer, self.recoveries);
+        let (path, bytes) = self.store.save(&st)?;
+        self.snapshots_written += 1;
+        self.journal.record(
+            "snapshot",
+            self.trainer.step,
+            vec![
+                ("reason", Json::Str(reason.into())),
+                ("path", Json::Str(path.display().to_string())),
+                ("bytes", Json::Num(bytes as f64)),
+                ("loss", Json::Num(loss as f64)),
+            ],
+        )?;
+        self.journal.flush()?;
+        Ok(())
+    }
+
+    /// Newest snapshot that actually loads, skipping (and journaling)
+    /// any damaged file on the way down — defense in depth on top of
+    /// the atomic `Writer::finish` rename.
+    fn newest_loadable(&mut self) -> Result<Option<(usize, PathBuf, TrainState)>> {
+        let mut all = self.store.list()?;
+        while let Some((step, path)) = all.pop() {
+            match TrainState::load(&path) {
+                Ok(st) => return Ok(Some((step, path, st))),
+                Err(e) => {
+                    // quarantine: move the damaged file aside so it
+                    // stops occupying a retention slot and isn't
+                    // re-tried (and re-journaled) on every subsequent
+                    // rollback/resume; the bytes stay on disk for a
+                    // post-mortem
+                    let aside = path.with_extension("corrupt");
+                    let quarantined = std::fs::rename(&path, &aside).is_ok();
+                    self.journal.record(
+                        "snapshot_corrupt",
+                        step,
+                        vec![
+                            ("path", Json::Str(path.display().to_string())),
+                            ("error", Json::Str(format!("{e:#}"))),
+                            ("quarantined", Json::Bool(quarantined)),
+                        ],
+                    )?;
+                    self.journal.flush()?;
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    /// Roll back to the newest good snapshot and re-enter with the
+    /// next backoff level's scaling policy.
+    fn rollback_and_perturb(&mut self) -> Result<()> {
+        let (step, _path, st) = self
+            .newest_loadable()?
+            .ok_or_else(|| anyhow!("divergence with no loadable snapshot to roll back to"))?;
+        st.apply_to(&mut self.trainer)?;
+        self.recoveries += 1;
+        let pol = self.recovery.scaling_policy(self.base_policy, self.recoveries);
+        self.trainer.scale_mgr.reconfigure(pol);
+        // re-baseline the cumulative overflow counter: the detector
+        // trips on `overflow_events > overflow_limit` over the whole
+        // run, so restoring the snapshot's count would leave each
+        // recovery less headroom than the last until overflow-storm
+        // recoveries become futile. A rollback is a deliberate
+        // intervention (the policy changed), not a bit-exact replay —
+        // fresh policy, fresh overflow budget.
+        self.trainer.scale_mgr.overflow_events = 0;
+        self.journal.record(
+            "recovery",
+            step,
+            vec![
+                ("rolled_back_to", Json::Num(step as f64)),
+                ("attempt", Json::Num(self.recoveries as f64)),
+                ("margin_pow2", Json::Num(pol.margin_pow2 as f64)),
+                ("amax_history", Json::Num(pol.history_len as f64)),
+            ],
+        )?;
+        self.journal.flush()?;
+        // persist the recovered state immediately: the snapshot at the
+        // rollback step now carries the incremented recovery count and
+        // the perturbed policy, so a crash before the next periodic
+        // snapshot cannot forget the consumed budget and replay the
+        // divergence under the old policy
+        self.snapshot("recovery", f32::NAN)?;
+        Ok(())
+    }
+}
+
+/// In-memory cap on [`CampaignReport::losses`] — enough for any drill
+/// or test to see the full record, flat memory for multi-week runs.
+pub const LOSS_RECORD_CAP: usize = 65_536;
+
+/// Default campaign directory for a config (`<out_dir>/campaign`).
+pub fn default_dir(cfg: &TrainConfig) -> PathBuf {
+    PathBuf::from(&cfg.out_dir).join("campaign")
+}
+
+/// Exclusive advisory lock on a campaign directory (`<dir>/LOCK`,
+/// created with `create_new` = `O_EXCL`). Two processes driving one
+/// campaign would interleave journal events, prune each other's
+/// snapshots, and — worst — write the same `snap_*.tmp` path
+/// concurrently, publishing a corrupt file through the atomic rename.
+/// The lock file holds the owner's PID; it is removed on drop. After
+/// a hard crash the stale file must be deleted by the operator — the
+/// error message says so.
+struct DirLock {
+    path: PathBuf,
+}
+
+impl DirLock {
+    fn acquire(dir: &Path) -> Result<Self> {
+        let path = dir.join("LOCK");
+        match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+            Ok(mut f) => {
+                use std::io::Write as _;
+                let _ = writeln!(f, "{}", std::process::id());
+                Ok(Self { path })
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Err(anyhow!(
+                "campaign dir is locked by another process ({} exists, owner pid inside) — \
+                 if that process crashed, delete the file and retry",
+                path.display()
+            )),
+            Err(e) => Err(anyhow!("acquiring campaign lock {}: {e}", path.display())),
+        }
+    }
+}
+
+impl Drop for DirLock {
+    fn drop(&mut self) {
+        std::fs::remove_file(&self.path).ok();
+    }
+}

@@ -1,0 +1,104 @@
+//! Divergence-recovery backoff: what "re-enter with a perturbed
+//! scaling policy" concretely means.
+//!
+//! The delayed-scaling failure mode is a fresh amax spike quantized
+//! with a scale chosen from the pre-spike history. Two knobs attack
+//! exactly that after a rollback:
+//!
+//! * **scale backoff** — `margin_pow2` grows by
+//!   `margin_backoff × attempt`, leaving more headroom below the
+//!   format max so the replayed spike saturates instead of
+//!   overflowing (the paper's FP8(2)-style mitigation direction);
+//! * **shorter amax history** — the window shrinks geometrically
+//!   (`history_shrink ^ attempt`, floored at 2), so stale pre-spike
+//!   amaxes stop dictating the scale sooner.
+//!
+//! Backoff is always computed from the *base* policy the campaign
+//! started under — attempts don't compound on each other, so attempt
+//! k is deterministic regardless of the rollback history that led to
+//! it.
+
+use crate::config::TrainConfig;
+use crate::scaling::Policy;
+
+/// The campaign's recovery budget and backoff shape (built from the
+/// `campaign.*` config keys).
+#[derive(Clone, Copy, Debug)]
+pub struct RecoveryPolicy {
+    /// give up (orderly abort, not an error) after this many rollbacks
+    pub max_recoveries: usize,
+    /// pow2 margin added per attempt (scale backoff)
+    pub margin_backoff: i32,
+    /// geometric amax-window shrink per attempt, in (0, 1]
+    pub history_shrink: f64,
+}
+
+impl RecoveryPolicy {
+    /// Extract the recovery knobs from a training config.
+    pub fn from_cfg(cfg: &TrainConfig) -> Self {
+        Self {
+            max_recoveries: cfg.max_recoveries,
+            margin_backoff: cfg.recovery_margin_backoff,
+            history_shrink: cfg.recovery_history_shrink,
+        }
+    }
+
+    /// The scaling policy for recovery attempt `level` (1-based),
+    /// derived from the campaign's base policy.
+    ///
+    /// Invariants: `level = 0` returns `base` unchanged; the history
+    /// length never drops below 2 (a length-1 window would degenerate
+    /// delayed scaling into just-in-time scaling and hide the
+    /// mechanism under study); the margin grows linearly in `level`.
+    pub fn scaling_policy(&self, base: Policy, level: usize) -> Policy {
+        let shrink = self.history_shrink.powi(level as i32);
+        let history_len = ((base.history_len as f64 * shrink).floor() as usize).max(2);
+        Policy {
+            history_len,
+            margin_pow2: base.margin_pow2 + self.margin_backoff * level as i32,
+            ..base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pol() -> RecoveryPolicy {
+        RecoveryPolicy { max_recoveries: 4, margin_backoff: 1, history_shrink: 0.5 }
+    }
+
+    #[test]
+    fn level_zero_is_identity() {
+        let base = Policy { history_len: 16, margin_pow2: 1, ..Default::default() };
+        let p = pol().scaling_policy(base, 0);
+        assert_eq!(p.history_len, 16);
+        assert_eq!(p.margin_pow2, 1);
+    }
+
+    #[test]
+    fn backoff_escalates_and_floors() {
+        let base = Policy { history_len: 16, margin_pow2: 0, ..Default::default() };
+        let p1 = pol().scaling_policy(base, 1);
+        let p2 = pol().scaling_policy(base, 2);
+        let p9 = pol().scaling_policy(base, 9);
+        assert_eq!(p1.history_len, 8);
+        assert_eq!(p1.margin_pow2, 1);
+        assert_eq!(p2.history_len, 4);
+        assert_eq!(p2.margin_pow2, 2);
+        assert_eq!(p9.history_len, 2, "window floors at 2");
+        assert_eq!(p9.margin_pow2, 9);
+    }
+
+    #[test]
+    fn attempts_do_not_compound() {
+        // attempt k from base must not depend on attempts < k
+        let base = Policy { history_len: 12, margin_pow2: 0, ..Default::default() };
+        let direct = pol().scaling_policy(base, 3);
+        let via = pol().scaling_policy(base, 3); // same call — determinism
+        assert_eq!(direct.history_len, via.history_len);
+        assert_eq!(direct.margin_pow2, via.margin_pow2);
+        assert_eq!(direct.history_len, ((12f64 * 0.125).floor() as usize).max(2));
+    }
+}

@@ -1,0 +1,463 @@
+//! Full-training-state snapshots — everything a bit-exact resume
+//! needs, serialized through the extended `checkpoint::` manifest.
+//!
+//! A [`TrainState`] captures:
+//! * **params** — every named parameter tensor, raw f32 (lossless);
+//! * **Adam moments** — through the chunked exact-FP8 checkpoint
+//!   sections ([`Writer::tensor_fp8_exact`]) when the recipe stores
+//!   moments in FP8: the moment values lie on per-chunk FP8 grids (the
+//!   chunked Adam artifact quantizes its outputs), so they pack at ~1
+//!   byte/element *and* restore bit-exactly; recipes with f32 moments
+//!   store raw f32;
+//! * **delayed-scaling state** — per-site amax ring buffers (in push
+//!   order), current scales, and the overflow counter;
+//! * **divergence-detector state** — the loss EMA (bit-exact), warmed
+//!   flag, and latch;
+//! * **positions** — the step counter (which is also the LR-schedule
+//!   position and, because the data pipeline is stateless, the entire
+//!   data-corpus PRNG cursor together with the recorded corpus seed);
+//! * **identity** — recipe/size/seed/topology/schedule config, checked
+//!   on [`TrainState::apply_to`] so a resume under a different config
+//!   fails loudly instead of silently forking the curve.
+//!
+//! Contract (pinned by `rust/tests/campaign.rs`): `capture` → `save`
+//! → `load` → `apply_to` onto a fresh trainer reproduces the
+//! uninterrupted run's loss curve bit-for-bit.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::checkpoint::{Checkpoint, Dtype, Writer};
+use crate::coordinator::{DetectorState, Trainer};
+use crate::fp8::{Fp8Format, E4M3, E5M2};
+use crate::scaling::{Policy, ScaleState};
+use crate::util::json::{obj, Json};
+
+/// Fallback chunk size for exact-FP8 moment sections, used only when
+/// a snapshot's metadata lacks a recorded `moment_chunk` (or when a
+/// state is built by hand in tests). Live captures record the actual
+/// Adam artifact chunk ([`Trainer::adam_chunk`]) so storage chunks
+/// line up with the per-chunk grids the kernel produced regardless of
+/// which artifact variant is in use.
+pub const MOMENT_CHUNK: usize = 262_144;
+
+/// Snapshot format version (bumped on incompatible layout changes).
+pub const SNAPSHOT_VERSION: f64 = 1.0;
+
+/// Identity and position metadata of one snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SnapshotMeta {
+    /// step counter at capture (steps completed; also the LR-schedule
+    /// position and the data cursor's step component)
+    pub step: usize,
+    /// training recipe name (must match on resume)
+    pub recipe: String,
+    /// model size preset (must match on resume)
+    pub size: String,
+    /// run seed (must match on resume — parameter init and data
+    /// derive from it)
+    pub seed: u64,
+    /// derived corpus PRNG root — with `step`, the complete
+    /// data-corpus cursor (the batcher is stateless)
+    pub corpus_seed: u64,
+    /// data-parallel worker count (part of batch identity)
+    pub dp_workers: usize,
+    /// gradient-accumulation microbatches (part of batch identity)
+    pub grad_accum: usize,
+    /// total schedule length (the LR curve depends on it)
+    pub steps: usize,
+    /// warmup length (ditto)
+    pub warmup_steps: usize,
+    /// *effective* amax window at capture — the base config value, or
+    /// the recovery-shrunk one if a rollback re-entered with backoff
+    pub amax_history: usize,
+    /// effective pow2 scale margin at capture (see `amax_history`)
+    pub margin_pow2: i32,
+    /// divergence recoveries consumed so far in the campaign
+    pub recoveries: usize,
+    /// moment storage formats ("f32" | "e4m3" | "e5m2")
+    pub m_fmt: String,
+    /// see `m_fmt`
+    pub v_fmt: String,
+    /// chunk size of the exact-FP8 moment sections — the Adam
+    /// artifact's quantization granularity at capture time (storage
+    /// detail, not identity: apply never validates it, the sections
+    /// are self-describing)
+    pub moment_chunk: usize,
+    /// fingerprint of every remaining numerics-relevant config field
+    /// (lr/min_lr_frac/weight_decay/grad_clip as exact f32 bits,
+    /// corpus knobs, outlier seeding, non-finite-update policy, base
+    /// scaling config) — compared wholesale on apply so a resume under
+    /// any changed numeric silently forking the curve is impossible
+    pub numerics: String,
+}
+
+/// Canonical fingerprint of the config fields that influence the
+/// numbers but are not individually recorded in [`SnapshotMeta`].
+/// f32/f64 fields go in as exact bit patterns.
+pub fn numerics_fingerprint(cfg: &crate::config::TrainConfig) -> String {
+    format!(
+        "lr={:08x};minfrac={:08x};wd={:08x};clip={:08x};order={};skew={:016x};\
+         outlier={}:{:08x};skipnf={};amax={};margin={}",
+        cfg.lr.to_bits(),
+        cfg.min_lr_frac.to_bits(),
+        cfg.weight_decay.to_bits(),
+        cfg.grad_clip.to_bits(),
+        cfg.corpus_order,
+        cfg.corpus_skew.to_bits(),
+        cfg.seed_outlier_channel,
+        cfg.seed_outlier_gain.to_bits(),
+        cfg.skip_nonfinite_updates,
+        cfg.amax_history,
+        cfg.margin_pow2,
+    )
+}
+
+/// A complete, serializable training state (see the module docs).
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    /// identity + position
+    pub meta: SnapshotMeta,
+    /// named parameter tensors, manifest order, raw f32
+    pub params: Vec<(String, Vec<f32>)>,
+    /// flat first Adam moment
+    pub m: Vec<f32>,
+    /// flat second Adam moment
+    pub v: Vec<f32>,
+    /// delayed-scaling state (rings in push order)
+    pub scale: ScaleState,
+    /// divergence-detector state
+    pub detector: DetectorState,
+}
+
+fn moment_storage(fmt: &str) -> Option<Fp8Format> {
+    match fmt {
+        "e4m3" => Some(E4M3),
+        "e5m2" => Some(E5M2),
+        _ => None,
+    }
+}
+
+/// Move one section's data out of the decoded checkpoint map.
+fn take_section(
+    sections: &mut std::collections::BTreeMap<String, (Dtype, Vec<f32>)>,
+    name: &str,
+) -> Result<Vec<f32>> {
+    sections
+        .remove(name)
+        .map(|(_, d)| d)
+        .ok_or_else(|| anyhow!("checkpoint missing tensor '{name}'"))
+}
+
+impl TrainState {
+    /// Capture the trainer's complete state. `recoveries` is campaign
+    /// bookkeeping carried through the snapshot so a resumed campaign
+    /// keeps its recovery budget.
+    ///
+    /// Memory note: this copies params + both moments by value
+    /// (transiently ~2x the state footprint, plus the writer's
+    /// serialization buffer). The by-value `TrainState` is what makes
+    /// save→load→apply a closed, property-testable round trip; if
+    /// snapshot peak memory ever matters at large scale, add a
+    /// borrow-based `save_direct(&Trainer, path)` fast path beside
+    /// this rather than reshaping the type.
+    pub fn capture(t: &Trainer, recoveries: usize) -> Self {
+        let rc = t.cfg.recipe_config();
+        let policy = t.scale_mgr.policy();
+        let norm = |f: &str| if moment_storage(f).is_some() { f.to_string() } else { "f32".into() };
+        Self {
+            meta: SnapshotMeta {
+                step: t.step,
+                recipe: t.cfg.recipe.clone(),
+                size: t.cfg.size.clone(),
+                seed: t.cfg.seed,
+                corpus_seed: t.cfg.corpus_seed(),
+                dp_workers: t.cfg.dp_workers,
+                grad_accum: t.cfg.grad_accum,
+                steps: t.cfg.steps,
+                warmup_steps: t.cfg.warmup_steps,
+                amax_history: policy.history_len,
+                margin_pow2: policy.margin_pow2,
+                recoveries,
+                m_fmt: norm(&rc.m_fmt),
+                v_fmt: norm(&rc.v_fmt),
+                moment_chunk: t.adam_chunk().max(1),
+                numerics: numerics_fingerprint(&t.cfg),
+            },
+            params: t
+                .params
+                .specs
+                .iter()
+                .zip(&t.params.tensors)
+                .map(|(s, tt)| (s.name.clone(), tt.f32s().to_vec()))
+                .collect(),
+            m: t.m_flat.clone(),
+            v: t.v_flat.clone(),
+            scale: t.scale_mgr.export_state(),
+            detector: t.detector.export_state(),
+        }
+    }
+
+    /// Serialize to a checkpoint file; returns the file size in bytes.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<u64> {
+        let m = &self.meta;
+        let meta = obj(vec![
+            ("kind", Json::Str("campaign_snapshot".into())),
+            ("version", Json::Num(SNAPSHOT_VERSION)),
+            ("step", Json::Num(m.step as f64)),
+            ("recipe", Json::Str(m.recipe.clone())),
+            ("size", Json::Str(m.size.clone())),
+            // seeds are u64: stored as strings so no f64 precision cliff
+            ("seed", Json::Str(m.seed.to_string())),
+            ("corpus_seed", Json::Str(m.corpus_seed.to_string())),
+            ("dp_workers", Json::Num(m.dp_workers as f64)),
+            ("grad_accum", Json::Num(m.grad_accum as f64)),
+            ("steps", Json::Num(m.steps as f64)),
+            ("warmup_steps", Json::Num(m.warmup_steps as f64)),
+            ("amax_history", Json::Num(m.amax_history as f64)),
+            ("margin_pow2", Json::Num(m.margin_pow2 as f64)),
+            ("recoveries", Json::Num(m.recoveries as f64)),
+            ("m_fmt", Json::Str(m.m_fmt.clone())),
+            ("v_fmt", Json::Str(m.v_fmt.clone())),
+            ("moment_chunk", Json::Num(m.moment_chunk as f64)),
+            ("numerics", Json::Str(m.numerics.clone())),
+            // f32 state that must restore bit-exactly rides as bits
+            ("detector_ema_bits", Json::Num(self.detector.ema.to_bits() as f64)),
+            ("detector_warmed", Json::Bool(self.detector.warmed)),
+            (
+                "detector_diverged_at",
+                match self.detector.diverged_at {
+                    Some(s) => Json::Num(s as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("overflow_events", Json::Num(self.scale.overflow_events as f64)),
+        ]);
+        let mut w = Writer::new(&meta);
+        for (name, data) in &self.params {
+            w.tensor(&format!("param.{name}"), Dtype::F32, data);
+        }
+        let chunk = self.meta.moment_chunk.max(1);
+        match moment_storage(&self.meta.m_fmt) {
+            Some(fmt) => w.tensor_fp8_exact("adam.m", fmt, &self.m, chunk),
+            None => w.tensor("adam.m", Dtype::F32, &self.m),
+        };
+        match moment_storage(&self.meta.v_fmt) {
+            Some(fmt) => w.tensor_fp8_exact("adam.v", fmt, &self.v, chunk),
+            None => w.tensor("adam.v", Dtype::F32, &self.v),
+        };
+        w.tensor("scaling.scales", Dtype::F32, &self.scale.scales);
+        let mut hist_vals: Vec<f32> = Vec::new();
+        let mut hist_lens: Vec<f32> = Vec::with_capacity(self.scale.histories.len());
+        for h in &self.scale.histories {
+            hist_lens.push(h.len() as f32);
+            hist_vals.extend_from_slice(h);
+        }
+        w.tensor("scaling.hist_lens", Dtype::F32, &hist_lens);
+        w.tensor("scaling.hist_vals", Dtype::F32, &hist_vals);
+        w.finish(path)
+    }
+
+    /// Deserialize a snapshot written by [`save`](TrainState::save).
+    ///
+    /// Tensors are moved out of the decoded checkpoint, not cloned —
+    /// resume/rollback peak memory is one copy of the state, not two.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let Checkpoint { meta, tensors: mut sections, .. } = Checkpoint::load(&path)?;
+        let meta = &meta;
+        if meta.str_or("kind", "") != "campaign_snapshot" {
+            bail!("not a campaign snapshot (kind = '{}')", meta.str_or("kind", "?"));
+        }
+        let version = meta.f64_of("version").map_err(|e| anyhow!(e))?;
+        if version > SNAPSHOT_VERSION {
+            bail!("snapshot version {version} is newer than this binary ({SNAPSHOT_VERSION})");
+        }
+        let u64_of = |key: &str| -> Result<u64> {
+            meta.str_of(key)
+                .map_err(|e| anyhow!(e))?
+                .parse::<u64>()
+                .with_context(|| format!("snapshot meta field '{key}'"))
+        };
+        let usize_of = |key: &str| meta.usize_of(key).map_err(|e| anyhow!(e));
+        let diverged_at = match meta.get("detector_diverged_at") {
+            Some(Json::Num(n)) => Some(*n as usize),
+            _ => None,
+        };
+        let detector = DetectorState {
+            ema: f32::from_bits(meta.f64_of("detector_ema_bits").map_err(|e| anyhow!(e))? as u32),
+            warmed: matches!(meta.get("detector_warmed"), Some(Json::Bool(true))),
+            diverged_at,
+        };
+        let scales = take_section(&mut sections, "scaling.scales")?;
+        let hist_lens = take_section(&mut sections, "scaling.hist_lens")?;
+        let hist_vals = take_section(&mut sections, "scaling.hist_vals")?;
+        if hist_lens.len() != scales.len() {
+            bail!(
+                "scaling arity mismatch: {} sites but {} history lengths",
+                scales.len(),
+                hist_lens.len()
+            );
+        }
+        let mut histories = Vec::with_capacity(hist_lens.len());
+        let mut off = 0usize;
+        for (i, &l) in hist_lens.iter().enumerate() {
+            let l = l as usize;
+            if off + l > hist_vals.len() {
+                bail!("site {i}: history runs past the recorded values");
+            }
+            histories.push(hist_vals[off..off + l].to_vec());
+            off += l;
+        }
+        if off != hist_vals.len() {
+            bail!("{} trailing history values not claimed by any site", hist_vals.len() - off);
+        }
+        let m = take_section(&mut sections, "adam.m")?;
+        let v = take_section(&mut sections, "adam.v")?;
+        let params: Vec<(String, Vec<f32>)> = sections
+            .into_iter()
+            .filter_map(|(name, (_, data))| {
+                name.strip_prefix("param.").map(|p| (p.to_string(), data))
+            })
+            .collect();
+        if params.is_empty() {
+            bail!("snapshot holds no parameter tensors");
+        }
+        Ok(Self {
+            meta: SnapshotMeta {
+                step: usize_of("step")?,
+                recipe: meta.str_of("recipe").map_err(|e| anyhow!(e))?.to_string(),
+                size: meta.str_of("size").map_err(|e| anyhow!(e))?.to_string(),
+                seed: u64_of("seed")?,
+                corpus_seed: u64_of("corpus_seed")?,
+                dp_workers: usize_of("dp_workers")?,
+                grad_accum: usize_of("grad_accum")?,
+                steps: usize_of("steps")?,
+                warmup_steps: usize_of("warmup_steps")?,
+                amax_history: usize_of("amax_history")?,
+                margin_pow2: meta.f64_of("margin_pow2").map_err(|e| anyhow!(e))? as i32,
+                recoveries: usize_of("recoveries")?,
+                m_fmt: meta.str_or("m_fmt", "f32"),
+                v_fmt: meta.str_or("v_fmt", "f32"),
+                moment_chunk: meta
+                    .get("moment_chunk")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(MOMENT_CHUNK),
+                numerics: meta.str_of("numerics").map_err(|e| anyhow!(e))?.to_string(),
+            },
+            params,
+            m,
+            v,
+            scale: ScaleState {
+                histories,
+                scales,
+                overflow_events: usize_of("overflow_events")?,
+            },
+            detector,
+        })
+    }
+
+    /// Restore this state into a trainer built from the same config.
+    ///
+    /// Validates the identity fields (recipe, size, seed, worker
+    /// topology, schedule length) and every tensor arity before
+    /// touching anything; on success the trainer's next `step()`
+    /// produces exactly the outcome the snapshotted run's next step
+    /// would have.
+    pub fn apply_to(&self, t: &mut Trainer) -> Result<()> {
+        let m = &self.meta;
+        let checks: [(&str, String, String); 8] = [
+            ("numerics config", m.numerics.clone(), numerics_fingerprint(&t.cfg)),
+            ("recipe", m.recipe.clone(), t.cfg.recipe.clone()),
+            ("size", m.size.clone(), t.cfg.size.clone()),
+            ("seed", m.seed.to_string(), t.cfg.seed.to_string()),
+            ("corpus_seed", m.corpus_seed.to_string(), t.cfg.corpus_seed().to_string()),
+            ("dp_workers", m.dp_workers.to_string(), t.cfg.dp_workers.to_string()),
+            ("grad_accum", m.grad_accum.to_string(), t.cfg.grad_accum.to_string()),
+            (
+                "steps/warmup",
+                format!("{}/{}", m.steps, m.warmup_steps),
+                format!("{}/{}", t.cfg.steps, t.cfg.warmup_steps),
+            ),
+        ];
+        for (what, snap, cfg) in &checks {
+            if snap != cfg {
+                bail!(
+                    "snapshot/config mismatch on {what}: snapshot has '{snap}', config has \
+                     '{cfg}' — resuming would fork the curve, refusing"
+                );
+            }
+        }
+        if self.m.len() != t.m_flat.len() || self.v.len() != t.v_flat.len() {
+            bail!(
+                "moment size mismatch: snapshot {}/{}, trainer {}/{}",
+                self.m.len(),
+                self.v.len(),
+                t.m_flat.len(),
+                t.v_flat.len()
+            );
+        }
+        // all params present with matching sizes, before any mutation
+        for (spec, tensor) in t.params.specs.iter().zip(&t.params.tensors) {
+            let data = self
+                .params
+                .iter()
+                .find(|(n, _)| n == &spec.name)
+                .map(|(_, d)| d)
+                .ok_or_else(|| anyhow!("snapshot missing parameter '{}'", spec.name))?;
+            if data.len() != tensor.len() {
+                bail!(
+                    "parameter '{}' size mismatch: snapshot {}, trainer {}",
+                    spec.name,
+                    data.len(),
+                    tensor.len()
+                );
+            }
+        }
+        // scaling arity/capacity validated up front too: nothing below
+        // may touch the trainer until every check has passed (a failed
+        // apply must leave the trainer exactly as it was)
+        if self.scale.scales.len() != t.scale_mgr.n_sites()
+            || self.scale.histories.len() != t.scale_mgr.n_sites()
+        {
+            bail!(
+                "scaling arity mismatch: snapshot has {} sites, trainer has {}",
+                self.scale.scales.len(),
+                t.scale_mgr.n_sites()
+            );
+        }
+        if m.amax_history == 0 {
+            bail!("snapshot records amax_history = 0 (ring capacity must be >= 1)");
+        }
+        for (i, h) in self.scale.histories.iter().enumerate() {
+            if h.len() > m.amax_history {
+                bail!(
+                    "site {i}: snapshot history has {} entries but its recorded amax_history \
+                     is {} — snapshot is internally inconsistent",
+                    h.len(),
+                    m.amax_history
+                );
+            }
+        }
+        let policy = Policy {
+            history_len: m.amax_history,
+            margin_pow2: m.margin_pow2,
+            ..t.scale_mgr.policy()
+        };
+        t.scale_mgr.reconfigure(policy);
+        t.scale_mgr
+            .restore_state(&self.scale)
+            .map_err(|e| anyhow!("internal: pre-validated scale restore failed: {e}"))?;
+        for i in 0..t.params.specs.len() {
+            let name = t.params.specs[i].name.clone();
+            let (_, data) = self.params.iter().find(|(n, _)| n == &name).unwrap();
+            t.params.tensors[i].f32s_mut().copy_from_slice(data);
+        }
+        t.m_flat.copy_from_slice(&self.m);
+        t.v_flat.copy_from_slice(&self.v);
+        t.detector.restore_state(&self.detector);
+        t.step = m.step;
+        t.mark_state_restored();
+        Ok(())
+    }
+}

@@ -1,0 +1,119 @@
+//! On-disk snapshot store: naming, discovery, and keep-last-K
+//! retention for one campaign's snapshot directory.
+//!
+//! Snapshots are named `snap_<step:08>.ckpt`, so lexicographic order
+//! is step order and `status`/`resume` can discover state with one
+//! directory listing. Retention prunes oldest-first and never touches
+//! the newest snapshot (the rollback/resume target).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::snapshot::TrainState;
+
+/// A campaign's snapshot directory with its retention policy.
+pub struct SnapshotStore {
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl SnapshotStore {
+    /// Open (creating if needed) the snapshot directory. `keep` is the
+    /// retention depth; it is clamped to at least 1 so the rollback
+    /// target always survives.
+    pub fn new<P: AsRef<Path>>(dir: P, keep: usize) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating snapshot dir {}", dir.display()))?;
+        Ok(Self { dir, keep: keep.max(1) })
+    }
+
+    /// The snapshot directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Canonical path of the snapshot for `step`.
+    pub fn path_for(&self, step: usize) -> PathBuf {
+        self.dir.join(format!("snap_{step:08}.ckpt"))
+    }
+
+    /// Write `state` (named by its step), prune to the retention
+    /// depth, and return the snapshot path + file size.
+    ///
+    /// A prune failure is logged and tolerated: once the snapshot is
+    /// durably in place the save has achieved its goal, and a
+    /// transient cleanup error (backup scanner holding a file, fs
+    /// hiccup) must not abort a multi-week campaign.
+    pub fn save(&self, state: &TrainState) -> Result<(PathBuf, u64)> {
+        let path = self.path_for(state.meta.step);
+        let bytes = state.save(&path)?;
+        if let Err(e) = self.prune() {
+            eprintln!("warning: snapshot retention prune failed (continuing): {e:#}");
+        }
+        Ok((path, bytes))
+    }
+
+    /// All snapshots in the directory, ascending by step.
+    pub fn list(&self) -> Result<Vec<(usize, PathBuf)>> {
+        list_snapshots(&self.dir)
+    }
+
+    /// The newest snapshot, if any.
+    pub fn latest(&self) -> Result<Option<(usize, PathBuf)>> {
+        Ok(self.list()?.pop())
+    }
+
+    /// Delete oldest snapshots beyond the retention depth; returns the
+    /// removed paths. Also sweeps `snap_*.tmp` orphans — a crash
+    /// between `Writer::finish`'s tmp write and its rename leaves one
+    /// behind, and nothing else looks at `.tmp` files.
+    pub fn prune(&self) -> Result<Vec<PathBuf>> {
+        let mut all = self.list()?;
+        let mut removed = Vec::new();
+        while all.len() > self.keep {
+            let (_, path) = all.remove(0); // oldest first
+            std::fs::remove_file(&path)
+                .with_context(|| format!("pruning {}", path.display()))?;
+            removed.push(path);
+        }
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for entry in rd.flatten() {
+                let name = entry.file_name();
+                let is_orphan = name
+                    .to_str()
+                    .is_some_and(|s| s.starts_with("snap_") && s.ends_with(".tmp"));
+                if is_orphan {
+                    std::fs::remove_file(entry.path()).ok();
+                }
+            }
+        }
+        Ok(removed)
+    }
+}
+
+/// List `snap_<step>.ckpt` files in a directory, ascending by step —
+/// shared by the store and the read-only `status` tooling (which must
+/// not create directories or prune anything).
+pub fn list_snapshots<P: AsRef<Path>>(dir: P) -> Result<Vec<(usize, PathBuf)>> {
+    let mut out: Vec<(usize, PathBuf)> = Vec::new();
+    let rd = match std::fs::read_dir(dir.as_ref()) {
+        Ok(rd) => rd,
+        Err(_) => return Ok(out), // absent dir = no snapshots
+    };
+    for entry in rd.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(step) = name
+            .strip_prefix("snap_")
+            .and_then(|s| s.strip_suffix(".ckpt"))
+            .and_then(|s| s.parse::<usize>().ok())
+        else {
+            continue;
+        };
+        out.push((step, entry.path()));
+    }
+    out.sort_by_key(|&(step, _)| step);
+    Ok(out)
+}

@@ -4,11 +4,33 @@
 //! ```text
 //! magic "FP8CKPT1" | meta_len u32 | meta JSON |
 //!   per tensor: name_len u16 | name | dtype u8 | scale f32 | len u64 | payload
+//! | footer "FP8CRC32" + crc32 u32   (over every preceding byte)
 //! ```
 //! dtype: 0 = f32, 1 = f16, 2 = bf16 (stored as u16), 3 = E4M3 u8,
-//! 4 = E5M2 u8. FP8 payloads are **real bytes** — checkpoint sizes are
-//! the Table 4 measurement, and the w1/w2 correlation analysis
-//! (Figs. 2, 7) reads checkpoints through this module.
+//! 4 = E5M2 u8, 5 = chunked exact-FP8 (see below). FP8 payloads are
+//! **real bytes** — checkpoint sizes are the Table 4 measurement, and
+//! the w1/w2 correlation analysis (Figs. 2, 7) reads checkpoints
+//! through this module.
+//!
+//! ## Extended manifest: chunked exact-FP8 sections (dtype 5)
+//!
+//! Campaign snapshots need *bit-exact* restore, but the plain E4M3 /
+//! E5M2 sections quantize through one global scale — lossy in general.
+//! Dtype 5 stores a tensor chunk-by-chunk with a per-chunk pow2 scale
+//! (mirroring how the chunked Adam artifact quantizes its moment
+//! outputs), and **verifies each chunk at write time**: a chunk is
+//! stored as FP8 bytes only if decode(encode(chunk)) reproduces every
+//! f32 bit; otherwise that chunk falls back to raw f32. Roundtrip
+//! bit-exactness is therefore guaranteed by construction, while
+//! on-grid data (FP8 Adam moments) still stores at ~1 byte/element.
+//!
+//! Payload layout for dtype 5:
+//! ```text
+//! fmt u8 (3=E4M3 | 4=E5M2) | chunk u64 |
+//!   per chunk: flag u8 (1=fp8, 0=f32) | scale f32 | bytes
+//! ```
+//! where `bytes` is `clen` u8 codes (flag 1) or `clen` f32 LE values
+//! (flag 0), and `clen = min(chunk, remaining)`.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -21,17 +43,46 @@ use crate::util::json::Json;
 use crate::util::{bf16_round, f16_bits_to_f32, f32_to_f16_bits};
 
 const MAGIC: &[u8; 8] = b"FP8CKPT1";
+/// Integrity footer: `FP8CRC32` + CRC-32 (LE) over every preceding
+/// byte. Written by [`Writer::finish`]; verified (when present) by
+/// [`Checkpoint::load`], so silent payload corruption — a flipped bit
+/// that still decodes to a plausible f32 — lands in the error path
+/// the campaign corrupt-snapshot fallback handles, instead of
+/// silently forking a "bit-exact" resume. Files without the footer
+/// (pre-footer writers, hand-crafted tests) still load.
+const CRC_MAGIC: &[u8; 8] = b"FP8CRC32";
+const FOOTER_LEN: usize = 12;
 
+/// Storage format of one checkpoint tensor section.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
+    /// Raw f32 — lossless.
     F32,
+    /// IEEE binary16 — the paper's FP16 master-weight storage.
     F16,
+    /// bfloat16 (RNE truncation of f32).
     Bf16,
+    /// One real E4M3 byte per element with a single global scale.
     E4M3,
+    /// One real E5M2 byte per element with a single global scale.
     E5M2,
+    /// Chunked exact-FP8 with per-chunk scales and verified f32
+    /// fallback (campaign snapshots; see the module docs). Written via
+    /// [`Writer::tensor_fp8_exact`], never via [`Writer::tensor`].
+    Fp8Exact,
 }
 
 impl Dtype {
+    /// Parse a config-file dtype name (`"f32" | "f16" | "bf16" |
+    /// "e4m3" | "e5m2"`).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use fp8_trainer::checkpoint::Dtype;
+    /// assert_eq!(Dtype::from_name("bf16").unwrap(), Dtype::Bf16);
+    /// assert!(Dtype::from_name("fp64").is_err());
+    /// ```
     pub fn from_name(s: &str) -> Result<Self> {
         Ok(match s {
             "f32" => Dtype::F32,
@@ -50,6 +101,7 @@ impl Dtype {
             Dtype::Bf16 => 2,
             Dtype::E4M3 => 3,
             Dtype::E5M2 => 4,
+            Dtype::Fp8Exact => 5,
         }
     }
 
@@ -60,24 +112,43 @@ impl Dtype {
             2 => Dtype::Bf16,
             3 => Dtype::E4M3,
             4 => Dtype::E5M2,
+            5 => Dtype::Fp8Exact,
             _ => bail!("bad dtype code {c}"),
         })
     }
 
+    /// Nominal payload bytes per element. Invariant: exact for every
+    /// fixed-width dtype; for [`Dtype::Fp8Exact`] this is the 1
+    /// byte/element *target* (per-chunk headers and any f32-fallback
+    /// chunks add to the real on-disk size).
     pub fn bytes_per_elem(self) -> usize {
         match self {
             Dtype::F32 => 4,
             Dtype::F16 | Dtype::Bf16 => 2,
-            Dtype::E4M3 | Dtype::E5M2 => 1,
+            Dtype::E4M3 | Dtype::E5M2 | Dtype::Fp8Exact => 1,
         }
     }
 }
 
+/// Streaming checkpoint builder: construct with the run metadata, add
+/// tensors, then [`finish`](Writer::finish) to a file.
 pub struct Writer {
     buf: Vec<u8>,
 }
 
 impl Writer {
+    /// Start a checkpoint with a JSON metadata header (step, recipe,
+    /// … — whatever the caller wants to find again at load time).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use fp8_trainer::checkpoint::{Dtype, Writer};
+    /// use fp8_trainer::util::json::{obj, Json};
+    /// let mut w = Writer::new(&obj(vec![("step", Json::Num(7.0))]));
+    /// w.tensor("weights", Dtype::F32, &[1.0, 2.0]);
+    /// assert!(w.size_bytes() > 0);
+    /// ```
     pub fn new(meta: &Json) -> Self {
         let mut buf = Vec::new();
         buf.extend_from_slice(MAGIC);
@@ -87,10 +158,20 @@ impl Writer {
         Self { buf }
     }
 
+    /// Append one named tensor in the given fixed-width storage format.
+    ///
+    /// Invariants: `Dtype::F32` roundtrips bit-exactly; the reduced
+    /// formats are lossy (f16/bf16 rounding; the E4M3/E5M2 sections
+    /// quantize through one global pow2 scale chosen from the tensor
+    /// amax). For guaranteed-exact FP8 storage use
+    /// [`tensor_fp8_exact`](Writer::tensor_fp8_exact).
+    ///
+    /// # Panics
+    ///
+    /// Panics if called with [`Dtype::Fp8Exact`] — that layout carries
+    /// per-chunk state that only `tensor_fp8_exact` can produce.
     pub fn tensor(&mut self, name: &str, dtype: Dtype, data: &[f32]) -> &mut Self {
-        self.buf.extend_from_slice(&(name.len() as u16).to_le_bytes());
-        self.buf.extend_from_slice(name.as_bytes());
-        self.buf.push(dtype.code());
+        self.section_header(name, dtype);
         let (scale, payload): (f32, Vec<u8>) = match dtype {
             Dtype::F32 => (1.0, data.iter().flat_map(|x| x.to_le_bytes()).collect()),
             Dtype::F16 => (
@@ -112,6 +193,9 @@ impl Writer {
                 let (b, s) = fp8::pack_scaled(E5M2, data);
                 (s, b)
             }
+            Dtype::Fp8Exact => {
+                panic!("use Writer::tensor_fp8_exact for chunked exact-FP8 sections")
+            }
         };
         self.buf.extend_from_slice(&scale.to_le_bytes());
         self.buf.extend_from_slice(&(data.len() as u64).to_le_bytes());
@@ -119,28 +203,121 @@ impl Writer {
         self
     }
 
-    pub fn finish<P: AsRef<Path>>(&self, path: P) -> Result<u64> {
-        if let Some(dir) = path.as_ref().parent() {
-            std::fs::create_dir_all(dir)?;
+    /// Append one named tensor as a chunked exact-FP8 section
+    /// ([`Dtype::Fp8Exact`]).
+    ///
+    /// Each `chunk`-sized span gets its own pow2 JIT scale (the same
+    /// `fp8::compute_scale` policy the chunked Adam artifact applies
+    /// to its moment outputs) and is written as FP8 bytes **only if**
+    /// the roundtrip reproduces every f32 bit of the span; otherwise
+    /// the span is stored as raw f32. Loading therefore always
+    /// reproduces `data` bit-for-bit, and data already on a per-chunk
+    /// FP8 grid (Adam moments under the fp8 recipes) stores at
+    /// ~1 byte/element.
+    ///
+    /// Use the Adam artifact's chunk size for moment tensors so the
+    /// storage chunks line up with the grids the kernel produced.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `chunk == 0`.
+    pub fn tensor_fp8_exact(
+        &mut self,
+        name: &str,
+        fmt: fp8::Fp8Format,
+        data: &[f32],
+        chunk: usize,
+    ) -> &mut Self {
+        assert!(chunk > 0, "fp8-exact chunk size must be >= 1");
+        self.section_header(name, Dtype::Fp8Exact);
+        self.buf.extend_from_slice(&1.0f32.to_le_bytes()); // frame scale: unused
+        self.buf.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        self.buf.push(if fmt == E4M3 { 3 } else { 4 });
+        self.buf.extend_from_slice(&(chunk as u64).to_le_bytes());
+        let mut bytes: Vec<u8> = Vec::new();
+        let mut back: Vec<f32> = Vec::new();
+        for span in data.chunks(chunk) {
+            let scale = fp8::bulk::pack_scaled_into(fmt, span, &mut bytes);
+            fp8::bulk::unpack_scaled_into(fmt, &bytes, scale, &mut back);
+            let exact = scale.is_finite()
+                && span.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits());
+            if exact {
+                self.buf.push(1);
+                self.buf.extend_from_slice(&scale.to_le_bytes());
+                self.buf.extend_from_slice(&bytes);
+            } else {
+                self.buf.push(0);
+                self.buf.extend_from_slice(&1.0f32.to_le_bytes());
+                for x in span {
+                    self.buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
         }
-        let mut f = std::fs::File::create(&path)
-            .with_context(|| format!("creating {}", path.as_ref().display()))?;
-        f.write_all(&self.buf)?;
-        Ok(self.buf.len() as u64)
+        self
     }
 
+    /// Name + dtype only — the scale and element count follow, written
+    /// by each section kind itself.
+    fn section_header(&mut self, name: &str, dtype: Dtype) {
+        self.buf.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        self.buf.extend_from_slice(name.as_bytes());
+        self.buf.push(dtype.code());
+    }
+
+    /// Write the assembled checkpoint to `path` (creating parent
+    /// directories) and return the file size in bytes.
+    ///
+    /// The write is atomic: bytes go to a `.tmp` sibling first and are
+    /// renamed into place, so a crash mid-write can never leave a
+    /// truncated checkpoint at `path` — it either has the old
+    /// contents or the new ones. Campaign rollback/resume targets
+    /// depend on this.
+    pub fn finish<P: AsRef<Path>>(&self, path: P) -> Result<u64> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&self.buf)?;
+            f.write_all(CRC_MAGIC)?;
+            f.write_all(&crate::util::crc32(&self.buf).to_le_bytes())?;
+            f.sync_all().ok(); // best-effort durability before the rename
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("moving {} into place", tmp.display()))?;
+        Ok(self.size_bytes() as u64)
+    }
+
+    /// Current in-memory size plus the integrity footer — equals the
+    /// eventual file size, so the Table 4 measurement can be taken
+    /// without touching disk.
     pub fn size_bytes(&self) -> usize {
-        self.buf.len()
+        self.buf.len() + FOOTER_LEN
     }
 }
 
+/// A loaded checkpoint: metadata plus every tensor decoded back to
+/// f32 (tagged with the dtype it was stored as).
 pub struct Checkpoint {
+    /// the JSON metadata header the writer was constructed with
     pub meta: Json,
+    /// name → (storage dtype, decoded f32 data)
     pub tensors: BTreeMap<String, (Dtype, Vec<f32>)>,
+    /// on-disk size (the Table 4 measurement)
     pub file_bytes: u64,
 }
 
 impl Checkpoint {
+    /// Load and decode a checkpoint file.
+    ///
+    /// Invariant: for sections written as `Dtype::F32` or
+    /// `Dtype::Fp8Exact`, the decoded data is bit-identical to what
+    /// the writer was given; the other dtypes decode to their rounded
+    /// grids. Truncated or malformed files return an error, never a
+    /// partial checkpoint.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
         let mut f = std::fs::File::open(&path)
             .with_context(|| format!("opening {}", path.as_ref().display()))?;
@@ -150,7 +327,25 @@ impl Checkpoint {
         if buf.len() < 12 || &buf[..8] != MAGIC {
             bail!("not an FP8CKPT1 file");
         }
+        // verify + strip the integrity footer when present (absent on
+        // pre-footer files, which still load on structure alone)
+        let mut end = buf.len();
+        if end >= 12 + FOOTER_LEN && &buf[end - FOOTER_LEN..end - 4] == CRC_MAGIC {
+            let stored = u32::from_le_bytes(buf[end - 4..end].try_into().unwrap());
+            let actual = crate::util::crc32(&buf[..end - FOOTER_LEN]);
+            if stored != actual {
+                bail!(
+                    "checkpoint checksum mismatch (stored {stored:08x}, computed \
+                     {actual:08x}) — the file is corrupt"
+                );
+            }
+            end -= FOOTER_LEN;
+        }
+        let buf = &buf[..end];
         let meta_len = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+        if 12 + meta_len > buf.len() {
+            bail!("truncated metadata header");
+        }
         let mut i = 12 + meta_len;
         let meta = Json::parse(
             std::str::from_utf8(&buf[12..i]).context("meta utf8")?,
@@ -159,58 +354,161 @@ impl Checkpoint {
 
         let mut tensors = BTreeMap::new();
         while i < buf.len() {
-            let name_len = u16::from_le_bytes(buf[i..i + 2].try_into().unwrap()) as usize;
-            i += 2;
+            let name_len = read_u16(&buf, &mut i)? as usize;
+            if i + name_len > buf.len() {
+                bail!("truncated tensor name");
+            }
             let name = String::from_utf8(buf[i..i + name_len].to_vec())?;
             i += name_len;
-            let dtype = Dtype::from_code(buf[i])?;
-            i += 1;
-            let scale = f32::from_le_bytes(buf[i..i + 4].try_into().unwrap());
-            i += 4;
-            let n = u64::from_le_bytes(buf[i..i + 8].try_into().unwrap()) as usize;
-            i += 8;
-            let nbytes = n * dtype.bytes_per_elem();
-            if i + nbytes > buf.len() {
+            if i >= buf.len() {
                 bail!("truncated tensor '{name}'");
             }
-            let payload = &buf[i..i + nbytes];
-            i += nbytes;
-            let data: Vec<f32> = match dtype {
-                Dtype::F32 => payload
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                    .collect(),
-                Dtype::F16 => payload
-                    .chunks_exact(2)
-                    .map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
-                    .collect(),
-                Dtype::Bf16 => payload
-                    .chunks_exact(2)
-                    .map(|c| {
-                        f32::from_bits((u16::from_le_bytes(c.try_into().unwrap()) as u32) << 16)
-                    })
-                    .collect(),
-                Dtype::E4M3 | Dtype::E5M2 => {
-                    // bulk LUT decode (parallel above the size
-                    // threshold) — checkpoints are the largest fp8
-                    // buffers in the system
-                    let fmt = if dtype == Dtype::E4M3 { E4M3 } else { E5M2 };
-                    let mut out = Vec::new();
-                    fp8::bulk::unpack_scaled_into(fmt, payload, scale, &mut out);
-                    out
-                }
+            let dtype = Dtype::from_code(buf[i])?;
+            i += 1;
+            let scale = read_f32(&buf, &mut i)?;
+            let n = read_u64(&buf, &mut i)? as usize;
+            let data: Vec<f32> = if dtype == Dtype::Fp8Exact {
+                read_fp8_exact(&buf, &mut i, n)
+                    .with_context(|| format!("fp8-exact tensor '{name}'"))?
+            } else {
+                // the length field is untrusted on-disk data: checked
+                // mul (no wrap-around to a short read) and a bounds
+                // check BEFORE any allocation sized from it
+                let nbytes = n
+                    .checked_mul(dtype.bytes_per_elem())
+                    .filter(|&nb| nb <= buf.len() - i)
+                    .ok_or_else(|| anyhow!("truncated tensor '{name}'"))?;
+                let payload = &buf[i..i + nbytes];
+                i += nbytes;
+                decode_fixed_width(dtype, payload, scale)
             };
             tensors.insert(name, (dtype, data));
         }
         Ok(Self { meta, tensors, file_bytes })
     }
 
+    /// Borrow a tensor's decoded f32 data by name (error if absent).
     pub fn tensor(&self, name: &str) -> Result<&[f32]> {
         self.tensors
             .get(name)
             .map(|(_, d)| d.as_slice())
             .ok_or_else(|| anyhow!("checkpoint missing tensor '{name}'"))
     }
+}
+
+fn read_u16(buf: &[u8], i: &mut usize) -> Result<u16> {
+    if *i + 2 > buf.len() {
+        bail!("truncated field");
+    }
+    let v = u16::from_le_bytes(buf[*i..*i + 2].try_into().unwrap());
+    *i += 2;
+    Ok(v)
+}
+
+fn read_f32(buf: &[u8], i: &mut usize) -> Result<f32> {
+    if *i + 4 > buf.len() {
+        bail!("truncated field");
+    }
+    let v = f32::from_le_bytes(buf[*i..*i + 4].try_into().unwrap());
+    *i += 4;
+    Ok(v)
+}
+
+fn read_u64(buf: &[u8], i: &mut usize) -> Result<u64> {
+    if *i + 8 > buf.len() {
+        bail!("truncated field");
+    }
+    let v = u64::from_le_bytes(buf[*i..*i + 8].try_into().unwrap());
+    *i += 8;
+    Ok(v)
+}
+
+fn decode_fixed_width(dtype: Dtype, payload: &[u8], scale: f32) -> Vec<f32> {
+    match dtype {
+        Dtype::F32 => payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+        Dtype::F16 => payload
+            .chunks_exact(2)
+            .map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+            .collect(),
+        Dtype::Bf16 => payload
+            .chunks_exact(2)
+            .map(|c| {
+                f32::from_bits((u16::from_le_bytes(c.try_into().unwrap()) as u32) << 16)
+            })
+            .collect(),
+        Dtype::E4M3 | Dtype::E5M2 => {
+            // bulk LUT decode (parallel above the size threshold) —
+            // checkpoints are the largest fp8 buffers in the system
+            let fmt = if dtype == Dtype::E4M3 { E4M3 } else { E5M2 };
+            let mut out = Vec::new();
+            fp8::bulk::unpack_scaled_into(fmt, payload, scale, &mut out);
+            out
+        }
+        Dtype::Fp8Exact => unreachable!("handled by read_fp8_exact"),
+    }
+}
+
+fn read_fp8_exact(buf: &[u8], i: &mut usize, n: usize) -> Result<Vec<f32>> {
+    // untrusted length: every element occupies at least one payload
+    // byte, so bound n against the remaining bytes before allocating
+    // (a garbage length must be an error, not an OOM abort)
+    if n > buf.len().saturating_sub(*i) {
+        bail!("element count {n} exceeds remaining file bytes");
+    }
+    if *i >= buf.len() {
+        bail!("truncated header");
+    }
+    let fmt = match buf[*i] {
+        3 => E4M3,
+        4 => E5M2,
+        c => bail!("bad fp8-exact format code {c}"),
+    };
+    *i += 1;
+    let chunk = read_u64(buf, i)? as usize;
+    if chunk == 0 && n > 0 {
+        bail!("zero chunk size");
+    }
+    let mut data = vec![0.0f32; n];
+    let mut off = 0;
+    while off < n {
+        let clen = chunk.min(n - off);
+        if *i >= buf.len() {
+            bail!("truncated chunk header");
+        }
+        let flag = buf[*i];
+        *i += 1;
+        let scale = read_f32(buf, i)?;
+        match flag {
+            1 => {
+                if *i + clen > buf.len() {
+                    bail!("truncated fp8 chunk");
+                }
+                fp8::bulk::unpack_scaled_buf(
+                    fmt,
+                    &buf[*i..*i + clen],
+                    scale,
+                    &mut data[off..off + clen],
+                );
+                *i += clen;
+            }
+            0 => {
+                if *i + clen * 4 > buf.len() {
+                    bail!("truncated f32 chunk");
+                }
+                for (k, d) in data[off..off + clen].iter_mut().enumerate() {
+                    let at = *i + k * 4;
+                    *d = f32::from_le_bytes(buf[at..at + 4].try_into().unwrap());
+                }
+                *i += clen * 4;
+            }
+            c => bail!("bad chunk flag {c}"),
+        }
+        off += clen;
+    }
+    Ok(data)
 }
 
 #[cfg(test)]
@@ -262,6 +560,107 @@ mod tests {
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"nope").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fp8_exact_roundtrips_on_grid_data_compactly() {
+        // data that lies exactly on a per-chunk E4M3 grid (the Adam
+        // moment case): one byte per element, bit-exact restore. Each
+        // chunk uses its own pow2 scale s and contains the value
+        // 448/s, so the writer's JIT scale lands back on exactly s.
+        let chunk = 64usize;
+        let mut data = Vec::new();
+        for c in 0..4i32 {
+            let s = 2f32.powi(c); // per-chunk scale
+            for k in 0..chunk {
+                let code = (k * 2) as u8; // finite positive codes, incl. 0x7e = 448
+                data.push(E4M3.decode(code) / s);
+            }
+        }
+        let dir = std::env::temp_dir().join("fp8_ckpt_exact_grid");
+        let path = dir.join("t.ckpt");
+        let mut w = Writer::new(&obj(vec![]));
+        let before = w.size_bytes();
+        w.tensor_fp8_exact("m", E4M3, &data, chunk);
+        let delta = w.size_bytes() - before;
+        w.finish(&path).unwrap();
+        let c = Checkpoint::load(&path).unwrap();
+        let got = c.tensor("m").unwrap();
+        assert_eq!(got.len(), data.len());
+        for (a, b) in data.iter().zip(got) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        assert_eq!(c.tensors.get("m").unwrap().0, Dtype::Fp8Exact);
+        // ~1 byte/elem + per-chunk headers + section header
+        assert!(delta < data.len() + 5 * 5 + 64, "on-grid data must pack, got {delta}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fp8_exact_falls_back_to_f32_off_grid() {
+        // arbitrary f32s (not on any fp8 grid): every chunk must fall
+        // back, and the roundtrip must still be bit-exact — including
+        // NaN payload bits and signed zero
+        let mut data: Vec<f32> = (0..150).map(|i| ((i as f32) * 0.7311).sin() * 3.7).collect();
+        data[3] = f32::from_bits(0x7fc0_1234); // NaN with payload
+        data[77] = -0.0;
+        data[78] = f32::INFINITY;
+        let dir = std::env::temp_dir().join("fp8_ckpt_exact_fallback");
+        let path = dir.join("t.ckpt");
+        let mut w = Writer::new(&obj(vec![]));
+        w.tensor_fp8_exact("x", E5M2, &data, 64);
+        w.finish(&path).unwrap();
+        let c = Checkpoint::load(&path).unwrap();
+        let got = c.tensor("x").unwrap();
+        for (i, (a, b)) in data.iter().zip(got).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "i={i}: {a} vs {b}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checksum_catches_silent_payload_corruption() {
+        // a flipped payload bit decodes to a perfectly plausible f32 —
+        // only the CRC footer can catch it
+        let dir = std::env::temp_dir().join("fp8_ckpt_crc");
+        let path = dir.join("t.ckpt");
+        let data: Vec<f32> = (0..64).map(|i| i as f32 * 0.25).collect();
+        let mut w = Writer::new(&obj(vec![]));
+        w.tensor("x", Dtype::F32, &data);
+        let reported = w.finish(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes.len() as u64, reported, "size_bytes must match the file");
+        assert!(Checkpoint::load(&path).is_ok(), "pristine file must verify");
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10; // silent corruption inside a payload
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(err.contains("checksum"), "must fail the CRC, got: {err}");
+        // footer-less files (pre-footer writers) still load on structure
+        bytes[mid] ^= 0x10; // restore the original payload
+        let body_len = bytes.len() - 12;
+        std::fs::write(&path, &bytes[..body_len]).unwrap();
+        let c = Checkpoint::load(&path).unwrap();
+        assert_eq!(c.tensor("x").unwrap(), data.as_slice());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fp8_exact_empty_and_ragged_tail() {
+        let dir = std::env::temp_dir().join("fp8_ckpt_exact_edge");
+        let path = dir.join("t.ckpt");
+        let ragged: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let mut w = Writer::new(&obj(vec![]));
+        w.tensor_fp8_exact("empty", E4M3, &[], 8)
+            .tensor_fp8_exact("ragged", E4M3, &ragged, 8);
+        w.finish(&path).unwrap();
+        let c = Checkpoint::load(&path).unwrap();
+        assert!(c.tensor("empty").unwrap().is_empty());
+        let got = c.tensor("ragged").unwrap();
+        for (a, b) in ragged.iter().zip(got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 }

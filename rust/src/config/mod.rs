@@ -100,6 +100,21 @@ pub struct TrainConfig {
     pub log_every: usize,
     pub ckpt_every: usize,
     pub out_dir: String,
+    /// campaign: periodic full-state snapshot cadence in steps
+    /// (0 = only the mandatory step-0 and final snapshots)
+    pub snapshot_every: usize,
+    /// campaign: snapshot retention — keep the newest K snapshots
+    /// (the rollback target is always among them; min 1)
+    pub snapshot_keep: usize,
+    /// campaign: give up after this many divergence recoveries
+    pub max_recoveries: usize,
+    /// campaign: extra pow2 scale margin added per recovery attempt
+    /// (scale backoff — each rollback re-enters with more headroom)
+    pub recovery_margin_backoff: i32,
+    /// campaign: multiplicative amax-history shrink per recovery
+    /// attempt (shorter window forgets the pre-spike amaxes faster);
+    /// effective history never drops below 2
+    pub recovery_history_shrink: f64,
 }
 
 impl Default for TrainConfig {
@@ -126,6 +141,11 @@ impl Default for TrainConfig {
             log_every: 10,
             ckpt_every: 0,
             out_dir: "runs/default".into(),
+            snapshot_every: 50,
+            snapshot_keep: 3,
+            max_recoveries: 4,
+            recovery_margin_backoff: 1,
+            recovery_history_shrink: 0.5,
         }
     }
 }
@@ -176,17 +196,52 @@ impl TrainConfig {
                 "train.log_every" | "log_every" => c.log_every = v.as_usize()?,
                 "train.ckpt_every" | "ckpt_every" => c.ckpt_every = v.as_usize()?,
                 "train.out_dir" | "out_dir" => c.out_dir = v.as_str()?,
+                "campaign.snapshot_every" | "snapshot_every" => {
+                    c.snapshot_every = v.as_usize()?
+                }
+                "campaign.snapshot_keep" | "snapshot_keep" => c.snapshot_keep = v.as_usize()?,
+                "campaign.max_recoveries" | "max_recoveries" => {
+                    c.max_recoveries = v.as_usize()?
+                }
+                "campaign.recovery_margin_backoff" | "recovery_margin_backoff" => {
+                    let f = v.as_f64()?;
+                    if !(f >= 0.0 && f.fract() == 0.0 && f <= i32::MAX as f64) {
+                        return Err(format!(
+                            "recovery_margin_backoff must be a non-negative integer \
+                             (got {f}): each recovery must add headroom, not remove it"
+                        ));
+                    }
+                    c.recovery_margin_backoff = f as i32
+                }
+                "campaign.recovery_history_shrink" | "recovery_history_shrink" => {
+                    c.recovery_history_shrink = v.as_f64()?
+                }
                 _ => return Err(format!("unknown config key '{k}'")),
             }
         }
         if c.dp_workers == 0 || c.grad_accum == 0 {
             return Err("dp_workers and grad_accum must be >= 1".into());
         }
+        if c.snapshot_keep == 0 {
+            return Err("snapshot_keep must be >= 1 (the rollback target)".into());
+        }
+        if !(c.recovery_history_shrink > 0.0 && c.recovery_history_shrink <= 1.0) {
+            return Err("recovery_history_shrink must be in (0, 1]".into());
+        }
         Ok(c)
     }
 
     pub fn recipe_config(&self) -> RecipeConfig {
         RecipeConfig::by_name(&self.recipe)
+    }
+
+    /// The derived corpus PRNG root seed — the single number that,
+    /// together with a step index, determines every training batch
+    /// (the data pipeline is stateless: batches are pure functions of
+    /// `(corpus_seed, step, worker, micro)`). Campaign snapshots
+    /// record it as the data cursor and validate it on resume.
+    pub fn corpus_seed(&self) -> u64 {
+        self.seed ^ 0xda7a
     }
 
     /// JSON echo for run metadata.
@@ -203,6 +258,11 @@ impl TrainConfig {
             ("grad_accum", Json::Num(self.grad_accum as f64)),
             ("amax_history", Json::Num(self.amax_history as f64)),
             ("seed_outlier_channel", Json::Bool(self.seed_outlier_channel)),
+            ("snapshot_every", Json::Num(self.snapshot_every as f64)),
+            ("snapshot_keep", Json::Num(self.snapshot_keep as f64)),
+            ("max_recoveries", Json::Num(self.max_recoveries as f64)),
+            ("recovery_margin_backoff", Json::Num(self.recovery_margin_backoff as f64)),
+            ("recovery_history_shrink", Json::Num(self.recovery_history_shrink)),
         ])
     }
 }
@@ -235,5 +295,41 @@ mod tests {
     #[test]
     fn unknown_key_rejected() {
         assert!(TrainConfig::load(None, &[("nope".into(), "1".into())]).is_err());
+    }
+
+    #[test]
+    fn campaign_keys_parse_and_validate() {
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("campaign.snapshot_every".into(), "25".into()),
+                ("snapshot_keep".into(), "5".into()),
+                ("max_recoveries".into(), "2".into()),
+                ("recovery_margin_backoff".into(), "2".into()),
+                ("recovery_history_shrink".into(), "0.25".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.snapshot_every, 25);
+        assert_eq!(c.snapshot_keep, 5);
+        assert_eq!(c.max_recoveries, 2);
+        assert_eq!(c.recovery_margin_backoff, 2);
+        assert_eq!(c.recovery_history_shrink, 0.25);
+        assert!(
+            TrainConfig::load(None, &[("snapshot_keep".into(), "0".into())]).is_err(),
+            "retention must keep at least the rollback target"
+        );
+        assert!(
+            TrainConfig::load(None, &[("recovery_history_shrink".into(), "0".into())]).is_err(),
+            "shrink factor 0 would empty the amax window"
+        );
+        assert!(
+            TrainConfig::load(None, &[("recovery_margin_backoff".into(), "-2".into())]).is_err(),
+            "negative backoff would REMOVE headroom per attempt"
+        );
+        assert!(
+            TrainConfig::load(None, &[("recovery_margin_backoff".into(), "1.9".into())]).is_err(),
+            "fractional backoff must not silently truncate"
+        );
     }
 }

@@ -61,6 +61,34 @@ impl DivergenceDetector {
     pub fn has_diverged(&self) -> bool {
         self.diverged_at.is_some()
     }
+
+    /// Export the mutable state for a campaign snapshot. The tuning
+    /// knobs (`alpha`, `spike_factor`, `overflow_limit`) are config,
+    /// not state — a resume re-derives them.
+    pub fn export_state(&self) -> DetectorState {
+        DetectorState { ema: self.ema, warmed: self.warmed, diverged_at: self.diverged_at }
+    }
+
+    /// Restore state captured by [`export_state`](Self::export_state).
+    /// The EMA is restored bit-for-bit, so a resumed run's verdicts
+    /// match the uninterrupted run exactly.
+    pub fn restore_state(&mut self, st: &DetectorState) {
+        self.ema = st.ema;
+        self.warmed = st.warmed;
+        self.diverged_at = st.diverged_at;
+    }
+}
+
+/// Serializable snapshot of a [`DivergenceDetector`]'s mutable state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DetectorState {
+    /// trailing loss EMA (bit-exact restore matters: the spike test
+    /// compares against `ema * spike_factor`)
+    pub ema: f32,
+    /// whether the EMA has seen its first loss
+    pub warmed: bool,
+    /// step of the first divergence verdict, if any (latched)
+    pub diverged_at: Option<usize>,
 }
 
 #[cfg(test)]
@@ -101,5 +129,24 @@ mod tests {
     fn overflow_storm() {
         let mut d = DivergenceDetector::default();
         assert_eq!(d.observe(0, 5.0, 1000), Verdict::OverflowStorm(1000));
+    }
+
+    #[test]
+    fn export_restore_reproduces_verdicts() {
+        let mut a = DivergenceDetector::default();
+        for step in 0..30 {
+            a.observe(step, 5.0 - step as f32 * 0.01, 0);
+        }
+        let st = a.export_state();
+        let mut b = DivergenceDetector::default();
+        b.restore_state(&st);
+        assert_eq!(b.export_state(), st);
+        // identical observations → identical verdicts and identical EMA bits
+        for step in 30..40 {
+            let loss = if step == 35 { 50.0 } else { 4.7 };
+            assert_eq!(a.observe(step, loss, 0), b.observe(step, loss, 0), "step {step}");
+        }
+        assert_eq!(a.export_state().ema.to_bits(), b.export_state().ema.to_bits());
+        assert_eq!(a.diverged_at, b.diverged_at);
     }
 }

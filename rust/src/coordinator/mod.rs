@@ -23,7 +23,7 @@ pub mod runner;
 pub mod schedule;
 pub mod trainer;
 
-pub use divergence::DivergenceDetector;
+pub use divergence::{DetectorState, DivergenceDetector};
 pub use params::ParamStore;
 pub use schedule::LrSchedule;
 pub use trainer::{StepOutcome, Trainer};

@@ -4,7 +4,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::TrainConfig;
 use crate::coordinator::Trainer;
@@ -14,56 +14,106 @@ use crate::util::csv::CsvWriter;
 /// One recorded training curve.
 #[derive(Clone, Debug, Default)]
 pub struct Curve {
+    /// series label, `<size>_<recipe>`
     pub label: String,
     /// (step, loss, grad_norm, swiglu_amax_max, overflow_events)
     pub rows: Vec<(usize, f32, f32, f32, usize)>,
+    /// first step the divergence detector latched, if any
     pub diverged_at: Option<usize>,
+    /// wall-clock seconds for the whole run
     pub wall_s: f64,
+    /// wall-clock seconds per executed step
     pub mean_step_s: f64,
 }
 
 impl Curve {
+    /// Loss of the last recorded row, or NaN for an empty curve.
+    ///
+    /// Invariant: equals `tail_loss(1)` whenever the curve is
+    /// non-empty.
     pub fn final_loss(&self) -> f32 {
         self.rows.last().map(|r| r.1).unwrap_or(f32::NAN)
     }
 
-    /// Mean loss over the last k recorded rows (noise-robust).
+    /// Mean loss over the last `k` recorded rows (noise-robust).
+    ///
+    /// **Saturates** when `k` exceeds the number of recorded rows: the
+    /// mean is then taken over the whole curve. This makes short
+    /// smoke-test curves comparable in summary tables (the historical
+    /// behavior, now contractual); callers that must know whether the
+    /// window was actually full should use
+    /// [`tail_loss_strict`](Self::tail_loss_strict). Returns NaN on an
+    /// empty curve (and for `k == 0`).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use fp8_trainer::coordinator::runner::Curve;
+    /// let mut c = Curve::default();
+    /// c.rows = vec![(0, 4.0, 1.0, 0.0, 0), (1, 2.0, 1.0, 0.0, 0)];
+    /// assert_eq!(c.tail_loss(1), 2.0);
+    /// assert_eq!(c.tail_loss(100), 3.0); // saturates at the full curve
+    /// assert!(Curve::default().tail_loss(5).is_nan());
+    /// ```
     pub fn tail_loss(&self, k: usize) -> f32 {
         let n = self.rows.len();
-        if n == 0 {
+        if n == 0 || k == 0 {
             return f32::NAN;
         }
         let take = k.min(n);
         self.rows[n - take..].iter().map(|r| r.1).sum::<f32>() / take as f32
     }
+
+    /// [`tail_loss`](Self::tail_loss) without the saturation: errors
+    /// when the curve has fewer than `k` rows (or `k == 0`), instead
+    /// of silently averaging a shorter window. Use this in acceptance
+    /// checks where "tail over 5 rows" must mean exactly 5 rows.
+    pub fn tail_loss_strict(&self, k: usize) -> Result<f32> {
+        if k == 0 {
+            return Err(anyhow!("tail_loss_strict: window must be >= 1"));
+        }
+        if self.rows.len() < k {
+            return Err(anyhow!(
+                "tail_loss_strict: window of {k} rows requested but curve '{}' has only {}",
+                self.label,
+                self.rows.len()
+            ));
+        }
+        Ok(self.tail_loss(k))
+    }
 }
 
 /// Run `cfg` to completion (or divergence), sampling every
-/// `record_every` steps. `stop_on_divergence` keeps curves comparable
-/// while letting the diverging config show its spike first.
+/// `record_every` steps.
+///
+/// After the detector latches, up to `extra_after_divergence` further
+/// steps are executed before stopping — this keeps curves comparable
+/// while letting a diverging config show its spike. Invariants: the
+/// returned curve always records the final executed step, so
+/// [`Curve::final_loss`] reflects where the run actually ended; and
+/// `record_every == 0` is treated as 1 (record every step) rather
+/// than panicking on the modulus.
 pub fn run_curve(
     rt: &Arc<Runtime>,
     cfg: TrainConfig,
     record_every: usize,
     extra_after_divergence: usize,
 ) -> Result<Curve> {
+    let record_every = record_every.max(1);
     let label = format!("{}_{}", cfg.size, cfg.recipe);
     let steps = cfg.steps;
     let mut t = Trainer::new(rt.clone(), cfg)?;
     let mut curve = Curve { label, ..Default::default() };
     let mut after_div = 0usize;
+    let mut last_row: Option<(usize, f32, f32, f32, usize)> = None;
     let t0 = std::time::Instant::now();
     for _ in 0..steps {
         let o = t.step()?;
+        let swiglu = o.monitor.iter().map(|m| m[0]).fold(0.0f32, f32::max);
+        let row = (o.step, o.loss, o.grad_norm, swiglu, t.scale_mgr.overflow_events);
+        last_row = Some(row);
         if o.step % record_every == 0 || o.step + 1 == steps {
-            let swiglu = o.monitor.iter().map(|m| m[0]).fold(0.0f32, f32::max);
-            curve.rows.push((
-                o.step,
-                o.loss,
-                o.grad_norm,
-                swiglu,
-                t.scale_mgr.overflow_events,
-            ));
+            curve.rows.push(row);
         }
         if t.detector.has_diverged() {
             curve.diverged_at = curve.diverged_at.or(t.detector.diverged_at);
@@ -73,12 +123,21 @@ pub fn run_curve(
             }
         }
     }
+    // the divergence early-break can land between sample points: the
+    // final executed step is always recorded so final_loss/tail_loss
+    // reflect where the run actually ended
+    if let Some(row) = last_row {
+        if curve.rows.last().map_or(true, |r| r.0 != row.0) {
+            curve.rows.push(row);
+        }
+    }
     curve.wall_s = t0.elapsed().as_secs_f64();
     curve.mean_step_s = curve.wall_s / (t.step.max(1) as f64);
     Ok(curve)
 }
 
-/// Dump curves side by side (long format) for re-plotting.
+/// Dump curves side by side (long format: one row per recorded step
+/// per series) for re-plotting.
 pub fn write_curves_csv<P: AsRef<Path>>(path: P, curves: &[Curve]) -> Result<()> {
     let mut w = CsvWriter::create(
         path,
@@ -101,7 +160,9 @@ pub fn write_curves_csv<P: AsRef<Path>>(path: P, curves: &[Curve]) -> Result<()>
 }
 
 /// Pretty-print a curve summary block (what the bench harness emits so
-/// the paper-vs-measured comparison is one screen).
+/// the paper-vs-measured comparison is one screen). The `tail(5)`
+/// column uses the saturating [`Curve::tail_loss`], so short curves
+/// print their full-curve mean rather than erroring.
 pub fn print_summary(title: &str, curves: &[Curve]) {
     println!("\n=== {title} ===");
     println!(
@@ -121,10 +182,53 @@ pub fn print_summary(title: &str, curves: &[Curve]) {
 }
 
 /// Env-tunable step budget so `cargo bench` stays tractable:
-/// FP8_BENCH_STEPS overrides the per-curve default.
+/// `FP8_BENCH_STEPS` overrides the per-curve default when set to a
+/// parseable integer (anything else falls back to `default`).
 pub fn bench_steps(default: usize) -> usize {
     std::env::var("FP8_BENCH_STEPS")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(losses: &[f32]) -> Curve {
+        Curve {
+            label: "t".into(),
+            rows: losses.iter().enumerate().map(|(i, &l)| (i, l, 1.0, 0.0, 0)).collect(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn tail_loss_saturates_documented() {
+        let c = curve(&[4.0, 3.0, 2.0]);
+        assert_eq!(c.tail_loss(2), 2.5);
+        // k > len: documented saturation at the full curve, no panic
+        assert_eq!(c.tail_loss(3), 3.0);
+        assert_eq!(c.tail_loss(100), 3.0);
+        assert!(c.tail_loss(0).is_nan());
+        assert!(curve(&[]).tail_loss(5).is_nan());
+    }
+
+    #[test]
+    fn tail_loss_strict_errors_on_short_curve() {
+        let c = curve(&[4.0, 3.0, 2.0]);
+        assert_eq!(c.tail_loss_strict(3).unwrap(), 3.0);
+        assert_eq!(c.tail_loss_strict(1).unwrap(), 2.0);
+        assert!(c.tail_loss_strict(4).is_err(), "k > len must be an error");
+        assert!(c.tail_loss_strict(0).is_err(), "k == 0 must be an error");
+        let msg = format!("{:#}", c.tail_loss_strict(4).unwrap_err());
+        assert!(msg.contains("only 3"), "error should name the shortfall: {msg}");
+    }
+
+    #[test]
+    fn final_loss_matches_tail_of_one() {
+        let c = curve(&[5.0, 4.5]);
+        assert_eq!(c.final_loss(), c.tail_loss(1));
+        assert!(curve(&[]).final_loss().is_nan());
+    }
 }

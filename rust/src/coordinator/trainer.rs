@@ -170,7 +170,7 @@ impl Trainer {
             vocab: model.vocab,
             order: cfg.corpus_order,
             skew: cfg.corpus_skew,
-            seed: cfg.seed ^ 0xda7a,
+            seed: cfg.corpus_seed(),
         });
         let batcher = Batcher::new(corpus, man.batch, man.seq_len);
 
@@ -253,6 +253,23 @@ impl Trainer {
         &self.rt
     }
 
+    /// Whether a failed optimizer step has left the in-memory state
+    /// inconsistent (see the `poisoned` field) — `step()` refuses to
+    /// run until the state is externally restored.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    /// Mark the trainer state consistent again after a full external
+    /// state restoration (campaign snapshot rollback: params, moments,
+    /// scaling and detector state all rewritten). Clearing the
+    /// poisoned latch without actually restoring state would silently
+    /// train from corrupt moments — only `campaign::snapshot` calls
+    /// this, right after `TrainState::apply_to` rewrote everything.
+    pub(crate) fn mark_state_restored(&mut self) {
+        self.poisoned = false;
+    }
+
     pub fn manifest(&self) -> &crate::runtime::Manifest {
         &self.grad_art.manifest
     }
@@ -260,6 +277,14 @@ impl Trainer {
     pub fn tokens_per_step(&self) -> usize {
         let m = &self.grad_art.manifest;
         m.batch * m.seq_len * self.cfg.dp_workers * self.cfg.grad_accum
+    }
+
+    /// The chunked Adam artifact's chunk size — the granularity at
+    /// which the kernel quantizes FP8 moment outputs, and therefore
+    /// the chunk size campaign snapshots must use for their exact-FP8
+    /// moment sections to line up with the grids the kernel produced.
+    pub fn adam_chunk(&self) -> usize {
+        self.adam_art.manifest.chunk
     }
 
     /// A training batch tensor (for probe/analysis passes that re-run

@@ -6,6 +6,9 @@
 //! owns everything at runtime:
 //!
 //! * [`runtime`] — PJRT CPU client: load HLO-text artifacts, execute.
+//! * [`campaign`] — long-horizon runs: bit-exact checkpoint/resume,
+//!   divergence auto-recovery, snapshot retention, machine-readable
+//!   campaign journal (the `campaign` CLI drives it).
 //! * [`scaling`] — the FP8 delayed-scaling state machine (per-tensor
 //!   amax ring buffers → pow2 scales), the piece the paper's
 //!   instability analysis targets.
@@ -27,6 +30,7 @@
 //! property testing, bench harness).
 
 pub mod analysis;
+pub mod campaign;
 pub mod checkpoint;
 pub mod config;
 pub mod coordinator;

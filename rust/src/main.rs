@@ -106,7 +106,9 @@ fn run() -> Result<()> {
                  fp8-trainer tables\n  fp8-trainer artifacts\n\n\
                  common keys: size=s1m recipe=fp8_full steps=1000 lr=2.5e-4\n\
                  recipes: bf16 bf16_smooth fp8 fp8_noq3 fp8_smooth fp8_full\n         \
-                 fp8_adam_<m>_<v> gelu_fp8 gelu_bf16"
+                 fp8_adam_<m>_<v> gelu_fp8 gelu_bf16\n\n\
+                 long-horizon runs (bit-exact resume, divergence auto-recovery):\n  \
+                 use the `campaign` binary — campaign run/resume/status/inspect"
             );
             Ok(())
         }

@@ -35,6 +35,20 @@ impl AmaxHistory {
     pub fn capacity(&self) -> usize {
         self.buf.len()
     }
+
+    /// The recorded window in push order, oldest → newest.
+    ///
+    /// Invariant (campaign snapshots depend on it): pushing the
+    /// returned values, in order, into a fresh `AmaxHistory` of the
+    /// same capacity yields a ring that behaves identically to this
+    /// one under any further sequence of pushes — `max()`, `len()`,
+    /// and eviction order all match. The absolute head position is
+    /// deliberately *not* part of the observable state.
+    pub fn ordered(&self) -> Vec<f32> {
+        let cap = self.buf.len();
+        let start = (self.head + cap - self.len) % cap;
+        (0..self.len).map(|i| self.buf[(start + i) % cap]).collect()
+    }
 }
 
 #[cfg(test)]
@@ -64,5 +78,41 @@ mod tests {
             h.push(1.0);
         }
         assert_eq!(h.len(), 2);
+    }
+
+    #[test]
+    fn ordered_is_oldest_to_newest() {
+        let mut h = AmaxHistory::new(3);
+        assert!(h.ordered().is_empty());
+        h.push(1.0);
+        h.push(2.0);
+        assert_eq!(h.ordered(), vec![1.0, 2.0]);
+        h.push(3.0);
+        h.push(4.0); // evicts 1.0, head wrapped
+        assert_eq!(h.ordered(), vec![2.0, 3.0, 4.0]);
+        h.push(5.0);
+        assert_eq!(h.ordered(), vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn ordered_restore_is_behaviorally_identical() {
+        // push ordered() into a fresh ring, then feed both the same
+        // tail — every observable must match at every point
+        let mut a = AmaxHistory::new(4);
+        for x in [9.0, 1.0, 7.0, 3.0, 5.0, 2.0] {
+            a.push(x);
+        }
+        let mut b = AmaxHistory::new(a.capacity());
+        for x in a.ordered() {
+            b.push(x);
+        }
+        assert_eq!(a.max(), b.max());
+        assert_eq!(a.len(), b.len());
+        for x in [0.5, 8.0, 0.25, 0.125, 0.1] {
+            a.push(x);
+            b.push(x);
+            assert_eq!(a.max().to_bits(), b.max().to_bits());
+            assert_eq!(a.ordered(), b.ordered());
+        }
     }
 }

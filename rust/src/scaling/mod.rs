@@ -10,7 +10,7 @@ pub mod history;
 pub mod policy;
 
 pub use history::AmaxHistory;
-pub use policy::{Policy, ScaleDecision};
+pub use policy::{Mode, Policy, ScaleDecision};
 
 use crate::fp8::{Fp8Format, E4M3, E5M2};
 
@@ -87,6 +87,98 @@ impl ScaleManager {
     pub fn site_format(&self, idx: usize) -> Fp8Format {
         self.site_fmts[idx]
     }
+
+    /// The active scale-selection policy.
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Export the full delayed-scaling state for a campaign snapshot.
+    ///
+    /// Histories come out in push order (oldest → newest, see
+    /// [`AmaxHistory::ordered`]); together with the scales vector and
+    /// the overflow counter this is everything a bit-exact resume
+    /// needs — the site formats and policy are re-derived from the
+    /// manifest + config at restore time.
+    pub fn export_state(&self) -> ScaleState {
+        ScaleState {
+            histories: self.histories.iter().map(|h| h.ordered()).collect(),
+            scales: self.scales.clone(),
+            overflow_events: self.overflow_events,
+        }
+    }
+
+    /// Restore state captured by [`export_state`](Self::export_state).
+    ///
+    /// The manager must have been built for the same manifest and
+    /// policy (site arity and ring capacity must match) — a mismatch
+    /// is an error, not a silent truncation.
+    pub fn restore_state(&mut self, st: &ScaleState) -> Result<(), String> {
+        if st.histories.len() != self.histories.len() || st.scales.len() != self.scales.len() {
+            return Err(format!(
+                "scale state arity mismatch: snapshot has {} sites, manager has {}",
+                st.histories.len(),
+                self.histories.len()
+            ));
+        }
+        for (i, vals) in st.histories.iter().enumerate() {
+            let cap = self.histories[i].capacity();
+            if vals.len() > cap {
+                return Err(format!(
+                    "site {i}: snapshot history has {} entries but ring capacity is {cap} \
+                     (amax_history changed between save and resume?)",
+                    vals.len()
+                ));
+            }
+            let mut h = AmaxHistory::new(cap);
+            for &a in vals {
+                h.push(a);
+            }
+            self.histories[i] = h;
+        }
+        self.scales.copy_from_slice(&st.scales);
+        self.overflow_events = st.overflow_events;
+        Ok(())
+    }
+
+    /// Swap in a new policy mid-run (campaign divergence recovery).
+    ///
+    /// Rings are rebuilt at the new `history_len`, keeping only the
+    /// *newest* entries when the window shrinks — exactly the "forget
+    /// the stale pre-spike amaxes" move the recovery backoff wants.
+    /// Scales are immediately re-decided from the surviving history so
+    /// the very next step runs under the new margin.
+    pub fn reconfigure(&mut self, policy: Policy) {
+        for h in self.histories.iter_mut() {
+            let vals = h.ordered();
+            let keep = vals.len().min(policy.history_len);
+            let mut nh = AmaxHistory::new(policy.history_len);
+            for &a in &vals[vals.len() - keep..] {
+                nh.push(a);
+            }
+            *h = nh;
+        }
+        self.policy = policy;
+        for i in 0..self.scales.len() {
+            if let ScaleDecision::Set(s) =
+                self.policy.decide(self.site_fmts[i], &self.histories[i])
+            {
+                self.scales[i] = s;
+            }
+        }
+    }
+}
+
+/// Serializable snapshot of a [`ScaleManager`]'s mutable state
+/// (see [`ScaleManager::export_state`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScaleState {
+    /// per-site amax windows, oldest → newest
+    pub histories: Vec<Vec<f32>>,
+    /// per-site current scales (the next step's artifact input)
+    pub scales: Vec<f32>,
+    /// cumulative non-finite-amax count (divergence signal)
+    pub overflow_events: usize,
 }
 
 #[cfg(test)]
@@ -138,5 +230,57 @@ mod tests {
         m.update(&[f32::NAN, 1.0, 1.0]);
         assert_eq!(m.overflow_events, 1);
         assert!(m.scales()[0] <= 1.0); // collapsed to format max
+    }
+
+    #[test]
+    fn export_restore_roundtrip_is_bit_exact_forward() {
+        let policy = Policy { history_len: 4, ..Default::default() };
+        let mut a = ScaleManager::new(2, &sites(), policy);
+        for k in 0..7 {
+            let x = 1.0 + k as f32 * 0.37;
+            a.update(&[x, 2.0 * x, 0.5 * x, x, x * x, 0.1]);
+        }
+        let st = a.export_state();
+        let mut b = ScaleManager::new(2, &sites(), policy);
+        b.restore_state(&st).unwrap();
+        assert_eq!(b.scales(), a.scales());
+        assert_eq!(b.overflow_events, a.overflow_events);
+        // identical future evolution, bit for bit
+        for k in 0..6 {
+            let x = 0.3 + k as f32;
+            let amax = [x, x, x, 2.0, 0.01, x];
+            a.update(&amax);
+            b.update(&amax);
+            for (sa, sb) in a.scales().iter().zip(b.scales()) {
+                assert_eq!(sa.to_bits(), sb.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn restore_rejects_arity_and_capacity_mismatch() {
+        let mut m = ScaleManager::new(1, &sites(), Policy::default());
+        let bad = ScaleState { histories: vec![vec![1.0]], scales: vec![1.0], overflow_events: 0 };
+        assert!(m.restore_state(&bad).is_err(), "site arity mismatch must fail");
+        let mut long = m.export_state();
+        long.histories[0] = vec![1.0; 1000]; // > ring capacity
+        assert!(m.restore_state(&long).is_err(), "oversized history must fail");
+    }
+
+    #[test]
+    fn reconfigure_shrinks_window_and_redecides() {
+        let mut m = ScaleManager::new(1, &sites(), Policy { history_len: 8, ..Default::default() });
+        // old spike followed by small steady state
+        m.update(&[100.0, 1.0, 1.0]);
+        for _ in 0..5 {
+            m.update(&[1.0, 1.0, 1.0]);
+        }
+        let spiky_scale = m.scales()[0]; // dominated by the 100.0
+        m.reconfigure(Policy { history_len: 2, margin_pow2: 1, ..Default::default() });
+        assert_eq!(m.policy().history_len, 2);
+        // the spike fell out of the shrunken window → larger scale,
+        // even with the extra margin bit
+        assert!(m.scales()[0] > spiky_scale, "{} vs {spiky_scale}", m.scales()[0]);
+        assert!(m.export_state().histories[0].len() <= 2);
     }
 }

@@ -11,17 +11,38 @@ use crate::fp8::{compute_scale, Fp8Format};
 
 use super::history::AmaxHistory;
 
+/// When the amax that picks a scale was observed relative to the step
+/// that uses the scale.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Mode {
+    /// Scale for step t comes from steps < t (production FP8; the
+    /// paper's vulnerable-by-construction default).
     Delayed,
+    /// Scale for step t comes from step t itself. Only reachable in
+    /// ablations: the caller feeds a length-1 history containing the
+    /// current amax.
     JustInTime,
 }
 
+/// Scale-selection policy for one training run.
+///
+/// Invariant: for any non-empty history, the selected scale `s`
+/// satisfies `history.max() * s <= fmt.max()` — the policy never picks
+/// a scale that would overflow the format on the values it has seen
+/// (pinned by `prop_scaling_policy_covers_history`). A *fresh* spike
+/// larger than the history max can still overflow; that gap is the
+/// paper's instability mechanism, not a bug here.
 #[derive(Clone, Copy, Debug)]
 pub struct Policy {
+    /// See [`Mode`].
     pub mode: Mode,
+    /// Ring-buffer capacity of the per-site amax window. Shorter
+    /// windows forget spikes faster (the campaign recovery backoff
+    /// shrinks this; see `campaign::recovery`).
     pub history_len: usize,
-    /// headroom factor: scale targets fmt.max / (2^margin · amax)
+    /// Headroom: the scale is divided by `2^margin_pow2` after the
+    /// range fit, leaving that many binades of slack below the format
+    /// max for fresh outliers. Applied as an exact pow2 shift.
     pub margin_pow2: i32,
 }
 
@@ -31,14 +52,38 @@ impl Default for Policy {
     }
 }
 
+/// Outcome of one [`Policy::decide`] call.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ScaleDecision {
-    /// keep the previous scale (no history yet)
+    /// Keep the previous scale (no history yet to decide from).
     Keep,
+    /// Use this scale for the next step.
     Set(f32),
 }
 
 impl Policy {
+    /// Pick the scale for a site from its amax history.
+    ///
+    /// Returns [`ScaleDecision::Keep`] on an empty history (cold
+    /// start: the site stays at its previous scale until it reports a
+    /// first amax); otherwise a pow2 scale that fits `history.max()`
+    /// inside the format range with `2^margin_pow2` headroom.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use fp8_trainer::scaling::{AmaxHistory, Policy, ScaleDecision};
+    /// use fp8_trainer::fp8::E4M3;
+    ///
+    /// let mut h = AmaxHistory::new(4);
+    /// h.push(1.0);
+    /// // amax 1.0, E4M3 max 448 → largest pow2 scale ≤ 448 is 256
+    /// assert_eq!(Policy::default().decide(E4M3, &h), ScaleDecision::Set(256.0));
+    /// assert_eq!(
+    ///     Policy::default().decide(E4M3, &AmaxHistory::new(4)),
+    ///     ScaleDecision::Keep,
+    /// );
+    /// ```
     pub fn decide(&self, fmt: Fp8Format, history: &AmaxHistory) -> ScaleDecision {
         if history.is_empty() {
             return ScaleDecision::Keep;

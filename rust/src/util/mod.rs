@@ -8,6 +8,31 @@ pub mod par;
 pub mod prng;
 pub mod proptest;
 
+/// IEEE CRC-32 (reflected, polynomial 0xEDB88320) — checkpoint
+/// integrity footers. Table-driven, one lookup per byte; the 256-entry
+/// table is built once per process.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut crc = i as u32;
+            for _ in 0..8 {
+                let mask = (crc & 1).wrapping_neg();
+                crc = (crc >> 1) ^ (0xedb8_8320 & mask);
+            }
+            *slot = crc;
+        }
+        t
+    });
+    let mut crc = 0xffff_ffffu32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ table[((crc ^ b as u32) & 0xff) as usize];
+    }
+    !crc
+}
+
 /// f32 <-> f16 (IEEE binary16) conversions for the FP16 master-weight
 /// storage mode (Peng et al. 2023, adopted in Table 4).
 pub fn f32_to_f16_bits(x: f32) -> u16 {
@@ -124,5 +149,15 @@ mod tests {
             assert_eq!(r.to_bits() & 0xffff, 0, "mantissa must be 7 bits");
             assert!(((r - v) / v).abs() < 1.0 / 128.0);
         }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // the canonical IEEE check value plus edge cases
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xe8b7_be43);
+        // sensitivity: one flipped bit changes the sum
+        assert_ne!(crc32(b"123456789"), crc32(b"123456788"));
     }
 }

@@ -1,0 +1,375 @@
+//! Campaign subsystem tests.
+//!
+//! Two tiers:
+//! * **artifact-free** — snapshot round-trip property tests (every
+//!   field of the extended checkpoint manifest survives save→load
+//!   bit-exactly, including amax ring ordering and the PRNG cursor),
+//!   retention, journal — these always run;
+//! * **artifact-gated** — end-to-end bit-exact resume and the
+//!   divergence-injection recovery drill; these skip with a note when
+//!   `artifacts/` is absent (run `make artifacts` first), matching the
+//!   repo's integration-test convention.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use fp8_trainer::campaign::journal;
+use fp8_trainer::campaign::snapshot::{SnapshotMeta, TrainState};
+use fp8_trainer::campaign::store::{list_snapshots, SnapshotStore};
+use fp8_trainer::campaign::Campaign;
+use fp8_trainer::config::TrainConfig;
+use fp8_trainer::coordinator::{DetectorState, Trainer};
+use fp8_trainer::runtime::Runtime;
+use fp8_trainer::scaling::{Policy, ScaleManager, ScaleState};
+use fp8_trainer::util::prng::Rng;
+use fp8_trainer::util::proptest::Prop;
+
+// ---------------------------------------------------------------- helpers
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn vals(rng: &mut Rng, n: usize, span: f32) -> Vec<f32> {
+    (0..n).map(|_| ((rng.uniform() as f32) - 0.5) * span).collect()
+}
+
+fn synth_state(rng: &mut Rng) -> TrainState {
+    let fmts = ["f32", "e4m3", "e5m2"];
+    let n_sites = 1 + rng.below(5) as usize;
+    let cap = 2 + rng.below(6) as usize;
+    let histories: Vec<Vec<f32>> = (0..n_sites)
+        .map(|_| {
+            let l = rng.below(cap as u64 + 1) as usize;
+            (0..l).map(|_| (rng.uniform() as f32) * 100.0 + 1e-3).collect()
+        })
+        .collect();
+    let scales: Vec<f32> =
+        (0..n_sites).map(|_| 2f32.powi(rng.below(20) as i32 - 10)).collect();
+    let n = 64 + rng.below(200) as usize;
+    let mut m = vals(rng, n, 2e-3);
+    let mut v = vals(rng, n, 1e-6);
+    // specials must survive too (fp8-exact falls back per chunk)
+    if n > 10 {
+        m[3] = f32::from_bits(0x7fc0_0bad); // NaN with payload
+        m[7] = -0.0;
+        v[5] = f32::INFINITY;
+    }
+    TrainState {
+        meta: SnapshotMeta {
+            step: rng.below(100_000) as usize,
+            recipe: "fp8_full".into(),
+            size: "tiny".into(),
+            // u64 seeds beyond 2^53 pin the string (not f64) encoding
+            seed: rng.next_u64() | (1 << 60),
+            corpus_seed: rng.next_u64() | (1 << 59),
+            dp_workers: 1 + rng.below(8) as usize,
+            grad_accum: 1 + rng.below(4) as usize,
+            steps: 1000,
+            warmup_steps: 100,
+            amax_history: cap,
+            margin_pow2: rng.below(4) as i32,
+            recoveries: rng.below(5) as usize,
+            m_fmt: fmts[rng.below(3) as usize].into(),
+            v_fmt: fmts[rng.below(3) as usize].into(),
+            // small so the moment vectors span several chunks and the
+            // multi-chunk exact-FP8 path is exercised every case
+            moment_chunk: 16 + rng.below(48) as usize,
+            numerics: format!("synthetic-fingerprint-{}", rng.below(1000)),
+        },
+        params: vec![
+            ("embed".into(), vals(rng, 32 + rng.below(64) as usize, 2.0)),
+            ("w1".into(), vals(rng, 32 + rng.below(64) as usize, 0.1)),
+            ("w2".into(), vals(rng, 32 + rng.below(64) as usize, 0.1)),
+        ],
+        m,
+        v,
+        scale: ScaleState {
+            histories,
+            scales,
+            overflow_events: rng.below(1000) as usize,
+        },
+        detector: DetectorState {
+            ema: f32::from_bits(rng.next_u64() as u32 | 0x3f00_0000) , // arbitrary bits, finite-ish
+            warmed: rng.below(2) == 1,
+            diverged_at: if rng.below(4) == 0 { Some(rng.below(1000) as usize) } else { None },
+        },
+    }
+}
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let k = N.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("fp8_campaign_{}_{}_{}", tag, std::process::id(), k))
+}
+
+// ------------------------------------------------- artifact-free tier
+
+#[test]
+fn prop_snapshot_roundtrip_every_field_bit_exact() {
+    let dir = tmp_path("prop");
+    std::fs::create_dir_all(&dir).unwrap();
+    let counter = AtomicUsize::new(0);
+    Prop::new(48).check("snapshot-roundtrip", synth_state, |st| {
+        let path = dir.join(format!("s{}.ckpt", counter.fetch_add(1, Ordering::Relaxed)));
+        st.save(&path).unwrap();
+        let got = TrainState::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        // meta: identity, positions, PRNG cursor, effective policy
+        if got.meta != st.meta {
+            return false;
+        }
+        // params by name, bit-exact
+        for (name, data) in &st.params {
+            match got.params.iter().find(|(n, _)| n == name) {
+                Some((_, d)) if bits_eq(d, data) => {}
+                _ => return false,
+            }
+        }
+        // moments bit-exact through the fp8-exact / f32 sections,
+        // including NaN payloads and signed zeros
+        if !bits_eq(&got.m, &st.m) || !bits_eq(&got.v, &st.v) {
+            return false;
+        }
+        // scaling state: ring contents in order, scales, counter
+        if got.scale.histories.len() != st.scale.histories.len() {
+            return false;
+        }
+        for (a, b) in got.scale.histories.iter().zip(&st.scale.histories) {
+            if !bits_eq(a, b) {
+                return false;
+            }
+        }
+        bits_eq(&got.scale.scales, &st.scale.scales)
+            && got.scale.overflow_events == st.scale.overflow_events
+            && got.detector.ema.to_bits() == st.detector.ema.to_bits()
+            && got.detector.warmed == st.detector.warmed
+            && got.detector.diverged_at == st.detector.diverged_at
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn snapshot_preserves_ring_ordering_through_a_real_manager() {
+    // drive a real ScaleManager past its ring capacity so the buffers
+    // have genuinely wrapped, snapshot, restore into a fresh manager,
+    // and check the two evolve identically afterwards
+    let sites: Vec<String> = vec!["x_attn".into(), "w1".into(), "g_w1".into()];
+    let policy = Policy { history_len: 4, ..Default::default() };
+    let mut a = ScaleManager::new(2, &sites, policy);
+    for k in 0..11 {
+        let x = 0.5 + (k as f32 * 0.731).sin().abs();
+        a.update(&[x, 2.0 * x, x, 0.1 * x, x, 3.0]);
+    }
+    let mut st = synth_state(&mut Rng::new(7));
+    st.scale = a.export_state();
+    let path = tmp_path("ring");
+    st.save(&path).unwrap();
+    let got = TrainState::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let mut b = ScaleManager::new(2, &sites, policy);
+    b.restore_state(&got.scale).unwrap();
+    for k in 0..9 {
+        let x = 0.2 + k as f32 * 0.37;
+        let amax = [x, x, 5.0, x, 0.01, x];
+        a.update(&amax);
+        b.update(&amax);
+        assert!(bits_eq(a.scales(), b.scales()), "diverged at post-restore step {k}");
+    }
+    assert_eq!(a.overflow_events, b.overflow_events);
+}
+
+#[test]
+fn store_retention_keeps_newest_k() {
+    let dir = tmp_path("retention");
+    let store = SnapshotStore::new(&dir, 3).unwrap();
+    let mut rng = Rng::new(42);
+    for step in [10usize, 20, 30, 40, 50] {
+        let mut st = synth_state(&mut rng);
+        st.meta.step = step;
+        store.save(&st).unwrap();
+    }
+    let listed = store.list().unwrap();
+    let steps: Vec<usize> = listed.iter().map(|&(s, _)| s).collect();
+    assert_eq!(steps, vec![30, 40, 50], "keep-last-3 must drop 10 and 20");
+    assert_eq!(store.latest().unwrap().unwrap().0, 50);
+    // read-only discovery agrees and pruned files are really gone
+    assert_eq!(list_snapshots(&dir).unwrap().len(), 3);
+    assert!(!store.path_for(10).exists());
+    assert!(!store.path_for(20).exists());
+    // every survivor is loadable
+    for (_, path) in listed {
+        TrainState::load(&path).unwrap();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn snapshot_load_rejects_damage() {
+    let path = tmp_path("damage");
+    let st = synth_state(&mut Rng::new(3));
+    st.save(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes.truncate(bytes.len() / 2);
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(TrainState::load(&path).is_err(), "truncated snapshot must not load");
+    std::fs::remove_file(&path).ok();
+    // a plain (non-campaign) checkpoint is also rejected by kind
+    let plain = tmp_path("plainckpt");
+    let mut w = fp8_trainer::checkpoint::Writer::new(&fp8_trainer::util::json::obj(vec![]));
+    w.tensor("x", fp8_trainer::checkpoint::Dtype::F32, &[1.0]);
+    w.finish(&plain).unwrap();
+    assert!(TrainState::load(&plain).is_err(), "kind check must reject");
+    std::fs::remove_file(&plain).ok();
+}
+
+// ------------------------------------------------ artifact-gated tier
+
+/// One shared PJRT client for the whole test binary (the TFRT CPU
+/// client does not tolerate repeated create/destroy in one process),
+/// or None on a bare checkout without `artifacts/`.
+fn runtime() -> Option<Arc<Runtime>> {
+    static RT: OnceLock<Option<Arc<Runtime>>> = OnceLock::new();
+    RT.get_or_init(|| Runtime::new("artifacts").ok().map(Arc::new)).clone()
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match runtime() {
+            Some(rt) => rt,
+            None => {
+                eprintln!("skipping: artifacts/ not found (run `make artifacts` first)");
+                return;
+            }
+        }
+    };
+}
+
+fn tiny_cfg(recipe: &str) -> TrainConfig {
+    TrainConfig {
+        size: "tiny".into(),
+        recipe: recipe.into(),
+        steps: 12,
+        warmup_steps: 2,
+        lr: 1e-3,
+        out_dir: "runs/campaign_test".into(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn bit_exact_resume_matches_uninterrupted_run() {
+    let rt = need_artifacts!();
+    let cfg = tiny_cfg("fp8_full");
+    // reference: uninterrupted 12 steps
+    let mut a = Trainer::new(rt.clone(), cfg.clone()).unwrap();
+    let mut ref_bits = Vec::new();
+    for _ in 0..cfg.steps {
+        ref_bits.push(a.step().unwrap().loss.to_bits());
+    }
+    // killed at step 5: capture → save → drop → load → apply → continue
+    let mut b = Trainer::new(rt.clone(), cfg.clone()).unwrap();
+    let mut got_bits = Vec::new();
+    for _ in 0..5 {
+        got_bits.push(b.step().unwrap().loss.to_bits());
+    }
+    let path = tmp_path("trainer_resume");
+    TrainState::capture(&b, 0).save(&path).unwrap();
+    drop(b);
+    let loaded = TrainState::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let mut c = Trainer::new(rt.clone(), cfg.clone()).unwrap();
+    loaded.apply_to(&mut c).unwrap();
+    assert_eq!(c.step, 5, "resume must land on the kill step");
+    for _ in 5..cfg.steps {
+        got_bits.push(c.step().unwrap().loss.to_bits());
+    }
+    assert_eq!(got_bits, ref_bits, "stop+resume must reproduce the loss curve bit-exactly");
+    // full state equality at the end, not just the loss
+    for (ta, tc) in a.params.tensors.iter().zip(&c.params.tensors) {
+        assert!(bits_eq(ta.f32s(), tc.f32s()), "final params must be bit-identical");
+    }
+    assert!(bits_eq(&a.m_flat, &c.m_flat), "first moment");
+    assert!(bits_eq(&a.v_flat, &c.v_flat), "second moment");
+    assert!(bits_eq(a.scale_mgr.scales(), c.scale_mgr.scales()), "scales");
+
+    // and a mismatched config must refuse to resume
+    let mut other = cfg.clone();
+    other.seed ^= 1;
+    let mut d = Trainer::new(rt, other).unwrap();
+    assert!(loaded.apply_to(&mut d).is_err(), "seed mismatch must be rejected");
+}
+
+#[test]
+fn campaign_kill_resume_reproduces_uninterrupted_curve() {
+    let rt = need_artifacts!();
+    let mut cfg = tiny_cfg("fp8_full");
+    cfg.steps = 10;
+    cfg.snapshot_every = 3;
+    cfg.snapshot_keep = 2;
+    let base = tmp_path("kill_resume");
+    // uninterrupted campaign
+    let mut ca = Campaign::new(rt.clone(), cfg.clone(), base.join("a")).unwrap();
+    let ra = ca.run().unwrap();
+    assert!(ra.completed);
+    assert_eq!(ra.losses.len(), 10);
+    // same campaign, killed at step 4 then resumed
+    let mut cb = Campaign::new(rt.clone(), cfg.clone(), base.join("b")).unwrap();
+    cb.stop_after = Some(4);
+    let rb1 = cb.run().unwrap();
+    assert!(!rb1.completed && rb1.paused);
+    assert_eq!(rb1.final_step, 4);
+    drop(cb);
+    let mut cb2 = Campaign::resume(rt, cfg, base.join("b")).unwrap();
+    let rb2 = cb2.run().unwrap();
+    assert!(rb2.completed);
+    let merged: Vec<(usize, u32)> = rb1
+        .losses
+        .iter()
+        .chain(rb2.losses.iter())
+        .map(|&(s, l)| (s, l.to_bits()))
+        .collect();
+    let reference: Vec<(usize, u32)> =
+        ra.losses.iter().map(|&(s, l)| (s, l.to_bits())).collect();
+    assert_eq!(merged, reference, "killed+resumed campaign must equal the uninterrupted one");
+    for (ta, tb) in ca.trainer.params.tensors.iter().zip(&cb2.trainer.params.tensors) {
+        assert!(bits_eq(ta.f32s(), tb.f32s()), "final params must be bit-identical");
+    }
+    let ev = journal::read(base.join("b").join("journal.jsonl")).unwrap();
+    assert_eq!(journal::count(&ev, "pause"), 1);
+    assert_eq!(journal::count(&ev, "resume"), 1);
+    assert_eq!(journal::count(&ev, "complete"), 1);
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn campaign_auto_recovers_from_injected_divergence() {
+    let rt = need_artifacts!();
+    let mut cfg = tiny_cfg("fp8_full");
+    cfg.steps = 9;
+    cfg.snapshot_every = 3;
+    cfg.max_recoveries = 2;
+    let dir = tmp_path("recovery_drill");
+    let mut c = Campaign::new(rt, cfg, &dir).unwrap();
+    c.inject_divergence_at = Some(5);
+    let r = c.run().unwrap();
+    assert!(r.completed, "the drill must recover and finish");
+    assert_eq!(r.final_step, 9);
+    assert_eq!(r.recoveries, 1);
+    assert!(r.losses.len() > 9, "replayed steps must appear in the honest loss record");
+    assert!(r.final_loss.is_finite());
+    let ev = journal::read(dir.join("journal.jsonl")).unwrap();
+    assert_eq!(journal::count(&ev, "divergence"), 1);
+    assert_eq!(journal::count(&ev, "recovery"), 1);
+    assert_eq!(journal::count(&ev, "complete"), 1);
+    let div = journal::last(&ev, "divergence").unwrap();
+    assert_eq!(div.usize_of("step").unwrap(), 5);
+    assert_eq!(div.get("injected"), Some(&fp8_trainer::util::json::Json::Bool(true)));
+    let rec = journal::last(&ev, "recovery").unwrap();
+    // rolled back to the last good periodic snapshot (step 3), and the
+    // perturbed policy is on the record: base margin 1 + backoff 1
+    assert_eq!(rec.usize_of("rolled_back_to").unwrap(), 3);
+    assert_eq!(rec.usize_of("margin_pow2").unwrap(), 2);
+    assert_eq!(rec.usize_of("amax_history").unwrap(), 8); // 16 / 2
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Tier-1 verify path for fp8-trainer.
+#
+# Steps:
+#   1. release build
+#   2. test suite (unit + property + campaign; artifact-gated tests
+#      skip themselves with a note on a bare checkout)
+#   3. rustdoc gate: `cargo doc --no-deps` must be warning-clean —
+#      broken intra-doc links and bad codeblock attributes are
+#      promoted to errors, so a rustdoc regression fails tier-1.
+#
+# Run from the repo root: scripts/verify.sh
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== [1/3] cargo build --release"
+cargo build --release
+
+echo "== [2/3] cargo test -q"
+cargo test -q
+
+echo "== [3/3] cargo doc --no-deps (doc-link gate)"
+# -W unused: rustdoc's own unused-lint pass stays advisory; the doc
+# correctness lints below are the gate.
+RUSTDOCFLAGS="${RUSTDOCFLAGS:-} \
+  -D rustdoc::broken-intra-doc-links \
+  -D rustdoc::invalid-codeblock-attributes \
+  -D rustdoc::invalid-rust-codeblocks \
+  -D rustdoc::bare-urls" \
+  cargo doc --no-deps
+
+echo "verify: OK"
