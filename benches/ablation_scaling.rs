@@ -20,7 +20,10 @@ fn main() -> anyhow::Result<()> {
         &["history", "margin_pow2", "final_loss", "diverged_at", "overflows"],
     )?;
     println!("Delayed-scaling ablation (s1m fp8, seeded outlier, {steps} steps):");
-    println!("{:>8} {:>8} {:>12} {:>12} {:>10}", "history", "margin", "final", "diverged@", "overflows");
+    println!(
+        "{:>8} {:>8} {:>12} {:>12} {:>10}",
+        "history", "margin", "final", "diverged@", "overflows"
+    );
 
     let mut rows = Vec::new();
     for &history in &[1usize, 4, 16] {

@@ -6,7 +6,9 @@
 use std::sync::Arc;
 
 use fp8_trainer::config::TrainConfig;
-use fp8_trainer::coordinator::runner::{bench_steps, print_summary, run_curve, write_curves_csv, Curve};
+use fp8_trainer::coordinator::runner::{
+    bench_steps, print_summary, run_curve, write_curves_csv, Curve,
+};
 use fp8_trainer::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {

@@ -44,7 +44,8 @@ fn main() -> anyhow::Result<()> {
         let (w2, _, _) = t.params.layer_slice("w2", 0)?;
         channel_correlations(&w1, &w2, d, f)[ch].clone()
     };
-    let mut csv = CsvWriter::create("results/fig7_negcorr.csv", &["step", "cosine", "norm1", "norm2"])?;
+    let mut csv =
+        CsvWriter::create("results/fig7_negcorr.csv", &["step", "cosine", "norm1", "norm2"])?;
     for s in 0..steps {
         t.step()?;
         if s % 10 == 0 || s + 1 == steps {

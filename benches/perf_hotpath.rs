@@ -1,30 +1,47 @@
 //! §Perf — hot-path microbenchmarks for the bulk FP8 codec, the
-//! collective, and the parallel step pipeline, emitting
-//! `BENCH_hotpath.json` so future PRs are judged against a
-//! machine-readable trajectory (methodology: rust/EXPERIMENTS.md §Perf).
+//! collective, the ZeRO-1 shard layer, and the parallel step pipeline,
+//! emitting `BENCH_hotpath.json` so future PRs are judged against a
+//! machine-readable trajectory (methodology: rust/EXPERIMENTS.md §Perf
+//! and §Sharding).
 //!
-//! Acceptance targets for this harness (ISSUE 1):
-//! * bulk decode ≥ 5x the scalar codec on a 1M-element buffer
-//! * bulk encode ≥ 2x the scalar codec on a 1M-element buffer
+//! Acceptance targets for this harness:
+//! * bulk decode ≥ 5x the scalar codec on a 1M-element buffer, bulk
+//!   encode ≥ 2x (ISSUE 1);
+//! * per-worker resident Adam-moment bytes reduced by ≥ (W-1)/W vs
+//!   the replicated-f32 baseline at W ∈ {1, 2, 4}, and the FP8
+//!   collective's bytes-on-the-wire ratio < 0.3 (ISSUE 4).
 //!
-//! The step-rate section needs `make artifacts`; it is skipped (with a
-//! note) when the artifacts directory is missing so the codec numbers
-//! are still collected on a bare checkout.
+//! A floor miss exits non-zero and writes `speedup_floors_met = false`
+//! into the report — the CI bench-smoke job gates on both.
+//!
+//! `BENCH_QUICK=1` caps the big-buffer sections (CI smoke mode); the
+//! step-rate section needs `make artifacts` and is skipped (with a
+//! note) when the artifacts directory is missing, so the codec and
+//! shard numbers are still collected on a bare checkout.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use fp8_trainer::config::TrainConfig;
-use fp8_trainer::coordinator::allreduce::{allreduce_mean, global_norm, reduce_mean_into_rank0};
+use fp8_trainer::coordinator::allreduce::{
+    allreduce_mean, global_norm, grad_collective, reduce_mean_into_rank0,
+};
 use fp8_trainer::coordinator::Trainer;
 use fp8_trainer::fp8::{self, bulk, Fp8Format, E4M3, E5M2};
+use fp8_trainer::optimizer::{MomentBuffer, MomentStore, ShardLayout};
 use fp8_trainer::runtime::Runtime;
 use fp8_trainer::util::bench::{bench, write_json_report, BenchResult};
-use fp8_trainer::util::json::Json;
+use fp8_trainer::util::json::{obj, Json};
 use fp8_trainer::util::par::max_threads;
 use fp8_trainer::util::prng::Rng;
 
 const N: usize = 1 << 20; // 1M elements
+
+/// CI smoke mode: cap the big-buffer sections so the whole harness
+/// stays in tens of seconds on a shared runner.
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
 
 fn codec_data(n: usize) -> Vec<f32> {
     // deterministic, mostly-normal-range values with a subnormal and
@@ -142,22 +159,158 @@ fn codec_benches(report: &mut Report, fmt: Fp8Format, tag: &str) -> bool {
     dec_speedup >= 5.0 && enc_speedup >= 2.0
 }
 
+/// ISSUE-4 §Sharding records: per-worker resident Adam-moment bytes on
+/// the chunk-aligned ZeRO-1 layout (exact-FP8-packed shards holding
+/// on-grid data, the trainer's steady state) vs the replicated-f32
+/// baseline, plus the FP8 collective's wire-byte ratio. Returns
+/// whether every floor held.
+fn shard_collective_benches(report: &mut Report) -> bool {
+    let mut ok = true;
+    let chunk = 262_144usize;
+    let total = if quick() { chunk * 8 } else { chunk * 32 };
+
+    // on-grid values (what the chunked Adam artifact emits): quantize
+    // a normal-ish distribution onto per-chunk pow2-scaled grids of
+    // each moment's storage format so exact-mode packing takes the
+    // 1-byte path, as in a real fp8_full run (m: E4M3, v: E5M2)
+    let mut rng = Rng::new(0x54a7d);
+    let raw: Vec<f32> = (0..total).map(|_| (rng.normal() as f32) * 2e-3).collect();
+    let grids: Vec<(Fp8Format, Vec<f32>)> = [E4M3, E5M2]
+        .into_iter()
+        .map(|fmt| {
+            let mut vals = raw.clone();
+            let mut bytes_tmp = Vec::new();
+            for c in vals.chunks_mut(chunk) {
+                let scale = bulk::pack_scaled_into(fmt, c, &mut bytes_tmp);
+                bulk::unpack_scaled_buf(fmt, &bytes_tmp, scale, c);
+            }
+            (fmt, vals)
+        })
+        .collect();
+
+    println!("== ZeRO-1 per-worker moment memory (total {total} elems, chunk {chunk}) ==");
+    for w in [1usize, 2, 4] {
+        let layout = ShardLayout::chunk_aligned(total, w, chunk);
+        let mut per_worker = 0usize;
+        for &(off, len) in &layout.shards {
+            // m + v shards for this worker, packed
+            let mut worker_bytes = 0usize;
+            for (fmt, vals) in &grids {
+                let mut b = MomentBuffer::zeros_exact(len, MomentStore::Fp8(*fmt), chunk);
+                b.load_from(&vals[off..off + len]);
+                b.pack();
+                worker_bytes += b.resident_bytes();
+            }
+            per_worker = per_worker.max(worker_bytes);
+        }
+        let replicated = total * 8; // two f32 moments, every worker
+        let reduction = 1.0 - per_worker as f64 / replicated as f64;
+        let floor = (w as f64 - 1.0) / w as f64;
+        let pass = reduction >= floor;
+        ok &= pass;
+        println!(
+            "  dp_workers={w}: {per_worker} B/worker vs {replicated} B replicated \
+             ({:.1}% reduction, floor {:.1}%) {}",
+            reduction * 100.0,
+            floor * 100.0,
+            if pass { "PASS" } else { "FAIL" }
+        );
+        report.records.push(obj(vec![
+            ("name", Json::Str(format!("moment_bytes_per_worker dp{w}"))),
+            ("dp_workers", Json::Num(w as f64)),
+            ("elems", Json::Num(total as f64)),
+            ("moment_bytes_per_worker", Json::Num(per_worker as f64)),
+            ("replicated_f32_bytes", Json::Num(replicated as f64)),
+            ("reduction", Json::Num(reduction)),
+            ("target_reduction", Json::Num(floor)),
+            ("pass", Json::Bool(pass)),
+        ]));
+    }
+
+    println!("== FP8 gradient collective (wire bytes + rate) ==");
+    let n = if quick() { 1 << 20 } else { 1 << 22 };
+    for w in [2usize, 4] {
+        let mk = |seed: u64| -> Vec<Vec<f32>> {
+            let mut rng = Rng::new(seed);
+            (0..w).map(|_| (0..n).map(|_| (rng.normal() as f32) * 0.01).collect()).collect()
+        };
+        let mut f32_bufs = mk(1);
+        let f32_r = bench(
+            &format!("grad_collective f32 {w}x{}M", n >> 20),
+            1,
+            10,
+            Duration::from_secs(8),
+            || {
+                std::hint::black_box(grad_collective(&mut f32_bufs, None, chunk));
+            },
+        );
+        report.push(&f32_r, vec![("gbs", Json::Num(gbs(n * 4 * w, &f32_r)))]);
+
+        let mut fp8_bufs = mk(1);
+        let mut stats = fp8_trainer::coordinator::allreduce::CollectiveStats::default();
+        let fp8_r = bench(
+            &format!("grad_collective fp8 {w}x{}M", n >> 20),
+            1,
+            10,
+            Duration::from_secs(8),
+            || {
+                stats = grad_collective(&mut fp8_bufs, Some(E5M2), chunk);
+            },
+        );
+        let ratio = stats.wire_ratio();
+        let pass = ratio < 0.3;
+        ok &= pass;
+        println!(
+            "  dp_workers={w}: {} wire bytes vs {} f32 (ratio {ratio:.4}) {}",
+            stats.wire_bytes,
+            stats.wire_bytes_f32,
+            if pass { "PASS" } else { "FAIL" }
+        );
+        report.push(
+            &fp8_r,
+            vec![
+                ("gbs", Json::Num(gbs(n * 4 * w, &fp8_r))),
+                ("dp_workers", Json::Num(w as f64)),
+                ("wire_bytes", Json::Num(stats.wire_bytes as f64)),
+                ("wire_bytes_f32", Json::Num(stats.wire_bytes_f32 as f64)),
+                ("wire_ratio", Json::Num(ratio)),
+                ("target_wire_ratio", Json::Num(0.3)),
+                ("pass", Json::Bool(pass)),
+            ],
+        );
+    }
+    println!();
+    ok
+}
+
 fn collective_benches(report: &mut Report) {
-    let big = 12_000_000usize;
+    let big = if quick() { 2_000_000usize } else { 12_000_000usize };
     let mk = |w: usize| -> Vec<Vec<f32>> {
         (0..w).map(|r| vec![r as f32 * 0.1 + 0.5; big]).collect()
     };
 
     let mut bufs = mk(4);
-    let ar = bench("allreduce_mean 4x12M (broadcast)", 1, 10, Duration::from_secs(10), || {
-        allreduce_mean(&mut bufs);
-    });
+    let ar = bench(
+        &format!("allreduce_mean 4x{}M (broadcast)", big / 1_000_000),
+        1,
+        10,
+        Duration::from_secs(10),
+        || {
+            allreduce_mean(&mut bufs);
+        },
+    );
     report.push(&ar, vec![("gbs", Json::Num(gbs(big * 4 * 4, &ar)))]);
 
     let mut bufs0 = mk(4);
-    let r0 = bench("reduce_mean_into_rank0 4x12M", 1, 10, Duration::from_secs(10), || {
-        reduce_mean_into_rank0(&mut bufs0);
-    });
+    let r0 = bench(
+        &format!("reduce_mean_into_rank0 4x{}M", big / 1_000_000),
+        1,
+        10,
+        Duration::from_secs(10),
+        || {
+            reduce_mean_into_rank0(&mut bufs0);
+        },
+    );
     let ar_speedup = ar.mean_secs() / r0.mean_secs();
     report.push(
         &r0,
@@ -168,9 +321,15 @@ fn collective_benches(report: &mut Report) {
     );
 
     let flat = vec![0.01f32; big];
-    let gn = bench("global_norm 12M (chunked parallel)", 1, 20, Duration::from_secs(8), || {
-        std::hint::black_box(global_norm(&flat));
-    });
+    let gn = bench(
+        &format!("global_norm {}M (chunked parallel)", big / 1_000_000),
+        1,
+        20,
+        Duration::from_secs(8),
+        || {
+            std::hint::black_box(global_norm(&flat));
+        },
+    );
     report.push(&gn, vec![("gbs", Json::Num(gbs(big * 4, &gn)))]);
 
     println!("  reduce_mean_into_rank0 vs broadcast allreduce: {ar_speedup:.2}x\n");
@@ -240,23 +399,34 @@ fn main() -> anyhow::Result<()> {
     println!("== collective ==");
     collective_benches(&mut report);
 
+    let shard_floors_met = shard_collective_benches(&mut report);
+
     println!("== step rate (needs artifacts) ==");
     step_benches(&mut report)?;
 
+    let all_met = floors_met && shard_floors_met;
     write_json_report(
         "BENCH_hotpath.json",
         vec![
             ("suite", Json::Str("hotpath".into())),
             ("elements", Json::Num(N as f64)),
             ("threads", Json::Num(max_threads() as f64)),
-            ("speedup_floors_met", Json::Bool(floors_met)),
+            ("quick", Json::Bool(quick())),
+            // the CI bench-smoke gate: codec speedups AND the ISSUE-4
+            // shard-memory / wire-ratio floors, all in one flag
+            ("speedup_floors_met", Json::Bool(all_met)),
+            ("codec_floors_met", Json::Bool(floors_met)),
+            ("shard_collective_floors_met", Json::Bool(shard_floors_met)),
         ],
         report.records,
     )?;
     println!("wrote BENCH_hotpath.json");
-    if !floors_met {
-        // make the acceptance floor enforceable by scripted perf gates
-        eprintln!("FAIL: bulk codec speedup floors not met (>=5x decode, >=2x encode)");
+    if !all_met {
+        // make the acceptance floors enforceable by scripted perf gates
+        eprintln!(
+            "FAIL: perf floors not met (codec >=5x decode / >=2x encode: {floors_met}; \
+             shard memory (W-1)/W + wire ratio < 0.3: {shard_floors_met})"
+        );
         std::process::exit(1);
     }
     Ok(())

@@ -38,7 +38,8 @@ fn main() -> anyhow::Result<()> {
     // makes the test independent of the optimizer's chunk boundaries
     // (scales are per decay-group chunk piece — see trainer::apply_adam)
     let mut checked = 0usize;
-    for (flat, fmt) in [(&t.m_flat, E4M3), (&t.v_flat, E5M2)] {
+    let (m_gather, v_gather) = t.moments_flat(); // gather the ZeRO-1 shards
+    for (flat, fmt) in [(&m_gather, E4M3), (&v_gather, E5M2)] {
         for &x in flat.iter() {
             if x == 0.0 {
                 continue;

@@ -48,7 +48,9 @@ fn main() -> anyhow::Result<()> {
     // ---- measured CPU relative step times (simulation overhead)
     let steps = bench_steps(8).min(16);
     let rt = Arc::new(Runtime::new("artifacts")?);
-    println!("\nmeasured CPU step time (s8m, {steps} steps each; fake-quant overhead, not HPU speedup):");
+    println!(
+        "\nmeasured CPU step time (s8m, {steps} steps each; fake-quant overhead, not HPU speedup):"
+    );
     for recipe in ["bf16", "fp8_noq3", "fp8_smooth", "fp8"] {
         let cfg = TrainConfig {
             size: "s8m".into(),
@@ -65,7 +67,12 @@ fn main() -> anyhow::Result<()> {
             t.step()?;
         }
         let per = t0.elapsed().as_secs_f64() / (steps - 1) as f64;
-        println!("  {:12} {:>8.3} s/step  {:>9.0} tok/s", recipe, per, t.tokens_per_step() as f64 / per);
+        println!(
+            "  {:12} {:>8.3} s/step  {:>9.0} tok/s",
+            recipe,
+            per,
+            t.tokens_per_step() as f64 / per
+        );
     }
     Ok(())
 }

@@ -62,19 +62,23 @@ fn main() -> anyhow::Result<()> {
     for _ in 0..3 {
         t.step()?;
     }
-    println!("\nmeasured optimizer-state checkpoint bytes (s1m, {} params):", t.params.total_elems());
+    println!(
+        "\nmeasured optimizer-state checkpoint bytes (s1m, {} params):",
+        t.params.total_elems()
+    );
     let mut flat = Vec::new();
     t.params.flatten_into(&mut flat);
     let variants: [(&str, Dtype, Dtype, Dtype); 2] = [
         ("baseline: f32 master + f32 moments", Dtype::F32, Dtype::F32, Dtype::F32),
         ("ours:     f16 master + e4m3/e5m2", Dtype::F16, Dtype::E4M3, Dtype::E5M2),
     ];
+    let (m, v) = t.moments_flat(); // gather the ZeRO-1 moment shards
     let mut sizes = Vec::new();
     for (label, master, m_dt, v_dt) in variants {
         let mut w = Writer::new(&obj(vec![]));
         w.tensor("master", master, &flat)
-            .tensor("adam.m", m_dt, &t.m_flat)
-            .tensor("adam.v", v_dt, &t.v_flat);
+            .tensor("adam.m", m_dt, &m)
+            .tensor("adam.v", v_dt, &v);
         println!("  {:40} {:>10} KiB", label, w.size_bytes() / 1024);
         sizes.push(w.size_bytes() as f64);
     }

@@ -50,11 +50,12 @@ fn main() -> Result<()> {
     for _ in 0..3 {
         t.step()?;
     }
-    let n = t.m_flat.len();
+    let (m, v) = t.moments_flat(); // gather the ZeRO-1 moment shards
+    let n = m.len();
     let mut w32 = Writer::new(&obj(vec![]));
-    w32.tensor("m", Dtype::F32, &t.m_flat).tensor("v", Dtype::F32, &t.v_flat);
+    w32.tensor("m", Dtype::F32, &m).tensor("v", Dtype::F32, &v);
     let mut w8 = Writer::new(&obj(vec![]));
-    w8.tensor("m", Dtype::E4M3, &t.m_flat).tensor("v", Dtype::E5M2, &t.v_flat);
+    w8.tensor("m", Dtype::E4M3, &m).tensor("v", Dtype::E5M2, &v);
     println!(
         "\nmoment storage for {n} params: FP32 {} KiB -> FP8 {} KiB ({:.1}x smaller, real bytes)",
         w32.size_bytes() / 1024,

@@ -32,13 +32,20 @@ fn main() -> Result<()> {
 
     // 3. train
     let mut t = Trainer::new(rt, cfg)?;
-    println!("model: {} parameters, {} FP8 scale sites", t.params.total_elems(), t.scale_mgr.n_sites());
+    println!(
+        "model: {} parameters, {} FP8 scale sites",
+        t.params.total_elems(),
+        t.scale_mgr.n_sites()
+    );
     let first = t.step()?;
     println!("step 0: loss {:.4} (≈ ln(vocab) = {:.4})", first.loss, (256f32).ln());
     for _ in 1..30 {
         let o = t.step()?;
         if o.step % 10 == 0 {
-            println!("step {:2}: loss {:.4}, grad-norm {:.3}, verdict {:?}", o.step, o.loss, o.grad_norm, o.verdict);
+            println!(
+                "step {:2}: loss {:.4}, grad-norm {:.3}, verdict {:?}",
+                o.step, o.loss, o.grad_norm, o.verdict
+            );
         }
     }
 
@@ -49,14 +56,18 @@ fn main() -> Result<()> {
     // 5. checkpoint with real-u8 FP8 moment storage + reload
     let meta = obj(vec![("example", Json::Str("quickstart".into()))]);
     let mut w = Writer::new(&meta);
-    w.tensor("adam.m", Dtype::E4M3, &t.m_flat);
-    w.tensor("adam.v", Dtype::E5M2, &t.v_flat);
+    let (m, v) = t.moments_flat(); // gather the ZeRO-1 moment shards
+    w.tensor("adam.m", Dtype::E4M3, &m);
+    w.tensor("adam.v", Dtype::E5M2, &v);
     let path = std::path::Path::new("runs/quickstart/moments.ckpt");
     let bytes = w.finish(path)?;
-    let per_moment = bytes as f64 / (2 * t.m_flat.len()) as f64;
-    println!("FP8 moment checkpoint: {} bytes (~{per_moment:.2} B per moment vs 4.0 for FP32)", bytes);
+    let per_moment = bytes as f64 / (2 * m.len()) as f64;
+    println!(
+        "FP8 moment checkpoint: {} bytes (~{per_moment:.2} B per moment vs 4.0 for FP32)",
+        bytes
+    );
     let back = Checkpoint::load(path)?;
-    assert_eq!(back.tensor("adam.m")?.len(), t.m_flat.len());
+    assert_eq!(back.tensor("adam.m")?.len(), m.len());
     println!("quickstart OK");
     Ok(())
 }

@@ -104,6 +104,9 @@ fn main() {
     println!(
         "per-tensor scaling under the outlier: {crushed} non-outlier values flushed to zero, {plain_overflows} overflows"
     );
-    println!("per-channel scaling (Smooth-SwiGLU): all channels keep full E4M3 resolution — zero inference cost after folding");
+    println!(
+        "per-channel scaling (Smooth-SwiGLU): all channels keep full E4M3 resolution — \
+         zero inference cost after folding"
+    );
     assert!(max_rel < 0.07, "smooth error must stay within one top-binade E4M3 step");
 }

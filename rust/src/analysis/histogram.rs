@@ -50,8 +50,8 @@ impl LogHistogram {
         let lt = threshold.ln();
         let mut count = self.underflow;
         for (i, &c) in self.bins.iter().enumerate() {
-            let bin_hi =
-                self.log_min + (i as f64 + 1.0) / self.bins.len() as f64 * (self.log_max - self.log_min);
+            let bin_hi = self.log_min
+                + (i as f64 + 1.0) / self.bins.len() as f64 * (self.log_max - self.log_min);
             if bin_hi <= lt {
                 count += c;
             }

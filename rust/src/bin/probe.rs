@@ -11,7 +11,8 @@ fn main() {
             let n: usize = if name == "scan" { 12 } else { 16 };
             let data: Vec<f32> = (0..n).map(|i| i as f32 * 0.37 - 2.0).collect();
             let dims: &[usize] = if name == "scan" { &[3, 4] } else { &[4, 4] };
-            let x = xla::Literal::vec1(&data).reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())?;
+            let x = xla::Literal::vec1(&data)
+                .reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())?;
             let result = exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
             Ok(format!("{:?}", result.shape()?))
         })();

@@ -279,7 +279,10 @@ impl Campaign {
                         ("loss", Json::Num(o.loss as f64)),
                         ("verdict", Json::Str(format!("{:?}", o.verdict))),
                         ("injected", Json::Bool(injected)),
-                        ("overflow_events", Json::Num(self.trainer.scale_mgr.overflow_events as f64)),
+                        (
+                            "overflow_events",
+                            Json::Num(self.trainer.scale_mgr.overflow_events as f64),
+                        ),
                     ],
                 )?;
                 if self.recoveries >= self.recovery.max_recoveries {
@@ -321,7 +324,12 @@ impl Campaign {
         Ok(self.report(true, false, losses))
     }
 
-    fn report(&self, completed: bool, paused: bool, mut losses: Vec<(usize, f32)>) -> CampaignReport {
+    fn report(
+        &self,
+        completed: bool,
+        paused: bool,
+        mut losses: Vec<(usize, f32)>,
+    ) -> CampaignReport {
         // the in-loop drain is amortized (bounds at 2x); enforce the
         // documented cap exactly at the reporting boundary
         if losses.len() > LOSS_RECORD_CAP {

@@ -3,12 +3,19 @@
 //!
 //! A [`TrainState`] captures:
 //! * **params** — every named parameter tensor, raw f32 (lossless);
-//! * **Adam moments** — through the chunked exact-FP8 checkpoint
-//!   sections ([`Writer::tensor_fp8_exact`]) when the recipe stores
-//!   moments in FP8: the moment values lie on per-chunk FP8 grids (the
-//!   chunked Adam artifact quantizes its outputs), so they pack at ~1
+//! * **Adam moments** — gathered from the trainer's per-worker ZeRO-1
+//!   shards into the flat layout (the chunk-aligned owner map makes
+//!   gather/scatter bit-preserving and grid-aligned), then stored
+//!   through the chunked exact-FP8 checkpoint sections
+//!   ([`Writer::tensor_fp8_exact`]) when the recipe stores moments in
+//!   FP8: the moment values lie on per-chunk FP8 grids (the chunked
+//!   Adam artifact quantizes its outputs), so they pack at ~1
 //!   byte/element *and* restore bit-exactly; recipes with f32 moments
-//!   store raw f32;
+//!   store raw f32. The shard layout itself and the collective
+//!   compression config ride in the numerics fingerprint (the
+//!   compressed collective's per-chunk scales are JIT — stateless
+//!   across steps — so the flag + format is the complete collective
+//!   identity);
 //! * **delayed-scaling state** — per-site amax ring buffers (in push
 //!   order), current scales, and the overflow counter;
 //! * **divergence-detector state** — the loss EMA (bit-exact), warmed
@@ -43,7 +50,14 @@ use crate::util::json::{obj, Json};
 pub const MOMENT_CHUNK: usize = 262_144;
 
 /// Snapshot format version (bumped on incompatible layout changes).
-pub const SNAPSHOT_VERSION: f64 = 1.0;
+/// 1.1: the numerics fingerprint gained the ZeRO-1 shard layout
+/// (Adam chunk × dp_workers) and the collective compression config
+/// (`collective_fp8`/`collective_fmt`) — a resume under a changed
+/// sharding or collective setup now refuses instead of forking the
+/// curve. Older (1.0) snapshots still load; their fingerprint will
+/// not match a 1.1 binary's, so applying them refuses — conservative
+/// by design.
+pub const SNAPSHOT_VERSION: f64 = 1.1;
 
 /// Identity and position metadata of one snapshot.
 #[derive(Clone, Debug, PartialEq)]
@@ -88,18 +102,29 @@ pub struct SnapshotMeta {
     /// fingerprint of every remaining numerics-relevant config field
     /// (lr/min_lr_frac/weight_decay/grad_clip as exact f32 bits,
     /// corpus knobs, outlier seeding, non-finite-update policy, base
-    /// scaling config) — compared wholesale on apply so a resume under
-    /// any changed numeric silently forking the curve is impossible
+    /// scaling config, the ZeRO-1 shard layout, and the collective
+    /// compression setup) — compared wholesale on apply so a resume
+    /// under any changed numeric silently forking the curve is
+    /// impossible
     pub numerics: String,
 }
 
 /// Canonical fingerprint of the config fields that influence the
 /// numbers but are not individually recorded in [`SnapshotMeta`].
-/// f32/f64 fields go in as exact bit patterns.
-pub fn numerics_fingerprint(cfg: &crate::config::TrainConfig) -> String {
+/// f32/f64 fields go in as exact bit patterns. `shard_chunk` is the
+/// live Adam artifact chunk ([`Trainer::adam_chunk`]): with
+/// `dp_workers` it determines the chunk-aligned ZeRO-1 owner map *and*
+/// the collective's per-chunk scale grid, so a resume under a changed
+/// sharding config refuses. `collective_fp8`/`collective_fmt` change
+/// the gradient bits on the wire; `pack_moments` is deliberately
+/// **excluded** (exact-verified packing is bit-preserving), and the
+/// compressed collective's per-chunk scales are JIT — recomputed every
+/// step from the step's own gradients — so there is no cross-step
+/// collective scale state to capture.
+pub fn numerics_fingerprint(cfg: &crate::config::TrainConfig, shard_chunk: usize) -> String {
     format!(
         "lr={:08x};minfrac={:08x};wd={:08x};clip={:08x};order={};skew={:016x};\
-         outlier={}:{:08x};skipnf={};amax={};margin={}",
+         outlier={}:{:08x};skipnf={};amax={};margin={};shard=c{}w{};cfp8={}:{}",
         cfg.lr.to_bits(),
         cfg.min_lr_frac.to_bits(),
         cfg.weight_decay.to_bits(),
@@ -111,6 +136,10 @@ pub fn numerics_fingerprint(cfg: &crate::config::TrainConfig) -> String {
         cfg.skip_nonfinite_updates,
         cfg.amax_history,
         cfg.margin_pow2,
+        shard_chunk,
+        cfg.dp_workers,
+        cfg.collective_fp8,
+        cfg.collective_fmt,
     )
 }
 
@@ -166,6 +195,11 @@ impl TrainState {
         let rc = t.cfg.recipe_config();
         let policy = t.scale_mgr.policy();
         let norm = |f: &str| if moment_storage(f).is_some() { f.to_string() } else { "f32".into() };
+        // gather the ZeRO-1 moment shards into the flat layout the
+        // snapshot stores; the shard map is chunk-aligned, so the
+        // gathered buffer keeps the absolute per-chunk FP8 grids and
+        // the exact-FP8 sections below stay grid-aligned
+        let (m, v) = t.moments_flat();
         Self {
             meta: SnapshotMeta {
                 step: t.step,
@@ -183,7 +217,7 @@ impl TrainState {
                 m_fmt: norm(&rc.m_fmt),
                 v_fmt: norm(&rc.v_fmt),
                 moment_chunk: t.adam_chunk().max(1),
-                numerics: numerics_fingerprint(&t.cfg),
+                numerics: numerics_fingerprint(&t.cfg, t.adam_chunk()),
             },
             params: t
                 .params
@@ -192,8 +226,8 @@ impl TrainState {
                 .zip(&t.params.tensors)
                 .map(|(s, tt)| (s.name.clone(), tt.f32s().to_vec()))
                 .collect(),
-            m: t.m_flat.clone(),
-            v: t.v_flat.clone(),
+            m,
+            v,
             scale: t.scale_mgr.export_state(),
             detector: t.detector.export_state(),
         }
@@ -367,7 +401,11 @@ impl TrainState {
     pub fn apply_to(&self, t: &mut Trainer) -> Result<()> {
         let m = &self.meta;
         let checks: [(&str, String, String); 8] = [
-            ("numerics config", m.numerics.clone(), numerics_fingerprint(&t.cfg)),
+            (
+                "numerics config",
+                m.numerics.clone(),
+                numerics_fingerprint(&t.cfg, t.adam_chunk()),
+            ),
             ("recipe", m.recipe.clone(), t.cfg.recipe.clone()),
             ("size", m.size.clone(), t.cfg.size.clone()),
             ("seed", m.seed.to_string(), t.cfg.seed.to_string()),
@@ -388,13 +426,14 @@ impl TrainState {
                 );
             }
         }
-        if self.m.len() != t.m_flat.len() || self.v.len() != t.v_flat.len() {
+        let total = t.params.total_elems();
+        if self.m.len() != total || self.v.len() != total {
             bail!(
                 "moment size mismatch: snapshot {}/{}, trainer {}/{}",
                 self.m.len(),
                 self.v.len(),
-                t.m_flat.len(),
-                t.v_flat.len()
+                total,
+                total
             );
         }
         // all params present with matching sizes, before any mutation
@@ -453,8 +492,7 @@ impl TrainState {
             let (_, data) = self.params.iter().find(|(n, _)| n == &name).unwrap();
             t.params.tensors[i].f32s_mut().copy_from_slice(data);
         }
-        t.m_flat.copy_from_slice(&self.m);
-        t.v_flat.copy_from_slice(&self.v);
+        t.set_moments_flat(&self.m, &self.v);
         t.detector.restore_state(&self.detector);
         t.step = m.step;
         t.mark_state_restored();

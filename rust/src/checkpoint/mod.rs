@@ -235,21 +235,21 @@ impl Writer {
         self.buf.push(if fmt == E4M3 { 3 } else { 4 });
         self.buf.extend_from_slice(&(chunk as u64).to_le_bytes());
         let mut bytes: Vec<u8> = Vec::new();
-        let mut back: Vec<f32> = Vec::new();
         for span in data.chunks(chunk) {
-            let scale = fp8::bulk::pack_scaled_into(fmt, span, &mut bytes);
-            fp8::bulk::unpack_scaled_into(fmt, &bytes, scale, &mut back);
-            let exact = scale.is_finite()
-                && span.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits());
-            if exact {
-                self.buf.push(1);
-                self.buf.extend_from_slice(&scale.to_le_bytes());
-                self.buf.extend_from_slice(&bytes);
-            } else {
-                self.buf.push(0);
-                self.buf.extend_from_slice(&1.0f32.to_le_bytes());
-                for x in span {
-                    self.buf.extend_from_slice(&x.to_le_bytes());
+            // shared write-time verification with the optimizer's
+            // resident moment shards: FP8 only when bit-exact
+            match fp8::bulk::pack_scaled_exact_into(fmt, span, &mut bytes) {
+                Some(scale) => {
+                    self.buf.push(1);
+                    self.buf.extend_from_slice(&scale.to_le_bytes());
+                    self.buf.extend_from_slice(&bytes);
+                }
+                None => {
+                    self.buf.push(0);
+                    self.buf.extend_from_slice(&1.0f32.to_le_bytes());
+                    for x in span {
+                        self.buf.extend_from_slice(&x.to_le_bytes());
+                    }
                 }
             }
         }

@@ -51,7 +51,12 @@ impl RecipeConfig {
             }
             _ => ("fp32", "fp32", "f32"),
         };
-        Self { name: grad_recipe_of(name).into(), m_fmt: m.into(), v_fmt: v.into(), master_dtype: master.into() }
+        Self {
+            name: grad_recipe_of(name).into(),
+            m_fmt: m.into(),
+            v_fmt: v.into(),
+            master_dtype: master.into(),
+        }
     }
 }
 
@@ -96,6 +101,17 @@ pub struct TrainConfig {
     /// (production protection). Disable to expose the paper's hard
     /// divergence: one poisoned update permanently corrupts training.
     pub skip_nonfinite_updates: bool,
+    /// compress the gradient collective's wire legs to FP8 with
+    /// per-chunk pow2 auto-scales (FP8-LM-style). `false` keeps the
+    /// bit-exact f32 collective — the pinned baseline schedule.
+    pub collective_fp8: bool,
+    /// FP8 wire format for the compressed collective
+    /// ("e4m3" | "e5m2")
+    pub collective_fmt: String,
+    /// keep the ZeRO-1 Adam moment shards FP8-packed between steps.
+    /// Packing is exact-verified per chunk (raw-f32 fallback), so this
+    /// never changes the numbers — only per-worker resident bytes.
+    pub pack_moments: bool,
     /// log / checkpoint cadence
     pub log_every: usize,
     pub ckpt_every: usize,
@@ -138,6 +154,9 @@ impl Default for TrainConfig {
             seed_outlier_channel: false,
             seed_outlier_gain: 3.0,
             skip_nonfinite_updates: true,
+            collective_fp8: false,
+            collective_fmt: "e5m2".into(),
+            pack_moments: true,
             log_every: 10,
             ckpt_every: 0,
             out_dir: "runs/default".into(),
@@ -193,6 +212,9 @@ impl TrainConfig {
                 "train.skip_nonfinite_updates" | "skip_nonfinite_updates" => {
                     c.skip_nonfinite_updates = v.as_bool()?
                 }
+                "collective.fp8" | "collective_fp8" => c.collective_fp8 = v.as_bool()?,
+                "collective.fmt" | "collective_fmt" => c.collective_fmt = v.as_str()?,
+                "train.pack_moments" | "pack_moments" => c.pack_moments = v.as_bool()?,
                 "train.log_every" | "log_every" => c.log_every = v.as_usize()?,
                 "train.ckpt_every" | "ckpt_every" => c.ckpt_every = v.as_usize()?,
                 "train.out_dir" | "out_dir" => c.out_dir = v.as_str()?,
@@ -228,6 +250,12 @@ impl TrainConfig {
         if !(c.recovery_history_shrink > 0.0 && c.recovery_history_shrink <= 1.0) {
             return Err("recovery_history_shrink must be in (0, 1]".into());
         }
+        if !matches!(c.collective_fmt.as_str(), "e4m3" | "e5m2") {
+            return Err(format!(
+                "collective_fmt must be 'e4m3' or 'e5m2' (got '{}')",
+                c.collective_fmt
+            ));
+        }
         Ok(c)
     }
 
@@ -258,6 +286,9 @@ impl TrainConfig {
             ("grad_accum", Json::Num(self.grad_accum as f64)),
             ("amax_history", Json::Num(self.amax_history as f64)),
             ("seed_outlier_channel", Json::Bool(self.seed_outlier_channel)),
+            ("collective_fp8", Json::Bool(self.collective_fp8)),
+            ("collective_fmt", Json::Str(self.collective_fmt.clone())),
+            ("pack_moments", Json::Bool(self.pack_moments)),
             ("snapshot_every", Json::Num(self.snapshot_every as f64)),
             ("snapshot_keep", Json::Num(self.snapshot_keep as f64)),
             ("max_recoveries", Json::Num(self.max_recoveries as f64)),
@@ -295,6 +326,29 @@ mod tests {
     #[test]
     fn unknown_key_rejected() {
         assert!(TrainConfig::load(None, &[("nope".into(), "1".into())]).is_err());
+    }
+
+    #[test]
+    fn collective_keys_parse_and_validate() {
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("collective.fp8".into(), "true".into()),
+                ("collective_fmt".into(), "e4m3".into()),
+                ("pack_moments".into(), "false".into()),
+            ],
+        )
+        .unwrap();
+        assert!(c.collective_fp8);
+        assert_eq!(c.collective_fmt, "e4m3");
+        assert!(!c.pack_moments);
+        let d = TrainConfig::default();
+        assert!(!d.collective_fp8, "bit-exact f32 collective must be the default");
+        assert!(d.pack_moments, "sharded FP8 residency is the default memory story");
+        assert!(
+            TrainConfig::load(None, &[("collective_fmt".into(), "fp16".into())]).is_err(),
+            "only the two FP8 wire formats exist"
+        );
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! decides which additions happen, threads only decide *where* the
 //! per-element additions run.
 //!
-//! Two averaging variants:
+//! Three variants:
 //! * [`allreduce_mean`] — sum, scale, broadcast into every replica.
 //!   This mirrors collective semantics (every rank holds the result)
 //!   and is what probe/analysis code should use when it reads a
@@ -17,8 +17,15 @@
 //!   consumes only the canonical rank-0 copy and overwrites every
 //!   replica at the top of the next step, so the broadcast was W-1
 //!   dead memcpys of the full gradient per step.
+//! * [`grad_collective`] — the step loop's entry point: a
+//!   deterministic reduce-scatter → mean → all-gather that optionally
+//!   compresses both wire legs to FP8 with per-chunk pow2 auto-scales
+//!   (FP8-LM-style), falling back bit-exactly to the rank-0 reduce
+//!   when `collective_fp8` is off. Returns [`CollectiveStats`] — the
+//!   bytes-on-the-wire accounting the perf bench records.
 
-use crate::util::par::{par_partials, par_zip};
+use crate::fp8::{bulk, Fp8Format};
+use crate::util::par::{max_threads, par_partials, par_zip, PAR_THRESHOLD};
 
 /// Fixed accumulation chunk for [`global_norm`]. This is not a tuning
 /// knob: it *defines* the f64 summation order (per-chunk partials,
@@ -82,6 +89,163 @@ pub fn allreduce_mean(buffers: &mut [Vec<f32>]) {
     let (canon, rest) = buffers.split_at_mut(1);
     for b in rest {
         b.copy_from_slice(&canon[0]);
+    }
+}
+
+/// Bytes-on-the-wire accounting for one gradient collective, summed
+/// over the whole pod (every rank's sends across both legs). In a
+/// ring reduce-scatter each of the `W` ranks transmits `(W-1)/W · n`
+/// elements, and the all-gather moves the same volume back, so the
+/// raw-f32 pod total is `2·(W-1)·n·4` bytes; the FP8 path ships one
+/// byte per element plus a 4-byte pow2 scale per chunk on each leg.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CollectiveStats {
+    /// gradient elements reduced
+    pub elems: usize,
+    /// pod-total wire bytes the executed configuration moves
+    pub wire_bytes: u64,
+    /// pod-total wire bytes the raw-f32 collective would move
+    pub wire_bytes_f32: u64,
+}
+
+impl CollectiveStats {
+    /// Compression ratio on the wire (1.0 for the f32 path / W = 1).
+    pub fn wire_ratio(&self) -> f64 {
+        if self.wire_bytes_f32 == 0 {
+            1.0
+        } else {
+            self.wire_bytes as f64 / self.wire_bytes_f32 as f64
+        }
+    }
+}
+
+/// Reusable encode scratch for the FP8 collective: one byte buffer
+/// per fan-out lane, grown on first use and persisted by the owner
+/// (the trainer keeps one across steps) so the per-step hot path
+/// allocates nothing in steady state — the same discipline as the
+/// trainer's `AdamScratch`.
+#[derive(Default)]
+pub struct CollectiveScratch {
+    lanes: Vec<Vec<u8>>,
+}
+
+/// Quantize-dequantize `buf` in place on absolute `chunk`-grid spans,
+/// each with its own pow2 JIT scale (`fp8::compute_scale` from the
+/// span amax — the FP8-LM auto-scaling recipe). Chunks are independent
+/// and processed with a fixed grid, so the scoped-thread fan-out is
+/// bit-deterministic; NaN elements ride through as NaN bytes
+/// (`bulk::pack_scaled_into` propagates them without touching the
+/// scale) and surface later in the global-norm clip.
+fn qdq_chunks(fmt: Fp8Format, chunk: usize, buf: &mut [f32], scratch: &mut CollectiveScratch) {
+    assert!(chunk >= 1, "collective chunk size must be >= 1");
+    let n = buf.len();
+    if n == 0 {
+        return;
+    }
+    let n_chunks = n.div_ceil(chunk);
+    let qdq_span = |span: &mut [f32], bytes: &mut Vec<u8>| {
+        for c in span.chunks_mut(chunk) {
+            let scale = bulk::pack_scaled_into(fmt, c, bytes);
+            bulk::unpack_scaled_buf(fmt, bytes, scale, c);
+        }
+    };
+    let threads = if n < PAR_THRESHOLD { 1 } else { max_threads().min(n_chunks).max(1) };
+    if scratch.lanes.len() < threads {
+        scratch.lanes.resize_with(threads, Vec::new);
+    }
+    if threads <= 1 {
+        qdq_span(buf, &mut scratch.lanes[0]);
+        return;
+    }
+    // deal whole chunks to threads in contiguous runs so every chunk
+    // is scaled over exactly the span the serial schedule would use
+    let per = n_chunks.div_ceil(threads) * chunk;
+    let qdq_span = &qdq_span;
+    std::thread::scope(|s| {
+        let mut lanes = scratch.lanes.iter_mut();
+        let mut spans = buf.chunks_mut(per);
+        let inline = spans.next().zip(lanes.next());
+        for (span, bytes) in spans.zip(lanes) {
+            s.spawn(move || qdq_span(span, bytes));
+        }
+        if let Some((span, bytes)) = inline {
+            qdq_span(span, bytes);
+        }
+    });
+}
+
+/// One data-parallel gradient collective: deterministic reduce-scatter
+/// → mean → all-gather, with optional FP8 compression of both wire
+/// legs (FP8-LM-style per-chunk pow2 auto-scale). On return,
+/// `buffers[0]` holds the full gathered average — the canonical copy
+/// the trainer consumes; like [`reduce_mean_into_rank0`], the other
+/// replicas keep stale partial-sum state (every replica buffer is
+/// overwritten at the top of the next step).
+///
+/// * `fp8 = None` — **bit-identical to [`reduce_mean_into_rank0`]**,
+///   the pinned serial schedule (tree sum + 1/W scale). This is the
+///   `collective_fp8 = false` fallback.
+/// * `fp8 = Some(fmt)` — models FP8-LM's compressed collective:
+///   1. every worker's contribution is quantize-dequantized on the
+///      absolute `chunk` grid (what the reduce-scatter leg delivers
+///      to each chunk's owner);
+///   2. the tree sum + 1/W mean runs in f32 (owners accumulate
+///      partial sums in full precision, as FP8-LM does);
+///   3. the averaged result is quantize-dequantized per chunk again
+///      (what the all-gather leg delivers to every rank — including
+///      the owner, so one value is THE gradient everywhere).
+///
+/// Every stage is elementwise or fixed-order over a fixed chunk grid,
+/// so the result is bit-deterministic at any thread count. `W = 1`
+/// moves no bytes and skips quantization entirely (nothing crosses a
+/// wire). Shard boundaries produced by
+/// [`ShardLayout::chunk_aligned`](crate::optimizer::ShardLayout) land
+/// on this same chunk grid, so per-shard and whole-buffer chunking
+/// are the same partition.
+pub fn grad_collective(
+    buffers: &mut [Vec<f32>],
+    fp8: Option<Fp8Format>,
+    chunk: usize,
+) -> CollectiveStats {
+    grad_collective_with(buffers, fp8, chunk, &mut CollectiveScratch::default())
+}
+
+/// [`grad_collective`] with caller-owned encode scratch — the step
+/// loop's entry point (the trainer persists one [`CollectiveScratch`]
+/// so the per-step FP8 path performs no steady-state allocation).
+pub fn grad_collective_with(
+    buffers: &mut [Vec<f32>],
+    fp8: Option<Fp8Format>,
+    chunk: usize,
+    scratch: &mut CollectiveScratch,
+) -> CollectiveStats {
+    let w = buffers.len();
+    assert!(w >= 1);
+    let n = buffers[0].len();
+    if w == 1 {
+        reduce_mean_into_rank0(buffers);
+        return CollectiveStats { elems: n, wire_bytes: 0, wire_bytes_f32: 0 };
+    }
+    let legs = 2u64 * (w as u64 - 1); // reduce-scatter + all-gather
+    let wire_f32 = legs * n as u64 * 4;
+    match fp8 {
+        None => {
+            reduce_mean_into_rank0(buffers);
+            CollectiveStats { elems: n, wire_bytes: wire_f32, wire_bytes_f32: wire_f32 }
+        }
+        Some(fmt) => {
+            for buf in buffers.iter_mut() {
+                qdq_chunks(fmt, chunk, buf, scratch);
+            }
+            reduce_mean_into_rank0(buffers);
+            qdq_chunks(fmt, chunk, &mut buffers[0], scratch);
+            let n_chunks = n.div_ceil(chunk) as u64;
+            CollectiveStats {
+                elems: n,
+                wire_bytes: legs * (n as u64 + 4 * n_chunks),
+                wire_bytes_f32: wire_f32,
+            }
+        }
     }
 }
 
@@ -168,6 +332,41 @@ mod tests {
     #[test]
     fn norm_is_l2() {
         assert!((global_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn collective_f32_path_bit_matches_rank0_reduce() {
+        for w in [1usize, 2, 4, 5] {
+            let mk = || -> Vec<Vec<f32>> {
+                (0..w)
+                    .map(|r| (0..313).map(|i| ((r * 37 + i) as f32).sin() * 0.01).collect())
+                    .collect()
+            };
+            let mut a = mk();
+            let mut b = mk();
+            let stats = grad_collective(&mut a, None, 64);
+            reduce_mean_into_rank0(&mut b);
+            for (x, y) in a[0].iter().zip(&b[0]) {
+                assert_eq!(x.to_bits(), y.to_bits(), "w={w}: f32 path must be bit-identical");
+            }
+            assert_eq!(stats.elems, 313);
+            let expect_wire = if w == 1 { 0 } else { 2 * (w as u64 - 1) * 313 * 4 };
+            assert_eq!(stats.wire_bytes, expect_wire);
+            assert_eq!(stats.wire_bytes_f32, expect_wire);
+            assert_eq!(stats.wire_ratio(), 1.0);
+        }
+    }
+
+    #[test]
+    fn collective_fp8_wire_accounting() {
+        let n = 1000usize;
+        let chunk = 64usize;
+        let mut bufs: Vec<Vec<f32>> = (0..4).map(|_| vec![0.01f32; n]).collect();
+        let stats = grad_collective(&mut bufs, Some(crate::fp8::E5M2), chunk);
+        let n_chunks = n.div_ceil(chunk) as u64;
+        assert_eq!(stats.wire_bytes, 2 * 3 * (n as u64 + 4 * n_chunks));
+        assert_eq!(stats.wire_bytes_f32, 2 * 3 * n as u64 * 4);
+        assert!(stats.wire_ratio() < 0.3, "ratio {}", stats.wire_ratio());
     }
 
     #[test]

@@ -3,12 +3,17 @@
 //! Per step:
 //! 1. each data-parallel worker runs `grad_accum` microbatches through
 //!    the grad artifact (its own shard of the deterministic corpus);
-//! 2. gradients are averaged by a tree all-reduce over the worker
-//!    results (simulating the Gaudi2 pod's collective);
+//! 2. gradients go through a deterministic reduce-scatter → all-gather
+//!    collective (simulating the Gaudi2 pod's), optionally compressing
+//!    both wire legs to FP8 with per-chunk pow2 auto-scales
+//!    (`collective_fp8`, FP8-LM-style) — bit-identical to the plain
+//!    tree reduce when off;
 //! 3. the global grad-norm clip factor is computed in Rust;
-//! 4. each worker applies AdamW to its ZeRO-1 shard via the chunked
-//!    `adam_*` artifact (FP8 moments per recipe) and shards are
-//!    all-gathered back into the replicated parameter buffer;
+//! 4. each worker applies AdamW to the chunks it owns under the
+//!    chunk-aligned ZeRO-1 owner map via the chunked `adam_*` artifact
+//!    (its moment shard is the only copy, FP8-packed between steps per
+//!    recipe) and params are all-gathered back into the replicated
+//!    parameter buffer;
 //! 5. the delayed-scaling manager ingests the step's amax report and
 //!    emits next-step scales; the divergence detector watches the loss
 //!    and overflow counters.

@@ -1,14 +1,24 @@
-//! The training loop: parallel per-worker grad artifacts → all-reduce
-//! → clip → chunked AdamW artifact → delayed-scaling update →
-//! divergence check.
+//! The training loop: parallel per-worker grad artifacts → gradient
+//! collective → clip → sharded chunked AdamW artifact →
+//! delayed-scaling update → divergence check.
 //!
-//! Hot-path structure (see rust/EXPERIMENTS.md §Perf):
+//! Hot-path structure (see rust/EXPERIMENTS.md §Perf and §Sharding):
 //! * the `dp_workers` gradient passes run concurrently on scoped
 //!   threads (the PJRT CPU client accepts concurrent executions), with
 //!   a fixed-order merge of loss/amax/monitor so results are
 //!   bit-identical to the serial schedule at any worker count;
-//! * the gradient average uses the broadcast-free
-//!   `reduce_mean_into_rank0` — only the canonical copy is consumed;
+//! * the gradient collective is a deterministic reduce-scatter →
+//!   all-gather (`allreduce::grad_collective`) that optionally
+//!   compresses both wire legs to FP8 with per-chunk pow2 auto-scales
+//!   (`collective_fp8`); with the flag off it is bit-identical to the
+//!   broadcast-free rank-0 reduce, and only the canonical copy is
+//!   consumed either way;
+//! * optimizer state is **ZeRO-1 sharded**: the Adam moments live in
+//!   per-worker `MomentBuffer` shards on a chunk-aligned owner map
+//!   (`ShardLayout::chunk_aligned` over the Adam artifact chunk), each
+//!   worker updates only its owned chunks, and the shards re-pack to
+//!   exact-verified FP8 between steps (`pack_moments`) — per-worker
+//!   resident moment bytes are `~total/W` instead of `4·total`;
 //! * `apply_adam` runs on persistent per-thread scratch (chunk pads as
 //!   reusable `HostTensor`s, a persistent `p_flat`, a cached chunk work
 //!   list) so the steady-state step makes no per-chunk heap
@@ -19,13 +29,16 @@ use std::sync::Arc;
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::TrainConfig;
-use crate::coordinator::allreduce::{clip_factor, global_norm, reduce_mean_into_rank0};
+use crate::coordinator::allreduce::{
+    clip_factor, global_norm, grad_collective_with, CollectiveScratch, CollectiveStats,
+};
 use crate::coordinator::divergence::{DivergenceDetector, Verdict};
 use crate::coordinator::params::ParamStore;
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::{Batcher, Corpus, CorpusConfig};
+use crate::fp8::{Fp8Format, E4M3, E5M2};
 use crate::metrics::{StepMeter, StepStats};
-use crate::optimizer::{decay_groups, ShardLayout};
+use crate::optimizer::{decay_groups, MomentBuffer, MomentStore, ShardLayout};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::{Artifact, Runtime};
 use crate::scaling::{Policy, ScaleManager};
@@ -109,11 +122,24 @@ pub struct Trainer {
     pub detector: DivergenceDetector,
     batcher: Batcher,
     sched: LrSchedule,
-    pub shards: ShardLayout,
-    /// flat AdamW moments (values lie on the recipe's fp8 grid; the
-    /// checkpointer stores them as real u8 — see checkpoint::Dtype)
-    pub m_flat: Vec<f32>,
-    pub v_flat: Vec<f32>,
+    /// ZeRO-1 owner map: the flat param space split across
+    /// `dp_workers` on boundaries aligned to the Adam artifact chunk,
+    /// so every per-chunk FP8 moment grid has exactly one owner
+    pub shard_map: ShardLayout,
+    /// per-worker first-moment shards (values lie on the recipe's fp8
+    /// grid; exact-verified FP8 packing between steps when
+    /// `pack_moments` is on — see optimizer::MomentBuffer)
+    m_shards: Vec<MomentBuffer>,
+    /// per-worker second-moment shards (see `m_shards`)
+    v_shards: Vec<MomentBuffer>,
+    /// FP8 wire format of the compressed gradient collective
+    /// (None = bit-exact f32 collective, the pinned baseline)
+    collective_fmt: Option<Fp8Format>,
+    /// wire accounting of the most recent step's gradient collective
+    last_collective: CollectiveStats,
+    /// reusable encode scratch for the FP8 collective (not state —
+    /// snapshots never capture it)
+    collective_scratch: CollectiveScratch,
     meter: StepMeter,
     pub step: usize,
     /// run the per-worker grad passes inline instead of on scoped
@@ -121,10 +147,11 @@ pub struct Trainer {
     /// bit-for-bit (pinned by tests/integration.rs)
     pub force_serial_workers: bool,
     /// set when apply_adam failed mid-run: chunk results stream into
-    /// `m_flat`/`v_flat` in place (the allocation-free design), so an
-    /// artifact error leaves the moments partially advanced while the
-    /// params are not. Retrying a step from that state would silently
-    /// diverge; every later step() refuses instead.
+    /// the per-worker moment shards in place (the allocation-free
+    /// design), so an artifact error leaves the moments partially
+    /// advanced while the params are not. Retrying a step from that
+    /// state would silently diverge; every later step() refuses
+    /// instead.
     poisoned: bool,
     // ---- reusable step state (no steady-state allocations) ----
     worker_grads: Vec<Vec<f32>>,
@@ -225,10 +252,39 @@ impl Trainer {
             .min(4);
         let adam_scratch = (0..adam_threads).map(|_| AdamScratch::new(chunk)).collect();
 
+        // ZeRO-1 state: chunk-aligned owner map + per-worker moment
+        // shards in the recipe's storage format, exact-mode so packing
+        // between steps is bit-preserving by construction
+        let shard_map = ShardLayout::chunk_aligned(total, cfg.dp_workers, chunk);
+        let m_store = MomentStore::from_name(&rc.m_fmt);
+        let v_store = MomentStore::from_name(&rc.v_fmt);
+        let mk_shards = |store: MomentStore| -> Vec<MomentBuffer> {
+            shard_map
+                .shards
+                .iter()
+                .map(|&(_, len)| MomentBuffer::zeros_exact(len, store, chunk))
+                .collect()
+        };
+        // validated here too, not only in TrainConfig::load — tests and
+        // embedders build configs programmatically, and a typo silently
+        // mapped to a default would train on different wire numerics
+        // than the snapshot fingerprint records
+        let wire_fmt = match cfg.collective_fmt.as_str() {
+            "e4m3" => E4M3,
+            "e5m2" => E5M2,
+            other => {
+                return Err(anyhow!("collective_fmt must be 'e4m3' or 'e5m2' (got '{other}')"))
+            }
+        };
+        let collective_fmt = cfg.collective_fp8.then_some(wire_fmt);
+
         Ok(Self {
-            shards: ShardLayout::new(total, cfg.dp_workers),
-            m_flat: vec![0.0; total],
-            v_flat: vec![0.0; total],
+            m_shards: mk_shards(m_store),
+            v_shards: mk_shards(v_store),
+            shard_map,
+            collective_fmt,
+            last_collective: CollectiveStats::default(),
+            collective_scratch: CollectiveScratch::default(),
             worker_grads: vec![Vec::new(); cfg.dp_workers],
             p_flat: Vec::new(),
             adam_work,
@@ -285,6 +341,57 @@ impl Trainer {
     /// moment sections to line up with the grids the kernel produced.
     pub fn adam_chunk(&self) -> usize {
         self.adam_art.manifest.chunk
+    }
+
+    /// Gathered full copies of the flat Adam moments, assembled from
+    /// the per-worker ZeRO-1 shards in shard order (= global offset
+    /// order, so the result is the exact flat layout pre-sharding code
+    /// kept). Packed FP8 shards are decoded through the pure LUT path
+    /// without disturbing their resident state — exact-mode packing
+    /// makes the gathered bits identical to what `apply_adam` last
+    /// wrote.
+    pub fn moments_flat(&self) -> (Vec<f32>, Vec<f32>) {
+        let total = self.params.total_elems();
+        let gather = |shards: &[MomentBuffer]| -> Vec<f32> {
+            let mut out = Vec::with_capacity(total);
+            let mut tmp = Vec::new();
+            for b in shards {
+                b.snapshot_into(&mut tmp);
+                out.extend_from_slice(&tmp);
+            }
+            out
+        };
+        (gather(&self.m_shards), gather(&self.v_shards))
+    }
+
+    /// Scatter full flat moments back into the per-worker shards
+    /// (campaign-snapshot restore; lengths pre-validated by the
+    /// caller).
+    pub(crate) fn set_moments_flat(&mut self, m: &[f32], v: &[f32]) {
+        for (b, &(off, len)) in self.m_shards.iter_mut().zip(&self.shard_map.shards) {
+            b.load_from(&m[off..off + len]);
+        }
+        for (b, &(off, len)) in self.v_shards.iter_mut().zip(&self.shard_map.shards) {
+            b.load_from(&v[off..off + len]);
+        }
+    }
+
+    /// Resident Adam-moment bytes on the heaviest worker — the ZeRO-1
+    /// per-worker memory measurement the perf bench records (compare
+    /// against `8 · total_elems` for the replicated-f32 baseline).
+    pub fn moment_bytes_per_worker(&self) -> usize {
+        self.m_shards
+            .iter()
+            .zip(&self.v_shards)
+            .map(|(m, v)| m.resident_bytes() + v.resident_bytes())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Wire-byte accounting of the most recent step's gradient
+    /// collective (zeroed until the first step completes).
+    pub fn collective_stats(&self) -> CollectiveStats {
+        self.last_collective
     }
 
     /// A training batch tensor (for probe/analysis passes that re-run
@@ -417,10 +524,18 @@ impl Trainer {
         let loss =
             (loss_sum / (self.cfg.dp_workers * self.cfg.grad_accum) as f64) as f32;
 
-        // ---- (2) reduce: sum + scale into rank 0 only. The broadcast
-        //      of the old allreduce_mean was dead work — every replica
-        //      buffer is overwritten by the next step's worker pass.
-        reduce_mean_into_rank0(&mut self.worker_grads);
+        // ---- (2) gradient collective: deterministic reduce-scatter →
+        //      (optional per-chunk FP8 encode, FP8-LM-style) →
+        //      all-gather; rank 0 holds the gathered average (the only
+        //      copy consumed — every replica buffer is overwritten by
+        //      the next step's worker pass). With collective_fp8 off
+        //      this is bit-identical to the rank-0 reduce.
+        self.last_collective = grad_collective_with(
+            &mut self.worker_grads,
+            self.collective_fmt,
+            self.shard_map.chunk,
+            &mut self.collective_scratch,
+        );
 
         // ---- (3) global-norm clip. Non-finite grads either skip the
         //      update (production protection) or pass through at clip 1
@@ -463,6 +578,14 @@ impl Trainer {
     /// embarrassingly parallel over shards, and the PJRT CPU client
     /// accepts concurrent executions.
     ///
+    /// Sharded state: each chunk's moments live only in its owner's
+    /// `MomentBuffer` shard (the chunk-aligned `shard_map` decides the
+    /// owner), so a unit's m/v windows are carved from that worker's
+    /// shard while the param/grad windows stay global — the in-place
+    /// param rewrite at the end is the simulated pod's parameter
+    /// all-gather. Execution lanes are just threads; which lane runs a
+    /// chunk never changes any bit (chunks are independent).
+    ///
     /// Allocation discipline: the chunk work list is cached, the flat
     /// parameter scratch persists across steps, each thread owns a
     /// reusable `AdamScratch` pad set, and artifact outputs are copied
@@ -478,28 +601,41 @@ impl Trainer {
         let step_f = (self.step + 1) as f32;
         let n_threads = self.adam_scratch.len().min(self.adam_work.len().max(1));
 
+        // unpack every worker's moment shards (no-op when already
+        // resident f32); the element borrows are disjoint per worker
+        let mut m_views: Vec<&mut [f32]> =
+            self.m_shards.iter_mut().map(|b| b.as_f32().as_mut_slice()).collect();
+        let mut v_views: Vec<&mut [f32]> =
+            self.v_shards.iter_mut().map(|b| b.as_f32().as_mut_slice()).collect();
+
         // carve the flat buffers into per-chunk disjoint windows
-        // (offset order) and deal them round-robin to the worker lanes;
-        // chunks are uniform (C-aligned), so static assignment balances
+        // (offset order; m/v carve from the owning worker's shard) and
+        // deal them round-robin to the worker lanes; chunks are
+        // uniform (C-aligned), so static assignment balances
         let mut lanes: Vec<Vec<AdamUnit>> = (0..n_threads)
             .map(|_| Vec::with_capacity(self.adam_work.len().div_ceil(n_threads.max(1))))
             .collect();
         {
             let mut pc = &mut p_flat[..];
-            let mut mc = &mut self.m_flat[..];
-            let mut vc = &mut self.v_flat[..];
             let mut gc = g_flat.as_slice();
             let mut cursor = 0usize;
+            // per-owner consumed position (local coordinates)
+            let mut pos = vec![0usize; self.shard_map.n_workers()];
             for (i, &(off, len, wd)) in self.adam_work.iter().enumerate() {
+                let owner = self.shard_map.owner_of(off);
+                let local = off - self.shard_map.of_worker(owner).0;
                 let skip = off - cursor;
                 let (g_win, g_rest) = gc[skip..].split_at(len);
                 gc = g_rest;
+                let m_win = carve(&mut m_views[owner], local - pos[owner], len);
+                let v_win = carve(&mut v_views[owner], local - pos[owner], len);
+                pos[owner] = local + len;
                 lanes[i % n_threads].push(AdamUnit {
                     len,
                     wd,
                     p: carve(&mut pc, skip, len),
-                    m: carve(&mut mc, skip, len),
-                    v: carve(&mut vc, skip, len),
+                    m: m_win,
+                    v: v_win,
                     g: g_win,
                 });
                 cursor = off + len;
@@ -532,8 +668,9 @@ impl Trainer {
 
         // restore the reusable buffers unconditionally (no panic on a
         // later step), but an error here means some chunks already
-        // streamed their results into m_flat/v_flat while params were
-        // not scattered — that state must not be stepped from again
+        // streamed their results into the moment shards while params
+        // were not scattered — that state must not be stepped from
+        // again
         self.p_flat = p_flat;
         self.worker_grads = grads;
         if run_res.is_err() {
@@ -541,6 +678,15 @@ impl Trainer {
         }
         run_res?;
         self.params.unflatten_from(&self.p_flat);
+        // re-pack the moment shards between steps (the ZeRO-1
+        // resident-memory story); exact-mode packing is bit-preserving
+        // by construction, so this can never change the next step's
+        // numbers (integration-test pinned via `pack_moments = false`)
+        if self.cfg.pack_moments {
+            for b in self.m_shards.iter_mut().chain(self.v_shards.iter_mut()) {
+                b.pack();
+            }
+        }
         Ok(())
     }
 

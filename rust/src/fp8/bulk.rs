@@ -176,6 +176,37 @@ pub fn pack_scaled_into(fmt: Fp8Format, xs: &[f32], out: &mut Vec<u8>) -> f32 {
     scale
 }
 
+/// [`pack_scaled_into`] accepted only when the roundtrip is **bit
+/// exact**: encodes `xs` into `out` with the per-slice pow2 auto scale
+/// and returns `Some(scale)` iff `decode(bytes) / scale` reproduces
+/// every f32 bit of `xs`; otherwise clears `out` and returns `None`.
+///
+/// This is the write-time verification shared by the checkpoint
+/// layer's exact-FP8 sections ([`crate::checkpoint::Writer`]) and the
+/// optimizer's resident moment shards
+/// ([`crate::optimizer::MomentBuffer`]): data on a per-slice FP8 grid
+/// (chunked Adam moment outputs) packs at 1 byte/element, anything
+/// else — including NaNs, whose payload bits a decode cannot
+/// reproduce — must fall back to raw f32 at the caller.
+pub fn pack_scaled_exact_into(fmt: Fp8Format, xs: &[f32], out: &mut Vec<u8>) -> Option<f32> {
+    let scale = pack_scaled_into(fmt, xs, out);
+    if !scale.is_finite() {
+        out.clear();
+        return None;
+    }
+    let lut = decode_lut(fmt);
+    let exact = xs
+        .iter()
+        .zip(out.iter())
+        .all(|(&x, &b)| (lut[b as usize] / scale).to_bits() == x.to_bits());
+    if exact {
+        Some(scale)
+    } else {
+        out.clear();
+        None
+    }
+}
+
 /// Bulk [`super::unpack_scaled`]: LUT decode + descale into a
 /// caller-owned buffer (cleared + resized).
 pub fn unpack_scaled_into(fmt: Fp8Format, bytes: &[u8], scale: f32, out: &mut Vec<f32>) {
@@ -276,6 +307,36 @@ mod tests {
             for (i, (&x, &y)) in xs.iter().zip(&back).enumerate() {
                 assert_eq!(y.to_bits(), fmt.decode(fmt.encode(x)).to_bits(), "{fmt:?} i={i}");
             }
+        }
+    }
+
+    #[test]
+    fn pack_scaled_exact_accepts_grid_rejects_offgrid() {
+        for fmt in [E4M3, E5M2] {
+            // on-grid: decode every finite code at a pow2 scale — the
+            // JIT scale must land back on a grid the codes reproduce
+            let scale = 0.25f32;
+            let xs: Vec<f32> = (0..=255u8)
+                .map(|c| fmt.decode(c))
+                .filter(|v| v.is_finite())
+                .map(|v| v / scale)
+                .collect();
+            let mut bytes = Vec::new();
+            let got = pack_scaled_exact_into(fmt, &xs, &mut bytes);
+            assert!(got.is_some(), "{fmt:?}: grid data must pack exactly");
+            assert_eq!(bytes.len(), xs.len());
+            let mut back = Vec::new();
+            unpack_scaled_into(fmt, &bytes, got.unwrap(), &mut back);
+            for (a, b) in xs.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{fmt:?}: roundtrip must be bit-exact");
+            }
+            // off-grid: arbitrary irrationals cannot roundtrip
+            let off: Vec<f32> = (0..100).map(|i| ((i as f32) * 0.7311).sin() * 3.7).collect();
+            assert!(pack_scaled_exact_into(fmt, &off, &mut bytes).is_none());
+            assert!(bytes.is_empty(), "{fmt:?}: rejected pack must clear the buffer");
+            // NaN payload bits cannot survive a decode — must reject
+            let nans = [f32::from_bits(0x7fc0_1234), 1.0, 2.0];
+            assert!(pack_scaled_exact_into(fmt, &nans, &mut bytes).is_none());
         }
     }
 

@@ -173,8 +173,9 @@ fn save_checkpoint(t: &Trainer, out_dir: &std::path::Path, step: usize) -> Resul
     for (spec, tensor) in t.params.specs.iter().zip(&t.params.tensors) {
         w.tensor(&spec.name, master, tensor.f32s());
     }
-    w.tensor("adam.m", m_dt, &t.m_flat);
-    w.tensor("adam.v", v_dt, &t.v_flat);
+    let (m, v) = t.moments_flat(); // gather the ZeRO-1 shards
+    w.tensor("adam.m", m_dt, &m);
+    w.tensor("adam.v", v_dt, &v);
     let path = out_dir.join(format!("step{step:06}.ckpt"));
     let bytes = w.finish(&path)?;
     println!("checkpoint {} ({:.1} MiB)", path.display(), bytes as f64 / 1048576.0);
@@ -194,7 +195,10 @@ fn cmd_tables() -> Result<()> {
     let w = Workload::llama7b();
     for dev in [&GAUDI2, &A6000_ADA] {
         println!("\nThroughput model — {} (paper Tables 3/5 shape):", dev.name);
-        println!("{:34} {:>12} {:>10} {:>8}  status", "configuration", "samples/s", "speedup", "TFLOPS");
+        println!(
+            "{:34} {:>12} {:>10} {:>8}  status",
+            "configuration", "samples/s", "speedup", "TFLOPS"
+        );
         for row in throughput_table(dev, &w, 8.0) {
             println!(
                 "{:34} {:>12.2} {:>9.1}% {:>8.0}  {}",

@@ -35,17 +35,47 @@ impl MomentStore {
     }
 }
 
+/// One packed chunk of a [`MomentBuffer`]: FP8 bytes + scale on the
+/// hot path, raw f32 when exact-mode verification rejected the FP8
+/// roundtrip. Both payload vecs persist (empty but with capacity)
+/// across pack/unpack cycles so steady-state repacking allocates
+/// nothing; the invariant is that at most one of them is non-empty.
+struct ChunkSlot {
+    bytes: Vec<u8>,
+    raw: Vec<f32>,
+    scale: f32,
+}
+
+impl ChunkSlot {
+    fn empty() -> Self {
+        Self { bytes: Vec::new(), raw: Vec::new(), scale: 1.0 }
+    }
+}
+
 /// A moment buffer: f32 working view + optional packed storage.
 ///
 /// The artifact consumes/produces f32 values that lie exactly on the
 /// fp8 grid (the kernel quantizes them); `pack()` converts to real u8
 /// between steps and `unpack()` restores before the next step, so the
 /// resident set matches the paper's memory story.
+///
+/// Two packing disciplines:
+/// * [`zeros`](MomentBuffer::zeros) — JIT-scaled FP8 pack, lossy for
+///   off-grid data (analysis/storage uses);
+/// * [`zeros_exact`](MomentBuffer::zeros_exact) — each chunk is
+///   verified at pack time (`fp8::bulk::pack_scaled_exact_into`, the
+///   same check the checkpoint layer's exact-FP8 sections use) and
+///   falls back to raw f32 when the roundtrip is not bit-exact, so
+///   `unpack(pack(x))` is the identity **by construction**. The
+///   trainer's resident ZeRO-1 moment shards use this mode: packing
+///   between steps can never change the numbers.
 pub struct MomentBuffer {
     pub store: MomentStore,
     pub chunk: usize,
-    /// packed representation (chunked) or f32, depending on `store`
-    packed: Vec<(Vec<u8>, f32)>,
+    /// chunks stored as FP8 only when bit-exact, else raw f32
+    exact: bool,
+    /// packed representation (chunked); unused for the f32 store
+    slots: Vec<ChunkSlot>,
     f32_buf: Vec<f32>,
     len: usize,
 }
@@ -55,10 +85,18 @@ impl MomentBuffer {
         Self {
             store,
             chunk,
-            packed: Vec::new(),
+            exact: false,
+            slots: Vec::new(),
             f32_buf: vec![0.0; len],
             len,
         }
+    }
+
+    /// Like [`zeros`](MomentBuffer::zeros) but with per-chunk
+    /// write-time roundtrip verification: packing is guaranteed
+    /// bit-preserving (FP8 when on-grid, raw-f32 fallback otherwise).
+    pub fn zeros_exact(len: usize, store: MomentStore, chunk: usize) -> Self {
+        Self { exact: true, ..Self::zeros(len, store, chunk) }
     }
 
     pub fn len(&self) -> usize {
@@ -80,22 +118,33 @@ impl MomentBuffer {
             };
             let mut out = vec![0.0f32; self.len];
             let mut off = 0;
-            for (bytes, scale) in &self.packed {
-                let n = bytes.len().min(self.len - off);
-                fp8::bulk::unpack_scaled_buf(fmt, &bytes[..n], *scale, &mut out[off..off + n]);
+            for slot in &self.slots {
+                let stored = if slot.raw.is_empty() { slot.bytes.len() } else { slot.raw.len() };
+                let n = stored.min(self.len - off);
+                if slot.raw.is_empty() {
+                    fp8::bulk::unpack_scaled_buf(
+                        fmt,
+                        &slot.bytes[..n],
+                        slot.scale,
+                        &mut out[off..off + n],
+                    );
+                } else {
+                    out[off..off + n].copy_from_slice(&slot.raw[..n]);
+                }
                 off += n;
             }
             self.f32_buf = out;
-            // keep the byte vec capacities for the next pack()
-            for (bytes, _) in self.packed.iter_mut() {
-                bytes.clear();
+            // keep the payload capacities for the next pack()
+            for slot in self.slots.iter_mut() {
+                slot.bytes.clear();
+                slot.raw.clear();
             }
         }
         &mut self.f32_buf
     }
 
     /// Pack to the storage format (no-op for f32). Reuses the packed
-    /// byte vectors across pack/unpack cycles; only the f32 working
+    /// payload vectors across pack/unpack cycles; only the f32 working
     /// buffer is released (that release *is* the Table 4 story).
     pub fn pack(&mut self) {
         let fmt = match self.store {
@@ -103,14 +152,81 @@ impl MomentBuffer {
             MomentStore::Fp8(f) => f,
         };
         if self.f32_buf.is_empty() {
-            return; // already packed
+            return; // already packed (or empty)
         }
         let n_chunks = self.len.div_ceil(self.chunk).max(1);
-        self.packed.resize_with(n_chunks, || (Vec::new(), 1.0));
-        for (c, slot) in self.f32_buf.chunks(self.chunk).zip(self.packed.iter_mut()) {
-            slot.1 = fp8::bulk::pack_scaled_into(fmt, c, &mut slot.0);
+        self.slots.resize_with(n_chunks, ChunkSlot::empty);
+        for (c, slot) in self.f32_buf.chunks(self.chunk).zip(self.slots.iter_mut()) {
+            if self.exact {
+                match fp8::bulk::pack_scaled_exact_into(fmt, c, &mut slot.bytes) {
+                    Some(s) => {
+                        slot.scale = s;
+                        slot.raw.clear();
+                    }
+                    None => {
+                        slot.bytes.clear();
+                        slot.scale = 1.0;
+                        slot.raw.clear();
+                        slot.raw.extend_from_slice(c);
+                    }
+                }
+            } else {
+                slot.scale = fp8::bulk::pack_scaled_into(fmt, c, &mut slot.bytes);
+                slot.raw.clear();
+            }
         }
         self.f32_buf = Vec::new();
+    }
+
+    /// Copy the current contents into `out` (cleared + refilled)
+    /// **without disturbing the resident state** — decodes packed
+    /// chunks through the pure LUT path. This is the campaign-snapshot
+    /// gather: capture takes `&Trainer`, so it cannot unpack in place.
+    pub fn snapshot_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        if self.f32_buf.len() == self.len {
+            out.extend_from_slice(&self.f32_buf);
+            return;
+        }
+        let fmt = match self.store {
+            MomentStore::Fp8(f) => f,
+            MomentStore::F32 => unreachable!("f32 store never packs"),
+        };
+        out.resize(self.len, 0.0);
+        let mut off = 0;
+        for slot in &self.slots {
+            let stored = if slot.raw.is_empty() { slot.bytes.len() } else { slot.raw.len() };
+            let n = stored.min(self.len - off);
+            if slot.raw.is_empty() {
+                fp8::bulk::unpack_scaled_buf(
+                    fmt,
+                    &slot.bytes[..n],
+                    slot.scale,
+                    &mut out[off..off + n],
+                );
+            } else {
+                out[off..off + n].copy_from_slice(&slot.raw[..n]);
+            }
+            off += n;
+        }
+    }
+
+    /// Overwrite the contents from a flat slice (campaign-snapshot
+    /// scatter). Leaves the buffer in the unpacked state; payload
+    /// capacities are retained for the next `pack()`.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `src.len()` differs from the buffer length — callers
+    /// validate arity before any mutation (snapshot `apply_to`).
+    pub fn load_from(&mut self, src: &[f32]) {
+        assert_eq!(src.len(), self.len, "moment shard size mismatch");
+        self.f32_buf.clear();
+        self.f32_buf.extend_from_slice(src);
+        for slot in self.slots.iter_mut() {
+            slot.bytes.clear();
+            slot.raw.clear();
+        }
     }
 
     /// Resident bytes in the packed state (the Table 4 measurement).
@@ -120,11 +236,14 @@ impl MomentBuffer {
             MomentStore::Fp8(_) => {
                 // the packed slots persist across unpack (capacity
                 // reuse), so "currently packed" is keyed off the f32
-                // working buffer, not off `packed` being non-empty
-                if !self.f32_buf.is_empty() || self.packed.is_empty() {
-                    self.len // would-be packed size
+                // working buffer, not off `slots` being non-empty
+                if !self.f32_buf.is_empty() || self.slots.is_empty() {
+                    self.len // nominal packed size (1 byte/elem target)
                 } else {
-                    self.packed.iter().map(|(b, _)| b.len() + 4).sum()
+                    self.slots
+                        .iter()
+                        .map(|s| s.bytes.len() + s.raw.len() * 4 + 4)
+                        .sum()
                 }
             }
         }
@@ -163,13 +282,24 @@ pub fn decay_groups(params: &[ParamSpec]) -> Vec<DecayGroup> {
 
 /// ZeRO-1 shard layout: the flat space split into `n_workers`
 /// contiguous ranges (optimizer state lives only on its owner).
+///
+/// [`chunk_aligned`](ShardLayout::chunk_aligned) builds the owner map
+/// the trainer uses: shard boundaries land on absolute multiples of
+/// the Adam artifact chunk, so every per-chunk FP8 moment grid (and
+/// every exact-FP8 checkpoint section chunk) has exactly one owner and
+/// gathering the shards back to a flat buffer reproduces the global
+/// chunk grid unchanged.
 #[derive(Clone, Debug)]
 pub struct ShardLayout {
     pub total: usize,
+    /// alignment grain of the shard boundaries (1 for the legacy
+    /// elementwise split)
+    pub chunk: usize,
     pub shards: Vec<(usize, usize)>, // (offset, len)
 }
 
 impl ShardLayout {
+    /// Elementwise balanced split (no alignment guarantee).
     pub fn new(total: usize, n_workers: usize) -> Self {
         assert!(n_workers >= 1);
         let base = total / n_workers;
@@ -181,11 +311,49 @@ impl ShardLayout {
             shards.push((off, len));
             off += len;
         }
-        Self { total, shards }
+        Self { total, chunk: 1, shards }
+    }
+
+    /// Balanced split in whole `chunk`-sized units: every boundary
+    /// between non-empty shards is a multiple of `chunk`, shards stay
+    /// contiguous and ascending, and the imbalance between any two
+    /// workers is at most one chunk. Workers past the chunk supply get
+    /// empty shards; those (and only those) sit at offset `total`,
+    /// which the ragged final chunk may leave off-grid.
+    pub fn chunk_aligned(total: usize, n_workers: usize, chunk: usize) -> Self {
+        assert!(n_workers >= 1 && chunk >= 1);
+        let n_chunks = total.div_ceil(chunk);
+        let base = n_chunks / n_workers;
+        let rem = n_chunks % n_workers;
+        let mut shards = Vec::with_capacity(n_workers);
+        let mut off = 0;
+        for w in 0..n_workers {
+            let c = base + usize::from(w < rem);
+            let len = (c * chunk).min(total - off);
+            shards.push((off, len));
+            off += len;
+        }
+        Self { total, chunk, shards }
     }
 
     pub fn of_worker(&self, w: usize) -> (usize, usize) {
         self.shards[w]
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The worker owning flat offset `off` (`off < total`). Shards are
+    /// contiguous and ascending, so this is a binary partition point.
+    pub fn owner_of(&self, off: usize) -> usize {
+        assert!(off < self.total, "offset {off} past total {}", self.total);
+        self.shards.partition_point(|&(o, n)| o + n <= off)
+    }
+
+    /// Largest per-worker shard length (the per-worker memory bound).
+    pub fn max_shard_elems(&self) -> usize {
+        self.shards.iter().map(|&(_, n)| n).max().unwrap_or(0)
     }
 }
 
@@ -268,6 +436,86 @@ mod tests {
         for (a, b) in before.iter().zip(&after) {
             assert!((a - b).abs() <= a.abs() * 0.07 + 1e-6);
         }
+    }
+
+    #[test]
+    fn chunk_aligned_shards_cover_and_align() {
+        for total in [0usize, 10, 1000, 262_144 * 3 + 17] {
+            for w in [1usize, 2, 3, 8] {
+                for chunk in [64usize, 256, 262_144] {
+                    let l = ShardLayout::chunk_aligned(total, w, chunk);
+                    assert_eq!(l.shards.len(), w);
+                    let sum: usize = l.shards.iter().map(|&(_, n)| n).sum();
+                    assert_eq!(sum, total, "coverage");
+                    let mut off = 0;
+                    for &(o, n) in &l.shards {
+                        assert_eq!(o, off, "contiguous");
+                        // empty trailing shards sit at `total`, which a
+                        // ragged final chunk may leave off-grid
+                        assert!(o % chunk == 0 || o == total, "boundary alignment");
+                        off += n;
+                    }
+                    // balance: at most one chunk of skew between workers
+                    let lens: Vec<usize> = l.shards.iter().map(|&(_, n)| n).collect();
+                    let max = *lens.iter().max().unwrap();
+                    let full_min =
+                        lens.iter().filter(|&&n| n > 0).min().copied().unwrap_or(0);
+                    assert!(
+                        max <= full_min.div_ceil(chunk) * chunk + chunk,
+                        "balance: {lens:?} chunk {chunk}"
+                    );
+                    assert_eq!(l.max_shard_elems(), max);
+                    // owner map consistency at every boundary ± 1
+                    for (w_idx, &(o, n)) in l.shards.iter().enumerate() {
+                        if n == 0 {
+                            continue;
+                        }
+                        assert_eq!(l.owner_of(o), w_idx);
+                        assert_eq!(l.owner_of(o + n - 1), w_idx);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn moment_pack_exact_is_bit_preserving() {
+        // on-grid data (what the chunked Adam artifact emits) and
+        // off-grid data (forces the raw-f32 fallback) must both
+        // survive pack()/as_f32() bit-for-bit in exact mode
+        let chunk = 64usize;
+        let n = chunk * 3 + 17;
+        let mut m = MomentBuffer::zeros_exact(n, MomentStore::Fp8(E4M3), chunk);
+        for (i, x) in m.as_f32().iter_mut().enumerate() {
+            *x = if i < chunk * 2 {
+                // per-chunk grid: code wheel over a pow2 scale
+                E4M3.decode(((i % 120) * 2) as u8) / 4.0
+            } else {
+                // off-grid irrationals
+                ((i as f32) * 0.7311).sin() * 3.7
+            };
+        }
+        let before = m.as_f32().clone();
+        m.pack();
+        // on-grid chunks pack at ~1 byte/elem, fallback chunks at 4
+        let resident = m.resident_bytes();
+        assert!(
+            resident < chunk * 2 + (n - chunk * 2) * 4 + 6 * 4 + 16,
+            "resident {resident}"
+        );
+        let mut snap = Vec::new();
+        m.snapshot_into(&mut snap); // gather without unpacking
+        let after = m.as_f32().clone();
+        for (i, (a, b)) in before.iter().zip(&after).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "unpack i={i}");
+        }
+        for (i, (a, b)) in before.iter().zip(&snap).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "snapshot i={i}");
+        }
+        // scatter path: load_from then re-read
+        let src: Vec<f32> = (0..n).map(|i| (i as f32) * 1e-3).collect();
+        m.load_from(&src);
+        assert_eq!(m.as_f32().as_slice(), src.as_slice());
     }
 
     #[test]

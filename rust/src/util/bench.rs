@@ -65,7 +65,13 @@ pub fn write_json_report<P: AsRef<Path>>(
 
 /// Time `f` for up to `max_iters` iterations or `budget` wall-clock,
 /// whichever ends first, after `warmup` untimed runs.
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, max_iters: usize, budget: Duration, mut f: F) -> BenchResult {
+pub fn bench<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    max_iters: usize,
+    budget: Duration,
+    mut f: F,
+) -> BenchResult {
     for _ in 0..warmup {
         f();
     }

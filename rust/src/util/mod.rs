@@ -114,7 +114,9 @@ mod tests {
     #[test]
     fn f16_roundtrip_exact_values() {
         // 2^-14 = min normal, 2^-24 = min subnormal (both exact)
-        for &v in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 6.103_515_6e-5, 5.960_464_5e-8] {
+        for &v in
+            &[0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 6.103_515_6e-5, 5.960_464_5e-8]
+        {
             let rt = f16_bits_to_f32(f32_to_f16_bits(v));
             let rel = if v == 0.0 { (rt - v).abs() } else { ((rt - v) / v).abs() };
             assert!(rel < 1e-3, "v={v} rt={rt}");

@@ -22,13 +22,27 @@ pub struct Rng {
 impl Rng {
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
-        Self { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+        Self {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
     }
 
     /// Derive an independent stream (e.g. per worker / per tensor).
     pub fn split(&self, stream: u64) -> Self {
         let mut sm = self.s[0] ^ stream.wrapping_mul(0xa076_1d64_78bd_642f);
-        Self { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+        Self {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
     }
 
     #[inline]

@@ -289,8 +289,10 @@ fn bit_exact_resume_matches_uninterrupted_run() {
     for (ta, tc) in a.params.tensors.iter().zip(&c.params.tensors) {
         assert!(bits_eq(ta.f32s(), tc.f32s()), "final params must be bit-identical");
     }
-    assert!(bits_eq(&a.m_flat, &c.m_flat), "first moment");
-    assert!(bits_eq(&a.v_flat, &c.v_flat), "second moment");
+    let (am, av) = a.moments_flat();
+    let (cm, cv) = c.moments_flat();
+    assert!(bits_eq(&am, &cm), "first moment");
+    assert!(bits_eq(&av, &cv), "second moment");
     assert!(bits_eq(a.scale_mgr.scales(), c.scale_mgr.scales()), "scales");
 
     // and a mismatched config must refuse to resume

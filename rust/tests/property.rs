@@ -3,7 +3,9 @@
 //! collectives, JSON, f16, corpus determinism.
 
 use fp8_trainer::analysis::correlation::channel_correlations;
-use fp8_trainer::coordinator::allreduce::{allreduce_mean, clip_factor, global_norm, tree_reduce_sum};
+use fp8_trainer::coordinator::allreduce::{
+    allreduce_mean, clip_factor, global_norm, tree_reduce_sum,
+};
 use fp8_trainer::data::corpus::{Corpus, CorpusConfig};
 use fp8_trainer::fp8::{self, E4M3, E5M2};
 use fp8_trainer::optimizer::ShardLayout;
@@ -51,7 +53,9 @@ fn prop_fp8_encode_monotone() {
             let b = gen::f32_finite(r, -500.0, 500.0);
             (a.min(b), a.max(b))
         },
-        |&(lo, hi)| fp8::qdq(E4M3, lo.clamp(-448.0, 448.0)) <= fp8::qdq(E4M3, hi.clamp(-448.0, 448.0)),
+        |&(lo, hi)| {
+            fp8::qdq(E4M3, lo.clamp(-448.0, 448.0)) <= fp8::qdq(E4M3, hi.clamp(-448.0, 448.0))
+        },
     );
 }
 
@@ -135,6 +139,45 @@ fn prop_shards_partition() {
                 expect_off = off + len;
             }
             covered == total && l.shards.len() == w
+        },
+    );
+}
+
+#[test]
+fn prop_chunk_aligned_shards_partition_on_the_grid() {
+    Prop::new(500).check(
+        "chunk-aligned-shards",
+        |r| {
+            (
+                gen::usize_in(r, 0, 1_000_000),
+                gen::usize_in(r, 1, 64),
+                gen::usize_in(r, 1, 70_000),
+            )
+        },
+        |&(total, w, chunk)| {
+            let l = ShardLayout::chunk_aligned(total, w, chunk);
+            let mut expect_off = 0usize;
+            let mut covered = 0usize;
+            for &(off, len) in &l.shards {
+                // contiguous; boundaries on the grid except the empty
+                // trailing shards a ragged final chunk leaves at `total`
+                if off != expect_off || (off % chunk != 0 && off != total) {
+                    return false;
+                }
+                covered += len;
+                expect_off = off + len;
+            }
+            if covered != total || l.shards.len() != w {
+                return false;
+            }
+            // every element's owner is the shard containing it
+            for (w_idx, &(off, len)) in l.shards.iter().enumerate() {
+                if len > 0 && (l.owner_of(off) != w_idx || l.owner_of(off + len - 1) != w_idx)
+                {
+                    return false;
+                }
+            }
+            true
         },
     );
 }

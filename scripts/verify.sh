@@ -1,26 +1,35 @@
 #!/usr/bin/env bash
-# Tier-1 verify path for fp8-trainer.
+# Tier-1 verify path for fp8-trainer — the single local entry point for
+# the same gates CI runs (.github/workflows/ci.yml).
 #
 # Steps:
 #   1. release build
-#   2. test suite (unit + property + campaign; artifact-gated tests
-#      skip themselves with a note on a bare checkout)
+#   2. test suite (unit + property + collective + campaign;
+#      artifact-gated tests skip themselves with a note on a bare
+#      checkout)
 #   3. rustdoc gate: `cargo doc --no-deps` must be warning-clean —
 #      broken intra-doc links and bad codeblock attributes are
 #      promoted to errors, so a rustdoc regression fails tier-1.
+#   4. rustfmt gate: `cargo fmt --check` (skipped with a note when the
+#      rustfmt component is not installed)
+#   5. clippy gate: `cargo clippy --all-targets -- -D warnings`
+#      (skipped with a note when the clippy component is not installed)
+#
+# VERIFY_SKIP_LINT=1 skips steps 4/5 — CI sets it in the verify job so
+# fmt/clippy run exactly once, in the dedicated lint job.
 #
 # Run from the repo root: scripts/verify.sh
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== [1/3] cargo build --release"
+echo "== [1/5] cargo build --release"
 cargo build --release
 
-echo "== [2/3] cargo test -q"
+echo "== [2/5] cargo test -q"
 cargo test -q
 
-echo "== [3/3] cargo doc --no-deps (doc-link gate)"
+echo "== [3/5] cargo doc --no-deps (doc-link gate)"
 # -W unused: rustdoc's own unused-lint pass stays advisory; the doc
 # correctness lints below are the gate.
 RUSTDOCFLAGS="${RUSTDOCFLAGS:-} \
@@ -29,5 +38,23 @@ RUSTDOCFLAGS="${RUSTDOCFLAGS:-} \
   -D rustdoc::invalid-rust-codeblocks \
   -D rustdoc::bare-urls" \
   cargo doc --no-deps
+
+echo "== [4/5] cargo fmt --check"
+if [ "${VERIFY_SKIP_LINT:-0}" = "1" ]; then
+  echo "  [skip] VERIFY_SKIP_LINT=1 (CI runs fmt/clippy in the lint job)"
+elif cargo fmt --version >/dev/null 2>&1; then
+  cargo fmt --check
+else
+  echo "  [skip] rustfmt component not installed (rustup component add rustfmt)"
+fi
+
+echo "== [5/5] cargo clippy --all-targets -- -D warnings"
+if [ "${VERIFY_SKIP_LINT:-0}" = "1" ]; then
+  echo "  [skip] VERIFY_SKIP_LINT=1 (CI runs fmt/clippy in the lint job)"
+elif cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "  [skip] clippy component not installed (rustup component add clippy)"
+fi
 
 echo "verify: OK"
