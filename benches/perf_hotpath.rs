@@ -26,6 +26,7 @@ use fp8_trainer::config::TrainConfig;
 use fp8_trainer::coordinator::allreduce::{
     allreduce_mean, global_norm, grad_collective, reduce_mean_into_rank0,
 };
+use fp8_trainer::coordinator::topology::{hier_grad_collective, PodTopology};
 use fp8_trainer::coordinator::Trainer;
 use fp8_trainer::fp8::{self, bulk, Fp8Format, E4M3, E5M2};
 use fp8_trainer::optimizer::{MomentBuffer, MomentStore, ShardLayout};
@@ -262,8 +263,8 @@ fn shard_collective_benches(report: &mut Report) -> bool {
         ok &= pass;
         println!(
             "  dp_workers={w}: {} wire bytes vs {} f32 (ratio {ratio:.4}) {}",
-            stats.wire_bytes,
-            stats.wire_bytes_f32,
+            stats.wire_bytes(),
+            stats.wire_bytes_f32(),
             if pass { "PASS" } else { "FAIL" }
         );
         report.push(
@@ -271,10 +272,89 @@ fn shard_collective_benches(report: &mut Report) -> bool {
             vec![
                 ("gbs", Json::Num(gbs(n * 4 * w, &fp8_r))),
                 ("dp_workers", Json::Num(w as f64)),
-                ("wire_bytes", Json::Num(stats.wire_bytes as f64)),
-                ("wire_bytes_f32", Json::Num(stats.wire_bytes_f32 as f64)),
+                ("wire_bytes", Json::Num(stats.wire_bytes() as f64)),
+                ("wire_bytes_f32", Json::Num(stats.wire_bytes_f32() as f64)),
                 ("wire_ratio", Json::Num(ratio)),
                 ("target_wire_ratio", Json::Num(0.3)),
+                ("pass", Json::Bool(pass)),
+            ],
+        );
+    }
+    println!();
+    ok
+}
+
+/// ISSUE-5 §Topology records: per-level (intra/inter), per-leg
+/// (reduce-scatter/all-gather) wire bytes of the two-level collective
+/// at pods ∈ {1, 2, 4} over an 8-worker pool, in the default
+/// compression mix (intra f32, inter FP8 — the thin-pipe rule).
+/// Floors folded into `speedup_floors_met`:
+/// * every recorded level matches its closed form
+///   (`intra = 2·pods·(P-1)·4n`, `inter = 2·(pods-1)·(n + 4·⌈n/chunk⌉)`);
+/// * the inter level compresses below 0.3 of its f32 baseline
+///   whenever it exists;
+/// * the executed mix never moves more total bytes than the flat f32
+///   collective would.
+fn topology_benches(report: &mut Report) -> bool {
+    let mut ok = true;
+    let chunk = 262_144usize;
+    let n = if quick() { 1 << 20 } else { 1 << 22 };
+    let w = 8usize;
+    println!("== two-level collective (intra f32 / inter fp8, {w} workers x {}M) ==", n >> 20);
+    let flat_f32_bytes = 2 * (w as u64 - 1) * n as u64 * 4;
+    for pods in [1usize, 2, 4] {
+        let topo = PodTopology::new(w, pods).unwrap();
+        let p = topo.workers_per_pod() as u64;
+        let mk = || -> Vec<Vec<f32>> {
+            let mut rng = Rng::new(0x70d0 + pods as u64);
+            (0..w).map(|_| (0..n).map(|_| (rng.normal() as f32) * 0.01).collect()).collect()
+        };
+        let mut bufs = mk();
+        let mut stats = fp8_trainer::coordinator::allreduce::CollectiveStats::default();
+        let r = bench(
+            &format!("hier_collective pods={pods} {w}x{}M", n >> 20),
+            1,
+            10,
+            Duration::from_secs(8),
+            || {
+                stats = hier_grad_collective(&mut bufs, topo, None, Some(E5M2), chunk);
+            },
+        );
+        // closed forms the records must pin
+        let n_chunks = n.div_ceil(chunk) as u64;
+        let intra_leg = pods as u64 * (p - 1) * n as u64 * 4;
+        let inter_leg = (pods as u64 - 1) * (n as u64 + 4 * n_chunks);
+        let shape_ok = stats.intra.reduce_scatter == intra_leg
+            && stats.intra.all_gather == intra_leg
+            && stats.inter.reduce_scatter == inter_leg
+            && stats.inter.all_gather == inter_leg;
+        let inter_ok = pods == 1 || stats.inter_wire_ratio() < 0.3;
+        let total_ok = stats.wire_bytes() <= flat_f32_bytes;
+        let pass = shape_ok && inter_ok && total_ok;
+        ok &= pass;
+        println!(
+            "  pods={pods}: intra {} B (rs+ag), inter {} B (rs+ag, ratio {:.4}), \
+             total {} B vs flat-f32 {} B {}",
+            stats.intra.total(),
+            stats.inter.total(),
+            stats.inter_wire_ratio(),
+            stats.wire_bytes(),
+            flat_f32_bytes,
+            if pass { "PASS" } else { "FAIL" }
+        );
+        report.push(
+            &r,
+            vec![
+                ("gbs", Json::Num(gbs(n * 4 * w, &r))),
+                ("dp_workers", Json::Num(w as f64)),
+                ("pods", Json::Num(pods as f64)),
+                ("intra_rs_bytes", Json::Num(stats.intra.reduce_scatter as f64)),
+                ("intra_ag_bytes", Json::Num(stats.intra.all_gather as f64)),
+                ("inter_rs_bytes", Json::Num(stats.inter.reduce_scatter as f64)),
+                ("inter_ag_bytes", Json::Num(stats.inter.all_gather as f64)),
+                ("inter_wire_ratio", Json::Num(stats.inter_wire_ratio())),
+                ("wire_bytes", Json::Num(stats.wire_bytes() as f64)),
+                ("wire_bytes_flat_f32", Json::Num(flat_f32_bytes as f64)),
                 ("pass", Json::Bool(pass)),
             ],
         );
@@ -400,11 +480,12 @@ fn main() -> anyhow::Result<()> {
     collective_benches(&mut report);
 
     let shard_floors_met = shard_collective_benches(&mut report);
+    let topology_floors_met = topology_benches(&mut report);
 
     println!("== step rate (needs artifacts) ==");
     step_benches(&mut report)?;
 
-    let all_met = floors_met && shard_floors_met;
+    let all_met = floors_met && shard_floors_met && topology_floors_met;
     write_json_report(
         "BENCH_hotpath.json",
         vec![
@@ -417,6 +498,7 @@ fn main() -> anyhow::Result<()> {
             ("speedup_floors_met", Json::Bool(all_met)),
             ("codec_floors_met", Json::Bool(floors_met)),
             ("shard_collective_floors_met", Json::Bool(shard_floors_met)),
+            ("topology_floors_met", Json::Bool(topology_floors_met)),
         ],
         report.records,
     )?;
@@ -425,7 +507,8 @@ fn main() -> anyhow::Result<()> {
         // make the acceptance floors enforceable by scripted perf gates
         eprintln!(
             "FAIL: perf floors not met (codec >=5x decode / >=2x encode: {floors_met}; \
-             shard memory (W-1)/W + wire ratio < 0.3: {shard_floors_met})"
+             shard memory (W-1)/W + wire ratio < 0.3: {shard_floors_met}; \
+             topology per-level wire floors: {topology_floors_met})"
         );
         std::process::exit(1);
     }

@@ -51,13 +51,16 @@ pub const MOMENT_CHUNK: usize = 262_144;
 
 /// Snapshot format version (bumped on incompatible layout changes).
 /// 1.1: the numerics fingerprint gained the ZeRO-1 shard layout
-/// (Adam chunk × dp_workers) and the collective compression config
-/// (`collective_fp8`/`collective_fmt`) — a resume under a changed
-/// sharding or collective setup now refuses instead of forking the
-/// curve. Older (1.0) snapshots still load; their fingerprint will
-/// not match a 1.1 binary's, so applying them refuses — conservative
-/// by design.
-pub const SNAPSHOT_VERSION: f64 = 1.1;
+/// (Adam chunk × dp_workers) and the collective compression config —
+/// a resume under a changed sharding or collective setup now refuses
+/// instead of forking the curve.
+/// 1.2: the fingerprint gained the collective topology (`pods`) and
+/// the per-level compression flags
+/// (`collective_fp8_intra`/`collective_fp8_inter`) — a resume under a
+/// changed pod arrangement refuses. Older snapshots still load; their
+/// fingerprint will not match a newer binary's, so applying them
+/// refuses — conservative by design.
+pub const SNAPSHOT_VERSION: f64 = 1.2;
 
 /// Identity and position metadata of one snapshot.
 #[derive(Clone, Debug, PartialEq)]
@@ -115,16 +118,23 @@ pub struct SnapshotMeta {
 /// live Adam artifact chunk ([`Trainer::adam_chunk`]): with
 /// `dp_workers` it determines the chunk-aligned ZeRO-1 owner map *and*
 /// the collective's per-chunk scale grid, so a resume under a changed
-/// sharding config refuses. `collective_fp8`/`collective_fmt` change
-/// the gradient bits on the wire; `pack_moments` is deliberately
-/// **excluded** (exact-verified packing is bit-preserving), and the
-/// compressed collective's per-chunk scales are JIT — recomputed every
-/// step from the step's own gradients — so there is no cross-step
-/// collective scale state to capture.
+/// sharding config refuses. The collective topology (`pods`) and the
+/// per-level compression flags
+/// (`collective_fp8_intra`/`collective_fp8_inter`/`collective_fmt`)
+/// change which qdq legs the gradient passes through (and, for the
+/// pure-f32 two-level schedule at non-power-of-two pod sizes, the
+/// summation order), so any topology change refuses — deliberately
+/// conservative: the flags are recorded raw even in the shapes where
+/// a particular level is a numeric no-op. `pack_moments` is
+/// deliberately **excluded** (exact-verified packing is
+/// bit-preserving), and the compressed collective's per-chunk scales
+/// are JIT — recomputed every step from the step's own gradients — so
+/// there is no cross-step collective scale state to capture.
 pub fn numerics_fingerprint(cfg: &crate::config::TrainConfig, shard_chunk: usize) -> String {
     format!(
         "lr={:08x};minfrac={:08x};wd={:08x};clip={:08x};order={};skew={:016x};\
-         outlier={}:{:08x};skipnf={};amax={};margin={};shard=c{}w{};cfp8={}:{}",
+         outlier={}:{:08x};skipnf={};amax={};margin={};shard=c{}w{};topo=p{};\
+         cfp8=i{}:x{}:{}",
         cfg.lr.to_bits(),
         cfg.min_lr_frac.to_bits(),
         cfg.weight_decay.to_bits(),
@@ -138,7 +148,9 @@ pub fn numerics_fingerprint(cfg: &crate::config::TrainConfig, shard_chunk: usize
         cfg.margin_pow2,
         shard_chunk,
         cfg.dp_workers,
-        cfg.collective_fp8,
+        cfg.pods,
+        cfg.collective_fp8_intra,
+        cfg.collective_fp8_inter,
         cfg.collective_fmt,
     )
 }
@@ -497,5 +509,39 @@ impl TrainState {
         t.step = m.step;
         t.mark_state_restored();
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::numerics_fingerprint;
+    use crate::config::TrainConfig;
+
+    #[test]
+    fn fingerprint_refuses_topology_changes() {
+        // apply_to compares fingerprints wholesale, so any pod/
+        // compression change must alter the string — a resume under a
+        // changed collective topology refuses instead of forking
+        let base = TrainConfig { dp_workers: 8, ..Default::default() };
+        let fp = |c: &TrainConfig| numerics_fingerprint(c, 262_144);
+        let f0 = fp(&base);
+        assert_eq!(f0, fp(&base), "identical configs must agree");
+
+        let mut pods = base.clone();
+        pods.pods = 2;
+        assert_ne!(f0, fp(&pods), "changed pods must change the fingerprint");
+        let mut intra = base.clone();
+        intra.collective_fp8_intra = true;
+        assert_ne!(f0, fp(&intra), "intra compression flag is numerics identity");
+        let mut inter = base.clone();
+        inter.collective_fp8_inter = false;
+        assert_ne!(f0, fp(&inter), "inter compression flag is numerics identity");
+        let mut fmt = base.clone();
+        fmt.collective_fmt = "e4m3".into();
+        assert_ne!(f0, fp(&fmt), "wire format is numerics identity");
+        // pack_moments stays excluded: bit-preserving by construction
+        let mut pk = base.clone();
+        pk.pack_moments = !pk.pack_moments;
+        assert_eq!(f0, fp(&pk), "pack_moments must NOT be numerics identity");
     }
 }

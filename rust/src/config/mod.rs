@@ -101,11 +101,26 @@ pub struct TrainConfig {
     /// (production protection). Disable to expose the paper's hard
     /// divergence: one poisoned update permanently corrupts training.
     pub skip_nonfinite_updates: bool,
-    /// compress the gradient collective's wire legs to FP8 with
-    /// per-chunk pow2 auto-scales (FP8-LM-style). `false` keeps the
-    /// bit-exact f32 collective — the pinned baseline schedule.
-    pub collective_fp8: bool,
-    /// FP8 wire format for the compressed collective
+    /// number of pods the `dp_workers` pool is arranged in (must
+    /// divide `dp_workers` evenly). `1` = flat topology, the pinned
+    /// baseline; `> 1` enables the two-level collective — intra-pod
+    /// reduce-scatter → inter-pod exchange over pod leaders →
+    /// intra-pod all-gather (`coordinator::topology`).
+    pub pods: usize,
+    /// compress the **intra-pod** wire legs of the gradient collective
+    /// to FP8 with per-chunk pow2 auto-scales (FP8-LM-style). `false`
+    /// keeps the bit-exact f32 schedule on the fat local links — the
+    /// pinned baseline. (`collective_fp8` is accepted as a legacy
+    /// alias: with `pods = 1` the intra level *is* the whole
+    /// collective.)
+    pub collective_fp8_intra: bool,
+    /// compress the **inter-pod** (pod-leader) wire legs to FP8.
+    /// Defaults to `true` — the inter-pod pipe is the thin one, where
+    /// one byte per element pays for itself (see
+    /// `perfmodel::interconnect` for the crossover rule). Irrelevant
+    /// at `pods = 1`, where no inter level exists.
+    pub collective_fp8_inter: bool,
+    /// FP8 wire format for whichever collective levels are compressed
     /// ("e4m3" | "e5m2")
     pub collective_fmt: String,
     /// keep the ZeRO-1 Adam moment shards FP8-packed between steps.
@@ -154,7 +169,9 @@ impl Default for TrainConfig {
             seed_outlier_channel: false,
             seed_outlier_gain: 3.0,
             skip_nonfinite_updates: true,
-            collective_fp8: false,
+            pods: 1,
+            collective_fp8_intra: false,
+            collective_fp8_inter: true,
             collective_fmt: "e5m2".into(),
             pack_moments: true,
             log_every: 10,
@@ -212,7 +229,14 @@ impl TrainConfig {
                 "train.skip_nonfinite_updates" | "skip_nonfinite_updates" => {
                     c.skip_nonfinite_updates = v.as_bool()?
                 }
-                "collective.fp8" | "collective_fp8" => c.collective_fp8 = v.as_bool()?,
+                "collective.pods" | "pods" => c.pods = v.as_usize()?,
+                // legacy spelling: before the topology layer there was
+                // one flat level, so the old flag maps onto intra
+                "collective.fp8" | "collective_fp8" | "collective.fp8_intra"
+                | "collective_fp8_intra" => c.collective_fp8_intra = v.as_bool()?,
+                "collective.fp8_inter" | "collective_fp8_inter" => {
+                    c.collective_fp8_inter = v.as_bool()?
+                }
                 "collective.fmt" | "collective_fmt" => c.collective_fmt = v.as_str()?,
                 "train.pack_moments" | "pack_moments" => c.pack_moments = v.as_bool()?,
                 "train.log_every" | "log_every" => c.log_every = v.as_usize()?,
@@ -243,6 +267,16 @@ impl TrainConfig {
         }
         if c.dp_workers == 0 || c.grad_accum == 0 {
             return Err("dp_workers and grad_accum must be >= 1".into());
+        }
+        if c.pods == 0 {
+            return Err("pods must be >= 1 (1 = flat, no inter-pod level)".into());
+        }
+        if c.pods > c.dp_workers || c.dp_workers % c.pods != 0 {
+            return Err(format!(
+                "pods ({}) must divide dp_workers ({}) evenly \
+                 (equal contiguous pods; ragged pods are not supported)",
+                c.pods, c.dp_workers
+            ));
         }
         if c.snapshot_keep == 0 {
             return Err("snapshot_keep must be >= 1 (the rollback target)".into());
@@ -286,7 +320,9 @@ impl TrainConfig {
             ("grad_accum", Json::Num(self.grad_accum as f64)),
             ("amax_history", Json::Num(self.amax_history as f64)),
             ("seed_outlier_channel", Json::Bool(self.seed_outlier_channel)),
-            ("collective_fp8", Json::Bool(self.collective_fp8)),
+            ("pods", Json::Num(self.pods as f64)),
+            ("collective_fp8_intra", Json::Bool(self.collective_fp8_intra)),
+            ("collective_fp8_inter", Json::Bool(self.collective_fp8_inter)),
             ("collective_fmt", Json::Str(self.collective_fmt.clone())),
             ("pack_moments", Json::Bool(self.pack_moments)),
             ("snapshot_every", Json::Num(self.snapshot_every as f64)),
@@ -339,15 +375,50 @@ mod tests {
             ],
         )
         .unwrap();
-        assert!(c.collective_fp8);
+        assert!(c.collective_fp8_intra, "legacy collective_fp8 maps onto the intra level");
         assert_eq!(c.collective_fmt, "e4m3");
         assert!(!c.pack_moments);
         let d = TrainConfig::default();
-        assert!(!d.collective_fp8, "bit-exact f32 collective must be the default");
+        assert!(!d.collective_fp8_intra, "bit-exact f32 intra collective must be the default");
+        assert!(d.collective_fp8_inter, "the thin inter-pod pipe defaults to FP8");
+        assert_eq!(d.pods, 1, "flat topology must be the default");
         assert!(d.pack_moments, "sharded FP8 residency is the default memory story");
         assert!(
             TrainConfig::load(None, &[("collective_fmt".into(), "fp16".into())]).is_err(),
             "only the two FP8 wire formats exist"
+        );
+    }
+
+    #[test]
+    fn topology_keys_parse_and_validate() {
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("dp_workers".into(), "8".into()),
+                ("collective.pods".into(), "2".into()),
+                ("collective_fp8_intra".into(), "true".into()),
+                ("collective.fp8_inter".into(), "false".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.pods, 2);
+        assert!(c.collective_fp8_intra);
+        assert!(!c.collective_fp8_inter);
+        assert!(
+            TrainConfig::load(None, &[("pods".into(), "0".into())]).is_err(),
+            "zero pods is meaningless"
+        );
+        assert!(
+            TrainConfig::load(
+                None,
+                &[("dp_workers".into(), "4".into()), ("pods".into(), "3".into())]
+            )
+            .is_err(),
+            "ragged pods must refuse"
+        );
+        assert!(
+            TrainConfig::load(None, &[("pods".into(), "2".into())]).is_err(),
+            "pods cannot exceed dp_workers (default 1)"
         );
     }
 

@@ -17,12 +17,15 @@
 //!   consumes only the canonical rank-0 copy and overwrites every
 //!   replica at the top of the next step, so the broadcast was W-1
 //!   dead memcpys of the full gradient per step.
-//! * [`grad_collective`] — the step loop's entry point: a
+//! * [`grad_collective`] — the flat (single-pod) collective: a
 //!   deterministic reduce-scatter → mean → all-gather that optionally
 //!   compresses both wire legs to FP8 with per-chunk pow2 auto-scales
 //!   (FP8-LM-style), falling back bit-exactly to the rank-0 reduce
-//!   when `collective_fp8` is off. Returns [`CollectiveStats`] — the
-//!   bytes-on-the-wire accounting the perf bench records.
+//!   when compression is off. Returns [`CollectiveStats`] — the
+//!   per-level, per-leg bytes-on-the-wire accounting the perf bench
+//!   records. The step loop enters through the pod-aware two-level
+//!   wrapper in [`topology`](super::topology), for which this flat
+//!   path is the `pods = 1` special case.
 
 use crate::fp8::{bulk, Fp8Format};
 use crate::util::par::{max_threads, par_partials, par_zip, PAR_THRESHOLD};
@@ -48,19 +51,33 @@ fn add_assign(dst: &mut [f32], src: &[f32]) {
 
 /// Tree-reduce in place: buffers[0] ends up holding the elementwise sum.
 pub fn tree_reduce_sum(buffers: &mut [Vec<f32>]) {
-    let w = buffers.len();
-    assert!(w >= 1);
+    assert!(!buffers.is_empty());
     let n = buffers[0].len();
     for b in buffers.iter() {
         assert_eq!(b.len(), n, "replica gradient size mismatch");
     }
+    tree_reduce_sum_strided(buffers, 1);
+}
+
+/// Tree-reduce over the subsequence of `buffers` at indices
+/// `0, step, 2·step, …` — `buffers[0]` ends up holding that
+/// subsequence's elementwise sum; the skipped buffers are untouched.
+/// `step = 1` is exactly [`tree_reduce_sum`]'s pair order. The pair
+/// schedule is the same binary tree over participant *positions*, so
+/// the two-level collective's leader exchange (participants at pod
+/// bases, `step = workers_per_pod`) reuses the pinned summation shape:
+/// for power-of-two pod sizes, per-pod subtrees + this leader tree
+/// compose into exactly the flat tree (see `coordinator::topology`).
+pub(crate) fn tree_reduce_sum_strided(buffers: &mut [Vec<f32>], step: usize) {
+    assert!(step >= 1);
+    let k = buffers.len().div_ceil(step); // participant count
     let mut stride = 1;
-    while stride < w {
+    while stride < k {
         let mut i = 0;
-        while i + stride < w {
-            // combine pair (i, i+stride) — fixed order
-            let (left, right) = buffers.split_at_mut(i + stride);
-            add_assign(&mut left[i], &right[0]);
+        while i + stride < k {
+            // combine participant pair (i, i+stride) — fixed order
+            let (left, right) = buffers.split_at_mut((i + stride) * step);
+            add_assign(&mut left[i * step], &right[0]);
             i += stride * 2;
         }
         stride *= 2;
@@ -92,29 +109,99 @@ pub fn allreduce_mean(buffers: &mut [Vec<f32>]) {
     }
 }
 
-/// Bytes-on-the-wire accounting for one gradient collective, summed
-/// over the whole pod (every rank's sends across both legs). In a
-/// ring reduce-scatter each of the `W` ranks transmits `(W-1)/W · n`
-/// elements, and the all-gather moves the same volume back, so the
-/// raw-f32 pod total is `2·(W-1)·n·4` bytes; the FP8 path ships one
-/// byte per element plus a 4-byte pow2 scale per chunk on each leg.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+/// Wire bytes of one collective level split by leg — reduce-scatter
+/// vs all-gather — so per-leg asymmetries (a future sparse or
+/// error-fed leg, partial gathers) are never averaged away in the
+/// records. For the symmetric ring schedules modeled here the two
+/// legs move the same volume; the split is the accounting unit, not
+/// an assumption.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LegBytes {
+    /// bytes every rank of the level transmits on the reduce-scatter
+    /// leg, summed over ranks (and over pods, for the intra level)
+    pub reduce_scatter: u64,
+    /// same accounting for the all-gather leg
+    pub all_gather: u64,
+}
+
+impl LegBytes {
+    /// Both legs combined.
+    pub fn total(&self) -> u64 {
+        self.reduce_scatter + self.all_gather
+    }
+}
+
+/// Per-leg wire bytes of one collective level: `groups` independent
+/// ring collectives of `ranks` participants each (the intra level is
+/// `pods` rings of `workers_per_pod`; the inter level is one ring of
+/// `pods` leaders), `n` elements end to end. Each of the `ranks`
+/// participants transmits `(ranks-1)/ranks · payload` per leg, so the
+/// per-leg group total is `(ranks-1) · payload`: `4n` bytes raw f32,
+/// or `n + 4·⌈n/chunk⌉` when the leg is FP8-compressed (one byte per
+/// element plus a 4-byte pow2 scale per chunk).
+pub(crate) fn level_legs(
+    n: usize,
+    ranks: usize,
+    groups: usize,
+    fp8: Option<Fp8Format>,
+    chunk: usize,
+) -> LegBytes {
+    let payload = match fp8 {
+        None => 4 * n as u64,
+        Some(_) => n as u64 + 4 * n.div_ceil(chunk) as u64,
+    };
+    let per_leg = groups as u64 * (ranks as u64 - 1) * payload;
+    LegBytes { reduce_scatter: per_leg, all_gather: per_leg }
+}
+
+/// Bytes-on-the-wire accounting for one gradient collective, split by
+/// topology level (intra-pod vs inter-pod) and by leg (reduce-scatter
+/// vs all-gather), each against its raw-f32 baseline. The flat
+/// collective reports everything on the intra level (one pod, no
+/// leader exchange); `W = 1` moves no bytes at all.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CollectiveStats {
     /// gradient elements reduced
     pub elems: usize,
-    /// pod-total wire bytes the executed configuration moves
-    pub wire_bytes: u64,
-    /// pod-total wire bytes the raw-f32 collective would move
-    pub wire_bytes_f32: u64,
+    /// executed wire bytes on the intra-pod legs, all pods combined
+    pub intra: LegBytes,
+    /// executed wire bytes on the inter-pod (pod-leader) legs
+    pub inter: LegBytes,
+    /// what a raw-f32 intra level of the same shape would move
+    pub intra_f32: LegBytes,
+    /// what a raw-f32 inter level of the same shape would move
+    pub inter_f32: LegBytes,
 }
 
 impl CollectiveStats {
+    /// Total wire bytes the executed configuration moves (both
+    /// levels, both legs).
+    pub fn wire_bytes(&self) -> u64 {
+        self.intra.total() + self.inter.total()
+    }
+
+    /// Total wire bytes the raw-f32 collective of the same topology
+    /// would move.
+    pub fn wire_bytes_f32(&self) -> u64 {
+        self.intra_f32.total() + self.inter_f32.total()
+    }
+
     /// Compression ratio on the wire (1.0 for the f32 path / W = 1).
     pub fn wire_ratio(&self) -> f64 {
-        if self.wire_bytes_f32 == 0 {
+        if self.wire_bytes_f32() == 0 {
             1.0
         } else {
-            self.wire_bytes as f64 / self.wire_bytes_f32 as f64
+            self.wire_bytes() as f64 / self.wire_bytes_f32() as f64
+        }
+    }
+
+    /// Compression ratio on the inter-pod level alone — the thin pipe
+    /// the topology exists for (1.0 when the level moves no bytes).
+    pub fn inter_wire_ratio(&self) -> f64 {
+        if self.inter_f32.total() == 0 {
+            1.0
+        } else {
+            self.inter.total() as f64 / self.inter_f32.total() as f64
         }
     }
 }
@@ -136,7 +223,12 @@ pub struct CollectiveScratch {
 /// bit-deterministic; NaN elements ride through as NaN bytes
 /// (`bulk::pack_scaled_into` propagates them without touching the
 /// scale) and surface later in the global-norm clip.
-fn qdq_chunks(fmt: Fp8Format, chunk: usize, buf: &mut [f32], scratch: &mut CollectiveScratch) {
+pub(crate) fn qdq_chunks(
+    fmt: Fp8Format,
+    chunk: usize,
+    buf: &mut [f32],
+    scratch: &mut CollectiveScratch,
+) {
     assert!(chunk >= 1, "collective chunk size must be >= 1");
     let n = buf.len();
     if n == 0 {
@@ -184,7 +276,7 @@ fn qdq_chunks(fmt: Fp8Format, chunk: usize, buf: &mut [f32], scratch: &mut Colle
 ///
 /// * `fp8 = None` — **bit-identical to [`reduce_mean_into_rank0`]**,
 ///   the pinned serial schedule (tree sum + 1/W scale). This is the
-///   `collective_fp8 = false` fallback.
+///   `collective_fp8_intra = false` fallback.
 /// * `fp8 = Some(fmt)` — models FP8-LM's compressed collective:
 ///   1. every worker's contribution is quantize-dequantized on the
 ///      absolute `chunk` grid (what the reduce-scatter leg delivers
@@ -224,14 +316,18 @@ pub fn grad_collective_with(
     let n = buffers[0].len();
     if w == 1 {
         reduce_mean_into_rank0(buffers);
-        return CollectiveStats { elems: n, wire_bytes: 0, wire_bytes_f32: 0 };
+        return CollectiveStats { elems: n, ..CollectiveStats::default() };
     }
-    let legs = 2u64 * (w as u64 - 1); // reduce-scatter + all-gather
-    let wire_f32 = legs * n as u64 * 4;
+    let intra_f32 = level_legs(n, w, 1, None, chunk);
     match fp8 {
         None => {
             reduce_mean_into_rank0(buffers);
-            CollectiveStats { elems: n, wire_bytes: wire_f32, wire_bytes_f32: wire_f32 }
+            CollectiveStats {
+                elems: n,
+                intra: intra_f32,
+                intra_f32,
+                ..CollectiveStats::default()
+            }
         }
         Some(fmt) => {
             for buf in buffers.iter_mut() {
@@ -239,11 +335,11 @@ pub fn grad_collective_with(
             }
             reduce_mean_into_rank0(buffers);
             qdq_chunks(fmt, chunk, &mut buffers[0], scratch);
-            let n_chunks = n.div_ceil(chunk) as u64;
             CollectiveStats {
                 elems: n,
-                wire_bytes: legs * (n as u64 + 4 * n_chunks),
-                wire_bytes_f32: wire_f32,
+                intra: level_legs(n, w, 1, Some(fmt), chunk),
+                intra_f32,
+                ..CollectiveStats::default()
             }
         }
     }
@@ -351,8 +447,9 @@ mod tests {
             }
             assert_eq!(stats.elems, 313);
             let expect_wire = if w == 1 { 0 } else { 2 * (w as u64 - 1) * 313 * 4 };
-            assert_eq!(stats.wire_bytes, expect_wire);
-            assert_eq!(stats.wire_bytes_f32, expect_wire);
+            assert_eq!(stats.wire_bytes(), expect_wire);
+            assert_eq!(stats.wire_bytes_f32(), expect_wire);
+            assert_eq!(stats.inter.total(), 0, "flat collective has no inter level");
             assert_eq!(stats.wire_ratio(), 1.0);
         }
     }
@@ -364,9 +461,42 @@ mod tests {
         let mut bufs: Vec<Vec<f32>> = (0..4).map(|_| vec![0.01f32; n]).collect();
         let stats = grad_collective(&mut bufs, Some(crate::fp8::E5M2), chunk);
         let n_chunks = n.div_ceil(chunk) as u64;
-        assert_eq!(stats.wire_bytes, 2 * 3 * (n as u64 + 4 * n_chunks));
-        assert_eq!(stats.wire_bytes_f32, 2 * 3 * n as u64 * 4);
+        assert_eq!(stats.wire_bytes(), 2 * 3 * (n as u64 + 4 * n_chunks));
+        assert_eq!(stats.wire_bytes_f32(), 2 * 3 * n as u64 * 4);
         assert!(stats.wire_ratio() < 0.3, "ratio {}", stats.wire_ratio());
+    }
+
+    #[test]
+    fn collective_stats_per_leg_accounting_pins_totals() {
+        // per-leg split (reduce-scatter vs all-gather) must carry the
+        // full totals — not an averaged aggregate. Closed forms for
+        // W = 4, n = 1000, chunk = 64 (16 chunks):
+        let n = 1000usize;
+        let chunk = 64usize;
+        let n_chunks = n.div_ceil(chunk) as u64;
+
+        let mut f32_bufs: Vec<Vec<f32>> = (0..4).map(|_| vec![0.01f32; n]).collect();
+        let s = grad_collective(&mut f32_bufs, None, chunk);
+        let f32_leg = 3 * n as u64 * 4; // (W-1)·4n per leg
+        assert_eq!(s.intra.reduce_scatter, f32_leg);
+        assert_eq!(s.intra.all_gather, f32_leg);
+        assert_eq!(s.intra.total(), 2 * f32_leg);
+        assert_eq!(s.inter, LegBytes::default());
+        assert_eq!(s.wire_bytes(), s.intra.total());
+
+        let mut fp8_bufs: Vec<Vec<f32>> = (0..4).map(|_| vec![0.01f32; n]).collect();
+        let s = grad_collective(&mut fp8_bufs, Some(crate::fp8::E5M2), chunk);
+        let fp8_leg = 3 * (n as u64 + 4 * n_chunks); // (W-1)·(n + 4·⌈n/chunk⌉)
+        assert_eq!(s.intra, LegBytes { reduce_scatter: fp8_leg, all_gather: fp8_leg });
+        assert_eq!(s.intra_f32, LegBytes { reduce_scatter: f32_leg, all_gather: f32_leg });
+        assert_eq!(s.wire_bytes(), 2 * fp8_leg);
+        assert_eq!(s.wire_bytes_f32(), 2 * f32_leg);
+
+        // W = 1: nothing crosses a wire, on any leg of any level
+        let mut one = vec![vec![0.5f32; n]];
+        let s = grad_collective(&mut one, Some(crate::fp8::E4M3), chunk);
+        assert_eq!((s.wire_bytes(), s.wire_bytes_f32()), (0, 0));
+        assert_eq!(s.wire_ratio(), 1.0);
     }
 
     #[test]

@@ -5,22 +5,31 @@
 //! * loss exceeding a multiple of its trailing EMA (the Fig. 2a spike),
 //! * sustained overflow events in the scaling manager.
 
+/// The detector's per-step classification of the run's health.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Verdict {
+    /// no divergence signal this step
     Healthy,
     /// spike factor over the EMA
     LossSpike(f32),
+    /// the loss came back NaN/inf — hard failure
     NonFiniteLoss,
+    /// cumulative overflow events exceeded the limit (count inside)
     OverflowStorm(usize),
 }
 
+/// Watches the loss stream and the scaling manager's overflow counter
+/// for the paper's Fig. 2a divergence signatures (see module docs).
 #[derive(Clone, Debug)]
 pub struct DivergenceDetector {
     ema: f32,
     alpha: f32,
+    /// loss-over-EMA multiple that counts as a spike
     pub spike_factor: f32,
+    /// cumulative overflow-event count that counts as a storm
     pub overflow_limit: usize,
     warmed: bool,
+    /// step of the first divergence verdict, if any (latched)
     pub diverged_at: Option<usize>,
 }
 
@@ -38,6 +47,9 @@ impl Default for DivergenceDetector {
 }
 
 impl DivergenceDetector {
+    /// Ingest one step's loss + cumulative overflow count and return
+    /// the verdict; the first non-healthy verdict latches
+    /// [`diverged_at`](Self::diverged_at).
     pub fn observe(&mut self, step: usize, loss: f32, overflow_events: usize) -> Verdict {
         if !loss.is_finite() {
             self.diverged_at.get_or_insert(step);
@@ -58,6 +70,7 @@ impl DivergenceDetector {
         verdict
     }
 
+    /// Whether any step has produced a non-healthy verdict (latched).
     pub fn has_diverged(&self) -> bool {
         self.diverged_at.is_some()
     }

@@ -1,13 +1,17 @@
+#![warn(missing_docs)]
 //! L3 coordinator: the training orchestrator.
 //!
 //! Per step:
 //! 1. each data-parallel worker runs `grad_accum` microbatches through
 //!    the grad artifact (its own shard of the deterministic corpus);
-//! 2. gradients go through a deterministic reduce-scatter → all-gather
-//!    collective (simulating the Gaudi2 pod's), optionally compressing
-//!    both wire legs to FP8 with per-chunk pow2 auto-scales
-//!    (`collective_fp8`, FP8-LM-style) — bit-identical to the plain
-//!    tree reduce when off;
+//! 2. gradients go through the pod-aware two-level collective
+//!    ([`topology`]): deterministic intra-pod reduce-scatter →
+//!    inter-pod exchange over pod leaders → intra-pod all-gather,
+//!    with FP8 wire compression selectable per level
+//!    (`collective_fp8_intra` / `collective_fp8_inter`, per-chunk
+//!    pow2 auto-scales, FP8-LM-style). `pods = 1` is the flat
+//!    collective, bit-identical to the plain tree reduce when
+//!    compression is off;
 //! 3. the global grad-norm clip factor is computed in Rust;
 //! 4. each worker applies AdamW to the chunks it owns under the
 //!    chunk-aligned ZeRO-1 owner map via the chunked `adam_*` artifact
@@ -26,9 +30,11 @@ pub mod folding;
 pub mod params;
 pub mod runner;
 pub mod schedule;
+pub mod topology;
 pub mod trainer;
 
 pub use divergence::{DetectorState, DivergenceDetector};
 pub use params::ParamStore;
 pub use schedule::LrSchedule;
+pub use topology::PodTopology;
 pub use trainer::{StepOutcome, Trainer};

@@ -7,8 +7,12 @@ use crate::runtime::manifest::{Manifest, ParamSpec};
 use crate::runtime::tensor::HostTensor;
 use crate::util::prng::Rng;
 
+/// The replicated model parameters: one named host tensor per
+/// manifest param spec, in manifest order.
 pub struct ParamStore {
+    /// the manifest's param specs (names, shapes, init stds)
     pub specs: Vec<ParamSpec>,
+    /// the parameter tensors, parallel to `specs`
     pub tensors: Vec<HostTensor>,
 }
 
@@ -68,6 +72,7 @@ impl ParamStore {
         Ok(ch)
     }
 
+    /// Locate a parameter by name → (tensor index, shape).
     pub fn index_of(&self, name: &str) -> Result<(usize, Vec<usize>)> {
         self.specs
             .iter()
@@ -76,6 +81,8 @@ impl ParamStore {
             .ok_or_else(|| anyhow!("no parameter named '{name}'"))
     }
 
+    /// Total parameter elements across all tensors (the flat-space
+    /// length the optimizer and shard layout work in).
     pub fn total_elems(&self) -> usize {
         self.specs.iter().map(|s| s.numel()).sum()
     }

@@ -1,15 +1,23 @@
 //! Learning-rate schedule: linear warmup + cosine decay to
 //! `min_frac · peak` (the Llama-2 recipe the paper keeps).
 
+/// Linear-warmup + cosine-decay learning-rate schedule, a pure
+/// function of the step index.
 #[derive(Clone, Copy, Debug)]
 pub struct LrSchedule {
+    /// peak learning rate reached at the end of warmup
     pub peak: f32,
+    /// linear warmup length in steps
     pub warmup_steps: usize,
+    /// total schedule length (the cosine lands at the floor here)
     pub total_steps: usize,
+    /// floor as a fraction of `peak`
     pub min_frac: f32,
 }
 
 impl LrSchedule {
+    /// The learning rate at `step` (clamped to the floor past
+    /// `total_steps`).
     pub fn lr(&self, step: usize) -> f32 {
         if self.warmup_steps > 0 && step < self.warmup_steps {
             return self.peak * (step + 1) as f32 / self.warmup_steps as f32;

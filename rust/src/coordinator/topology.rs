@@ -1,0 +1,348 @@
+//! Pod-aware two-level gradient collective — the topology layer over
+//! the flat collective in [`allreduce`](super::allreduce).
+//!
+//! The paper's headline run spans 256 Gaudi2 accelerators arranged in
+//! 8-card pods: links *inside* a pod are fat (the cards' scale-up
+//! ports, all-to-all), links *between* pods are thin (a few scale-out
+//! ports through the switch fabric). A flat W-worker ring treats both
+//! the same; the hierarchical schedule every real pod deployment runs
+//! is instead
+//!
+//! 1. **intra-pod reduce-scatter** — each pod combines its members'
+//!    gradients over the fat local links;
+//! 2. **inter-pod exchange over pod leaders** — one rank per pod
+//!    reduce-scatters / all-gathers the pod partial sums across the
+//!    thin pipe;
+//! 3. **intra-pod all-gather** — leaders fan the global average back
+//!    out over the local links.
+//!
+//! Because the two levels ride different wires, FP8 wire compression
+//! is selectable **per level** (`collective_fp8_intra` /
+//! `collective_fp8_inter`): FP8-LM-style per-chunk pow2 JIT scaling on
+//! whichever legs are compressed, f32 accumulation everywhere. The
+//! inter-pod level defaults to FP8 in the config — that is the thin
+//! pipe where one byte per element pays for itself (see
+//! `perfmodel::interconnect` for the crossover analysis and
+//! `docs/OPERATIONS.md` §Topology for the selection rule).
+//!
+//! Numerics contract (pinned by `rust/tests/collective.rs`):
+//!
+//! * `pods = 1` **is** the flat collective — the hierarchical entry
+//!   point delegates to [`grad_collective_with`], so the single-pod
+//!   path is bit-identical to it by construction (and `pods = dp`
+//!   degenerates the same way onto the inter level).
+//! * With compression off on both levels the two-level schedule is
+//!   bit-identical to the flat f32 collective whenever the pod size is
+//!   a **power of two** (every realistic pod: the flat binary
+//!   reduction tree decomposes exactly into per-pod subtrees followed
+//!   by a leader tree when `workers_per_pod = 2^k`). Other pod sizes
+//!   are still bit-deterministic — the summation order is fixed by the
+//!   topology — but round differently from the flat tree; the snapshot
+//!   numerics fingerprint records `pods`, so a resume across any
+//!   topology change refuses either way.
+//! * Each quantized leg is the same per-chunk pow2 qdq the flat FP8
+//!   collective applies (`fp8::bulk` JIT scaling, absolute chunk grid,
+//!   NaN-transparent), so every level is deterministic at any thread
+//!   count and equal to a scalar serial reference.
+
+use crate::coordinator::allreduce::{
+    grad_collective_with, level_legs, qdq_chunks, reduce_mean_into_rank0, tree_reduce_sum,
+    tree_reduce_sum_strided, CollectiveScratch, CollectiveStats,
+};
+use crate::fp8::Fp8Format;
+
+/// The pod arrangement of the data-parallel pool: `workers` ranks in
+/// `pods` equal, contiguous pods (rank `r` lives in pod
+/// `r / workers_per_pod`; the pod's first rank is its leader).
+///
+/// `pods = 1` is the flat topology — the two-level collective
+/// delegates to the flat schedule, so existing single-pod configs are
+/// bit-identical to the pre-topology code path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PodTopology {
+    /// total data-parallel worker count (`dp_workers`)
+    pub workers: usize,
+    /// number of pods; must divide `workers` evenly
+    pub pods: usize,
+}
+
+impl PodTopology {
+    /// Validated constructor: `workers >= 1`, `pods >= 1`, and `pods`
+    /// must divide `workers` evenly (ragged pods would make the leader
+    /// set ambiguous and the wire accounting shape-dependent).
+    pub fn new(workers: usize, pods: usize) -> Result<Self, String> {
+        if workers == 0 {
+            return Err("topology needs at least one worker".into());
+        }
+        if pods == 0 {
+            return Err("pods must be >= 1 (1 = flat, no inter-pod level)".into());
+        }
+        if pods > workers {
+            return Err(format!("pods ({pods}) cannot exceed dp_workers ({workers})"));
+        }
+        if workers % pods != 0 {
+            return Err(format!(
+                "pods ({pods}) must divide dp_workers ({workers}) evenly \
+                 (ragged pods are not supported)"
+            ));
+        }
+        Ok(Self { workers, pods })
+    }
+
+    /// The flat (single-pod) topology over `workers` ranks.
+    pub fn flat(workers: usize) -> Self {
+        Self { workers: workers.max(1), pods: 1 }
+    }
+
+    /// Ranks per pod (`workers / pods`; validated to divide evenly).
+    pub fn workers_per_pod(&self) -> usize {
+        self.workers / self.pods
+    }
+
+    /// The pod a worker rank belongs to.
+    pub fn pod_of(&self, worker: usize) -> usize {
+        worker / self.workers_per_pod()
+    }
+
+    /// The leader rank of a pod (its first member).
+    pub fn leader_of(&self, pod: usize) -> usize {
+        pod * self.workers_per_pod()
+    }
+
+    /// Whether a worker rank is its pod's leader.
+    pub fn is_leader(&self, worker: usize) -> bool {
+        worker % self.workers_per_pod() == 0
+    }
+}
+
+/// One hierarchical gradient collective with a throwaway scratch — see
+/// [`hier_grad_collective_with`] (the step loop uses that variant with
+/// the trainer's persistent [`CollectiveScratch`]).
+pub fn hier_grad_collective(
+    buffers: &mut [Vec<f32>],
+    topo: PodTopology,
+    fp8_intra: Option<Fp8Format>,
+    fp8_inter: Option<Fp8Format>,
+    chunk: usize,
+) -> CollectiveStats {
+    hier_grad_collective_with(
+        buffers,
+        topo,
+        fp8_intra,
+        fp8_inter,
+        chunk,
+        &mut CollectiveScratch::default(),
+    )
+}
+
+/// Two-level pod-aware gradient collective: deterministic intra-pod
+/// reduce-scatter → inter-pod exchange over pod leaders → intra-pod
+/// all-gather, with independently selectable FP8 wire compression per
+/// level. On return `buffers[0]` holds the gathered global average —
+/// the canonical copy the trainer consumes; like the flat collective,
+/// the other replicas keep stale partial state (every replica buffer
+/// is overwritten at the top of the next step).
+///
+/// Pipeline (W = `topo.workers`, P = `topo.workers_per_pod()`):
+///
+/// 1. `fp8_intra`: every member's contribution is per-chunk
+///    quantize-dequantized (what the intra reduce-scatter delivers to
+///    each chunk's intra-pod owner);
+/// 2. each pod tree-sums its members into its leader (f32
+///    accumulation, fixed pair order);
+/// 3. `fp8_inter`: each leader's pod partial is quantize-dequantized
+///    (the inter reduce-scatter leg over the thin pipe);
+/// 4. the leader tree sums into rank 0 (f32) and scales by `1/W`;
+/// 5. `fp8_inter`: the global average is quantize-dequantized once
+///    more (the inter all-gather back to every leader);
+/// 6. `fp8_intra`: and once more for the intra all-gather to every
+///    pod member — one value is THE gradient everywhere.
+///
+/// Degenerate shapes take the flat path exactly: `pods = 1` delegates
+/// to [`grad_collective_with`] with the **intra** setting (there is no
+/// inter level), and `workers_per_pod = 1` delegates with the
+/// **inter** setting relabeled onto the inter accounting (every rank
+/// is a leader). `W = 1` moves no bytes and skips quantization
+/// entirely.
+pub fn hier_grad_collective_with(
+    buffers: &mut [Vec<f32>],
+    topo: PodTopology,
+    fp8_intra: Option<Fp8Format>,
+    fp8_inter: Option<Fp8Format>,
+    chunk: usize,
+    scratch: &mut CollectiveScratch,
+) -> CollectiveStats {
+    let w = buffers.len();
+    assert_eq!(w, topo.workers, "buffer count must match the topology");
+    // the fields are pub: a hand-built ragged topology (bypassing
+    // PodTopology::new) would silently drop trailing ranks from the
+    // sum while still scaling by 1/W — refuse loudly instead
+    assert!(
+        topo.pods >= 1 && topo.pods * (topo.workers / topo.pods) == topo.workers,
+        "ragged topology: pods ({}) must divide workers ({}) — use PodTopology::new",
+        topo.pods,
+        topo.workers
+    );
+    let n = buffers[0].len();
+    if w == 1 {
+        reduce_mean_into_rank0(buffers);
+        return CollectiveStats { elems: n, ..CollectiveStats::default() };
+    }
+    if topo.pods == 1 {
+        // flat special case: one pod, no inter level — the flat
+        // schedule IS the intra level (bit-identity by delegation)
+        return grad_collective_with(buffers, fp8_intra, chunk, scratch);
+    }
+    let p = topo.workers_per_pod();
+    if p == 1 {
+        // every rank is its own pod leader: the collective is pure
+        // inter-pod — run the flat schedule with the inter setting and
+        // relabel the wire accounting onto the inter level
+        let flat = grad_collective_with(buffers, fp8_inter, chunk, scratch);
+        return CollectiveStats {
+            elems: flat.elems,
+            inter: flat.intra,
+            inter_f32: flat.intra_f32,
+            ..CollectiveStats::default()
+        };
+    }
+    for b in buffers.iter() {
+        assert_eq!(b.len(), n, "replica gradient size mismatch");
+    }
+
+    // (1) intra reduce-scatter leg: quantize every member's contribution
+    if let Some(fmt) = fp8_intra {
+        for buf in buffers.iter_mut() {
+            qdq_chunks(fmt, chunk, buf, scratch);
+        }
+    }
+    // (2) per-pod tree sums into each pod leader (f32 accumulation)
+    for pod in 0..topo.pods {
+        let base = pod * p;
+        tree_reduce_sum(&mut buffers[base..base + p]);
+    }
+    // (3) inter reduce-scatter leg: quantize each leader's pod partial
+    if let Some(fmt) = fp8_inter {
+        for pod in 0..topo.pods {
+            qdq_chunks(fmt, chunk, &mut buffers[topo.leader_of(pod)], scratch);
+        }
+    }
+    // (4) leader tree into rank 0, then the global mean
+    tree_reduce_sum_strided(buffers, p);
+    let inv = 1.0 / w as f32;
+    for x in buffers[0].iter_mut() {
+        *x *= inv;
+    }
+    // (5) inter all-gather leg: the average back out to every leader
+    if let Some(fmt) = fp8_inter {
+        qdq_chunks(fmt, chunk, &mut buffers[0], scratch);
+    }
+    // (6) intra all-gather leg: leaders fan out to their pod members
+    if let Some(fmt) = fp8_intra {
+        qdq_chunks(fmt, chunk, &mut buffers[0], scratch);
+    }
+
+    CollectiveStats {
+        elems: n,
+        intra: level_legs(n, p, topo.pods, fp8_intra, chunk),
+        inter: level_legs(n, topo.pods, 1, fp8_inter, chunk),
+        intra_f32: level_legs(n, p, topo.pods, None, chunk),
+        inter_f32: level_legs(n, topo.pods, 1, None, chunk),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::{E4M3, E5M2};
+
+    #[test]
+    fn topology_validation() {
+        assert!(PodTopology::new(8, 2).is_ok());
+        assert!(PodTopology::new(8, 8).is_ok());
+        assert!(PodTopology::new(8, 1).is_ok());
+        assert!(PodTopology::new(0, 1).is_err(), "zero workers");
+        assert!(PodTopology::new(8, 0).is_err(), "zero pods");
+        assert!(PodTopology::new(8, 3).is_err(), "ragged pods");
+        assert!(PodTopology::new(2, 4).is_err(), "more pods than workers");
+    }
+
+    #[test]
+    fn pod_math() {
+        let t = PodTopology::new(8, 2).unwrap();
+        assert_eq!(t.workers_per_pod(), 4);
+        assert_eq!(t.pod_of(0), 0);
+        assert_eq!(t.pod_of(3), 0);
+        assert_eq!(t.pod_of(4), 1);
+        assert_eq!(t.leader_of(1), 4);
+        assert!(t.is_leader(0) && t.is_leader(4));
+        assert!(!t.is_leader(5));
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged topology")]
+    fn hand_built_ragged_topology_is_refused() {
+        // the struct fields are pub; bypassing PodTopology::new with a
+        // non-dividing pods count must panic, not silently drop ranks
+        let mut bufs: Vec<Vec<f32>> = (0..8).map(|_| vec![1.0f32; 16]).collect();
+        let ragged = PodTopology { workers: 8, pods: 3 };
+        hier_grad_collective(&mut bufs, ragged, None, None, 16);
+    }
+
+    #[test]
+    fn single_worker_moves_no_bytes() {
+        let mut bufs = vec![vec![2.0f32, 6.0]];
+        let s = hier_grad_collective(&mut bufs, PodTopology::flat(1), Some(E4M3), Some(E5M2), 64);
+        assert_eq!(bufs[0], vec![2.0, 6.0]);
+        assert_eq!(s.wire_bytes(), 0);
+        assert_eq!(s.wire_bytes_f32(), 0);
+    }
+
+    #[test]
+    fn two_level_mean_is_exact_on_exact_values() {
+        // values with exact f32 sums: any summation order gives the
+        // same bits, so this checks plumbing (who is summed where)
+        let w = 8usize;
+        let n = 33usize;
+        let mut bufs: Vec<Vec<f32>> =
+            (0..w).map(|r| (0..n).map(|i| (r * n + i) as f32).collect()).collect();
+        let topo = PodTopology::new(w, 4).unwrap();
+        let s = hier_grad_collective(&mut bufs, topo, None, None, 16);
+        for (i, &x) in bufs[0].iter().enumerate() {
+            let expect: f32 = (0..w).map(|r| (r * n + i) as f32).sum::<f32>() / w as f32;
+            assert_eq!(x, expect, "elem {i}");
+        }
+        assert_eq!(s.elems, n);
+    }
+
+    #[test]
+    fn wire_accounting_per_level_closed_form() {
+        let n = 1000usize;
+        let chunk = 64usize;
+        let n_chunks = n.div_ceil(chunk) as u64; // 16
+        let w = 8usize;
+        let topo = PodTopology::new(w, 2).unwrap();
+        let p = topo.workers_per_pod() as u64; // 4
+
+        // intra f32 / inter fp8 (the default for pods > 1)
+        let mut bufs: Vec<Vec<f32>> = (0..w).map(|_| vec![1e-3f32; n]).collect();
+        let s = hier_grad_collective(&mut bufs, topo, None, Some(E5M2), chunk);
+        let intra_leg = 2 * (p - 1) * n as u64 * 4; // pods·(P-1)·4n per leg
+        assert_eq!(s.intra.reduce_scatter, intra_leg);
+        assert_eq!(s.intra.all_gather, intra_leg);
+        let inter_leg_fp8 = (2 - 1) * (n as u64 + 4 * n_chunks);
+        assert_eq!(s.inter.reduce_scatter, inter_leg_fp8);
+        assert_eq!(s.inter.all_gather, inter_leg_fp8);
+        assert_eq!(s.inter_f32.reduce_scatter, (2 - 1) * n as u64 * 4);
+        assert_eq!(s.wire_bytes(), 2 * intra_leg + 2 * inter_leg_fp8);
+        // the executed config moves fewer bytes than all-f32 would
+        assert!(s.wire_bytes() < s.wire_bytes_f32());
+
+        // pods = workers: pure inter level
+        let topo_pw = PodTopology::new(w, w).unwrap();
+        let mut bufs: Vec<Vec<f32>> = (0..w).map(|_| vec![1e-3f32; n]).collect();
+        let s = hier_grad_collective(&mut bufs, topo_pw, Some(E4M3), Some(E5M2), chunk);
+        assert_eq!(s.intra, Default::default(), "no intra wire at pod size 1");
+        assert_eq!(s.inter.reduce_scatter, (w as u64 - 1) * (n as u64 + 4 * n_chunks));
+    }
+}

@@ -7,12 +7,15 @@
 //!   threads (the PJRT CPU client accepts concurrent executions), with
 //!   a fixed-order merge of loss/amax/monitor so results are
 //!   bit-identical to the serial schedule at any worker count;
-//! * the gradient collective is a deterministic reduce-scatter →
-//!   all-gather (`allreduce::grad_collective`) that optionally
-//!   compresses both wire legs to FP8 with per-chunk pow2 auto-scales
-//!   (`collective_fp8`); with the flag off it is bit-identical to the
-//!   broadcast-free rank-0 reduce, and only the canonical copy is
-//!   consumed either way;
+//! * the gradient collective is the pod-aware two-level schedule
+//!   (`topology::hier_grad_collective_with`): deterministic intra-pod
+//!   reduce-scatter → inter-pod exchange over pod leaders → intra-pod
+//!   all-gather, with FP8 wire compression selectable per level
+//!   (`collective_fp8_intra` / `collective_fp8_inter`, per-chunk pow2
+//!   auto-scales). `pods = 1` is the flat collective; with intra
+//!   compression off that is bit-identical to the broadcast-free
+//!   rank-0 reduce, and only the canonical copy is consumed either
+//!   way;
 //! * optimizer state is **ZeRO-1 sharded**: the Adam moments live in
 //!   per-worker `MomentBuffer` shards on a chunk-aligned owner map
 //!   (`ShardLayout::chunk_aligned` over the Adam artifact chunk), each
@@ -30,11 +33,12 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::config::TrainConfig;
 use crate::coordinator::allreduce::{
-    clip_factor, global_norm, grad_collective_with, CollectiveScratch, CollectiveStats,
+    clip_factor, global_norm, CollectiveScratch, CollectiveStats,
 };
 use crate::coordinator::divergence::{DivergenceDetector, Verdict};
 use crate::coordinator::params::ParamStore;
 use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::topology::{hier_grad_collective_with, PodTopology};
 use crate::data::{Batcher, Corpus, CorpusConfig};
 use crate::fp8::{Fp8Format, E4M3, E5M2};
 use crate::metrics::{StepMeter, StepStats};
@@ -46,13 +50,19 @@ use crate::scaling::{Policy, ScaleManager};
 /// Everything one completed step reports to the caller.
 #[derive(Clone, Debug)]
 pub struct StepOutcome {
+    /// the step index this outcome describes (0-based)
     pub step: usize,
+    /// mean training loss over all workers × microbatches
     pub loss: f32,
+    /// global L2 gradient norm before clipping
     pub grad_norm: f32,
+    /// learning rate the step applied
     pub lr: f32,
+    /// the divergence detector's verdict for this step
     pub verdict: Verdict,
     /// per-layer [swiglu_amax, resid_amax, mlp_out_amax]
     pub monitor: Vec<[f32; 3]>,
+    /// throughput accounting from the step meter
     pub stats: StepStats,
 }
 
@@ -112,13 +122,21 @@ fn carve<'a>(cursor: &mut &'a mut [f32], skip: usize, take: usize) -> &'a mut [f
     win
 }
 
+/// The training loop driver: owns every piece of run-time state one
+/// step touches (params, ZeRO-1 moment shards, scaling state machine,
+/// divergence detector, data cursor) and executes the step pipeline
+/// described in the module docs.
 pub struct Trainer {
+    /// the run configuration this trainer was built from
     pub cfg: TrainConfig,
     rt: Arc<Runtime>,
     grad_art: Arc<Artifact>,
     adam_art: Arc<Artifact>,
+    /// the replicated model parameters (named tensors, manifest order)
     pub params: ParamStore,
+    /// the FP8 delayed-scaling state machine
     pub scale_mgr: ScaleManager,
+    /// loss-EMA / overflow divergence detector
     pub detector: DivergenceDetector,
     batcher: Batcher,
     sched: LrSchedule,
@@ -132,15 +150,24 @@ pub struct Trainer {
     m_shards: Vec<MomentBuffer>,
     /// per-worker second-moment shards (see `m_shards`)
     v_shards: Vec<MomentBuffer>,
-    /// FP8 wire format of the compressed gradient collective
-    /// (None = bit-exact f32 collective, the pinned baseline)
-    collective_fmt: Option<Fp8Format>,
+    /// pod arrangement of the worker pool (validated in `new`): the
+    /// two-level collective runs intra-pod → leaders → intra-pod;
+    /// `pods = 1` is the flat collective
+    topo: PodTopology,
+    /// FP8 wire format of the intra-pod collective legs
+    /// (None = bit-exact f32 legs, the pinned baseline)
+    fp8_intra: Option<Fp8Format>,
+    /// FP8 wire format of the inter-pod (pod-leader) legs
+    /// (None = f32; irrelevant at `pods = 1`)
+    fp8_inter: Option<Fp8Format>,
     /// wire accounting of the most recent step's gradient collective
     last_collective: CollectiveStats,
     /// reusable encode scratch for the FP8 collective (not state —
     /// snapshots never capture it)
     collective_scratch: CollectiveScratch,
     meter: StepMeter,
+    /// steps completed so far (also the LR-schedule position and the
+    /// stateless data pipeline's cursor)
     pub step: usize,
     /// run the per-worker grad passes inline instead of on scoped
     /// threads — the reference schedule the parallel path must match
@@ -165,6 +192,10 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// Build a trainer for `cfg`: load the grad/adam artifacts, init
+    /// params and the scaling/divergence/data state, carve the ZeRO-1
+    /// shard layout, and validate the collective topology
+    /// (`pods` must divide `dp_workers`) and wire format.
     pub fn new(rt: Arc<Runtime>, cfg: TrainConfig) -> Result<Self> {
         let rc = cfg.recipe_config();
         let grad_name = format!("grad_{}_{}", cfg.size, rc.name);
@@ -276,13 +307,17 @@ impl Trainer {
                 return Err(anyhow!("collective_fmt must be 'e4m3' or 'e5m2' (got '{other}')"))
             }
         };
-        let collective_fmt = cfg.collective_fp8.then_some(wire_fmt);
+        let fp8_intra = cfg.collective_fp8_intra.then_some(wire_fmt);
+        let fp8_inter = cfg.collective_fp8_inter.then_some(wire_fmt);
+        let topo = PodTopology::new(cfg.dp_workers, cfg.pods).map_err(|e| anyhow!(e))?;
 
         Ok(Self {
             m_shards: mk_shards(m_store),
             v_shards: mk_shards(v_store),
             shard_map,
-            collective_fmt,
+            topo,
+            fp8_intra,
+            fp8_inter,
             last_collective: CollectiveStats::default(),
             collective_scratch: CollectiveScratch::default(),
             worker_grads: vec![Vec::new(); cfg.dp_workers],
@@ -305,8 +340,15 @@ impl Trainer {
         })
     }
 
+    /// The PJRT runtime this trainer executes artifacts on.
     pub fn runtime(&self) -> &Arc<Runtime> {
         &self.rt
+    }
+
+    /// The validated pod topology the gradient collective runs on
+    /// (`pods = 1` is the flat collective).
+    pub fn topology(&self) -> PodTopology {
+        self.topo
     }
 
     /// Whether a failed optimizer step has left the in-memory state
@@ -326,10 +368,13 @@ impl Trainer {
         self.poisoned = false;
     }
 
+    /// The grad artifact's manifest (model dims, param specs, FLOPs).
     pub fn manifest(&self) -> &crate::runtime::Manifest {
         &self.grad_art.manifest
     }
 
+    /// Tokens consumed per optimizer step across all workers and
+    /// microbatches.
     pub fn tokens_per_step(&self) -> usize {
         let m = &self.grad_art.manifest;
         m.batch * m.seq_len * self.cfg.dp_workers * self.cfg.grad_accum
@@ -524,15 +569,20 @@ impl Trainer {
         let loss =
             (loss_sum / (self.cfg.dp_workers * self.cfg.grad_accum) as f64) as f32;
 
-        // ---- (2) gradient collective: deterministic reduce-scatter →
-        //      (optional per-chunk FP8 encode, FP8-LM-style) →
-        //      all-gather; rank 0 holds the gathered average (the only
-        //      copy consumed — every replica buffer is overwritten by
-        //      the next step's worker pass). With collective_fp8 off
-        //      this is bit-identical to the rank-0 reduce.
-        self.last_collective = grad_collective_with(
+        // ---- (2) gradient collective: pod-aware two-level schedule —
+        //      intra-pod reduce-scatter → inter-pod exchange over pod
+        //      leaders → intra-pod all-gather, with per-level FP8 wire
+        //      compression (per-chunk pow2 JIT scales, FP8-LM-style).
+        //      Rank 0 holds the gathered average (the only copy
+        //      consumed — every replica buffer is overwritten by the
+        //      next step's worker pass). At pods=1 with intra
+        //      compression off this is bit-identical to the rank-0
+        //      reduce.
+        self.last_collective = hier_grad_collective_with(
             &mut self.worker_grads,
-            self.collective_fmt,
+            self.topo,
+            self.fp8_intra,
+            self.fp8_inter,
             self.shard_map.chunk,
             &mut self.collective_scratch,
         );
@@ -714,6 +764,7 @@ impl Trainer {
         Ok(((nll / total).exp(), correct / total))
     }
 
+    /// Wall-clock seconds since the trainer was built (step meter).
     pub fn wall_s(&self) -> f64 {
         self.meter.wall_s()
     }

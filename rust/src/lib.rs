@@ -13,8 +13,9 @@
 //!   amax ring buffers → pow2 scales), the piece the paper's
 //!   instability analysis targets.
 //! * [`coordinator`] — training orchestration: data-parallel workers,
-//!   gradient all-reduce, ZeRO-1 sharded optimizer, LR schedule,
-//!   divergence detection.
+//!   the pod-aware two-level gradient collective (per-level FP8 wire
+//!   compression), ZeRO-1 sharded optimizer, LR schedule, divergence
+//!   detection.
 //! * [`fp8`] — real u8 E4M3/E5M2 codecs (checkpoint/optimizer storage;
 //!   the Table 4 memory story is measured bytes, not simulation).
 //! * [`data`] — deterministic synthetic Zipf-Markov corpus (the

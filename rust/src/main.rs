@@ -104,7 +104,8 @@ fn run() -> Result<()> {
                  usage:\n  fp8-trainer train [--config FILE] [key=value ...]\n  \
                  fp8-trainer eval  [--config FILE] [key=value ...]\n  \
                  fp8-trainer tables\n  fp8-trainer artifacts\n\n\
-                 common keys: size=s1m recipe=fp8_full steps=1000 lr=2.5e-4\n\
+                 common keys: size=s1m recipe=fp8_full steps=1000 lr=2.5e-4\n             \
+                 dp_workers=8 pods=2 (two-level collective; docs/OPERATIONS.md has all keys)\n\
                  recipes: bf16 bf16_smooth fp8 fp8_noq3 fp8_smooth fp8_full\n         \
                  fp8_adam_<m>_<v> gelu_fp8 gelu_bf16\n\n\
                  long-horizon runs (bit-exact resume, divergence auto-recovery):\n  \

@@ -1,0 +1,216 @@
+//! Topology-aware link model for the two-level gradient collective:
+//! when does FP8 wire compression *pay* on a given level?
+//!
+//! The two levels of `coordinator::topology` ride different wires —
+//! intra-pod legs use the accelerators' fat scale-up links, inter-pod
+//! legs squeeze through a few scale-out ports — so the FP8-vs-f32
+//! decision is per level, and it is a genuine trade: compression
+//! removes 3 of every 4 wire bytes but adds a quantize-dequantize
+//! pass per leg, costed at the accelerator's HBM rate (on-device qdq
+//! is memory-bound — the arithmetic is a multiply and a table lookup).
+//! FP8 pays exactly when the wire seconds saved exceed the codec
+//! seconds added, which reduces to a **bandwidth crossover**: below
+//! [`fp8_crossover_gbps`] the level wants FP8, above it f32.
+//!
+//! With Gaudi2-like numbers ([`GAUDI2_LINKS`]) the crossover lands
+//! between the two levels — the thin inter-pod pipe is far below it,
+//! the fat intra-pod mesh above it — which is why the config defaults
+//! to `collective_fp8_inter = true`, `collective_fp8_intra = false`
+//! (see `docs/OPERATIONS.md` §Topology for the operator-facing rule).
+//!
+//! Byte counts here follow the same closed forms
+//! `coordinator::allreduce::CollectiveStats` reports, with one
+//! deliberate simplification: FP8 legs are costed at exactly 1
+//! byte/element, dropping the 4-byte pow2 scale per chunk that the
+//! stats count (`4·⌈n/chunk⌉` — under 0.002% of the payload at the
+//! production 256K-element chunk). A unit test cross-checks the two
+//! accountings at `chunk = n`, where the simplification collapses to
+//! a single scale word; dividing a `BENCH_hotpath.json` wire-byte
+//! record by these bandwidths therefore over-counts time by that same
+//! sub-percent margin, nothing more.
+
+use crate::perfmodel::roofline::HBM_GBPS;
+
+/// Bytes of memory traffic one quantize-dequantize pass touches per
+/// element on one wire leg: the encode side reads an f32 and writes a
+/// byte (4 + 1), the decode side reads the byte and writes an f32
+/// (1 + 4). The codec itself is memory-bound on-device, so seconds =
+/// bytes / HBM rate.
+pub const QDQ_BYTES_PER_ELEM_PER_LEG: f64 = 10.0;
+
+/// Link bandwidths of one pod deployment, in GB/s per rank.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// deployment label
+    pub name: &'static str,
+    /// per-rank bandwidth of the intra-pod (scale-up) links, GB/s
+    pub intra_gbps: f64,
+    /// per-rank bandwidth of the inter-pod (scale-out) links, GB/s
+    pub inter_gbps: f64,
+    /// achieved HBM rate the on-device qdq passes run at, GB/s
+    pub codec_gbps: f64,
+}
+
+/// Gaudi2 8-card pods: each card exposes 24×100 GbE RoCE ports, 21
+/// wired all-to-all inside the pod (262.5 GB/s scale-up) and 3 into
+/// the switch fabric (37.5 GB/s scale-out) — the paper's 256-card
+/// deployment shape. Codec passes run at the roofline HBM rate.
+pub const GAUDI2_LINKS: LinkModel = LinkModel {
+    name: "Gaudi2 8-card pods (21+3 x 100GbE)",
+    intra_gbps: 262.5,
+    inter_gbps: 37.5,
+    codec_gbps: HBM_GBPS,
+};
+
+/// Seconds one level of the hierarchical collective spends on the
+/// wire for `n` elements across `ranks` participants: a ring moves
+/// `(ranks-1)/ranks · n · bytes_per_elem` per rank per leg, two legs
+/// (reduce-scatter + all-gather), at `gbps` per rank. Groups of the
+/// same level (the pods of the intra level) run concurrently, so this
+/// is per-group wall time, not pod-total bytes.
+pub fn level_wire_seconds(n: usize, ranks: usize, bytes_per_elem: f64, gbps: f64) -> f64 {
+    if ranks <= 1 {
+        return 0.0;
+    }
+    let frac = (ranks - 1) as f64 / ranks as f64;
+    2.0 * frac * n as f64 * bytes_per_elem / (gbps * 1e9)
+}
+
+/// Seconds the per-chunk qdq passes of one FP8-compressed level add
+/// (two legs, memory-bound at `codec_gbps`); zero for an f32 level.
+pub fn level_codec_seconds(n: usize, ranks: usize, fp8: bool, codec_gbps: f64) -> f64 {
+    if !fp8 || ranks <= 1 {
+        return 0.0;
+    }
+    2.0 * n as f64 * QDQ_BYTES_PER_ELEM_PER_LEG / (codec_gbps * 1e9)
+}
+
+/// Wall-clock estimate of one two-level gradient collective.
+#[derive(Clone, Copy, Debug)]
+pub struct CollectiveCost {
+    /// wire seconds on the intra-pod level (pods run concurrently)
+    pub intra_wire_s: f64,
+    /// wire seconds on the inter-pod (leader) level
+    pub inter_wire_s: f64,
+    /// added qdq seconds across whichever levels are FP8-compressed
+    pub codec_s: f64,
+}
+
+impl CollectiveCost {
+    /// Total estimated wall-clock: the levels are sequential phases.
+    pub fn total_s(&self) -> f64 {
+        self.intra_wire_s + self.inter_wire_s + self.codec_s
+    }
+}
+
+/// Cost one hierarchical collective of `n` elements on
+/// `pods × workers_per_pod` ranks, with per-level compression flags —
+/// the analytic twin of `coordinator::topology::hier_grad_collective`.
+pub fn hier_collective_cost(
+    n: usize,
+    pods: usize,
+    workers_per_pod: usize,
+    fp8_intra: bool,
+    fp8_inter: bool,
+    link: &LinkModel,
+) -> CollectiveCost {
+    let intra_bytes = if fp8_intra { 1.0 } else { 4.0 };
+    let inter_bytes = if fp8_inter { 1.0 } else { 4.0 };
+    CollectiveCost {
+        intra_wire_s: level_wire_seconds(n, workers_per_pod, intra_bytes, link.intra_gbps),
+        inter_wire_s: level_wire_seconds(n, pods, inter_bytes, link.inter_gbps),
+        codec_s: level_codec_seconds(n, workers_per_pod, fp8_intra, link.codec_gbps)
+            + level_codec_seconds(n, pods, fp8_inter, link.codec_gbps),
+    }
+}
+
+/// The link-bandwidth crossover (GB/s) below which FP8 compression
+/// pays on a level of `ranks` participants: FP8 saves
+/// `2·(ranks-1)/ranks·3` wire bytes per element and costs
+/// `2·`[`QDQ_BYTES_PER_ELEM_PER_LEG`] codec bytes per element at
+/// `codec_gbps`, so the break-even link rate is
+/// `3·(ranks-1)/ranks · codec_gbps / QDQ_BYTES_PER_ELEM_PER_LEG`.
+pub fn fp8_crossover_gbps(ranks: usize, codec_gbps: f64) -> f64 {
+    if ranks <= 1 {
+        return 0.0; // nothing on the wire — compression never pays
+    }
+    let frac = (ranks - 1) as f64 / ranks as f64;
+    3.0 * frac * codec_gbps / QDQ_BYTES_PER_ELEM_PER_LEG
+}
+
+/// Whether FP8 wire compression reduces wall-clock on a level of
+/// `ranks` participants riding a `link_gbps` pipe.
+pub fn fp8_pays(ranks: usize, link_gbps: f64, codec_gbps: f64) -> bool {
+    link_gbps < fp8_crossover_gbps(ranks, codec_gbps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::topology::{hier_grad_collective, PodTopology};
+    use crate::fp8::E5M2;
+
+    #[test]
+    fn gaudi2_crossover_separates_the_levels() {
+        // the deployment the defaults encode: 32 pods x 8 cards
+        let l = &GAUDI2_LINKS;
+        assert!(
+            !fp8_pays(8, l.intra_gbps, l.codec_gbps),
+            "fat intra-pod links must not want FP8 (crossover {:.0} GB/s)",
+            fp8_crossover_gbps(8, l.codec_gbps)
+        );
+        assert!(
+            fp8_pays(32, l.inter_gbps, l.codec_gbps),
+            "thin inter-pod pipe must want FP8 (crossover {:.0} GB/s)",
+            fp8_crossover_gbps(32, l.codec_gbps)
+        );
+        // the crossover itself sits strictly between the two pipes
+        let x = fp8_crossover_gbps(8, l.codec_gbps);
+        assert!(l.inter_gbps < x && x < l.intra_gbps, "crossover {x}");
+    }
+
+    #[test]
+    fn crossover_is_monotone_in_ranks_and_codec_rate() {
+        assert!(fp8_crossover_gbps(2, 800.0) < fp8_crossover_gbps(32, 800.0));
+        assert!(fp8_crossover_gbps(8, 400.0) < fp8_crossover_gbps(8, 800.0));
+        assert_eq!(fp8_crossover_gbps(1, 800.0), 0.0);
+    }
+
+    #[test]
+    fn default_mix_beats_both_uniform_choices_on_gaudi2() {
+        // intra=f32/inter=fp8 (the config default) must beat all-f32
+        // AND all-fp8 at the paper's 32x8 shape
+        let n = 1 << 24;
+        let l = &GAUDI2_LINKS;
+        let mix = hier_collective_cost(n, 32, 8, false, true, l).total_s();
+        let all_f32 = hier_collective_cost(n, 32, 8, false, false, l).total_s();
+        let all_fp8 = hier_collective_cost(n, 32, 8, true, true, l).total_s();
+        assert!(mix < all_f32, "mix {mix} vs all-f32 {all_f32}");
+        assert!(mix < all_fp8, "mix {mix} vs all-fp8 {all_fp8}");
+    }
+
+    #[test]
+    fn wire_model_matches_collective_stats_byte_accounting() {
+        // the analytic per-rank wire volume and CollectiveStats'
+        // group-total accounting must be the same closed form:
+        // stats leg bytes = groups·(ranks-1)·payload
+        //                 = groups·ranks·(per-rank ring volume).
+        // chunk = n pins the comparison where the model's dropped
+        // per-chunk scale term is exactly one 4-byte word (see the
+        // module docs for why the model omits it in general)
+        let n = 4096usize;
+        let (pods, p) = (2usize, 4usize);
+        let topo = PodTopology::new(pods * p, pods).unwrap();
+        let mut bufs: Vec<Vec<f32>> = (0..pods * p).map(|_| vec![1e-3f32; n]).collect();
+        // chunk = n: one scale per leg -> payload n + 4 exactly
+        let s = hier_grad_collective(&mut bufs, topo, None, Some(E5M2), n);
+        let per_rank_intra = (p - 1) as f64 / p as f64 * n as f64 * 4.0;
+        assert_eq!(
+            s.intra.reduce_scatter as f64,
+            per_rank_intra * (pods * p) as f64,
+            "intra: stats total = per-rank ring volume x all ranks"
+        );
+        let per_rank_inter = (pods - 1) as f64 / pods as f64 * (n + 4) as f64;
+        assert_eq!(s.inter.reduce_scatter as f64, per_rank_inter * pods as f64);
+    }
+}

@@ -12,12 +12,18 @@
 //!
 //! [`roofline`] additionally estimates the Pallas kernel's VMEM
 //! footprint and MXU occupancy (DESIGN.md §Perf — interpret-mode
-//! wall-clock is not a TPU proxy, so L1 is costed structurally).
+//! wall-clock is not a TPU proxy, so L1 is costed structurally), and
+//! [`interconnect`] models the two-level collective's links — the
+//! intra-pod vs inter-pod bandwidth split that decides where FP8 wire
+//! compression pays (the `collective_fp8_intra`/`collective_fp8_inter`
+//! defaults come from its crossover rule).
 
 pub mod devices;
+pub mod interconnect;
 pub mod roofline;
 
 pub use devices::{Device, A6000_ADA, GAUDI2};
+pub use interconnect::{fp8_crossover_gbps, fp8_pays, LinkModel, GAUDI2_LINKS};
 
 /// Which fraction of matmul FLOPs runs at the FP8 rate per config, and
 /// added vector-op overhead per token for scaling machinery.
@@ -33,6 +39,7 @@ pub enum PrecisionConfig {
 }
 
 impl PrecisionConfig {
+    /// Human-readable row label matching the paper's tables.
     pub fn label(self) -> &'static str {
         match self {
             PrecisionConfig::Bf16 => "BF16",
@@ -42,6 +49,8 @@ impl PrecisionConfig {
         }
     }
 
+    /// Whether the paper observed this config converging (standard
+    /// FP8 — no Smooth-SwiGLU — is the diverging one).
     pub fn converges(self) -> bool {
         !matches!(self, PrecisionConfig::Fp8Full)
     }
@@ -50,7 +59,9 @@ impl PrecisionConfig {
 /// Llama-2-7B-like workload description (matmul FLOP split by site).
 #[derive(Clone, Debug)]
 pub struct Workload {
+    /// parameter count
     pub params: f64,
+    /// tokens processed per step (batch × sequence length)
     pub tokens_per_batch: f64,
     /// fraction of matmul FLOPs in the w3 (SwiGLU-output) matmul:
     /// f·d of 4d² + 3fd ≈ 0.268 for Llama-2 (f = 2.6875 d)
@@ -62,6 +73,7 @@ pub struct Workload {
 }
 
 impl Workload {
+    /// The paper's Llama-2-7B measurement workload (Tables 3/5).
     pub fn llama7b() -> Self {
         Self {
             params: 6.74e9,
@@ -78,12 +90,18 @@ impl Workload {
     }
 }
 
+/// One row of a regenerated Table 3/5-style throughput table.
 #[derive(Clone, Debug)]
 pub struct TableRow {
+    /// the precision configuration this row measures
     pub config: PrecisionConfig,
-    pub throughput: f64, // samples/sec
+    /// modeled throughput in samples/sec
+    pub throughput: f64,
+    /// speedup over the BF16 row, percent
     pub speedup_pct: f64,
+    /// achieved model TFLOPS at the modeled step time
     pub tflops: f64,
+    /// see [`PrecisionConfig::converges`]
     pub converges: bool,
 }
 

@@ -6,21 +6,30 @@
 //! arithmetic intensity (FLOPs per HBM byte) against the MXU/VPU
 //! roofline.
 
-/// TPU-like core budget used for the estimates.
+/// TPU-like per-core VMEM budget used for the estimates.
 pub const VMEM_BYTES: usize = 16 * 1024 * 1024;
+/// Achieved HBM bandwidth assumed by the estimates, GB/s (also the
+/// rate `perfmodel::interconnect` costs on-device qdq passes at).
 pub const HBM_GBPS: f64 = 800.0;
+/// Achieved MXU bf16 matmul rate, TFLOP/s.
 pub const MXU_BF16_TFLOPS: f64 = 180.0;
+/// Achieved VPU elementwise rate, GFLOP/s.
 pub const VPU_GFLOPS: f64 = 4_000.0;
 
+/// Structural cost estimate of one Pallas kernel at a block shape.
 #[derive(Clone, Debug)]
 pub struct KernelEstimate {
+    /// kernel + block-shape label
     pub name: String,
+    /// VMEM resident bytes per grid step (single-buffered)
     pub vmem_bytes: usize,
+    /// whether the double-buffered footprint fits [`VMEM_BYTES`]
     pub vmem_ok: bool,
     /// FLOPs per byte moved HBM<->VMEM
     pub arithmetic_intensity: f64,
     /// min achievable time vs the memory-bound floor (1.0 = at roofline)
     pub roofline_fraction: f64,
+    /// which resource bounds the kernel ("memory" | "mxu" | "vector")
     pub bound: &'static str,
 }
 

@@ -1,22 +1,33 @@
-//! ISSUE-4 test coverage for the compressed gradient collective and
-//! the chunk-aligned ZeRO-1 shard layer. No artifacts needed — pure
-//! Rust, always runs.
+//! ISSUE-4/ISSUE-5 test coverage for the compressed gradient
+//! collective, the pod-aware two-level topology layer, and the
+//! chunk-aligned ZeRO-1 shard layer. No artifacts needed — pure Rust,
+//! always runs.
 //!
 //! Pins:
-//! * `collective_fp8 = false` is **bit-identical** to the pinned
-//!   serial schedule (`reduce_mean_into_rank0`) at any worker count;
+//! * `collective_fp8_intra = false` is **bit-identical** to the
+//!   pinned serial schedule (`reduce_mean_into_rank0`) at any worker
+//!   count;
 //! * the FP8 path is deterministic across `dp_workers ∈ {1, 2, 4}`
 //!   and across thread timing (repeated runs, sizes straddling the
 //!   parallel threshold), and equals an independently-computed scalar
 //!   serial reference;
+//! * the two-level collective at `pods = 1` is bit-identical to the
+//!   flat path, the all-f32 two-level schedule is bit-identical to
+//!   the flat f32 collective at `pods ∈ {2, 4}` (power-of-two pod
+//!   sizes), the two-level FP8 paths are deterministic across reruns
+//!   and equal a scalar serial two-level reference, and the default
+//!   `intra=f32 / inter=fp8` mix stays inside the quantization bound;
+//! * per-leg, per-level wire accounting carries the exact closed-form
+//!   totals;
 //! * quantization error on adversarial (outlier-spiked) gradients is
 //!   bounded by the per-chunk auto-scale analysis;
 //! * the chunk-aligned owner map and the collective share one chunk
 //!   grid, so shard gather/scatter is exact.
 
 use fp8_trainer::coordinator::allreduce::{
-    grad_collective, reduce_mean_into_rank0, tree_reduce_sum,
+    grad_collective, reduce_mean_into_rank0, tree_reduce_sum, CollectiveStats,
 };
+use fp8_trainer::coordinator::topology::{hier_grad_collective, PodTopology};
 use fp8_trainer::fp8::{self, Fp8Format, E4M3, E5M2};
 use fp8_trainer::optimizer::{MomentBuffer, MomentStore, ShardLayout};
 use fp8_trainer::util::prng::Rng;
@@ -68,7 +79,7 @@ fn f32_path_is_bit_identical_to_pinned_serial_schedule_at_scale() {
         let mut b = replicas(42, w, n);
         grad_collective(&mut a, None, 4096);
         reduce_mean_into_rank0(&mut b);
-        assert!(bits_eq(&a[0], &b[0]), "w={w}: collective_fp8=false must be bit-identical");
+        assert!(bits_eq(&a[0], &b[0]), "w={w}: uncompressed collective must be bit-identical");
     }
 }
 
@@ -217,6 +228,218 @@ fn shard_gather_scatter_roundtrips_on_the_collective_grid() {
     }
 }
 
+/// Scalar serial reference for the full two-level collective: the
+/// same pipeline as `topology::hier_grad_collective` but with every
+/// qdq done by the scalar codec reference and the pod/leader sums
+/// done on *contiguous* buffer sets (an independent realization of
+/// the strided leader tree). Returns the gathered average.
+fn hier_reference(
+    mut workers: Vec<Vec<f32>>,
+    pods: usize,
+    fmt_intra: Option<Fp8Format>,
+    fmt_inter: Option<Fp8Format>,
+    chunk: usize,
+) -> Vec<f32> {
+    let w = workers.len();
+    let p = w / pods;
+    assert_eq!(p * pods, w);
+    if let Some(fmt) = fmt_intra {
+        for b in workers.iter_mut() {
+            qdq_chunks_scalar(fmt, chunk, b);
+        }
+    }
+    // per-pod sums on contiguous slices
+    let mut leaders: Vec<Vec<f32>> = Vec::with_capacity(pods);
+    for pod in 0..pods {
+        tree_reduce_sum(&mut workers[pod * p..(pod + 1) * p]);
+        leaders.push(workers[pod * p].clone());
+    }
+    if let Some(fmt) = fmt_inter {
+        for b in leaders.iter_mut() {
+            qdq_chunks_scalar(fmt, chunk, b);
+        }
+    }
+    // the leader exchange as a contiguous tree — independent of the
+    // strided in-place tree the library uses
+    tree_reduce_sum(&mut leaders);
+    let inv = 1.0 / w as f32;
+    let mut out = leaders.swap_remove(0);
+    for x in out.iter_mut() {
+        *x *= inv;
+    }
+    if let Some(fmt) = fmt_inter {
+        qdq_chunks_scalar(fmt, chunk, &mut out);
+    }
+    if let Some(fmt) = fmt_intra {
+        qdq_chunks_scalar(fmt, chunk, &mut out);
+    }
+    out
+}
+
+#[test]
+fn hier_pods1_is_bit_identical_to_flat_path() {
+    // pods = 1 must be the flat collective — same bits, same stats —
+    // in every compression mode (inter setting is irrelevant: there
+    // is no inter level)
+    let n = 70_000; // crosses the parallel fan-out threshold
+    let chunk = 4096;
+    for w in [1usize, 2, 4] {
+        for intra in [None, Some(E4M3), Some(E5M2)] {
+            let topo = PodTopology::new(w, 1).unwrap();
+            let mut a = replicas(5, w, n);
+            let mut b = replicas(5, w, n);
+            let sa = hier_grad_collective(&mut a, topo, intra, Some(E5M2), chunk);
+            let sb = grad_collective(&mut b, intra, chunk);
+            assert!(bits_eq(&a[0], &b[0]), "w={w} intra={intra:?}");
+            assert_eq!(sa, sb, "stats must match the flat accounting exactly");
+        }
+    }
+}
+
+#[test]
+fn hier_f32_two_level_is_bit_identical_to_flat_f32() {
+    // with compression off on both levels, the two-level schedule at
+    // power-of-two pod sizes is the SAME summation tree as the flat
+    // collective (the flat binary tree decomposes at pod boundaries
+    // when workers_per_pod = 2^k), so the result is bit-identical —
+    // topology moves bytes, not additions. Large n so every internal
+    // fan-out goes parallel.
+    let n = 200_000;
+    for (w, pods_set) in [(4usize, vec![2usize, 4]), (8, vec![2, 4])] {
+        for pods in pods_set {
+            let topo = PodTopology::new(w, pods).unwrap();
+            let mut a = replicas(42, w, n);
+            let mut b = replicas(42, w, n);
+            let s = hier_grad_collective(&mut a, topo, None, None, 4096);
+            reduce_mean_into_rank0(&mut b);
+            assert!(
+                bits_eq(&a[0], &b[0]),
+                "w={w} pods={pods}: f32 two-level must be bit-identical to flat"
+            );
+            // and the executed bytes are all-f32 on both levels
+            assert_eq!(s.wire_bytes(), s.wire_bytes_f32());
+        }
+    }
+}
+
+#[test]
+fn hier_fp8_two_level_is_deterministic_and_matches_serial_reference() {
+    // sizes straddling the parallel threshold, ragged chunk tails,
+    // pods ∈ {2, 4}: reruns must be bit-identical (thread timing is
+    // invisible) and equal the scalar serial two-level reference
+    let chunk = 4096usize;
+    for fmt in [E4M3, E5M2] {
+        for n in [1000usize, 70_000] {
+            for pods in [2usize, 4] {
+                let w = 8usize;
+                let topo = PodTopology::new(w, pods).unwrap();
+                let mut first = replicas(100 + n as u64, w, n);
+                let s1 = hier_grad_collective(&mut first, topo, Some(fmt), Some(fmt), chunk);
+                for _ in 0..2 {
+                    let mut again = replicas(100 + n as u64, w, n);
+                    let s2 = hier_grad_collective(&mut again, topo, Some(fmt), Some(fmt), chunk);
+                    assert!(
+                        bits_eq(&first[0], &again[0]),
+                        "{fmt:?} n={n} pods={pods}: two-level fp8 must be bit-reproducible"
+                    );
+                    assert_eq!(s1, s2);
+                }
+                let fresh = replicas(100 + n as u64, w, n);
+                let reference = hier_reference(fresh, pods, Some(fmt), Some(fmt), chunk);
+                assert!(
+                    bits_eq(&first[0], &reference),
+                    "{fmt:?} n={n} pods={pods}: must equal the scalar serial reference"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hier_mixed_intra_f32_inter_fp8_matches_reference_and_quantization_bound() {
+    // the default topology mix: f32 on the fat intra-pod links, FP8
+    // on the thin inter-pod pipe. Must (a) equal the scalar serial
+    // reference bit-for-bit, and (b) stay inside the two-leg
+    // per-chunk auto-scale bound against the all-f32 result — the
+    // relative part references the POD-PARTIAL magnitudes (the values
+    // the inter legs actually quantize), mirroring the per-worker
+    // bound of the flat test (validated against an ml_dtypes
+    // simulation; see rust/EXPERIMENTS.md §Topology).
+    let chunk = 1000usize;
+    let n = 3 * chunk;
+    let (w, pods) = (8usize, 2usize);
+    let p = w / pods;
+    for fmt in [E4M3, E5M2] {
+        let step = 2f32.powi(-(fmt.man_bits() as i32));
+        let mk = || replicas(0xbeef + fmt.man_bits() as u64, w, n);
+
+        let mut mixed = mk();
+        let topo = PodTopology::new(w, pods).unwrap();
+        hier_grad_collective(&mut mixed, topo, None, Some(fmt), chunk);
+        let reference = hier_reference(mk(), pods, None, Some(fmt), chunk);
+        assert!(bits_eq(&mixed[0], &reference), "{fmt:?}: must equal the serial reference");
+
+        // pod partial sums (exact: no intra quantization in this mix)
+        let mut partials = mk();
+        let mut pods_sums: Vec<Vec<f32>> = Vec::new();
+        for pod in 0..pods {
+            tree_reduce_sum(&mut partials[pod * p..(pod + 1) * p]);
+            pods_sums.push(partials[pod * p].clone());
+        }
+        let mut flat = mk();
+        reduce_mean_into_rank0(&mut flat);
+
+        for (ci, (qc, xc)) in mixed[0].chunks(chunk).zip(flat[0].chunks(chunk)).enumerate() {
+            let s0 = &pods_sums[0][ci * chunk..(ci + 1) * chunk];
+            let s1 = &pods_sums[1][ci * chunk..(ci + 1) * chunk];
+            let amax = xc
+                .iter()
+                .chain(s0)
+                .chain(s1)
+                .fold(0.0f32, |a, &x| a.max(x.abs()));
+            let floor = 4.0 * fmt.min_subnormal() * (amax / fmt.max()).max(1e-12);
+            for (i, (&q, &x)) in qc.iter().zip(xc).enumerate() {
+                assert!(q.is_finite(), "{fmt:?} chunk {ci} elem {i}: non-finite {q}");
+                // leg 1 rounds each pod partial (error ∝ |s_p|·step,
+                // scaled by 1/W in the mean), leg 2 rounds the mean
+                let partial_mag = (s0[i].abs() + s1[i].abs()) / w as f32;
+                let tol = (partial_mag + x.abs()) * step + floor;
+                assert!(
+                    (q - x).abs() <= tol,
+                    "{fmt:?} chunk {ci} elem {i}: |{q} - {x}| > {tol}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hier_wire_stats_split_by_level_and_leg() {
+    // the per-level split must carry exact closed forms — and the
+    // default mix must show up as "intra at f32 ratio, inter < 0.3"
+    let n = 10_000usize;
+    let chunk = 256usize;
+    let n_chunks = n.div_ceil(chunk) as u64;
+    let (w, pods) = (8usize, 4usize);
+    let p = (w / pods) as u64;
+    let topo = PodTopology::new(w, pods).unwrap();
+    let mut bufs = replicas(9, w, n);
+    let s = hier_grad_collective(&mut bufs, topo, None, Some(E5M2), chunk);
+    assert_eq!(s.elems, n);
+    let intra_leg = pods as u64 * (p - 1) * n as u64 * 4;
+    assert_eq!(s.intra.reduce_scatter, intra_leg);
+    assert_eq!(s.intra.all_gather, intra_leg);
+    assert_eq!(s.intra, s.intra_f32, "uncompressed intra must equal its f32 baseline");
+    let inter_leg = (pods as u64 - 1) * (n as u64 + 4 * n_chunks);
+    assert_eq!(s.inter.reduce_scatter, inter_leg);
+    assert_eq!(s.inter.all_gather, inter_leg);
+    assert_eq!(s.inter_f32.reduce_scatter, (pods as u64 - 1) * n as u64 * 4);
+    assert!(s.inter_wire_ratio() < 0.3, "inter ratio {}", s.inter_wire_ratio());
+    assert_eq!(s.wire_bytes(), 2 * (intra_leg + inter_leg));
+    // stats are plain data: the default is all-zero except elems
+    assert_eq!(CollectiveStats::default().wire_bytes(), 0);
+}
+
 #[test]
 fn fp8_collective_propagates_nan_to_the_caller() {
     // a poisoned replica must surface as NaN in the gathered average
@@ -227,5 +450,14 @@ fn fp8_collective_propagates_nan_to_the_caller() {
     bufs[1][123] = f32::NAN;
     grad_collective(&mut bufs, Some(E5M2), 64);
     assert!(bufs[0][123].is_nan(), "NaN gradient must reach the clip stage");
+    assert!(bufs[0][0].is_finite(), "neighbors must stay finite");
+
+    // same transparency through the two-level path: a poisoned member
+    // of pod 1 must surface in the gathered average
+    let mut bufs: Vec<Vec<f32>> = (0..4).map(|_| vec![1e-3f32; n]).collect();
+    bufs[3][77] = f32::NAN;
+    let topo = PodTopology::new(4, 2).unwrap();
+    hier_grad_collective(&mut bufs, topo, Some(E4M3), Some(E5M2), 64);
+    assert!(bufs[0][77].is_nan(), "NaN must survive both levels");
     assert!(bufs[0][0].is_finite(), "neighbors must stay finite");
 }

@@ -180,8 +180,8 @@ fn parallel_workers_bit_identical_to_serial() {
 
 #[test]
 fn sharded_fp8_path_bit_identical_to_f32_resident_baseline() {
-    // the pinned ISSUE-4 equivalence: with collective_fp8 = false
-    // (default), the ZeRO-1 sharded step with exact-FP8-packed moment
+    // the pinned ISSUE-4 equivalence: with collective_fp8_intra =
+    // false (default), the ZeRO-1 sharded step with exact-FP8-packed moment
     // shards must reproduce the replicated-style f32-resident
     // schedule bit-for-bit at every worker count — packing between
     // steps is exact-verified, so sharding + packing is invisible to
@@ -223,7 +223,7 @@ fn fp8_collective_is_reproducible_and_trains() {
     let rt = runtime();
     let mut cfg = tiny_cfg("fp8_full");
     cfg.dp_workers = 2;
-    cfg.collective_fp8 = true;
+    cfg.collective_fp8_intra = true;
     let mut a = Trainer::new(rt.clone(), cfg.clone()).unwrap();
     let mut b = Trainer::new(rt, cfg).unwrap();
     for _ in 0..3 {
@@ -233,10 +233,47 @@ fn fp8_collective_is_reproducible_and_trains() {
         assert!(oa.loss.is_finite() && (oa.loss - 5.545).abs() < 0.5, "loss {}", oa.loss);
     }
     let stats = a.collective_stats();
-    assert!(stats.wire_bytes > 0 && stats.wire_ratio() < 0.3, "ratio {}", stats.wire_ratio());
+    assert!(
+        stats.wire_bytes() > 0 && stats.wire_ratio() < 0.3,
+        "ratio {}",
+        stats.wire_ratio()
+    );
     let (ma, _) = a.moments_flat();
     let (mb, _) = b.moments_flat();
     assert_eq!(ma, mb, "moment state must be reproducible under the fp8 collective");
+}
+
+#[test]
+fn two_level_f32_collective_is_invisible_to_training() {
+    // ISSUE-5: pods = 2 with compression off on both levels must
+    // reproduce the flat pods = 1 run bit-for-bit through real
+    // training steps (power-of-two pod size: the flat binary tree
+    // decomposes exactly at pod boundaries). Topology then only moves
+    // bytes between levels, never additions.
+    let rt = runtime();
+    let mut cfg = tiny_cfg("fp8_full");
+    cfg.dp_workers = 4;
+    cfg.collective_fp8_inter = false; // all-f32 two-level
+    let mut flat = Trainer::new(rt.clone(), cfg.clone()).unwrap();
+    cfg.pods = 2;
+    let mut hier = Trainer::new(rt, cfg).unwrap();
+    for _ in 0..3 {
+        let oa = flat.step().unwrap();
+        let ob = hier.step().unwrap();
+        assert_eq!(oa.loss.to_bits(), ob.loss.to_bits(), "loss must be topology-invariant");
+        assert_eq!(oa.grad_norm.to_bits(), ob.grad_norm.to_bits(), "grad norm");
+    }
+    for (ta, tb) in flat.params.tensors.iter().zip(&hier.params.tensors) {
+        assert_eq!(ta.f32s(), tb.f32s(), "params must be bit-identical across topologies");
+    }
+    // but the wire accounting must differ: the hierarchical run
+    // reports an inter level, the flat run does not
+    assert_eq!(flat.collective_stats().inter.total(), 0);
+    assert!(hier.collective_stats().inter.total() > 0);
+    assert_eq!(
+        flat.collective_stats().wire_bytes(),
+        flat.collective_stats().wire_bytes_f32()
+    );
 }
 
 #[test]

@@ -1,0 +1,60 @@
+#!/usr/bin/env bash
+# Docs gate: every config key the loader accepts must be documented in
+# docs/OPERATIONS.md (the operator's single reference table).
+#
+# Key sources scanned:
+#   * rust/src/config/mod.rs — the `match k.as_str()` arms of
+#     TrainConfig::from_kv (both bare and dotted spellings);
+#   * rust/src/bin/campaign.rs — the CLI-only session keys
+#     (`k == "stop_after"`-style comparisons).
+#
+# A key counts as documented when it appears backticked (`key`) in
+# docs/OPERATIONS.md — backticks prevent substring false-passes (`lr`
+# inside `min_lr_frac`). Exit non-zero listing every undocumented key.
+#
+# Pure POSIX shell + grep/sed — no toolchain needed, so this gate runs
+# unconditionally in scripts/verify.sh and the CI docs job.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+DOC=docs/OPERATIONS.md
+CFG=rust/src/config/mod.rs
+CLI=rust/src/bin/campaign.rs
+
+for f in "$DOC" "$CFG" "$CLI"; do
+  if [ ! -f "$f" ]; then
+    echo "check_config_docs: missing $f" >&2
+    exit 1
+  fi
+done
+
+# Key literals from the from_kv match arms (range ends at the
+# catch-all `_ =>`); error-message strings contain spaces/braces and
+# never match the token pattern.
+keys=$(
+  {
+    sed -n '/match k.as_str() {/,/_ =>/p' "$CFG" | grep -oE '"[a-z0-9_.]+"'
+    grep -oE 'k == "[a-z0-9_]+"' "$CLI" | grep -oE '"[a-z0-9_]+"'
+  } | tr -d '"' | sort -u
+)
+
+if [ -z "$keys" ]; then
+  echo "check_config_docs: extracted no keys — loader layout changed?" >&2
+  echo "  (expected a 'match k.as_str()' block in $CFG)" >&2
+  exit 1
+fi
+
+missing=0
+for k in $keys; do
+  if ! grep -qF "\`$k\`" "$DOC"; then
+    echo "UNDOCUMENTED config key: $k — add it to $DOC" >&2
+    missing=1
+  fi
+done
+
+if [ "$missing" -ne 0 ]; then
+  echo "check_config_docs: FAIL (see keys above)" >&2
+  exit 1
+fi
+echo "check_config_docs: OK ($(echo "$keys" | wc -l | tr -d ' ') key spellings documented in $DOC)"

@@ -14,6 +14,9 @@
 #      rustfmt component is not installed)
 #   5. clippy gate: `cargo clippy --all-targets -- -D warnings`
 #      (skipped with a note when the clippy component is not installed)
+#   6. config-docs gate: every config key the loader accepts must be
+#      documented in docs/OPERATIONS.md
+#      (scripts/check_config_docs.sh — pure shell, always runs)
 #
 # VERIFY_SKIP_LINT=1 skips steps 4/5 — CI sets it in the verify job so
 # fmt/clippy run exactly once, in the dedicated lint job.
@@ -23,13 +26,13 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== [1/5] cargo build --release"
+echo "== [1/6] cargo build --release"
 cargo build --release
 
-echo "== [2/5] cargo test -q"
+echo "== [2/6] cargo test -q"
 cargo test -q
 
-echo "== [3/5] cargo doc --no-deps (doc-link gate)"
+echo "== [3/6] cargo doc --no-deps (doc-link gate)"
 # -W unused: rustdoc's own unused-lint pass stays advisory; the doc
 # correctness lints below are the gate.
 RUSTDOCFLAGS="${RUSTDOCFLAGS:-} \
@@ -39,7 +42,7 @@ RUSTDOCFLAGS="${RUSTDOCFLAGS:-} \
   -D rustdoc::bare-urls" \
   cargo doc --no-deps
 
-echo "== [4/5] cargo fmt --check"
+echo "== [4/6] cargo fmt --check"
 if [ "${VERIFY_SKIP_LINT:-0}" = "1" ]; then
   echo "  [skip] VERIFY_SKIP_LINT=1 (CI runs fmt/clippy in the lint job)"
 elif cargo fmt --version >/dev/null 2>&1; then
@@ -48,7 +51,7 @@ else
   echo "  [skip] rustfmt component not installed (rustup component add rustfmt)"
 fi
 
-echo "== [5/5] cargo clippy --all-targets -- -D warnings"
+echo "== [5/6] cargo clippy --all-targets -- -D warnings"
 if [ "${VERIFY_SKIP_LINT:-0}" = "1" ]; then
   echo "  [skip] VERIFY_SKIP_LINT=1 (CI runs fmt/clippy in the lint job)"
 elif cargo clippy --version >/dev/null 2>&1; then
@@ -56,5 +59,8 @@ elif cargo clippy --version >/dev/null 2>&1; then
 else
   echo "  [skip] clippy component not installed (rustup component add clippy)"
 fi
+
+echo "== [6/6] config-key docs coverage (docs/OPERATIONS.md)"
+scripts/check_config_docs.sh
 
 echo "verify: OK"
