@@ -9,7 +9,11 @@
 //!   encode ≥ 2x (ISSUE 1);
 //! * per-worker resident Adam-moment bytes reduced by ≥ (W-1)/W vs
 //!   the replicated-f32 baseline at W ∈ {1, 2, 4}, and the FP8
-//!   collective's bytes-on-the-wire ratio < 0.3 (ISSUE 4).
+//!   collective's bytes-on-the-wire ratio < 0.3 (ISSUE 4);
+//! * overlapped bucket pipeline ≥ phased steps/s at W ∈ {2, 4} ×
+//!   pods ∈ {1, 2}, with the measured hidden-comms fraction within 2x
+//!   of the `perfmodel::interconnect::overlap_from_times` prediction
+//!   (ISSUE 6).
 //!
 //! A floor miss exits non-zero and writes `speedup_floors_met = false`
 //! into the report — the CI bench-smoke job gates on both.
@@ -19,15 +23,20 @@
 //! note) when the artifacts directory is missing, so the codec and
 //! shard numbers are still collected on a bare checkout.
 
+use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use fp8_trainer::config::TrainConfig;
 use fp8_trainer::coordinator::allreduce::{
-    allreduce_mean, global_norm, grad_collective, reduce_mean_into_rank0,
+    allreduce_mean, global_norm, grad_collective, reduce_mean_into_rank0, CollectiveScratch,
 };
-use fp8_trainer::coordinator::topology::{hier_grad_collective, PodTopology};
+use fp8_trainer::coordinator::pipeline::{BucketSchedule, NormStream};
+use fp8_trainer::coordinator::topology::{
+    hier_bucket_collective, hier_grad_collective, PodTopology,
+};
 use fp8_trainer::coordinator::Trainer;
+use fp8_trainer::perfmodel::interconnect::{overlap_cost, overlap_from_times, GAUDI2_LINKS};
 use fp8_trainer::fp8::{self, bulk, Fp8Format, E4M3, E5M2};
 use fp8_trainer::optimizer::{MomentBuffer, MomentStore, ShardLayout};
 use fp8_trainer::runtime::Runtime;
@@ -363,6 +372,220 @@ fn topology_benches(report: &mut Report) -> bool {
     ok
 }
 
+/// ISSUE-6 §Overlap records: synthetic phased-vs-overlapped step
+/// tails (collective + norm + an Adam-weight elementwise pass, the
+/// same downstream work in both schedules) at W ∈ {2, 4} ×
+/// pods ∈ {1, 2}, on the trainer's real per-bucket collective
+/// (`hier_bucket_collective`) and norm stream. Floors folded into
+/// `speedup_floors_met`:
+/// * overlapped steps/s ≥ phased steps/s (with a 3% noise band —
+///   the raw numbers are recorded so a scripted gate can tighten it);
+/// * the pipeline model's predicted hidden-comms fraction, fed the
+///   *measured* per-stage seconds (`overlap_from_times`), lands
+///   within 2x of the measured hidden fraction.
+/// The GAUDI2-wire `overlap_cost` prediction is recorded ungated —
+/// wire seconds on a CPU host say nothing about the deployment, but
+/// the record keeps the analytic trajectory next to the measured one.
+fn overlap_benches(report: &mut Report) -> bool {
+    let mut ok = true;
+    let chunk = 262_144usize;
+    // 4 buckets either way: quick = 1-chunk buckets over 4 chunks,
+    // full = 4-chunk (4 MiB) buckets over 16 chunks
+    let (n, bucket_bytes) =
+        if quick() { (chunk * 4, chunk * 4) } else { (chunk * 16, chunk * 4 * 4) };
+    let sched = BucketSchedule::new(n, bucket_bytes, chunk);
+    let n_buckets = sched.len();
+    // the downstream compute the collective hides behind: the norm
+    // fold plus a few Adam-weight elementwise passes over the bucket
+    const OPT_PASSES: usize = 4;
+    println!(
+        "== overlapped bucket pipeline (synthetic, {n_buckets} buckets x {} elems) ==",
+        sched.elems_per_bucket
+    );
+    for (w, pods) in [(2usize, 1usize), (2, 2), (4, 1), (4, 2)] {
+        let topo = PodTopology::new(w, pods).unwrap();
+        let src: Vec<Vec<f32>> = {
+            let mut rng = Rng::new(0x0ea1 + (w * 16 + pods) as u64);
+            (0..w).map(|_| (0..n).map(|_| (rng.normal() as f32) * 0.01).collect()).collect()
+        };
+        let mut params = vec![0.0f32; n];
+
+        // ---- phased reference: whole-buffer collective, then norm +
+        //      opt — every collective second is exposed stall
+        let mut bufs: Vec<Vec<f32>> = src.clone();
+        let mut ph_comm = 0.0f64;
+        let mut ph_compute = 0.0f64;
+        let r_ph = bench(
+            &format!("overlap phased w={w} pods={pods}"),
+            1,
+            10,
+            Duration::from_secs(8),
+            || {
+                for (b, s) in bufs.iter_mut().zip(&src) {
+                    b.copy_from_slice(s);
+                }
+                let t0 = Instant::now();
+                hier_grad_collective(&mut bufs, topo, None, Some(E5M2), chunk);
+                ph_comm = t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
+                std::hint::black_box(global_norm(&bufs[0]));
+                for _ in 0..OPT_PASSES {
+                    for (p, g) in params.iter_mut().zip(&bufs[0]) {
+                        *p = *p * 0.999 + *g * 1e-3;
+                    }
+                }
+                ph_compute = t1.elapsed().as_secs_f64();
+            },
+        );
+        report.push(
+            &r_ph,
+            vec![
+                ("dp_workers", Json::Num(w as f64)),
+                ("pods", Json::Num(pods as f64)),
+                ("comm_s", Json::Num(ph_comm)),
+                ("compute_s", Json::Num(ph_compute)),
+            ],
+        );
+
+        // ---- overlapped: a comms thread runs bucket k's collective
+        //      while the main thread norms + opts bucket k-1
+        let mut bufs_ov: Vec<Vec<f32>> = src.clone();
+        let mut scratch = (CollectiveScratch::default(), CollectiveScratch::default());
+        let mut ov_comm = 0.0f64;
+        let mut ov_compute = 0.0f64;
+        let mut ov_exposed = 0.0f64;
+        let r_ov = bench(
+            &format!("overlap pipelined w={w} pods={pods}"),
+            1,
+            10,
+            Duration::from_secs(8),
+            || {
+                for (b, s) in bufs_ov.iter_mut().zip(&src) {
+                    b.copy_from_slice(s);
+                }
+                let mut per_bucket: Vec<Vec<&mut [f32]>> =
+                    (0..n_buckets).map(|_| Vec::with_capacity(w)).collect();
+                for buf in bufs_ov.iter_mut() {
+                    let mut rest = buf.as_mut_slice();
+                    for (k, &(_, len)) in sched.buckets.iter().enumerate() {
+                        let (win, tail) = rest.split_at_mut(len);
+                        rest = tail;
+                        per_bucket[k].push(win);
+                    }
+                }
+                let (tx, rx) = mpsc::channel::<(usize, &mut [f32], Instant)>();
+                let mut compute_s = 0.0f64;
+                let mut exposed_s = 0.0f64;
+                let mut comm_busy = 0.0f64;
+                std::thread::scope(|s| {
+                    let (scr0, scr1) = (&mut scratch.0, &mut scratch.1);
+                    let sched_ref = &sched;
+                    let comms = s.spawn(move || -> f64 {
+                        let mut busy = 0.0f64;
+                        for (k, mut wins) in per_bucket.into_iter().enumerate() {
+                            let scr = if k % 2 == 0 { &mut *scr0 } else { &mut *scr1 };
+                            let started = Instant::now();
+                            hier_bucket_collective(
+                                &mut wins,
+                                sched_ref.buckets[k].0,
+                                topo,
+                                None,
+                                Some(E5M2),
+                                chunk,
+                                scr,
+                            );
+                            busy += started.elapsed().as_secs_f64();
+                            let rank0 = wins.swap_remove(0);
+                            if tx.send((k, rank0, started)).is_err() {
+                                break;
+                            }
+                        }
+                        busy
+                    });
+                    let mut norm = NormStream::new();
+                    for _ in 0..n_buckets {
+                        let wait0 = Instant::now();
+                        let Ok((k, win, started)) = rx.recv() else { break };
+                        let done = Instant::now();
+                        let from = if started > wait0 { started } else { wait0 };
+                        exposed_s += done.duration_since(from).as_secs_f64();
+                        let t1 = Instant::now();
+                        norm.push(win);
+                        let (off, len) = sched.buckets[k];
+                        for _ in 0..OPT_PASSES {
+                            for (p, g) in params[off..off + len].iter_mut().zip(&*win) {
+                                *p = *p * 0.999 + *g * 1e-3;
+                            }
+                        }
+                        compute_s += t1.elapsed().as_secs_f64();
+                    }
+                    std::hint::black_box(norm.finish());
+                    comm_busy = comms.join().expect("bench comms thread");
+                });
+                ov_comm = comm_busy;
+                ov_compute = compute_s;
+                ov_exposed = exposed_s;
+            },
+        );
+
+        let sps_ph = 1.0 / r_ph.mean_secs();
+        let sps_ov = 1.0 / r_ov.mean_secs();
+        // 3% noise band on the steps/s floor: scoped threads + a CI
+        // runner add jitter; the raw numbers are in the record
+        let faster = sps_ov >= sps_ph * 0.97;
+        let meas_hidden = if ov_comm <= 0.0 {
+            1.0
+        } else {
+            (1.0 - ov_exposed / ov_comm).clamp(0.0, 1.0)
+        };
+        let pred = overlap_from_times(ov_comm, ov_compute, n_buckets);
+        // prediction floor: within 2x of measured (both-near-zero is a
+        // trivial pass — nothing to hide, nothing to predict)
+        let within_2x = if pred.hidden_fraction < 0.05 && meas_hidden < 0.05 {
+            true
+        } else {
+            let lo = pred.hidden_fraction.min(meas_hidden);
+            let hi = pred.hidden_fraction.max(meas_hidden);
+            lo > 0.0 && hi / lo <= 2.0
+        };
+        let pass = faster && within_2x;
+        ok &= pass;
+        // deployment-shape prediction (GAUDI2 wire model), ungated
+        let g2 = overlap_cost(n, pods, w / pods, false, true, true, n_buckets, &GAUDI2_LINKS);
+        println!(
+            "  w={w} pods={pods}: phased {:.1}/s vs overlapped {:.1}/s ({:.2}x) | \
+             hidden comms: measured {:.2} vs predicted {:.2} (gaudi2 model {:.2}) {}",
+            sps_ph,
+            sps_ov,
+            sps_ov / sps_ph,
+            meas_hidden,
+            pred.hidden_fraction,
+            g2.hidden_fraction,
+            if pass { "PASS" } else { "FAIL" }
+        );
+        report.push(
+            &r_ov,
+            vec![
+                ("dp_workers", Json::Num(w as f64)),
+                ("pods", Json::Num(pods as f64)),
+                ("buckets", Json::Num(n_buckets as f64)),
+                ("steps_per_s_phased", Json::Num(sps_ph)),
+                ("steps_per_s_overlapped", Json::Num(sps_ov)),
+                ("speedup_vs_phased", Json::Num(sps_ov / sps_ph)),
+                ("comm_s", Json::Num(ov_comm)),
+                ("compute_s", Json::Num(ov_compute)),
+                ("comm_exposed_s", Json::Num(ov_exposed)),
+                ("hidden_fraction_measured", Json::Num(meas_hidden)),
+                ("hidden_fraction_predicted", Json::Num(pred.hidden_fraction)),
+                ("hidden_fraction_gaudi2_model", Json::Num(g2.hidden_fraction)),
+                ("pass", Json::Bool(pass)),
+            ],
+        );
+    }
+    println!();
+    ok
+}
+
 fn collective_benches(report: &mut Report) {
     let big = if quick() { 2_000_000usize } else { 12_000_000usize };
     let mk = |w: usize| -> Vec<Vec<f32>> {
@@ -453,6 +676,33 @@ fn step_benches(report: &mut Report) -> anyhow::Result<()> {
                 ("tokens_per_s", Json::Num(tokens * steps_per_s)),
             ],
         );
+        // per-phase timer records from the live trainer, overlapped
+        // default vs forced-phased (ungated — artifact-dependent wall
+        // clocks; the gated overlap floors live in overlap_benches)
+        for phased in [true, false] {
+            t.force_phased_step = phased;
+            let out = t.step()?;
+            let tm = out.timers;
+            report.records.push(obj(vec![
+                (
+                    "name",
+                    Json::Str(format!(
+                        "step_phase_timers s1m dp{dp} {}",
+                        if tm.overlapped { "overlapped" } else { "phased" }
+                    )),
+                ),
+                ("dp_workers", Json::Num(dp as f64)),
+                ("overlapped", Json::Bool(tm.overlapped)),
+                ("buckets", Json::Num(tm.buckets as f64)),
+                ("grad_s", Json::Num(tm.grad_s)),
+                ("collective_s", Json::Num(tm.collective_s)),
+                ("norm_s", Json::Num(tm.norm_s)),
+                ("adam_s", Json::Num(tm.adam_s)),
+                ("comm_exposed_s", Json::Num(tm.comm_exposed_s)),
+                ("hidden_comm_fraction", Json::Num(tm.hidden_comm_fraction())),
+            ]));
+        }
+        t.force_phased_step = false;
     }
     Ok(())
 }
@@ -481,11 +731,12 @@ fn main() -> anyhow::Result<()> {
 
     let shard_floors_met = shard_collective_benches(&mut report);
     let topology_floors_met = topology_benches(&mut report);
+    let overlap_floors_met = overlap_benches(&mut report);
 
     println!("== step rate (needs artifacts) ==");
     step_benches(&mut report)?;
 
-    let all_met = floors_met && shard_floors_met && topology_floors_met;
+    let all_met = floors_met && shard_floors_met && topology_floors_met && overlap_floors_met;
     write_json_report(
         "BENCH_hotpath.json",
         vec![
@@ -499,6 +750,7 @@ fn main() -> anyhow::Result<()> {
             ("codec_floors_met", Json::Bool(floors_met)),
             ("shard_collective_floors_met", Json::Bool(shard_floors_met)),
             ("topology_floors_met", Json::Bool(topology_floors_met)),
+            ("overlap_floors_met", Json::Bool(overlap_floors_met)),
         ],
         report.records,
     )?;
@@ -508,7 +760,9 @@ fn main() -> anyhow::Result<()> {
         eprintln!(
             "FAIL: perf floors not met (codec >=5x decode / >=2x encode: {floors_met}; \
              shard memory (W-1)/W + wire ratio < 0.3: {shard_floors_met}; \
-             topology per-level wire floors: {topology_floors_met})"
+             topology per-level wire floors: {topology_floors_met}; \
+             overlapped >= phased steps/s + hidden-fraction prediction within 2x: \
+             {overlap_floors_met})"
         );
         std::process::exit(1);
     }

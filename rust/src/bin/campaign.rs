@@ -16,6 +16,10 @@
 //! Extra campaign-only key: `inject_divergence_at=N` (run/resume)
 //! forces one divergence trip at step N — the §Campaigns recovery
 //! drill (see rust/EXPERIMENTS.md).
+//!
+//! Session key `force_phased_step=true` runs the non-overlapped
+//! (phased) step schedule for this process only — bit-identical to the
+//! overlapped default, never recorded in snapshots or fingerprints.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -44,6 +48,7 @@ struct Args {
     overrides: Vec<(String, String)>,
     inject_divergence_at: Option<usize>,
     stop_after: Option<usize>,
+    force_phased_step: Option<bool>,
 }
 
 fn parse_args(args: &[String]) -> Result<Args> {
@@ -53,6 +58,7 @@ fn parse_args(args: &[String]) -> Result<Args> {
         overrides: Vec::new(),
         inject_divergence_at: None,
         stop_after: None,
+        force_phased_step: None,
     };
     let mut i = 0;
     while i < args.len() {
@@ -87,6 +93,10 @@ fn parse_args(args: &[String]) -> Result<Args> {
                 } else if k == "stop_after" {
                     out.stop_after =
                         Some(v.parse().map_err(|_| anyhow!("stop_after needs a step"))?);
+                } else if k == "force_phased_step" {
+                    out.force_phased_step = Some(
+                        v.parse().map_err(|_| anyhow!("force_phased_step needs true/false"))?,
+                    );
                 } else {
                     out.overrides.push((k.to_string(), v.to_string()));
                 }
@@ -114,6 +124,9 @@ fn run() -> Result<()> {
             };
             c.inject_divergence_at = a.inject_divergence_at;
             c.stop_after = a.stop_after;
+            if let Some(phased) = a.force_phased_step {
+                c.trainer.force_phased_step = phased;
+            }
             println!(
                 "campaign {} in {} — {} / {} to step {}",
                 cmd,
@@ -170,7 +183,8 @@ fn run() -> Result<()> {
                  campaign status  [--dir D]\n  campaign inspect <snapshot.ckpt>\n\n\
                  campaign keys: snapshot_every=50 snapshot_keep=3 max_recoveries=4\n               \
                  recovery_margin_backoff=1 recovery_history_shrink=0.5\n\
-                 session keys:  stop_after=N (pause + snapshot at step N, resumable)\n\
+                 session keys:  stop_after=N (pause + snapshot at step N, resumable)\n               \
+                 force_phased_step=true (bit-identical non-overlapped schedule)\n\
                  drill key:     inject_divergence_at=N\n\
                  train keys:    as `fp8-train train` (size=, recipe=, steps=, ...)"
             );

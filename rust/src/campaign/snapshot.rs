@@ -57,10 +57,18 @@ pub const MOMENT_CHUNK: usize = 262_144;
 /// 1.2: the fingerprint gained the collective topology (`pods`) and
 /// the per-level compression flags
 /// (`collective_fp8_intra`/`collective_fp8_inter`) — a resume under a
-/// changed pod arrangement refuses. Older snapshots still load; their
-/// fingerprint will not match a newer binary's, so applying them
-/// refuses — conservative by design.
-pub const SNAPSHOT_VERSION: f64 = 1.2;
+/// changed pod arrangement refuses.
+/// 1.3: the fingerprint gained the gradient bucket schedule
+/// (`bucket=b{bucket_bytes}`) — a resume under a changed bucket
+/// partition refuses (conservatively: the partition is designed to be
+/// bit-invisible, but it changes per-bucket wire framing and the
+/// pipeline's dispatch windows, so it is pinned like the topology).
+/// `overlap_comm` is deliberately NOT in the fingerprint — toggling
+/// the schedule is proven bit-invisible, so it must never refuse a
+/// resume. Older snapshots still load; their fingerprint will not
+/// match a newer binary's, so applying them refuses — conservative by
+/// design.
+pub const SNAPSHOT_VERSION: f64 = 1.3;
 
 /// Identity and position metadata of one snapshot.
 #[derive(Clone, Debug, PartialEq)]
@@ -125,16 +133,22 @@ pub struct SnapshotMeta {
 /// pure-f32 two-level schedule at non-power-of-two pod sizes, the
 /// summation order), so any topology change refuses — deliberately
 /// conservative: the flags are recorded raw even in the shapes where
-/// a particular level is a numeric no-op. `pack_moments` is
-/// deliberately **excluded** (exact-verified packing is
-/// bit-preserving), and the compressed collective's per-chunk scales
-/// are JIT — recomputed every step from the step's own gradients — so
-/// there is no cross-step collective scale state to capture.
+/// a particular level is a numeric no-op. The gradient bucket
+/// schedule (`bucket_bytes`) is pinned the same conservative way: the
+/// partition is designed to be bit-invisible, but it decides the
+/// per-bucket wire framing, so a changed `bucket_bytes` refuses.
+/// `pack_moments` and `overlap_comm` are deliberately **excluded**
+/// (exact-verified packing is bit-preserving, and the overlapped
+/// schedule is test-pinned bit-identical to the phased one — toggling
+/// either must never refuse a resume), and the compressed collective's
+/// per-chunk scales are JIT — recomputed every step from the step's
+/// own gradients — so there is no cross-step collective scale state to
+/// capture.
 pub fn numerics_fingerprint(cfg: &crate::config::TrainConfig, shard_chunk: usize) -> String {
     format!(
         "lr={:08x};minfrac={:08x};wd={:08x};clip={:08x};order={};skew={:016x};\
          outlier={}:{:08x};skipnf={};amax={};margin={};shard=c{}w{};topo=p{};\
-         cfp8=i{}:x{}:{}",
+         cfp8=i{}:x{}:{};bucket=b{}",
         cfg.lr.to_bits(),
         cfg.min_lr_frac.to_bits(),
         cfg.weight_decay.to_bits(),
@@ -152,6 +166,7 @@ pub fn numerics_fingerprint(cfg: &crate::config::TrainConfig, shard_chunk: usize
         cfg.collective_fp8_intra,
         cfg.collective_fp8_inter,
         cfg.collective_fmt,
+        cfg.bucket_bytes,
     )
 }
 
@@ -543,5 +558,28 @@ mod tests {
         let mut pk = base.clone();
         pk.pack_moments = !pk.pack_moments;
         assert_eq!(f0, fp(&pk), "pack_moments must NOT be numerics identity");
+    }
+
+    #[test]
+    fn fingerprint_pins_bucket_schedule_but_not_overlap() {
+        // the bucket partition is pinned conservatively (it decides
+        // per-bucket wire framing), while toggling the overlapped
+        // schedule itself is test-pinned bit-invisible and must never
+        // refuse a resume
+        let base = TrainConfig { dp_workers: 4, ..Default::default() };
+        let fp = |c: &TrainConfig| numerics_fingerprint(c, 262_144);
+        let f0 = fp(&base);
+
+        let mut bb = base.clone();
+        bb.bucket_bytes = 1_048_576;
+        assert_ne!(f0, fp(&bb), "changed bucket_bytes must refuse a resume");
+        assert!(
+            f0.contains(&format!("bucket=b{}", base.bucket_bytes)),
+            "the bucket key must be recorded explicitly: {f0}"
+        );
+
+        let mut ov = base.clone();
+        ov.overlap_comm = !ov.overlap_comm;
+        assert_eq!(f0, fp(&ov), "toggled overlap_comm must NOT refuse a resume");
     }
 }

@@ -127,6 +127,17 @@ pub struct TrainConfig {
     /// Packing is exact-verified per chunk (raw-f32 fallback), so this
     /// never changes the numbers — only per-worker resident bytes.
     pub pack_moments: bool,
+    /// bucket size (in f32 bytes) of the overlapped gradient pipeline:
+    /// the flat gradient is partitioned into buckets of
+    /// `ceil(bucket_bytes/4)` elements rounded up to whole Adam
+    /// chunks, and each bucket's collective overlaps the remaining
+    /// compute. The partition changes per-bucket wire framing (and is
+    /// recorded in the snapshot fingerprint), never the step's bits.
+    pub bucket_bytes: usize,
+    /// run the bucketed overlapped step pipeline (default). `false`
+    /// forces the phased schedule — bit-identical, just slower; the
+    /// snapshot fingerprint ignores this knob.
+    pub overlap_comm: bool,
     /// log / checkpoint cadence
     pub log_every: usize,
     pub ckpt_every: usize,
@@ -174,6 +185,8 @@ impl Default for TrainConfig {
             collective_fp8_inter: true,
             collective_fmt: "e5m2".into(),
             pack_moments: true,
+            bucket_bytes: 4_194_304,
+            overlap_comm: true,
             log_every: 10,
             ckpt_every: 0,
             out_dir: "runs/default".into(),
@@ -239,6 +252,10 @@ impl TrainConfig {
                 }
                 "collective.fmt" | "collective_fmt" => c.collective_fmt = v.as_str()?,
                 "train.pack_moments" | "pack_moments" => c.pack_moments = v.as_bool()?,
+                "collective.bucket_bytes" | "bucket_bytes" => c.bucket_bytes = v.as_usize()?,
+                "collective.overlap_comm" | "overlap_comm" => {
+                    c.overlap_comm = v.as_bool()?
+                }
                 "train.log_every" | "log_every" => c.log_every = v.as_usize()?,
                 "train.ckpt_every" | "ckpt_every" => c.ckpt_every = v.as_usize()?,
                 "train.out_dir" | "out_dir" => c.out_dir = v.as_str()?,
@@ -284,6 +301,13 @@ impl TrainConfig {
         if !(c.recovery_history_shrink > 0.0 && c.recovery_history_shrink <= 1.0) {
             return Err("recovery_history_shrink must be in (0, 1]".into());
         }
+        if c.bucket_bytes == 0 {
+            return Err(
+                "bucket_bytes must be >= 1 (it rounds up to whole Adam chunks; \
+                 use a huge value to get a single monolithic bucket)"
+                    .into(),
+            );
+        }
         if !matches!(c.collective_fmt.as_str(), "e4m3" | "e5m2") {
             return Err(format!(
                 "collective_fmt must be 'e4m3' or 'e5m2' (got '{}')",
@@ -325,6 +349,8 @@ impl TrainConfig {
             ("collective_fp8_inter", Json::Bool(self.collective_fp8_inter)),
             ("collective_fmt", Json::Str(self.collective_fmt.clone())),
             ("pack_moments", Json::Bool(self.pack_moments)),
+            ("bucket_bytes", Json::Num(self.bucket_bytes as f64)),
+            ("overlap_comm", Json::Bool(self.overlap_comm)),
             ("snapshot_every", Json::Num(self.snapshot_every as f64)),
             ("snapshot_keep", Json::Num(self.snapshot_keep as f64)),
             ("max_recoveries", Json::Num(self.max_recoveries as f64)),
@@ -419,6 +445,27 @@ mod tests {
         assert!(
             TrainConfig::load(None, &[("pods".into(), "2".into())]).is_err(),
             "pods cannot exceed dp_workers (default 1)"
+        );
+    }
+
+    #[test]
+    fn overlap_keys_parse_and_validate() {
+        let d = TrainConfig::default();
+        assert!(d.overlap_comm, "the overlapped pipeline is the default schedule");
+        assert_eq!(d.bucket_bytes, 4_194_304, "4 MiB buckets by default");
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("collective.bucket_bytes".into(), "1048576".into()),
+                ("overlap_comm".into(), "false".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.bucket_bytes, 1_048_576);
+        assert!(!c.overlap_comm);
+        assert!(
+            TrainConfig::load(None, &[("bucket_bytes".into(), "0".into())]).is_err(),
+            "a zero-byte bucket cannot partition anything"
         );
     }
 

@@ -84,6 +84,28 @@ pub(crate) fn tree_reduce_sum_strided(buffers: &mut [Vec<f32>], step: usize) {
     }
 }
 
+/// [`tree_reduce_sum_strided`] over borrowed windows instead of owned
+/// buffers — the bucketed pipeline reduces per-bucket slices of the
+/// workers' gradient buffers in place. Same pair schedule over
+/// participant positions, same `add_assign` per pair, so reducing each
+/// bucket window is elementwise identical to reducing whole buffers:
+/// bucketing never changes which additions happen at an element.
+pub(crate) fn tree_reduce_sum_windows(windows: &mut [&mut [f32]], step: usize) {
+    assert!(step >= 1);
+    let k = windows.len().div_ceil(step);
+    let mut stride = 1;
+    while stride < k {
+        let mut i = 0;
+        while i + stride < k {
+            let (left, right) = windows.split_at_mut((i + stride) * step);
+            let dst: &mut [f32] = &mut *left[i * step];
+            add_assign(dst, &*right[0]);
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+}
+
 /// Reduce-mean without the broadcast: buffers[0] holds the average,
 /// the other replicas keep their (now stale) partial-sum state. Use
 /// when only the canonical copy is read before the next overwrite —
@@ -128,6 +150,12 @@ impl LegBytes {
     /// Both legs combined.
     pub fn total(&self) -> u64 {
         self.reduce_scatter + self.all_gather
+    }
+
+    /// Add another accounting onto this one, per leg.
+    pub fn accumulate(&mut self, other: &LegBytes) {
+        self.reduce_scatter += other.reduce_scatter;
+        self.all_gather += other.all_gather;
     }
 }
 
@@ -203,6 +231,19 @@ impl CollectiveStats {
         } else {
             self.inter.total() as f64 / self.inter_f32.total() as f64
         }
+    }
+
+    /// Fold another collective's accounting into this one. The
+    /// bucketed pipeline sums per-bucket stats; because every non-final
+    /// bucket is a whole-chunk multiple, the per-bucket FP8 payloads
+    /// (`n + 4·⌈n/chunk⌉`) sum to exactly the whole-buffer closed form
+    /// — pinned by `topology::tests`.
+    pub fn absorb(&mut self, other: &CollectiveStats) {
+        self.elems += other.elems;
+        self.intra.accumulate(&other.intra);
+        self.inter.accumulate(&other.inter);
+        self.intra_f32.accumulate(&other.intra_f32);
+        self.inter_f32.accumulate(&other.inter_f32);
     }
 }
 
@@ -345,8 +386,12 @@ pub fn grad_collective_with(
     }
 }
 
+/// Sum of squares of one norm chunk in f64, element order (the single
+/// defined partial the fixed-order norm fold consumes — also used by
+/// `pipeline::NormStream` to reproduce the fold across bucket
+/// boundaries).
 #[inline]
-fn norm_sq(chunk: &[f32]) -> f64 {
+pub(crate) fn norm_sq(chunk: &[f32]) -> f64 {
     chunk.iter().map(|&x| (x as f64) * (x as f64)).sum()
 }
 
@@ -391,6 +436,44 @@ mod tests {
             tree_reduce_sum(&mut bufs);
             assert_eq!(bufs[0], expect, "w={w}");
         }
+    }
+
+    #[test]
+    fn window_tree_bit_matches_buffer_tree() {
+        // the window variant must use the exact pair schedule of the
+        // owned-buffer variant, at stride 1 and at a leader stride
+        for (w, step) in [(5usize, 1usize), (8, 1), (8, 2), (9, 3)] {
+            let mk = || -> Vec<Vec<f32>> {
+                (0..w)
+                    .map(|r| (0..517).map(|i| ((r * 41 + i) as f32).sin() * 0.1).collect())
+                    .collect()
+            };
+            let mut owned = mk();
+            tree_reduce_sum_strided(&mut owned, step);
+            let mut bufs = mk();
+            let mut wins: Vec<&mut [f32]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            tree_reduce_sum_windows(&mut wins, step);
+            for (x, y) in owned[0].iter().zip(&bufs[0]) {
+                assert_eq!(x.to_bits(), y.to_bits(), "w={w} step={step}");
+            }
+        }
+    }
+
+    #[test]
+    fn stats_absorb_sums_every_field() {
+        let a = CollectiveStats {
+            elems: 10,
+            intra: LegBytes { reduce_scatter: 1, all_gather: 2 },
+            inter: LegBytes { reduce_scatter: 3, all_gather: 4 },
+            intra_f32: LegBytes { reduce_scatter: 5, all_gather: 6 },
+            inter_f32: LegBytes { reduce_scatter: 7, all_gather: 8 },
+        };
+        let mut acc = a;
+        acc.absorb(&a);
+        assert_eq!(acc.elems, 20);
+        assert_eq!(acc.intra, LegBytes { reduce_scatter: 2, all_gather: 4 });
+        assert_eq!(acc.inter_f32, LegBytes { reduce_scatter: 14, all_gather: 16 });
+        assert_eq!(acc.wire_bytes(), 2 * a.wire_bytes());
     }
 
     #[test]

@@ -1,33 +1,46 @@
 #![warn(missing_docs)]
 //! L3 coordinator: the training orchestrator.
 //!
-//! Per step:
+//! Per step (the default **bucketed overlapped pipeline**,
+//! `overlap_comm = true`; `force_phased_step` runs the same stages as
+//! strict sequential phases):
 //! 1. each data-parallel worker runs `grad_accum` microbatches through
-//!    the grad artifact (its own shard of the deterministic corpus);
-//! 2. gradients go through the pod-aware two-level collective
-//!    ([`topology`]): deterministic intra-pod reduce-scatter →
-//!    inter-pod exchange over pod leaders → intra-pod all-gather,
-//!    with FP8 wire compression selectable per level
-//!    (`collective_fp8_intra` / `collective_fp8_inter`, per-chunk
-//!    pow2 auto-scales, FP8-LM-style). `pods = 1` is the flat
-//!    collective, bit-identical to the plain tree reduce when
-//!    compression is off;
-//! 3. the global grad-norm clip factor is computed in Rust;
+//!    the grad artifact (its own shard of the deterministic corpus),
+//!    then streams its gradient, split into Adam-chunk-aligned
+//!    `bucket_bytes` buckets ([`pipeline::BucketSchedule`]), to the
+//!    comms thread;
+//! 2. per bucket, gradients go through the pod-aware two-level
+//!    collective ([`topology::hier_bucket_collective`]): deterministic
+//!    intra-pod reduce-scatter → inter-pod exchange over pod leaders →
+//!    intra-pod all-gather, with FP8 wire compression selectable per
+//!    level (`collective_fp8_intra` / `collective_fp8_inter`,
+//!    per-chunk pow2 auto-scales, FP8-LM-style) — running on a
+//!    dedicated thread so bucket k's wire time hides behind bucket
+//!    k+1's compute. `pods = 1` is the flat collective, bit-identical
+//!    to the plain tree reduce when compression is off;
+//! 3. the global grad-norm clip factor accumulates per landed bucket
+//!    in Rust ([`pipeline::NormStream`], same f64 fold order as the
+//!    whole-buffer norm);
 //! 4. each worker applies AdamW to the chunks it owns under the
 //!    chunk-aligned ZeRO-1 owner map via the chunked `adam_*` artifact
 //!    (its moment shard is the only copy, FP8-packed between steps per
-//!    recipe) and params are all-gathered back into the replicated
-//!    parameter buffer;
+//!    recipe), starting per bucket as soon as it lands when the clip
+//!    factor is provably 1, and params are all-gathered back into the
+//!    replicated parameter buffer;
 //! 5. the delayed-scaling manager ingests the step's amax report and
 //!    emits next-step scales; the divergence detector watches the loss
 //!    and overflow counters.
 //!
+//! Every schedule (serial / phased / overlapped, any worker count) is
+//! bit-identical — bucket starts sit on the absolute Adam chunk grid,
+//! so FP8 grids, reduce order and norm fold order never change.
 //! The paper's contribution shows up in (5) + which artifact (1) runs.
 
 pub mod allreduce;
 pub mod divergence;
 pub mod folding;
 pub mod params;
+pub mod pipeline;
 pub mod runner;
 pub mod schedule;
 pub mod topology;
@@ -35,6 +48,7 @@ pub mod trainer;
 
 pub use divergence::{DetectorState, DivergenceDetector};
 pub use params::ParamStore;
+pub use pipeline::{BucketSchedule, NormStream, PhaseTimers};
 pub use schedule::LrSchedule;
 pub use topology::PodTopology;
 pub use trainer::{StepOutcome, Trainer};

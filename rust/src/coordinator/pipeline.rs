@@ -1,0 +1,338 @@
+//! Pure substrate of the bucketed, overlapped step pipeline: the
+//! bucket partition, the streamed global-norm fold, the per-phase
+//! timers, and worker-panic containment. Everything here is plain
+//! data + arithmetic — the threads live in `trainer::step_overlapped`
+//! — so the bit-identity arguments are testable without a runtime.
+//!
+//! Identity contracts (pinned by the unit tests below and by
+//! `tests/integration.rs`):
+//!
+//! * [`BucketSchedule`] partitions the flat gradient into contiguous
+//!   buckets whose starts are **absolute multiples of the Adam
+//!   artifact chunk** (the same alignment rule
+//!   `ShardLayout::chunk_aligned` uses). Because the per-chunk FP8
+//!   grids of the collective (`allreduce::qdq_chunks`) and of the
+//!   moment packing are keyed to that absolute grid, running any
+//!   stage per bucket produces exactly the bits the whole-buffer
+//!   stage produces — bucketing is designed to be invisible to the
+//!   numbers.
+//! * [`NormStream`] folds per-bucket gradient windows into the global
+//!   L2 norm using **the same f64 addition sequence** as
+//!   `allreduce::global_norm`: per-`NORM_CHUNK` partials, each
+//!   accumulated element-first from 0.0, folded in chunk index order.
+//!   A `NORM_CHUNK` span that straddles a bucket boundary carries its
+//!   running partial across the boundary, so the final bits match the
+//!   standalone whole-buffer norm exactly.
+
+use crate::coordinator::allreduce::{norm_sq, NORM_CHUNK};
+use crate::util::par::par_partials;
+
+/// The bucket partition of a flat gradient: contiguous `(offset, len)`
+/// windows covering `[0, total)`, every offset an absolute multiple of
+/// the Adam chunk, every non-final length a chunk multiple (the last
+/// bucket truncates to `total`). The partition is a pure function of
+/// `(total, bucket_bytes, chunk)` — no runtime state — which is what
+/// lets the snapshot fingerprint pin it with a single key.
+#[derive(Clone, Debug)]
+pub struct BucketSchedule {
+    /// `(offset, len)` per bucket, ascending and contiguous
+    pub buckets: Vec<(usize, usize)>,
+    /// elements per full bucket — a chunk multiple, `>= chunk`
+    pub elems_per_bucket: usize,
+    /// the Adam artifact chunk the partition is aligned to
+    pub chunk: usize,
+}
+
+impl BucketSchedule {
+    /// Partition `total` elements into buckets of `bucket_bytes` f32
+    /// bytes, rounded **up** to whole Adam chunks. Adversarial sizes
+    /// degrade safely: anything smaller than one chunk becomes
+    /// one-chunk buckets; anything larger than the model becomes a
+    /// single bucket (the phased schedule in bucket clothing).
+    pub fn new(total: usize, bucket_bytes: usize, chunk: usize) -> Self {
+        assert!(chunk >= 1, "adam chunk must be >= 1");
+        let raw_elems = (bucket_bytes / 4).max(1);
+        let per = raw_elems.div_ceil(chunk) * chunk;
+        let mut buckets = Vec::with_capacity(total.div_ceil(per));
+        let mut off = 0usize;
+        while off < total {
+            let len = per.min(total - off);
+            buckets.push((off, len));
+            off += len;
+        }
+        Self { buckets, elems_per_bucket: per, chunk }
+    }
+
+    /// Number of buckets in the partition.
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Whether the partition is empty (only for a zero-element model).
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// The bucket a flat element offset belongs to.
+    pub fn bucket_of(&self, off: usize) -> usize {
+        off / self.elems_per_bucket
+    }
+}
+
+/// Streaming twin of `allreduce::global_norm`: feed it the landed
+/// bucket windows **in ascending bucket order** and it reproduces the
+/// standalone norm's f64 summation bit for bit (see the module docs
+/// for the order argument). `finish()` returns the L2 norm.
+pub struct NormStream {
+    /// completed `NORM_CHUNK`-span partials folded in span order
+    sum: f64,
+    /// running partial of the span the stream is currently inside
+    span: f64,
+    /// elements consumed so far
+    pos: usize,
+}
+
+impl NormStream {
+    /// An empty stream positioned at flat offset 0.
+    pub fn new() -> Self {
+        Self { sum: 0.0, span: 0.0, pos: 0 }
+    }
+
+    /// Fold the next contiguous gradient window into the norm. Windows
+    /// must arrive in flat offset order with no gaps — exactly how the
+    /// pipeline lands buckets.
+    pub fn push(&mut self, mut win: &[f32]) {
+        // finish the span a previous window left straddling: the
+        // element-order fold continues from the carried partial, which
+        // is the exact addition sequence the whole-buffer norm uses
+        let into = self.pos % NORM_CHUNK;
+        if into != 0 {
+            let take = (NORM_CHUNK - into).min(win.len());
+            for &x in &win[..take] {
+                self.span += (x as f64) * (x as f64);
+            }
+            self.pos += take;
+            if self.pos % NORM_CHUNK == 0 {
+                self.sum += self.span;
+                self.span = 0.0;
+            }
+            win = &win[take..];
+        }
+        // aligned interior: whole spans, parallel partials folded in
+        // span order (par_partials pins partial i == f(span i))
+        let whole = (win.len() / NORM_CHUNK) * NORM_CHUNK;
+        if whole > 0 {
+            for p in par_partials(&win[..whole], NORM_CHUNK, norm_sq) {
+                self.sum += p;
+            }
+            self.pos += whole;
+            win = &win[whole..];
+        }
+        // ragged tail: start the next straddling span
+        for &x in win {
+            self.span += (x as f64) * (x as f64);
+        }
+        self.pos += win.len();
+    }
+
+    /// Elements folded so far.
+    pub fn elems(&self) -> usize {
+        self.pos
+    }
+
+    /// The L2 norm of everything pushed. Bit-identical to
+    /// `global_norm` over the concatenation of the pushed windows.
+    pub fn finish(self) -> f32 {
+        // a ragged final span is the whole-buffer norm's last partial;
+        // an aligned end already folded everything into `sum`
+        let total = if self.pos % NORM_CHUNK == 0 { self.sum } else { self.sum + self.span };
+        total.sqrt() as f32
+    }
+}
+
+impl Default for NormStream {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-phase wall-clock of one step, exposed on `StepOutcome` and in
+/// `BENCH_hotpath.json`. For the phased schedule the phases are
+/// sequential and `comm_exposed_s == collective_s` (nothing hides);
+/// for the overlapped schedule `comm_exposed_s` counts only the spans
+/// the main thread actually stalled on an in-flight collective.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimers {
+    /// slowest worker's gradient pass (the compute the comms hide behind)
+    pub grad_s: f64,
+    /// total seconds the collective was executing (all buckets)
+    pub collective_s: f64,
+    /// norm fold seconds (streamed per bucket when overlapped)
+    pub norm_s: f64,
+    /// optimizer seconds (per-bucket dispatch when overlapped)
+    pub adam_s: f64,
+    /// collective seconds NOT hidden behind compute
+    pub comm_exposed_s: f64,
+    /// buckets the schedule ran (1 = monolithic/phased)
+    pub buckets: usize,
+    /// whether the overlapped schedule produced these timers
+    pub overlapped: bool,
+}
+
+impl PhaseTimers {
+    /// Fraction of collective time hidden behind compute, in [0, 1]
+    /// (0 when the collective ran fully exposed or not at all).
+    pub fn hidden_comm_fraction(&self) -> f64 {
+        if self.collective_s <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.comm_exposed_s / self.collective_s).clamp(0.0, 1.0)
+    }
+}
+
+/// Turn a `JoinHandle::join` result into an `Err` instead of
+/// propagating the panic: the step pipeline must never abort the
+/// process on a worker panic — it poisons the trainer and reports, so
+/// the operator can resume from a snapshot (see `Trainer::step`).
+pub(crate) fn contain_panic<T>(
+    res: std::thread::Result<T>,
+    what: &str,
+) -> anyhow::Result<T> {
+    res.map_err(|payload| {
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "opaque panic payload".to_string());
+        anyhow::anyhow!("{what} panicked: {msg}")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::allreduce::global_norm;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn schedule_covers_contiguously_and_aligns() {
+        let chunk = 64usize;
+        for total in [1usize, 63, 64, 65, 1000, 64 * 7, 64 * 7 + 1] {
+            for bytes in [0usize, 1, 3, 4, 255, 256, 4096, usize::MAX / 2] {
+                let s = BucketSchedule::new(total, bytes, chunk);
+                assert!(!s.is_empty(), "total={total} bytes={bytes}");
+                let mut expect_off = 0usize;
+                for (i, &(off, len)) in s.buckets.iter().enumerate() {
+                    assert_eq!(off, expect_off, "gap at bucket {i}");
+                    assert_eq!(off % chunk, 0, "unaligned start at bucket {i}");
+                    assert!(len >= 1);
+                    if i + 1 < s.buckets.len() {
+                        assert_eq!(len % chunk, 0, "unaligned interior len");
+                        assert_eq!(len, s.elems_per_bucket);
+                    }
+                    assert_eq!(s.bucket_of(off), i);
+                    assert_eq!(s.bucket_of(off + len - 1), i);
+                    expect_off = off + len;
+                }
+                assert_eq!(expect_off, total, "partition must cover the model");
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_adversarial_extremes() {
+        // smaller than one chunk -> one-chunk buckets
+        let s = BucketSchedule::new(1000, 1, 64);
+        assert_eq!(s.elems_per_bucket, 64);
+        assert_eq!(s.len(), 1000usize.div_ceil(64));
+        // larger than the model -> a single bucket
+        let s = BucketSchedule::new(1000, 1 << 30, 64);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.buckets[0], (0, 1000));
+        // zero-element model -> empty partition, no bucket
+        assert!(BucketSchedule::new(0, 4096, 64).is_empty());
+    }
+
+    #[test]
+    fn norm_stream_matches_global_norm_bitwise() {
+        // sizes around the NORM_CHUNK boundary x split patterns that
+        // straddle it: the streamed fold must be bit-identical to the
+        // standalone norm (same f64 addition sequence)
+        let mut rng = Rng::new(0x6e6f726d);
+        for &n in &[0usize, 1, 100, NORM_CHUNK - 1, NORM_CHUNK, NORM_CHUNK + 1, NORM_CHUNK * 3 + 777] {
+            let mut flat = vec![0.0f32; n];
+            rng.fill_normal(&mut flat, 0.02);
+            let want = global_norm(&flat);
+            for &split in &[1usize, 7, 100, NORM_CHUNK / 2 + 3, NORM_CHUNK, NORM_CHUNK + 5, n.max(1)] {
+                let mut s = NormStream::new();
+                for w in flat.chunks(split) {
+                    s.push(w);
+                }
+                assert_eq!(s.elems(), n);
+                let got = s.finish();
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "n={n} split={split}: streamed norm must be bit-identical"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn norm_stream_matches_on_bucket_schedule_windows() {
+        // end-to-end shape: the exact windows a BucketSchedule carves
+        // (chunk not a NORM_CHUNK divisor, so spans straddle buckets)
+        let chunk = 24_000usize;
+        let total = chunk * 11 + 13_000;
+        let mut flat = vec![0.0f32; total];
+        Rng::new(7).fill_normal(&mut flat, 0.01);
+        let sched = BucketSchedule::new(total, chunk * 3 * 4, chunk);
+        assert!(sched.len() > 2, "test wants a multi-bucket partition");
+        let mut s = NormStream::new();
+        for &(off, len) in &sched.buckets {
+            s.push(&flat[off..off + len]);
+        }
+        assert_eq!(s.finish().to_bits(), global_norm(&flat).to_bits());
+    }
+
+    #[test]
+    fn norm_stream_propagates_nonfinite() {
+        let mut s = NormStream::new();
+        s.push(&[1.0, f32::NAN, 2.0]);
+        assert!(s.finish().is_nan());
+        let mut s = NormStream::new();
+        s.push(&[f32::MAX, f32::MAX]);
+        s.push(&[f32::MAX; 7]);
+        assert_eq!(s.finish().to_bits(), global_norm(&[f32::MAX; 9]).to_bits());
+    }
+
+    #[test]
+    fn hidden_fraction_semantics() {
+        let t = PhaseTimers {
+            collective_s: 2.0,
+            comm_exposed_s: 0.5,
+            ..Default::default()
+        };
+        assert!((t.hidden_comm_fraction() - 0.75).abs() < 1e-12);
+        // phased: fully exposed
+        let t = PhaseTimers { collective_s: 2.0, comm_exposed_s: 2.0, ..Default::default() };
+        assert_eq!(t.hidden_comm_fraction(), 0.0);
+        // no collective at all (W = 1)
+        assert_eq!(PhaseTimers::default().hidden_comm_fraction(), 0.0);
+        // timer jitter must clamp, not escape [0, 1]
+        let t = PhaseTimers { collective_s: 1.0, comm_exposed_s: 1.5, ..Default::default() };
+        assert_eq!(t.hidden_comm_fraction(), 0.0);
+    }
+
+    #[test]
+    fn contain_panic_reports_payloads() {
+        let h = std::thread::spawn(|| panic!("boom {}", 42));
+        let err = contain_panic(h.join(), "drill worker").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("drill worker panicked"), "{msg}");
+        assert!(msg.contains("boom 42"), "{msg}");
+        let ok: std::thread::Result<u32> = Ok(7);
+        assert_eq!(contain_panic(ok, "x").unwrap(), 7);
+    }
+}

@@ -47,7 +47,7 @@
 
 use crate::coordinator::allreduce::{
     grad_collective_with, level_legs, qdq_chunks, reduce_mean_into_rank0, tree_reduce_sum,
-    tree_reduce_sum_strided, CollectiveScratch, CollectiveStats,
+    tree_reduce_sum_strided, tree_reduce_sum_windows, CollectiveScratch, CollectiveStats,
 };
 use crate::fp8::Fp8Format;
 
@@ -251,6 +251,148 @@ pub fn hier_grad_collective_with(
     }
 }
 
+/// [`hier_grad_collective_with`] over one gradient **bucket**: one
+/// mutable window per worker (all the same length), reduced in place
+/// so `windows[0]` ends up holding that bucket's gathered global
+/// average. The overlapped step pipeline runs this per bucket on a
+/// dedicated comms thread while later buckets are still being
+/// computed.
+///
+/// Bit-identity with the whole-buffer collective (pinned by the tests
+/// below): every stage is elementwise over a fixed schedule, so
+/// restricting it to a window changes nothing **provided the window
+/// starts on an absolute multiple of `chunk`** — then the per-window
+/// `qdq_chunks` grid (chunks are relative to the slice start) is the
+/// same spans the whole-buffer grid carves, with the same per-chunk
+/// scales. `pipeline::BucketSchedule` guarantees exactly that
+/// alignment; the assert refuses anything else rather than silently
+/// re-gridding the FP8 scales.
+///
+/// The returned stats are this bucket's share of the wire accounting;
+/// summing them over a `BucketSchedule` reproduces the whole-buffer
+/// closed forms (non-final buckets are whole-chunk multiples, so the
+/// per-chunk scale words sum exactly — see `CollectiveStats::absorb`).
+pub fn hier_bucket_collective(
+    windows: &mut [&mut [f32]],
+    bucket_off: usize,
+    topo: PodTopology,
+    fp8_intra: Option<Fp8Format>,
+    fp8_inter: Option<Fp8Format>,
+    chunk: usize,
+    scratch: &mut CollectiveScratch,
+) -> CollectiveStats {
+    let w = windows.len();
+    assert_eq!(w, topo.workers, "window count must match the topology");
+    assert!(
+        topo.pods >= 1 && topo.pods * (topo.workers / topo.pods) == topo.workers,
+        "ragged topology: pods ({}) must divide workers ({}) — use PodTopology::new",
+        topo.pods,
+        topo.workers
+    );
+    assert!(chunk >= 1, "collective chunk size must be >= 1");
+    assert_eq!(
+        bucket_off % chunk,
+        0,
+        "bucket offset {bucket_off} must sit on the absolute {chunk}-chunk grid \
+         (use pipeline::BucketSchedule) or per-bucket FP8 scales diverge from \
+         the whole-buffer grid"
+    );
+    let n = windows[0].len();
+    for win in windows.iter() {
+        assert_eq!(win.len(), n, "bucket window size mismatch");
+    }
+    if w == 1 {
+        // mirror reduce_mean_into_rank0's degenerate schedule (tree
+        // no-op + scale by 1/1) so the bucketed path stays
+        // bit-identical to the flat W = 1 collective
+        for x in windows[0].iter_mut() {
+            *x *= 1.0;
+        }
+        return CollectiveStats { elems: n, ..CollectiveStats::default() };
+    }
+    let p = topo.workers_per_pod();
+    if topo.pods == 1 {
+        // flat special case on windows: same stages as
+        // grad_collective_with, intra accounting
+        if let Some(fmt) = fp8_intra {
+            for win in windows.iter_mut() {
+                qdq_chunks(fmt, chunk, win, scratch);
+            }
+        }
+        tree_reduce_sum_windows(windows, 1);
+        let inv = 1.0 / w as f32;
+        for x in windows[0].iter_mut() {
+            *x *= inv;
+        }
+        if let Some(fmt) = fp8_intra {
+            qdq_chunks(fmt, chunk, &mut *windows[0], scratch);
+        }
+        return CollectiveStats {
+            elems: n,
+            intra: level_legs(n, w, 1, fp8_intra, chunk),
+            intra_f32: level_legs(n, w, 1, None, chunk),
+            ..CollectiveStats::default()
+        };
+    }
+    if p == 1 {
+        // every rank is a pod leader: pure inter level on windows
+        if let Some(fmt) = fp8_inter {
+            for win in windows.iter_mut() {
+                qdq_chunks(fmt, chunk, win, scratch);
+            }
+        }
+        tree_reduce_sum_windows(windows, 1);
+        let inv = 1.0 / w as f32;
+        for x in windows[0].iter_mut() {
+            *x *= inv;
+        }
+        if let Some(fmt) = fp8_inter {
+            qdq_chunks(fmt, chunk, &mut *windows[0], scratch);
+        }
+        return CollectiveStats {
+            elems: n,
+            inter: level_legs(n, w, 1, fp8_inter, chunk),
+            inter_f32: level_legs(n, w, 1, None, chunk),
+            ..CollectiveStats::default()
+        };
+    }
+
+    // full two-level schedule, stage for stage the whole-buffer path
+    if let Some(fmt) = fp8_intra {
+        for win in windows.iter_mut() {
+            qdq_chunks(fmt, chunk, win, scratch);
+        }
+    }
+    for pod in 0..topo.pods {
+        let base = pod * p;
+        tree_reduce_sum_windows(&mut windows[base..base + p], 1);
+    }
+    if let Some(fmt) = fp8_inter {
+        for pod in 0..topo.pods {
+            qdq_chunks(fmt, chunk, &mut *windows[topo.leader_of(pod)], scratch);
+        }
+    }
+    tree_reduce_sum_windows(windows, p);
+    let inv = 1.0 / w as f32;
+    for x in windows[0].iter_mut() {
+        *x *= inv;
+    }
+    if let Some(fmt) = fp8_inter {
+        qdq_chunks(fmt, chunk, &mut *windows[0], scratch);
+    }
+    if let Some(fmt) = fp8_intra {
+        qdq_chunks(fmt, chunk, &mut *windows[0], scratch);
+    }
+
+    CollectiveStats {
+        elems: n,
+        intra: level_legs(n, p, topo.pods, fp8_intra, chunk),
+        inter: level_legs(n, topo.pods, 1, fp8_inter, chunk),
+        intra_f32: level_legs(n, p, topo.pods, None, chunk),
+        inter_f32: level_legs(n, topo.pods, 1, None, chunk),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -313,6 +455,77 @@ mod tests {
             assert_eq!(x, expect, "elem {i}");
         }
         assert_eq!(s.elems, n);
+    }
+
+    #[test]
+    fn bucketed_collective_bit_matches_whole_buffer() {
+        use crate::coordinator::pipeline::BucketSchedule;
+        // every topology shape x fp8 mix: running the collective per
+        // BucketSchedule window must leave rank 0 bit-identical to the
+        // monolithic collective, and the per-bucket stats must sum to
+        // the whole-buffer accounting exactly
+        let chunk = 64usize;
+        let n = chunk * 7 + 17; // ragged tail chunk
+        let shapes = [(1usize, 1usize), (2, 1), (4, 1), (4, 2), (4, 4), (8, 2)];
+        let mixes = [(None, None), (Some(E4M3), None), (None, Some(E5M2)), (Some(E4M3), Some(E5M2))];
+        for &(w, pods) in &shapes {
+            for &(fi, fx) in &mixes {
+                let topo = PodTopology::new(w, pods).unwrap();
+                let mk = || -> Vec<Vec<f32>> {
+                    (0..w)
+                        .map(|r| (0..n).map(|i| ((r * 31 + i) as f32).sin() * 0.01).collect())
+                        .collect()
+                };
+                let mut whole = mk();
+                let want = hier_grad_collective(&mut whole, topo, fi, fx, chunk);
+
+                let mut bufs = mk();
+                let sched = BucketSchedule::new(n, chunk * 2 * 4, chunk);
+                assert!(sched.len() > 1, "test wants several buckets");
+                let mut scratch = CollectiveScratch::default();
+                let mut got = CollectiveStats::default();
+                // carve each worker buffer into the schedule's windows
+                let mut rests: Vec<&mut [f32]> =
+                    bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+                for &(off, len) in &sched.buckets {
+                    let mut wins: Vec<&mut [f32]> = Vec::with_capacity(w);
+                    for rest in rests.iter_mut() {
+                        let (win, tail) = std::mem::take(rest).split_at_mut(len);
+                        *rest = tail;
+                        wins.push(win);
+                    }
+                    got.absorb(&hier_bucket_collective(
+                        &mut wins, off, topo, fi, fx, chunk, &mut scratch,
+                    ));
+                }
+                for (i, (x, y)) in whole[0].iter().zip(&bufs[0]).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "w={w} pods={pods} fp8=({},{}) elem {i}",
+                        fi.is_some(),
+                        fx.is_some()
+                    );
+                }
+                assert_eq!(got, want, "stats must sum to the whole-buffer accounting");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk grid")]
+    fn bucket_collective_refuses_unaligned_offsets() {
+        let mut bufs: Vec<Vec<f32>> = (0..2).map(|_| vec![1.0f32; 32]).collect();
+        let mut wins: Vec<&mut [f32]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+        hier_bucket_collective(
+            &mut wins,
+            33, // not a multiple of 64
+            PodTopology::flat(2),
+            None,
+            None,
+            64,
+            &mut CollectiveScratch::default(),
+        );
     }
 
     #[test]

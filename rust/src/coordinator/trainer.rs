@@ -2,20 +2,33 @@
 //! collective → clip → sharded chunked AdamW artifact →
 //! delayed-scaling update → divergence check.
 //!
-//! Hot-path structure (see rust/EXPERIMENTS.md §Perf and §Sharding):
+//! Hot-path structure (see rust/EXPERIMENTS.md §Perf, §Sharding and
+//! §Overlap):
 //! * the `dp_workers` gradient passes run concurrently on scoped
 //!   threads (the PJRT CPU client accepts concurrent executions), with
 //!   a fixed-order merge of loss/amax/monitor so results are
 //!   bit-identical to the serial schedule at any worker count;
 //! * the gradient collective is the pod-aware two-level schedule
-//!   (`topology::hier_grad_collective_with`): deterministic intra-pod
-//!   reduce-scatter → inter-pod exchange over pod leaders → intra-pod
-//!   all-gather, with FP8 wire compression selectable per level
-//!   (`collective_fp8_intra` / `collective_fp8_inter`, per-chunk pow2
-//!   auto-scales). `pods = 1` is the flat collective; with intra
-//!   compression off that is bit-identical to the broadcast-free
-//!   rank-0 reduce, and only the canonical copy is consumed either
-//!   way;
+//!   (`topology::hier_bucket_collective` per bucket, the whole-buffer
+//!   `hier_grad_collective_with` on the phased path): deterministic
+//!   intra-pod reduce-scatter → inter-pod exchange over pod leaders →
+//!   intra-pod all-gather, with FP8 wire compression selectable per
+//!   level (`collective_fp8_intra` / `collective_fp8_inter`, per-chunk
+//!   pow2 auto-scales);
+//! * the step is **bucketed and overlapped** (`overlap_comm`, default
+//!   on): the flat gradient is partitioned into `bucket_bytes`-sized,
+//!   Adam-chunk-aligned buckets (`pipeline::BucketSchedule`); each
+//!   worker streams finished bucket windows to a dedicated comms
+//!   thread over channels, the comms thread runs the two-level
+//!   collective per bucket on double-buffered scratch while later
+//!   buckets are still being computed, and the per-bucket norm partial
+//!   (`pipeline::NormStream`) plus — when the clip factor is provably
+//!   1 — the sharded Adam update for the bucket run as soon as the
+//!   bucket lands. Because bucket starts sit on the absolute Adam
+//!   chunk grid, every per-chunk FP8 wire/moment grid, the f32 tree
+//!   reduce order, and the f64 norm fold order are exactly those of
+//!   the phased schedule, so the overlapped step is bit-identical to
+//!   `force_phased_step` (pinned by tests/integration.rs);
 //! * optimizer state is **ZeRO-1 sharded**: the Adam moments live in
 //!   per-worker `MomentBuffer` shards on a chunk-aligned owner map
 //!   (`ShardLayout::chunk_aligned` over the Adam artifact chunk), each
@@ -25,9 +38,16 @@
 //! * `apply_adam` runs on persistent per-thread scratch (chunk pads as
 //!   reusable `HostTensor`s, a persistent `p_flat`, a cached chunk work
 //!   list) so the steady-state step makes no per-chunk heap
-//!   allocations on the coordinator side.
+//!   allocations on the coordinator side;
+//! * every step reports per-phase wall timers
+//!   (`pipeline::PhaseTimers` on `StepOutcome`): grad / collective /
+//!   norm / adam walls plus the *exposed* (non-hidden) collective
+//!   seconds, the measurement side of
+//!   `perfmodel::interconnect::overlap_cost`.
 
+use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -37,8 +57,11 @@ use crate::coordinator::allreduce::{
 };
 use crate::coordinator::divergence::{DivergenceDetector, Verdict};
 use crate::coordinator::params::ParamStore;
+use crate::coordinator::pipeline::{contain_panic, BucketSchedule, NormStream, PhaseTimers};
 use crate::coordinator::schedule::LrSchedule;
-use crate::coordinator::topology::{hier_grad_collective_with, PodTopology};
+use crate::coordinator::topology::{
+    hier_bucket_collective, hier_grad_collective_with, PodTopology,
+};
 use crate::data::{Batcher, Corpus, CorpusConfig};
 use crate::fp8::{Fp8Format, E4M3, E5M2};
 use crate::metrics::{StepMeter, StepStats};
@@ -62,6 +85,9 @@ pub struct StepOutcome {
     pub verdict: Verdict,
     /// per-layer [swiglu_amax, resid_amax, mlp_out_amax]
     pub monitor: Vec<[f32; 3]>,
+    /// per-phase wall timers for this step (grad/collective/norm/adam
+    /// plus exposed-collective seconds; see `pipeline::PhaseTimers`)
+    pub timers: PhaseTimers,
     /// throughput accounting from the step meter
     pub stats: StepStats,
 }
@@ -112,6 +138,20 @@ struct AdamUnit<'a> {
     g: &'a [f32],
 }
 
+/// One chunk of optimizer work on the overlapped path: like
+/// `AdamUnit` but without the gradient window — the grad bits for a
+/// bucket only exist once its collective lands, so the window is
+/// resolved against the landed bucket slice at dispatch time using the
+/// chunk's absolute offset.
+struct BucketUnit<'a> {
+    off: usize,
+    len: usize,
+    wd: f32,
+    p: &'a mut [f32],
+    m: &'a mut [f32],
+    v: &'a mut [f32],
+}
+
 /// Split `skip` then `take` elements off the front of a mutable slice
 /// cursor, returning the taken window.
 fn carve<'a>(cursor: &mut &'a mut [f32], skip: usize, take: usize) -> &'a mut [f32] {
@@ -120,6 +160,156 @@ fn carve<'a>(cursor: &mut &'a mut [f32], skip: usize, take: usize) -> &'a mut [f
     let (win, rest) = rest.split_at_mut(take);
     *cursor = rest;
     win
+}
+
+/// The read-only context one gradient worker pass needs — a plain
+/// struct of borrows so the overlapped step can destructure `Trainer`
+/// into disjoint field borrows and still run passes from free
+/// functions on scoped threads.
+struct PassCtx<'a> {
+    art: &'a Artifact,
+    batcher: &'a Batcher,
+    params: &'a ParamStore,
+    grad_accum: usize,
+    ns: usize,
+    step: usize,
+    /// tests only: worker index whose pass should deliberately panic,
+    /// exercising the panic-containment path end to end
+    panic_drill: Option<usize>,
+}
+
+/// One worker's microbatched gradient pass: accumulate grads into
+/// `buf`, return the worker-local loss/amax/monitor partials. Pure in
+/// the worker index — safe to run on any thread.
+fn run_worker_pass(
+    ctx: &PassCtx<'_>,
+    w: usize,
+    scales: &HostTensor,
+    buf: &mut Vec<f32>,
+) -> Result<WorkerPass> {
+    if ctx.panic_drill == Some(w) {
+        panic!("injected drill panic in grad worker {w} (tests only)");
+    }
+    let man = &ctx.art.manifest;
+    let n_params = ctx.params.total_elems();
+    buf.clear();
+    buf.resize(n_params, 0.0);
+    let mut pass = WorkerPass {
+        loss_sum: 0.0,
+        amax: vec![0.0; ctx.ns],
+        monitor: vec![[0.0; 3]; man.n_layers],
+    };
+    for micro in 0..ctx.grad_accum {
+        let tokens = ctx.batcher.batch(ctx.step, w, micro);
+        let batch = HostTensor::from_i32(&ctx.batcher.shape(), tokens);
+        // params are immutable within a step and shared by every
+        // worker: borrow them (run_refs) instead of deep-cloning a
+        // full model copy per worker per microbatch
+        let mut inputs: Vec<&HostTensor> = Vec::with_capacity(ctx.params.tensors.len() + 2);
+        inputs.extend(ctx.params.tensors.iter());
+        inputs.push(scales);
+        inputs.push(&batch);
+        let out = ctx.art.run_refs(&inputs)?;
+        let p = man.params.len();
+        pass.loss_sum += out[0].scalar_f32() as f64;
+        let mut off = 0;
+        for g in &out[1..=p] {
+            let src = g.f32s();
+            for (d, s) in buf[off..off + src.len()].iter_mut().zip(src) {
+                *d += *s;
+            }
+            off += src.len();
+        }
+        for (a, &x) in pass.amax.iter_mut().zip(out[p + 1].f32s()) {
+            *a = a.max(x);
+        }
+        for (l, row) in out[p + 2].f32s().chunks(3).enumerate() {
+            for k in 0..3 {
+                pass.monitor[l][k] = pass.monitor[l][k].max(row[k]);
+            }
+        }
+    }
+    // mean over microbatches
+    let inv = 1.0 / ctx.grad_accum as f32;
+    for g in buf.iter_mut() {
+        *g *= inv;
+    }
+    Ok(pass)
+}
+
+/// Fixed-order merge of the per-worker partials (worker index order):
+/// f64 loss fold and elementwise max folds are independent of which
+/// thread ran which worker, so any schedule gives these exact bits.
+fn merge_passes(
+    passes: &[WorkerPass],
+    ns: usize,
+    n_layers: usize,
+    denom: usize,
+) -> (f32, Vec<f32>, Vec<[f32; 3]>) {
+    let mut loss_sum = 0.0f64;
+    let mut amax = vec![0.0f32; ns];
+    let mut monitor = vec![[0.0f32; 3]; n_layers];
+    for pass in passes {
+        loss_sum += pass.loss_sum;
+        for (a, &x) in amax.iter_mut().zip(&pass.amax) {
+            *a = a.max(x);
+        }
+        for (m, row) in monitor.iter_mut().zip(&pass.monitor) {
+            for k in 0..3 {
+                m[k] = m[k].max(row[k]);
+            }
+        }
+    }
+    ((loss_sum / denom as f64) as f32, amax, monitor)
+}
+
+/// Dispatch one landed bucket's Adam units across the scratch lanes.
+/// Chunks are independent, so which lane runs a chunk never changes
+/// any bit — only the per-chunk scalars and windows do, and those are
+/// identical to the phased `apply_adam` dispatch for the same chunk.
+fn run_bucket_adam(
+    art: &Artifact,
+    scratch: &mut [AdamScratch],
+    units: Vec<BucketUnit<'_>>,
+    g: &[f32],
+    bucket_off: usize,
+    lr: f32,
+    step_f: f32,
+    clip: f32,
+) -> Result<()> {
+    if units.is_empty() {
+        return Ok(());
+    }
+    let n_lanes = scratch.len().min(units.len()).max(1);
+    let mut lanes: Vec<Vec<(BucketUnit<'_>, &[f32])>> =
+        (0..n_lanes).map(|_| Vec::new()).collect();
+    for (i, u) in units.into_iter().enumerate() {
+        let start = u.off - bucket_off;
+        let gw = &g[start..start + u.len];
+        lanes[i % n_lanes].push((u, gw));
+    }
+    std::thread::scope(|s| -> Result<()> {
+        let handles: Vec<_> = lanes
+            .into_iter()
+            .zip(scratch.iter_mut())
+            .map(|(lane, sc)| {
+                s.spawn(move || -> Result<()> {
+                    for (u, gw) in lane {
+                        sc.load(u.p, u.m, u.v, gw, [lr, u.wd, step_f, clip]);
+                        let res = art.run(&sc.inputs)?;
+                        u.p.copy_from_slice(&res[0].f32s()[..u.len]);
+                        u.m.copy_from_slice(&res[1].f32s()[..u.len]);
+                        u.v.copy_from_slice(&res[2].f32s()[..u.len]);
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            contain_panic(h.join(), "adam worker")??;
+        }
+        Ok(())
+    })
 }
 
 /// The training loop driver: owns every piece of run-time state one
@@ -165,6 +355,12 @@ pub struct Trainer {
     /// reusable encode scratch for the FP8 collective (not state —
     /// snapshots never capture it)
     collective_scratch: CollectiveScratch,
+    /// second scratch set for the overlapped pipeline: bucket k and
+    /// bucket k+1 can be mid-flight at once (double buffering)
+    collective_scratch_alt: CollectiveScratch,
+    /// Adam-chunk-aligned bucket partition of the flat gradient
+    /// (`bucket_bytes`, see pipeline::BucketSchedule)
+    bucket_sched: BucketSchedule,
     meter: StepMeter,
     /// steps completed so far (also the LR-schedule position and the
     /// stateless data pipeline's cursor)
@@ -173,12 +369,21 @@ pub struct Trainer {
     /// threads — the reference schedule the parallel path must match
     /// bit-for-bit (pinned by tests/integration.rs)
     pub force_serial_workers: bool,
-    /// set when apply_adam failed mid-run: chunk results stream into
-    /// the per-worker moment shards in place (the allocation-free
-    /// design), so an artifact error leaves the moments partially
-    /// advanced while the params are not. Retrying a step from that
-    /// state would silently diverge; every later step() refuses
-    /// instead.
+    /// run the old phased schedule (all grads → one whole-buffer
+    /// collective → norm → adam) instead of the bucketed overlapped
+    /// pipeline — the reference the overlapped schedule must match
+    /// bit-for-bit (pinned by tests/integration.rs); also settable as
+    /// a campaign session key
+    pub force_phased_step: bool,
+    /// tests only: make this worker index's grad pass panic, to
+    /// exercise panic containment (None in production)
+    pub inject_worker_panic: Option<usize>,
+    /// set when a failed or panicked optimizer/pipeline stage may have
+    /// left state partially advanced: chunk results stream into the
+    /// per-worker moment shards in place (the allocation-free design),
+    /// so a mid-run failure leaves the moments partially advanced
+    /// while the params are not. Retrying a step from that state would
+    /// silently diverge; every later step() refuses instead.
     poisoned: bool,
     // ---- reusable step state (no steady-state allocations) ----
     worker_grads: Vec<Vec<f32>>,
@@ -194,8 +399,9 @@ pub struct Trainer {
 impl Trainer {
     /// Build a trainer for `cfg`: load the grad/adam artifacts, init
     /// params and the scaling/divergence/data state, carve the ZeRO-1
-    /// shard layout, and validate the collective topology
-    /// (`pods` must divide `dp_workers`) and wire format.
+    /// shard layout and the bucket schedule, and validate the
+    /// collective topology (`pods` must divide `dp_workers`) and wire
+    /// format.
     pub fn new(rt: Arc<Runtime>, cfg: TrainConfig) -> Result<Self> {
         let rc = cfg.recipe_config();
         let grad_name = format!("grad_{}_{}", cfg.size, rc.name);
@@ -310,6 +516,7 @@ impl Trainer {
         let fp8_intra = cfg.collective_fp8_intra.then_some(wire_fmt);
         let fp8_inter = cfg.collective_fp8_inter.then_some(wire_fmt);
         let topo = PodTopology::new(cfg.dp_workers, cfg.pods).map_err(|e| anyhow!(e))?;
+        let bucket_sched = BucketSchedule::new(total, cfg.bucket_bytes, chunk);
 
         Ok(Self {
             m_shards: mk_shards(m_store),
@@ -320,6 +527,8 @@ impl Trainer {
             fp8_inter,
             last_collective: CollectiveStats::default(),
             collective_scratch: CollectiveScratch::default(),
+            collective_scratch_alt: CollectiveScratch::default(),
+            bucket_sched,
             worker_grads: vec![Vec::new(); cfg.dp_workers],
             p_flat: Vec::new(),
             adam_work,
@@ -327,6 +536,8 @@ impl Trainer {
             meter: StepMeter::new(flops),
             step: 0,
             force_serial_workers: false,
+            force_phased_step: false,
+            inject_worker_panic: None,
             poisoned: false,
             params,
             scale_mgr,
@@ -349,6 +560,12 @@ impl Trainer {
     /// (`pods = 1` is the flat collective).
     pub fn topology(&self) -> PodTopology {
         self.topo
+    }
+
+    /// The Adam-chunk-aligned bucket schedule the overlapped pipeline
+    /// partitions the flat gradient into.
+    pub fn bucket_schedule(&self) -> &BucketSchedule {
+        &self.bucket_sched
     }
 
     /// Whether a failed optimizer step has left the in-memory state
@@ -450,60 +667,24 @@ impl Trainer {
         HostTensor::from_f32(&[self.scale_mgr.n_sites()], self.scale_mgr.scales().to_vec())
     }
 
-    /// One worker's microbatched gradient pass: accumulate grads into
-    /// `buf`, return the worker-local loss/amax/monitor partials.
-    /// Pure in the worker index — safe to run on any thread.
-    fn worker_pass(&self, w: usize, scales: &HostTensor, buf: &mut Vec<f32>) -> Result<WorkerPass> {
-        let man = &self.grad_art.manifest;
-        let n_params = self.params.total_elems();
-        let ns = self.scale_mgr.n_sites();
-        buf.clear();
-        buf.resize(n_params, 0.0);
-        let mut pass = WorkerPass {
-            loss_sum: 0.0,
-            amax: vec![0.0; ns],
-            monitor: vec![[0.0; 3]; man.n_layers],
-        };
-        for micro in 0..self.cfg.grad_accum {
-            let tokens = self.batcher.batch(self.step, w, micro);
-            let batch = HostTensor::from_i32(&self.batcher.shape(), tokens);
-            // params are immutable within a step and shared by every
-            // worker: borrow them (run_refs) instead of deep-cloning a
-            // full model copy per worker per microbatch
-            let mut inputs: Vec<&HostTensor> =
-                Vec::with_capacity(self.params.tensors.len() + 2);
-            inputs.extend(self.params.tensors.iter());
-            inputs.push(scales);
-            inputs.push(&batch);
-            let out = self.grad_art.run_refs(&inputs)?;
-            let p = man.params.len();
-            pass.loss_sum += out[0].scalar_f32() as f64;
-            let mut off = 0;
-            for g in &out[1..=p] {
-                let src = g.f32s();
-                for (d, s) in buf[off..off + src.len()].iter_mut().zip(src) {
-                    *d += *s;
-                }
-                off += src.len();
-            }
-            for (a, &x) in pass.amax.iter_mut().zip(out[p + 1].f32s()) {
-                *a = a.max(x);
-            }
-            for (l, row) in out[p + 2].f32s().chunks(3).enumerate() {
-                for k in 0..3 {
-                    pass.monitor[l][k] = pass.monitor[l][k].max(row[k]);
-                }
-            }
+    fn pass_ctx(&self) -> PassCtx<'_> {
+        PassCtx {
+            art: &self.grad_art,
+            batcher: &self.batcher,
+            params: &self.params,
+            grad_accum: self.cfg.grad_accum,
+            ns: self.scale_mgr.n_sites(),
+            step: self.step,
+            panic_drill: self.inject_worker_panic,
         }
-        // mean over microbatches
-        let inv = 1.0 / self.cfg.grad_accum as f32;
-        for g in buf.iter_mut() {
-            *g *= inv;
-        }
-        Ok(pass)
     }
 
-    /// Run one full training step.
+    /// Run one full training step. Dispatches to the bucketed
+    /// overlapped pipeline unless it is pinned off: the phased
+    /// schedule runs when `force_phased_step` is set (session key /
+    /// identity tests), when `force_serial_workers` pins the serial
+    /// reference, or when `overlap_comm = false` in the config. All
+    /// schedules are bit-identical (see module docs).
     pub fn step(&mut self) -> Result<StepOutcome> {
         if self.poisoned {
             return Err(anyhow!(
@@ -511,63 +692,92 @@ impl Trainer {
                  (moments partially updated); restart from a checkpoint"
             ));
         }
+        if self.force_phased_step || self.force_serial_workers || !self.cfg.overlap_comm {
+            self.step_phased()
+        } else {
+            self.step_overlapped()
+        }
+    }
+
+    /// The phased reference schedule: all grad passes → one
+    /// whole-buffer collective → norm/clip → chunked Adam. The
+    /// overlapped pipeline must match this bit-for-bit.
+    fn step_phased(&mut self) -> Result<StepOutcome> {
         let man = self.grad_art.manifest.clone();
         let ns = self.scale_mgr.n_sites();
         let scales = HostTensor::from_f32(&[ns], self.scale_mgr.scales().to_vec());
+        let mut timers = PhaseTimers {
+            buckets: 1,
+            overlapped: false,
+            ..Default::default()
+        };
 
         // ---- (1) per-worker microbatched grads, one scoped thread per
         //      worker (PJRT CPU executions are thread-safe; apply_adam
         //      already relies on this). `force_serial_workers` runs the
         //      identical passes inline — same partials, same merge, so
         //      the two schedules are bit-identical.
+        let t_grad = Instant::now();
         let mut grads = std::mem::take(&mut self.worker_grads);
+        let ctx = self.pass_ctx();
+        let mut panic_err: Option<anyhow::Error> = None;
         let passes_res: Result<Vec<WorkerPass>> =
             if self.cfg.dp_workers == 1 || self.force_serial_workers {
                 grads
                     .iter_mut()
                     .enumerate()
-                    .map(|(w, buf)| self.worker_pass(w, &scales, buf))
+                    .map(|(w, buf)| run_worker_pass(&ctx, w, &scales, buf))
                     .collect()
             } else {
-                let this = &*self;
+                let ctx_ref = &ctx;
                 let scales_ref = &scales;
                 std::thread::scope(|s| {
                     let handles: Vec<_> = grads
                         .iter_mut()
                         .enumerate()
-                        .map(|(w, buf)| s.spawn(move || this.worker_pass(w, scales_ref, buf)))
+                        .map(|(w, buf)| {
+                            s.spawn(move || run_worker_pass(ctx_ref, w, scales_ref, buf))
+                        })
                         .collect();
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("grad worker panicked"))
-                        .collect::<Result<Vec<_>>>()
+                    let mut out = Vec::with_capacity(handles.len());
+                    for (w, h) in handles.into_iter().enumerate() {
+                        match contain_panic(h.join(), "grad worker") {
+                            Ok(res) => out.push(res),
+                            Err(e) => {
+                                panic_err.get_or_insert(
+                                    e.context(format!("grad worker {w} panicked")),
+                                );
+                            }
+                        }
+                    }
+                    out.into_iter().collect::<Result<Vec<_>>>()
                 })
             };
+        drop(ctx);
         // restore the buffers before propagating any error: a failed
         // step must leave the trainer stepable (a second step() should
         // fail or succeed cleanly, never panic on empty replica state)
         self.worker_grads = grads;
-        let passes = passes_res?;
-
-        // fixed-order merge (worker index order): f64 loss fold and
-        // elementwise max folds are independent of which thread ran
-        // which worker, so any schedule gives these exact bits
-        let mut loss_sum = 0.0f64;
-        let mut amax = vec![0.0f32; ns];
-        let mut monitor = vec![[0.0f32; 3]; man.n_layers];
-        for pass in &passes {
-            loss_sum += pass.loss_sum;
-            for (a, &x) in amax.iter_mut().zip(&pass.amax) {
-                *a = a.max(x);
-            }
-            for (m, row) in monitor.iter_mut().zip(&pass.monitor) {
-                for k in 0..3 {
-                    m[k] = m[k].max(row[k]);
-                }
-            }
+        if let Some(e) = panic_err {
+            // a panicked worker may have unwound mid-write into its
+            // grad buffer; nothing downstream ran, but the buffers are
+            // not trustworthy and the pass partials are gone — same
+            // contract as an apply_adam failure
+            self.poisoned = true;
+            return Err(e.context(
+                "a gradient worker panicked mid-step; trainer state is poisoned — \
+                 resume from the latest campaign snapshot",
+            ));
         }
-        let loss =
-            (loss_sum / (self.cfg.dp_workers * self.cfg.grad_accum) as f64) as f32;
+        let passes = passes_res?;
+        timers.grad_s = t_grad.elapsed().as_secs_f64();
+
+        let (loss, amax, monitor) = merge_passes(
+            &passes,
+            ns,
+            man.n_layers,
+            self.cfg.dp_workers * self.cfg.grad_accum,
+        );
 
         // ---- (2) gradient collective: pod-aware two-level schedule —
         //      intra-pod reduce-scatter → inter-pod exchange over pod
@@ -578,6 +788,7 @@ impl Trainer {
         //      next step's worker pass). At pods=1 with intra
         //      compression off this is bit-identical to the rank-0
         //      reduce.
+        let t_coll = Instant::now();
         self.last_collective = hier_grad_collective_with(
             &mut self.worker_grads,
             self.topo,
@@ -586,11 +797,17 @@ impl Trainer {
             self.shard_map.chunk,
             &mut self.collective_scratch,
         );
+        timers.collective_s = t_coll.elapsed().as_secs_f64();
+        // the phased schedule hides nothing: every collective second
+        // is exposed stall
+        timers.comm_exposed_s = timers.collective_s;
 
         // ---- (3) global-norm clip. Non-finite grads either skip the
         //      update (production protection) or pass through at clip 1
         //      (exposing the paper's hard divergence), per config.
+        let t_norm = Instant::now();
         let gnorm = global_norm(&self.worker_grads[0]);
+        timers.norm_s = t_norm.elapsed().as_secs_f64();
         let clip = if !gnorm.is_finite() && !self.cfg.skip_nonfinite_updates {
             1.0
         } else {
@@ -601,7 +818,9 @@ impl Trainer {
         //      moment scales are per-absolute-chunk, see optimizer::)
         let lr = self.sched.lr(self.step);
         if clip > 0.0 {
+            let t_adam = Instant::now();
             self.apply_adam(lr, clip)?;
+            timers.adam_s = t_adam.elapsed().as_secs_f64();
         }
 
         // ---- (5) scaling + divergence bookkeeping
@@ -619,6 +838,407 @@ impl Trainer {
             lr,
             verdict,
             monitor,
+            timers,
+            stats,
+        })
+    }
+
+    /// The bucketed overlapped pipeline. Three thread roles inside one
+    /// scope:
+    ///
+    /// * **grad workers** (one per dp worker): run the microbatched
+    ///   pass into their replica buffer, then split the buffer into
+    ///   the bucket windows and send each window — in ascending bucket
+    ///   order — to the comms thread;
+    /// * **comms thread**: for each bucket in order, receives all W
+    ///   windows (worker order), runs the two-level per-bucket
+    ///   collective on alternating scratch sets, and ships rank-0's
+    ///   reduced window to the main thread together with the wire
+    ///   stats and the instant the collective started;
+    /// * **main thread**: as each bucket lands, folds its norm partial
+    ///   (`NormStream`, exact `global_norm` fold order) and — when the
+    ///   clip factor is provably 1 before the norm exists (grad_clip
+    ///   off and non-finite passthrough) — dispatches the bucket's
+    ///   Adam chunks immediately; otherwise latches the windows and
+    ///   runs Adam after the last bucket fixes the clip factor.
+    ///
+    /// Identity argument (pinned by tests): bucket starts sit on the
+    /// absolute Adam-chunk grid, so per-bucket FP8 wire grids, the f32
+    /// tree-reduce order, the mean scaling, the f64 norm fold, the
+    /// per-chunk Adam scalars and the moment-shard carve are all
+    /// exactly the phased schedule's — only wall-clock interleaving
+    /// differs, and no numeric depends on it.
+    fn step_overlapped(&mut self) -> Result<StepOutcome> {
+        let man = self.grad_art.manifest.clone();
+        let ns = self.scale_mgr.n_sites();
+        let scales = HostTensor::from_f32(&[ns], self.scale_mgr.scales().to_vec());
+        let n_params = self.params.total_elems();
+        let dp = self.cfg.dp_workers;
+        let grad_accum = self.cfg.grad_accum;
+        let grad_clip = self.cfg.grad_clip;
+        let skip_nonfinite = self.cfg.skip_nonfinite_updates;
+        let pack_moments = self.cfg.pack_moments;
+        let lr = self.sched.lr(self.step);
+        let step_f = (self.step + 1) as f32;
+        // when clipping is off AND non-finite norms pass through, the
+        // phased path's clip factor is 1.0 no matter what the norm
+        // turns out to be — only then may Adam start before the norm
+        // is complete. (clip_factor: norm<=max || max<=0 → 1.0;
+        // non-finite && !skip → 1.0.)
+        let eager_clip: Option<f32> =
+            (grad_clip <= 0.0 && !skip_nonfinite).then_some(1.0);
+
+        let mut grads = std::mem::take(&mut self.worker_grads);
+        let mut p_flat = std::mem::take(&mut self.p_flat);
+
+        // disjoint field borrows for the scoped threads
+        let Trainer {
+            grad_art,
+            adam_art,
+            params,
+            batcher,
+            scale_mgr,
+            shard_map,
+            m_shards,
+            v_shards,
+            topo,
+            fp8_intra,
+            fp8_inter,
+            collective_scratch,
+            collective_scratch_alt,
+            adam_work,
+            adam_scratch,
+            bucket_sched,
+            step: step_now,
+            inject_worker_panic,
+            ..
+        } = self;
+        let grad_art: &Artifact = &**grad_art;
+        let adam_art: &Artifact = &**adam_art;
+        let topo = *topo;
+        let fp8_intra = *fp8_intra;
+        let fp8_inter = *fp8_inter;
+        let chunk = shard_map.chunk;
+        let step_now = *step_now;
+        let panic_drill = *inject_worker_panic;
+        let ctx = PassCtx {
+            art: grad_art,
+            batcher,
+            params,
+            grad_accum,
+            ns: scale_mgr.n_sites(),
+            step: step_now,
+            panic_drill,
+        };
+        debug_assert_eq!(ns, ctx.ns);
+
+        // flat params + unpacked moment shard views, carved into
+        // per-chunk units grouped by owning bucket — the exact same
+        // cursor walk as apply_adam, so every window is the phased
+        // path's window
+        params.flatten_into(&mut p_flat);
+        let mut m_views: Vec<&mut [f32]> =
+            m_shards.iter_mut().map(|b| b.as_f32().as_mut_slice()).collect();
+        let mut v_views: Vec<&mut [f32]> =
+            v_shards.iter_mut().map(|b| b.as_f32().as_mut_slice()).collect();
+        let n_buckets = bucket_sched.len();
+        let mut bucket_units: Vec<Vec<BucketUnit<'_>>> =
+            (0..n_buckets).map(|_| Vec::new()).collect();
+        {
+            let mut pc = &mut p_flat[..];
+            let mut cursor = 0usize;
+            let mut pos = vec![0usize; shard_map.n_workers()];
+            for &(off, len, wd) in adam_work.iter() {
+                let owner = shard_map.owner_of(off);
+                let local = off - shard_map.of_worker(owner).0;
+                let skip = off - cursor;
+                let m_win = carve(&mut m_views[owner], local - pos[owner], len);
+                let v_win = carve(&mut v_views[owner], local - pos[owner], len);
+                pos[owner] = local + len;
+                // a unit never straddles buckets: units are C-aligned
+                // sub-chunk ranges and bucket lengths are multiples of
+                // the chunk, so the whole unit lives in bucket_of(off)
+                bucket_units[bucket_sched.bucket_of(off)].push(BucketUnit {
+                    off,
+                    len,
+                    wd,
+                    p: carve(&mut pc, skip, len),
+                    m: m_win,
+                    v: v_win,
+                });
+                cursor = off + len;
+            }
+        }
+        let sched: &[(usize, usize)] = &bucket_sched.buckets;
+
+        // pipeline outcome state, written inside the scope
+        let mut passes: Vec<WorkerPass> = Vec::with_capacity(dp);
+        let mut worker_err: Option<anyhow::Error> = None;
+        let mut panicked = false;
+        let mut pipe_err: Option<anyhow::Error> = None;
+        let mut adam_ran = false;
+        let mut adam_failed = false;
+        let mut gnorm = f32::NAN;
+        let mut clip = 1.0f32;
+        let mut stats_total = CollectiveStats::default();
+        let mut timers = PhaseTimers {
+            buckets: n_buckets,
+            overlapped: true,
+            ..Default::default()
+        };
+
+        std::thread::scope(|s| {
+            // one channel per worker: the worker streams its bucket
+            // windows (ascending bucket order) to the comms thread
+            let mut bucket_txs = Vec::with_capacity(dp);
+            let mut bucket_rxs = Vec::with_capacity(dp);
+            for _ in 0..dp {
+                let (tx, rx) = mpsc::channel::<&mut [f32]>();
+                bucket_txs.push(tx);
+                bucket_rxs.push(rx);
+            }
+            // landed buckets: comms → main
+            let (land_tx, land_rx) =
+                mpsc::channel::<(usize, &mut [f32], CollectiveStats, Instant)>();
+
+            let ctx_ref = &ctx;
+            let scales_ref = &scales;
+            let worker_handles: Vec<_> = grads
+                .iter_mut()
+                .zip(bucket_txs)
+                .enumerate()
+                .map(|(w, (buf, tx))| {
+                    s.spawn(move || -> (Result<WorkerPass>, f64) {
+                        let t0 = Instant::now();
+                        let res = run_worker_pass(ctx_ref, w, scales_ref, &mut *buf);
+                        let dt = t0.elapsed().as_secs_f64();
+                        if res.is_ok() {
+                            // split the replica buffer into the bucket
+                            // windows and hand them to comms in order;
+                            // if comms already exited (pipeline error),
+                            // sends fail and we just stop
+                            let mut rest = buf.as_mut_slice();
+                            for &(_, len) in sched {
+                                let (win, tail) = rest.split_at_mut(len);
+                                rest = tail;
+                                if tx.send(win).is_err() {
+                                    break;
+                                }
+                            }
+                        }
+                        (res, dt)
+                    })
+                })
+                .collect();
+
+            let (scr0, scr1) = (collective_scratch, collective_scratch_alt);
+            let comms_handle = s.spawn(move || -> Result<f64> {
+                let mut busy = 0.0f64;
+                for (k, &(off, _)) in sched.iter().enumerate() {
+                    let mut wins: Vec<&mut [f32]> = Vec::with_capacity(dp);
+                    for (w, rx) in bucket_rxs.iter().enumerate() {
+                        match rx.recv() {
+                            Ok(win) => wins.push(win),
+                            Err(_) => {
+                                return Err(anyhow!(
+                                    "grad worker {w} stopped before sending bucket {k} \
+                                     (its pass failed or panicked)"
+                                ))
+                            }
+                        }
+                    }
+                    // double-buffered scratch: bucket k encodes while
+                    // the main thread may still read bucket k-1's lanes
+                    let scratch = if k % 2 == 0 { &mut *scr0 } else { &mut *scr1 };
+                    let started = Instant::now();
+                    let stats = hier_bucket_collective(
+                        &mut wins, off, topo, fp8_intra, fp8_inter, chunk, scratch,
+                    );
+                    busy += started.elapsed().as_secs_f64();
+                    let rank0 = wins.swap_remove(0);
+                    if land_tx.send((k, rank0, stats, started)).is_err() {
+                        break; // main thread bailed; unwind quietly
+                    }
+                }
+                Ok(busy)
+            });
+
+            // main thread: consume landed buckets in order
+            let mut landed: Vec<Option<&mut [f32]>> = (0..n_buckets).map(|_| None).collect();
+            let mut norm = NormStream::new();
+            for _ in 0..n_buckets {
+                let wait0 = Instant::now();
+                let Ok((k, win, stats, comm_started)) = land_rx.recv() else {
+                    break; // comms thread errored; its join reports why
+                };
+                let done = Instant::now();
+                // exposed = time this bucket's collective ran while we
+                // had nothing else to do: from the later of (collective
+                // start, us going idle) until it landed
+                let from = if comm_started > wait0 { comm_started } else { wait0 };
+                timers.comm_exposed_s += done.duration_since(from).as_secs_f64();
+                let t_norm = Instant::now();
+                norm.push(win);
+                timers.norm_s += t_norm.elapsed().as_secs_f64();
+                stats_total.absorb(&stats);
+                if let Some(c) = eager_clip {
+                    let t_adam = Instant::now();
+                    match run_bucket_adam(
+                        adam_art,
+                        adam_scratch,
+                        std::mem::take(&mut bucket_units[k]),
+                        win,
+                        sched[k].0,
+                        lr,
+                        step_f,
+                        c,
+                    ) {
+                        Ok(()) => adam_ran = true,
+                        Err(e) => {
+                            adam_failed = true;
+                            pipe_err = Some(e);
+                            break;
+                        }
+                    }
+                    timers.adam_s += t_adam.elapsed().as_secs_f64();
+                }
+                landed[k] = Some(win);
+            }
+
+            // norm + (non-eager) Adam only when every bucket landed
+            if norm.elems() == n_params && pipe_err.is_none() {
+                gnorm = norm.finish();
+                clip = match eager_clip {
+                    Some(c) => c,
+                    None => {
+                        if !gnorm.is_finite() && !skip_nonfinite {
+                            1.0
+                        } else {
+                            clip_factor(gnorm, grad_clip)
+                        }
+                    }
+                };
+                if eager_clip.is_none() && clip > 0.0 {
+                    let t_adam = Instant::now();
+                    for k in 0..n_buckets {
+                        let win = landed[k].as_deref().expect("bucket landed");
+                        match run_bucket_adam(
+                            adam_art,
+                            adam_scratch,
+                            std::mem::take(&mut bucket_units[k]),
+                            win,
+                            sched[k].0,
+                            lr,
+                            step_f,
+                            clip,
+                        ) {
+                            Ok(()) => adam_ran = true,
+                            Err(e) => {
+                                adam_failed = true;
+                                pipe_err = Some(e);
+                                break;
+                            }
+                        }
+                    }
+                    timers.adam_s += t_adam.elapsed().as_secs_f64();
+                }
+            }
+            drop(land_rx); // let any still-running comms send fail fast
+
+            for (w, h) in worker_handles.into_iter().enumerate() {
+                match contain_panic(h.join(), "grad worker") {
+                    Ok((Ok(pass), dt)) => {
+                        timers.grad_s = timers.grad_s.max(dt);
+                        passes.push(pass);
+                    }
+                    Ok((Err(e), _)) => {
+                        worker_err.get_or_insert(e.context(format!("grad worker {w} failed")));
+                    }
+                    Err(e) => {
+                        panicked = true;
+                        worker_err
+                            .get_or_insert(e.context(format!("grad worker {w} panicked")));
+                    }
+                }
+            }
+            match contain_panic(comms_handle.join(), "collective comms thread") {
+                Ok(Ok(busy)) => timers.collective_s = busy,
+                Ok(Err(e)) => {
+                    pipe_err.get_or_insert(e);
+                }
+                Err(e) => {
+                    panicked = true;
+                    pipe_err.get_or_insert(e);
+                }
+            }
+        });
+
+        // the unit windows borrow p_flat / the moment shards; release
+        // them before touching self again
+        drop(bucket_units);
+        drop(m_views);
+        drop(v_views);
+        drop(ctx);
+        self.worker_grads = grads;
+        self.p_flat = p_flat;
+
+        // failure triage. A worker artifact Err mutates nothing
+        // downstream (comms never assembles bucket 0), so it does NOT
+        // poison; any panic or a failure after Adam chunks were
+        // dispatched may have left state partially advanced and does.
+        if panicked || adam_failed {
+            self.poisoned = true;
+        }
+        if let Some(e) = worker_err {
+            return Err(if panicked {
+                e.context(
+                    "a gradient worker panicked mid-step; trainer state is poisoned — \
+                     resume from the latest campaign snapshot",
+                )
+            } else {
+                e
+            });
+        }
+        if let Some(e) = pipe_err {
+            return Err(if self.poisoned {
+                e.context(
+                    "the overlapped step failed after optimizer chunks were dispatched; \
+                     trainer state is poisoned — resume from the latest campaign snapshot",
+                )
+            } else {
+                e
+            });
+        }
+
+        self.last_collective = stats_total;
+        if adam_ran {
+            self.params.unflatten_from(&self.p_flat);
+            // re-pack the moment shards between steps (the ZeRO-1
+            // resident-memory story); exact-mode packing is
+            // bit-preserving by construction
+            if pack_moments {
+                for b in self.m_shards.iter_mut().chain(self.v_shards.iter_mut()) {
+                    b.pack();
+                }
+            }
+        }
+
+        let (loss, amax, monitor) = merge_passes(&passes, ns, man.n_layers, dp * grad_accum);
+        self.scale_mgr.update(&amax);
+        let verdict = self
+            .detector
+            .observe(self.step, loss, self.scale_mgr.overflow_events);
+
+        self.step += 1;
+        let stats = self.meter.tick(self.tokens_per_step());
+        Ok(StepOutcome {
+            step: self.step - 1,
+            loss,
+            grad_norm: gnorm,
+            lr,
+            verdict,
+            monitor,
+            timers,
             stats,
         })
     }
@@ -711,7 +1331,7 @@ impl Trainer {
                 })
                 .collect();
             for h in handles {
-                h.join().expect("adam worker panicked")?;
+                contain_panic(h.join(), "adam worker")??;
             }
             Ok(())
         });

@@ -144,6 +144,78 @@ pub fn fp8_pays(ranks: usize, link_gbps: f64, codec_gbps: f64) -> bool {
     link_gbps < fp8_crossover_gbps(ranks, codec_gbps)
 }
 
+/// Predicted wall-clock of one bucketed, overlapped step tail (the
+/// collective + the per-bucket downstream compute it hides behind),
+/// from a uniform-bucket pipeline model: with `B` buckets, the span of
+/// two pipelined stages of total lengths `comm_s` and `compute_s` is
+/// `max + min/B` — the longer stage runs end to end, and one bucket's
+/// worth of the shorter stage sticks out at a pipe end. The hidden
+/// fraction this predicts is directly comparable to the measured
+/// `PhaseTimers::hidden_comm_fraction` (the bench gates the two within
+/// 2x of each other — see benches/perf_hotpath.rs `overlap_benches`).
+#[derive(Clone, Copy, Debug)]
+pub struct OverlapCost {
+    /// total collective seconds across all buckets
+    pub comm_s: f64,
+    /// total downstream compute seconds the collective can hide behind
+    pub compute_s: f64,
+    /// buckets in the pipeline (1 = no overlap possible)
+    pub buckets: usize,
+    /// predicted pipelined span of the two stages
+    pub pipelined_s: f64,
+    /// predicted fraction of `comm_s` hidden behind compute, in [0, 1]
+    pub hidden_fraction: f64,
+}
+
+/// The pipeline algebra on *given* stage times — the measured-input
+/// form the bench gates (feed it the measured comm/compute seconds and
+/// compare its predicted hidden fraction against the measured one).
+pub fn overlap_from_times(comm_s: f64, compute_s: f64, buckets: usize) -> OverlapCost {
+    let b = buckets.max(1) as f64;
+    let (hi, lo) = if comm_s >= compute_s { (comm_s, compute_s) } else { (compute_s, comm_s) };
+    let pipelined_s = hi + lo / b;
+    let exposed = (pipelined_s - compute_s).max(0.0);
+    let hidden_fraction = if comm_s <= 0.0 {
+        1.0 // nothing on the wire — vacuously all hidden
+    } else {
+        (1.0 - exposed / comm_s).clamp(0.0, 1.0)
+    };
+    OverlapCost { comm_s, compute_s, buckets: buckets.max(1), pipelined_s, hidden_fraction }
+}
+
+/// Roofline seconds of the per-bucket downstream compute the pipeline
+/// hides the collective behind: the norm fold (one f32 read per
+/// element) plus the memory-bound Adam update
+/// (`roofline::adam_update` traffic: p read+write, g read, m/v
+/// read+write at the moment storage width), all at the HBM rate.
+pub fn overlap_compute_seconds(n: usize, fp8_moments: bool) -> f64 {
+    let moment_bytes = if fp8_moments { 1.0 } else { 4.0 };
+    let adam_bytes = 2.0 * 4.0 + 4.0 + 4.0 * moment_bytes;
+    let norm_bytes = 4.0;
+    n as f64 * (norm_bytes + adam_bytes) / (HBM_GBPS * 1e9)
+}
+
+/// Predict the overlapped step tail for `n` gradient elements on a
+/// `pods × workers_per_pod` deployment: the collective side is
+/// [`hier_collective_cost`] (the analytic twin of the per-bucket
+/// collective — bucket costs sum to the whole-buffer cost, so the
+/// whole-buffer form is exact for the total), the compute side is
+/// [`overlap_compute_seconds`], and the pipeline algebra is
+/// [`overlap_from_times`].
+pub fn overlap_cost(
+    n: usize,
+    pods: usize,
+    workers_per_pod: usize,
+    fp8_intra: bool,
+    fp8_inter: bool,
+    fp8_moments: bool,
+    buckets: usize,
+    link: &LinkModel,
+) -> OverlapCost {
+    let comm = hier_collective_cost(n, pods, workers_per_pod, fp8_intra, fp8_inter, link);
+    overlap_from_times(comm.total_s(), overlap_compute_seconds(n, fp8_moments), buckets)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +259,55 @@ mod tests {
         let all_fp8 = hier_collective_cost(n, 32, 8, true, true, l).total_s();
         assert!(mix < all_f32, "mix {mix} vs all-f32 {all_f32}");
         assert!(mix < all_fp8, "mix {mix} vs all-fp8 {all_fp8}");
+    }
+
+    #[test]
+    fn overlap_pipeline_algebra() {
+        // comm shorter than compute, many buckets: nearly all hidden
+        let c = overlap_from_times(1.0, 4.0, 8);
+        assert!((c.pipelined_s - (4.0 + 1.0 / 8.0)).abs() < 1e-12);
+        // exposed = pipelined - compute = 1/8 -> hidden = 1 - (1/8)/1
+        assert!((c.hidden_fraction - 0.875).abs() < 1e-12, "{}", c.hidden_fraction);
+        // one bucket = no overlap: everything exposed
+        let c = overlap_from_times(1.0, 4.0, 1);
+        assert_eq!(c.hidden_fraction, 0.0);
+        // comm dominates: at best `compute` seconds hide
+        let c = overlap_from_times(10.0, 2.0, 1000);
+        assert!(c.hidden_fraction < 0.21 && c.hidden_fraction > 0.19);
+        // more buckets never hides less
+        let h2 = overlap_from_times(3.0, 3.0, 2).hidden_fraction;
+        let h8 = overlap_from_times(3.0, 3.0, 8).hidden_fraction;
+        assert!(h8 >= h2);
+        // no wire at all (W = 1): vacuously hidden, never NaN
+        assert_eq!(overlap_from_times(0.0, 1.0, 4).hidden_fraction, 1.0);
+    }
+
+    #[test]
+    fn overlap_cost_predicts_mostly_hidden_comms_on_gaudi2() {
+        // the paper-shape deployment with the default wire mix and FP8
+        // moments: the collective should be largely hideable behind
+        // the norm+Adam tail once bucketed
+        let c = overlap_cost(1 << 24, 32, 8, false, true, true, 16, &GAUDI2_LINKS);
+        assert!(c.comm_s > 0.0 && c.compute_s > 0.0);
+        let one = overlap_cost(1 << 24, 32, 8, false, true, true, 1, &GAUDI2_LINKS);
+        assert!(
+            c.hidden_fraction > one.hidden_fraction,
+            "bucketing must hide more than the monolithic schedule \
+             ({} vs {})",
+            c.hidden_fraction,
+            one.hidden_fraction
+        );
+        assert!(c.pipelined_s < one.pipelined_s);
+    }
+
+    #[test]
+    fn overlap_compute_scales_with_moment_width() {
+        let fp8 = overlap_compute_seconds(1 << 20, true);
+        let f32_ = overlap_compute_seconds(1 << 20, false);
+        assert!(f32_ > fp8, "f32 moments move more bytes");
+        // exact closed forms: (4 + 12 + 4*mb) / HBM
+        let want_fp8 = (1u64 << 20) as f64 * 20.0 / (HBM_GBPS * 1e9);
+        assert!((fp8 - want_fp8).abs() < 1e-18);
     }
 
     #[test]

@@ -308,6 +308,155 @@ fn probe_artifact_exposes_preactivations() {
 }
 
 #[test]
+fn overlapped_bit_identical_to_phased_across_matrix() {
+    // ISSUE-6 tentpole gate: the bucketed overlapped pipeline must be
+    // bit-identical to the phased reference across worker counts,
+    // topologies and wire compression. Everything that could drift —
+    // FP8 grids, reduce order, norm fold order, Adam chunk scalars —
+    // is pinned here through real training steps.
+    let rt = runtime();
+    for dp in [1usize, 2, 4] {
+        for pods in [1usize, 2] {
+            if pods > dp || dp % pods != 0 {
+                continue;
+            }
+            for fp8_wire in [false, true] {
+                let tag = format!("dp={dp} pods={pods} fp8_wire={fp8_wire}");
+                let mut cfg = tiny_cfg("fp8_full");
+                cfg.dp_workers = dp;
+                cfg.grad_accum = 2;
+                cfg.pods = pods;
+                cfg.collective_fp8_intra = fp8_wire;
+                cfg.collective_fp8_inter = fp8_wire;
+                let mut ov = Trainer::new(rt.clone(), cfg.clone()).unwrap();
+                let mut ph = Trainer::new(rt.clone(), cfg).unwrap();
+                ph.force_phased_step = true;
+                for _ in 0..3 {
+                    let a = ov.step().unwrap();
+                    let b = ph.step().unwrap();
+                    assert!(a.timers.overlapped && !b.timers.overlapped, "{tag}: dispatch");
+                    assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{tag}: loss");
+                    assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits(), "{tag}: grad norm");
+                    for (ma, mb) in a.monitor.iter().zip(&b.monitor) {
+                        for k in 0..3 {
+                            assert_eq!(ma[k].to_bits(), mb[k].to_bits(), "{tag}: monitor");
+                        }
+                    }
+                }
+                assert_eq!(ov.scale_mgr.scales(), ph.scale_mgr.scales(), "{tag}: scales");
+                for (ta, tb) in ov.params.tensors.iter().zip(&ph.params.tensors) {
+                    assert_eq!(ta.f32s(), tb.f32s(), "{tag}: params");
+                }
+                let (am, av) = ov.moments_flat();
+                let (bm, bv) = ph.moments_flat();
+                assert_eq!(am, bm, "{tag}: first moment");
+                assert_eq!(av, bv, "{tag}: second moment");
+            }
+        }
+    }
+}
+
+#[test]
+fn overlapped_multi_bucket_matches_phased_on_s1m() {
+    // `tiny` fits one Adam chunk, so the matrix above runs a single
+    // bucket. s1m with a 1 MiB bucket spans several — this is the test
+    // that exercises the cross-bucket norm straddle, the
+    // double-buffered collective scratch and per-bucket Adam dispatch.
+    let rt = runtime();
+    let mut cfg = TrainConfig {
+        size: "s1m".into(),
+        recipe: "fp8_full".into(),
+        steps: 4,
+        warmup_steps: 1,
+        lr: 1e-3,
+        dp_workers: 2,
+        out_dir: "runs/it_overlap_s1m".into(),
+        ..Default::default()
+    };
+    cfg.bucket_bytes = 1 << 20;
+    let mut ov = Trainer::new(rt.clone(), cfg.clone()).unwrap();
+    let mut ph = Trainer::new(rt, cfg).unwrap();
+    ph.force_phased_step = true;
+    assert!(ov.bucket_schedule().len() > 1, "s1m must span multiple buckets");
+    for _ in 0..2 {
+        let a = ov.step().unwrap();
+        let b = ph.step().unwrap();
+        assert_eq!(a.timers.buckets, ov.bucket_schedule().len(), "timers report the schedule");
+        assert_eq!(b.timers.buckets, 1, "phased is one monolithic bucket");
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss");
+        assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits(), "grad norm");
+    }
+    for (ta, tb) in ov.params.tensors.iter().zip(&ph.params.tensors) {
+        assert_eq!(ta.f32s(), tb.f32s(), "params");
+    }
+    let (am, av) = ov.moments_flat();
+    let (bm, bv) = ph.moments_flat();
+    assert_eq!(am, bm, "first moment");
+    assert_eq!(av, bv, "second moment");
+}
+
+#[test]
+fn adversarial_bucket_sizes_are_bit_invariant() {
+    // ISSUE-6: bucket_bytes smaller than one Adam chunk (rounds up to
+    // exactly one chunk per bucket) vs larger than the whole model
+    // (one monolithic bucket) must produce the same bits — the
+    // partition only reshapes the pipeline, never the arithmetic.
+    let rt = runtime();
+    let base = TrainConfig {
+        size: "s1m".into(),
+        recipe: "fp8_full".into(),
+        steps: 4,
+        warmup_steps: 1,
+        lr: 1e-3,
+        dp_workers: 2,
+        out_dir: "runs/it_bucket_adv".into(),
+        ..Default::default()
+    };
+    let mut small = base.clone();
+    small.bucket_bytes = 1;
+    let mut huge = base;
+    huge.bucket_bytes = 1 << 30;
+    let mut a = Trainer::new(rt.clone(), small).unwrap();
+    let mut b = Trainer::new(rt, huge).unwrap();
+    assert!(a.bucket_schedule().len() > 1, "1-byte buckets round to one chunk each");
+    assert_eq!(b.bucket_schedule().len(), 1, "over-sized bucket covers the model");
+    for _ in 0..2 {
+        let oa = a.step().unwrap();
+        let ob = b.step().unwrap();
+        assert_eq!(oa.loss.to_bits(), ob.loss.to_bits(), "loss");
+        assert_eq!(oa.grad_norm.to_bits(), ob.grad_norm.to_bits(), "grad norm");
+    }
+    for (ta, tb) in a.params.tensors.iter().zip(&b.params.tensors) {
+        assert_eq!(ta.f32s(), tb.f32s(), "params");
+    }
+}
+
+#[test]
+fn grad_worker_panic_poisons_and_refuses_next_step() {
+    // ISSUE-6 satellite: an injected panic inside a grad worker must
+    // be contained (no process abort), surface as an Err pointing the
+    // operator at the latest snapshot, poison the trainer, and make
+    // the next step refuse — in both schedules.
+    let rt = runtime();
+    for phased in [false, true] {
+        let mut cfg = tiny_cfg("fp8_full");
+        cfg.dp_workers = 2;
+        let mut t = Trainer::new(rt.clone(), cfg).unwrap();
+        t.force_phased_step = phased;
+        t.step().unwrap(); // one healthy step first
+        t.inject_worker_panic = Some(1);
+        let err = t.step().expect_err("injected panic must fail the step");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("panicked"), "phased={phased}: {msg}");
+        assert!(msg.contains("snapshot"), "phased={phased}: {msg}");
+        assert!(t.is_poisoned(), "phased={phased}: trainer must be poisoned");
+        t.inject_worker_panic = None;
+        let err2 = t.step().expect_err("poisoned trainer must refuse to step");
+        assert!(format!("{err2:#}").contains("inconsistent"), "phased={phased}: {err2:#}");
+    }
+}
+
+#[test]
 fn checkpoint_roundtrip_through_trainer_state() {
     use fp8_trainer::checkpoint::{Checkpoint, Dtype, Writer};
     use fp8_trainer::util::json::{obj, Json};

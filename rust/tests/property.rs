@@ -183,6 +183,43 @@ fn prop_chunk_aligned_shards_partition_on_the_grid() {
 }
 
 #[test]
+fn prop_bucket_schedule_partitions_on_the_adam_chunk_grid() {
+    // ISSUE-6: bucket boundaries must land on Adam-chunk multiples for
+    // adversarial bucket_bytes — smaller than one chunk (rounds up to
+    // exactly one chunk) and larger than the whole model (one bucket)
+    // included — because chunk-grid starts are what make per-bucket
+    // FP8 grids and Adam scalars identical to the whole-buffer pass.
+    use fp8_trainer::coordinator::BucketSchedule;
+    Prop::new(500).check(
+        "bucket-schedule-grid",
+        |r| {
+            (
+                gen::usize_in(r, 0, 2_000_000),
+                gen::usize_in(r, 1, 1 << 31), // bytes: sub-chunk .. way past the model
+                gen::usize_in(r, 1, 300_000),
+            )
+        },
+        |&(total, bucket_bytes, chunk)| {
+            let s = BucketSchedule::new(total, bucket_bytes, chunk);
+            let mut expect_off = 0usize;
+            for &(off, len) in &s.buckets {
+                // contiguous, non-empty, and every bucket START on the
+                // absolute chunk grid; every bucket except the last
+                // must also END on the grid (ragged tail only at total)
+                if off != expect_off || len == 0 || off % chunk != 0 {
+                    return false;
+                }
+                expect_off = off + len;
+                if expect_off != total && expect_off % chunk != 0 {
+                    return false;
+                }
+            }
+            expect_off == total && s.len() == s.buckets.len()
+        },
+    );
+}
+
+#[test]
 fn prop_tree_reduce_equals_sequential() {
     Prop::new(200).check(
         "tree-reduce",
