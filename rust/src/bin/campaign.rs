@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! campaign run     [--dir D] [--config FILE] [key=value ...]
-//! campaign resume  [--dir D] [--config FILE] [key=value ...]
+//! campaign resume  [--dir D] [--config FILE] [--reshard] [key=value ...]
 //! campaign status  [--dir D]
 //! campaign inspect <snapshot.ckpt>
 //! ```
@@ -12,6 +12,13 @@
 //! snapshot bit-exactly; `status` summarizes the journal and snapshot
 //! inventory without touching the runtime; `inspect` dumps one
 //! snapshot's metadata and tensor table.
+//!
+//! `resume --reshard` continues a campaign on a **changed physical
+//! topology** (fewer/more `dp_workers`, rearranged `pods`, different
+//! `bucket_bytes`): the snapshot's ZeRO-1 moment state is
+//! re-partitioned deterministically, roundtrip-verified bit-exact, and
+//! re-saved before the run continues — the loss curve is bit-identical
+//! to the old topology's. A numerics change still refuses.
 //!
 //! Extra campaign-only key: `inject_divergence_at=N` (run/resume)
 //! forces one divergence trip at step N — the §Campaigns recovery
@@ -26,7 +33,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use fp8_trainer::campaign::{self, journal, store, Campaign};
+use fp8_trainer::campaign::{self, journal, store, Campaign, ResumeOptions};
 use fp8_trainer::checkpoint::Checkpoint;
 use fp8_trainer::config::TrainConfig;
 use fp8_trainer::runtime::Runtime;
@@ -49,6 +56,7 @@ struct Args {
     inject_divergence_at: Option<usize>,
     stop_after: Option<usize>,
     force_phased_step: Option<bool>,
+    reshard: bool,
 }
 
 fn parse_args(args: &[String]) -> Result<Args> {
@@ -59,6 +67,7 @@ fn parse_args(args: &[String]) -> Result<Args> {
         inject_divergence_at: None,
         stop_after: None,
         force_phased_step: None,
+        reshard: false,
     };
     let mut i = 0;
     while i < args.len() {
@@ -74,6 +83,10 @@ fn parse_args(args: &[String]) -> Result<Args> {
                     args.get(i + 1).ok_or_else(|| anyhow!("--config needs a path"))?,
                 ));
                 i += 2;
+            }
+            "--reshard" => {
+                out.reshard = true;
+                i += 1;
             }
             // GNU equals forms — must match before the generic key=value
             // arm or they'd surface as "unknown config key '--dir'"
@@ -117,10 +130,13 @@ fn run() -> Result<()> {
             let cfg = TrainConfig::load(a.config.as_deref(), &a.overrides).map_err(|e| anyhow!(e))?;
             let dir = a.dir.clone().unwrap_or_else(|| campaign::default_dir(&cfg));
             let rt = Arc::new(Runtime::new(artifacts_dir())?);
+            if a.reshard && cmd != "resume" {
+                return Err(anyhow!("--reshard only applies to `campaign resume`"));
+            }
             let mut c = if cmd == "run" {
                 Campaign::new(rt, cfg, &dir)?
             } else {
-                Campaign::resume(rt, cfg, &dir)?
+                Campaign::resume_opts(rt, cfg, &dir, ResumeOptions { reshard: a.reshard })?
             };
             c.inject_divergence_at = a.inject_divergence_at;
             c.stop_after = a.stop_after;
@@ -179,13 +195,17 @@ fn run() -> Result<()> {
                 "campaign — long-horizon FP8 training with bit-exact resume and\n\
                  divergence auto-recovery\n\n\
                  usage:\n  campaign run     [--dir D] [--config FILE] [key=value ...]\n  \
-                 campaign resume  [--dir D] [--config FILE] [key=value ...]\n  \
+                 campaign resume  [--dir D] [--config FILE] [--reshard] [key=value ...]\n  \
                  campaign status  [--dir D]\n  campaign inspect <snapshot.ckpt>\n\n\
                  campaign keys: snapshot_every=50 snapshot_keep=3 max_recoveries=4\n               \
                  recovery_margin_backoff=1 recovery_history_shrink=0.5\n\
                  session keys:  stop_after=N (pause + snapshot at step N, resumable)\n               \
                  force_phased_step=true (bit-identical non-overlapped schedule)\n\
                  drill key:     inject_divergence_at=N\n\
+                 elastic:       --reshard (resume only) continues on a changed\n               \
+                 dp_workers/pods/bucket_bytes bit-exactly; grad_streams=/\n               \
+                 stream_pods= pin the logical plan independently of the\n               \
+                 physical workers\n\
                  train keys:    as `fp8-train train` (size=, recipe=, steps=, ...)"
             );
             Ok(())
@@ -218,7 +238,23 @@ fn cmd_status(dir: &std::path::Path) -> Result<()> {
         journal::count(&events, "divergence"),
         journal::count(&events, "recovery"),
     );
-    for kind in ["divergence", "recovery", "abort", "complete"] {
+    // topology history: every reshard in chronological order, so a
+    // long elastic campaign's worker/pod trajectory is reconstructible
+    // from `status` alone
+    let reshards: Vec<_> = events
+        .iter()
+        .filter(|e| e.get("event").and_then(|v| v.as_str()) == Some("reshard"))
+        .collect();
+    if !reshards.is_empty() {
+        println!("topology history ({} reshard{}):", reshards.len(), plural(reshards.len()));
+        for e in &reshards {
+            let step = e.get("step").and_then(|v| v.as_usize()).unwrap_or(0);
+            let from = e.get("from_topology").and_then(|v| v.as_str()).unwrap_or("?");
+            let to = e.get("to_topology").and_then(|v| v.as_str()).unwrap_or("?");
+            println!("  step {step:8}  {from}  ->  {to}");
+        }
+    }
+    for kind in ["divergence", "recovery", "reshard", "lock_reclaimed", "abort", "complete"] {
         if let Some(e) = journal::last(&events, kind) {
             println!("  last {kind}: {}", e.to_string());
         }
@@ -227,6 +263,14 @@ fn cmd_status(dir: &std::path::Path) -> Result<()> {
         println!("  tail: {}", e.to_string());
     }
     Ok(())
+}
+
+fn plural(n: usize) -> &'static str {
+    if n == 1 {
+        ""
+    } else {
+        "s"
+    }
 }
 
 fn cmd_inspect(path: PathBuf) -> Result<()> {

@@ -22,6 +22,10 @@
 //!   (snapshots, divergences, rollbacks, recoveries, completion).
 //! * [`recovery`] — the backoff policy: per recovery attempt, more
 //!   pow2 scale margin and a shorter amax history.
+//! * [`reshard`] — the deterministic elastic-topology transform:
+//!   `campaign resume --reshard` re-partitions a snapshot's ZeRO-1
+//!   moment state for a changed `dp_workers`/`pods`/`bucket_bytes`,
+//!   roundtrip-verified bit-exact before anything touches disk.
 //! * [`Campaign`] — the driver tying it together, used by the
 //!   `campaign` CLI binary (`run / resume / status / inspect`).
 //!
@@ -31,11 +35,13 @@
 
 pub mod journal;
 pub mod recovery;
+pub mod reshard;
 pub mod snapshot;
 pub mod store;
 
 pub use journal::Journal;
 pub use recovery::RecoveryPolicy;
+pub use reshard::{reshard_state, ReshardReport};
 pub use snapshot::{SnapshotMeta, TrainState};
 pub use store::SnapshotStore;
 
@@ -103,8 +109,10 @@ pub struct Campaign {
     store: SnapshotStore,
     journal: Journal,
     recovery: RecoveryPolicy,
-    /// exclusive lock on the campaign dir; released on drop
-    _lock: DirLock,
+    /// exclusive lock on the campaign dir; released on drop (also
+    /// remembers whether acquire reclaimed a dead owner's stale lock,
+    /// which both entry points journal)
+    lock: DirLock,
     /// scaling policy the run started under — recovery backoff is
     /// always computed relative to this, not compounded
     base_policy: Policy,
@@ -148,6 +156,7 @@ impl Campaign {
             ));
         }
         let mut c = Self::build(rt, cfg, dir, lock)?;
+        c.journal_lock_reclaim()?;
         c.journal.record(
             "campaign_start",
             c.trainer.step,
@@ -161,19 +170,85 @@ impl Campaign {
     /// The config must match the one the snapshot was taken under
     /// (recipe, size, seed, worker topology, schedule length — see
     /// [`TrainState::apply_to`]); the restored trainer then continues
-    /// the original loss curve bit-exactly.
+    /// the original loss curve bit-exactly. To continue on a *changed
+    /// physical topology* (node loss, pod rearrangement), use
+    /// [`Campaign::resume_opts`] with [`ResumeOptions::reshard`].
     pub fn resume<P: AsRef<Path>>(rt: Arc<Runtime>, cfg: TrainConfig, dir: P) -> Result<Self> {
+        Self::resume_opts(rt, cfg, dir, ResumeOptions::default())
+    }
+
+    /// [`Campaign::resume`] with options. With `reshard` set, a
+    /// snapshot whose *physical topology* term differs from the config
+    /// is transformed deterministically ([`reshard_state`]) and
+    /// re-saved before apply: the campaign continues bit-exactly on
+    /// the new worker/pod arrangement. The snapshot's pinned logical
+    /// stream plan is adopted into defaulted `grad_streams`/
+    /// `stream_pods` config keys first, so shrinking `dp_workers` does
+    /// not silently shift the batch identity. A numerics mismatch
+    /// still refuses — resharding never changes the curve.
+    pub fn resume_opts<P: AsRef<Path>>(
+        rt: Arc<Runtime>,
+        mut cfg: TrainConfig,
+        dir: P,
+        opts: ResumeOptions,
+    ) -> Result<Self> {
         let dir = dir.as_ref();
         let lock = Self::prepare(dir)?;
-        let mut c = Self::build(rt, cfg, dir, lock)?;
-        let (step, path, st) = c.newest_loadable()?.ok_or_else(|| {
+        // open the store/journal *before* building the trainer: the
+        // reshard path must read the snapshot's pinned logical plan to
+        // finalize the config the trainer is built from
+        let store = SnapshotStore::new(dir.join("snapshots"), cfg.snapshot_keep)?;
+        let mut journal = Journal::open(dir.join("journal.jsonl"))?;
+        let found = newest_loadable(&store, &mut journal)?;
+        let (step, path, mut st) = found.ok_or_else(|| {
             anyhow!(
                 "no loadable snapshot to resume from in {} — if the campaign died before \
                  its first snapshot (or every snapshot is quarantined as .corrupt), there \
                  is nothing to continue: delete the campaign dir and start a fresh run",
-                c.store.dir().display()
+                store.dir().display()
             )
         })?;
+        if opts.reshard {
+            // adopt the campaign's logical plan where the config left
+            // it defaulted (0 = follow physical): under a changed
+            // dp_workers/pods the *effective* plan must stay the
+            // snapshot's, or the numerics check below would refuse —
+            // correctly, but unhelpfully
+            if cfg.grad_streams == 0 {
+                cfg.grad_streams = st.meta.streams;
+            }
+            if cfg.stream_pods == 0 {
+                cfg.stream_pods = st.meta.stream_pods;
+            }
+            // the adopted plan came from a validated captured config;
+            // Trainer::new re-validates both the physical split and
+            // the logical plan before anything runs
+        }
+        let mut c = Self::build_parts(rt, cfg, lock, store, journal)?;
+        c.journal_lock_reclaim()?;
+        let mut resharded = false;
+        if opts.reshard && st.meta.topology != snapshot::topology_fingerprint(&c.trainer.cfg) {
+            let (new_st, rep) = reshard_state(&st, &c.trainer.cfg, c.trainer.adam_chunk())?;
+            // re-save at the same step: the on-disk newest snapshot now
+            // matches the live topology, so a crash right after this
+            // point resumes cleanly without re-resharding
+            let (new_path, _) = c.store.save(&new_st)?;
+            c.journal.record(
+                "reshard",
+                new_st.meta.step,
+                vec![
+                    ("snapshot_step", Json::Num(step as f64)),
+                    ("snapshot", Json::Str(new_path.display().to_string())),
+                    ("from_workers", Json::Num(rep.from_workers as f64)),
+                    ("to_workers", Json::Num(rep.to_workers as f64)),
+                    ("from_topology", Json::Str(rep.from_topology.clone())),
+                    ("to_topology", Json::Str(rep.to_topology.clone())),
+                ],
+            )?;
+            c.journal.flush()?;
+            st = new_st;
+            resharded = true;
+        }
         st.apply_to(&mut c.trainer)?;
         if c.trainer.step >= c.trainer.cfg.steps {
             return Err(anyhow!(
@@ -193,6 +268,7 @@ impl Campaign {
                 ("snapshot_step", Json::Num(step as f64)),
                 ("snapshot", Json::Str(path.display().to_string())),
                 ("recoveries", Json::Num(c.recoveries as f64)),
+                ("resharded", Json::Bool(resharded)),
             ],
         )?;
         Ok(c)
@@ -209,6 +285,19 @@ impl Campaign {
     fn build(rt: Arc<Runtime>, cfg: TrainConfig, dir: &Path, lock: DirLock) -> Result<Self> {
         let store = SnapshotStore::new(dir.join("snapshots"), cfg.snapshot_keep)?;
         let journal = Journal::open(dir.join("journal.jsonl"))?;
+        Self::build_parts(rt, cfg, lock, store, journal)
+    }
+
+    /// [`build`](Campaign::build) with the store/journal already open —
+    /// the resume path opens them early to read the snapshot before
+    /// the trainer exists.
+    fn build_parts(
+        rt: Arc<Runtime>,
+        cfg: TrainConfig,
+        lock: DirLock,
+        store: SnapshotStore,
+        journal: Journal,
+    ) -> Result<Self> {
         let recovery = RecoveryPolicy::from_cfg(&cfg);
         let trainer = Trainer::new(rt, cfg)?;
         let base_policy = trainer.scale_mgr.policy();
@@ -219,12 +308,28 @@ impl Campaign {
             store,
             journal,
             recovery,
-            _lock: lock,
+            lock,
             base_policy,
             recoveries: 0,
             injected: false,
             snapshots_written: 0,
         })
+    }
+
+    /// Journal the stale-lock reclaim, if this campaign's acquire
+    /// performed one — called by both entry points right after the
+    /// journal opens, so the event lands before anything else this
+    /// session writes.
+    fn journal_lock_reclaim(&mut self) -> Result<()> {
+        if let Some(pid) = self.lock.reclaimed_from() {
+            self.journal.record(
+                "lock_reclaimed",
+                self.trainer.step,
+                vec![("stale_pid", Json::Num(pid as f64))],
+            )?;
+            self.journal.flush()?;
+        }
+        Ok(())
     }
 
     /// Divergence recoveries consumed so far.
@@ -365,36 +470,9 @@ impl Campaign {
         Ok(())
     }
 
-    /// Newest snapshot that actually loads, skipping (and journaling)
-    /// any damaged file on the way down — defense in depth on top of
-    /// the atomic `Writer::finish` rename.
+    /// Newest snapshot that actually loads — see [`newest_loadable`].
     fn newest_loadable(&mut self) -> Result<Option<(usize, PathBuf, TrainState)>> {
-        let mut all = self.store.list()?;
-        while let Some((step, path)) = all.pop() {
-            match TrainState::load(&path) {
-                Ok(st) => return Ok(Some((step, path, st))),
-                Err(e) => {
-                    // quarantine: move the damaged file aside so it
-                    // stops occupying a retention slot and isn't
-                    // re-tried (and re-journaled) on every subsequent
-                    // rollback/resume; the bytes stay on disk for a
-                    // post-mortem
-                    let aside = path.with_extension("corrupt");
-                    let quarantined = std::fs::rename(&path, &aside).is_ok();
-                    self.journal.record(
-                        "snapshot_corrupt",
-                        step,
-                        vec![
-                            ("path", Json::Str(path.display().to_string())),
-                            ("error", Json::Str(format!("{e:#}"))),
-                            ("quarantined", Json::Bool(quarantined)),
-                        ],
-                    )?;
-                    self.journal.flush()?;
-                }
-            }
-        }
-        Ok(None)
+        newest_loadable(&self.store, &mut self.journal)
     }
 
     /// Roll back to the newest good snapshot and re-enter with the
@@ -436,6 +514,52 @@ impl Campaign {
     }
 }
 
+/// Newest snapshot in `store` that actually loads, skipping (and
+/// journaling) any damaged file on the way down — defense in depth on
+/// top of the atomic `Writer::finish` rename. Free function because
+/// the reshard resume path needs it *before* a [`Campaign`] exists
+/// (the snapshot's pinned logical plan feeds the trainer's config).
+fn newest_loadable(
+    store: &SnapshotStore,
+    journal: &mut Journal,
+) -> Result<Option<(usize, PathBuf, TrainState)>> {
+    let mut all = store.list()?;
+    while let Some((step, path)) = all.pop() {
+        match TrainState::load(&path) {
+            Ok(st) => return Ok(Some((step, path, st))),
+            Err(e) => {
+                // quarantine: move the damaged file aside so it stops
+                // occupying a retention slot and isn't re-tried (and
+                // re-journaled) on every subsequent rollback/resume;
+                // the bytes stay on disk for a post-mortem
+                let aside = path.with_extension("corrupt");
+                let quarantined = std::fs::rename(&path, &aside).is_ok();
+                journal.record(
+                    "snapshot_corrupt",
+                    step,
+                    vec![
+                        ("path", Json::Str(path.display().to_string())),
+                        ("error", Json::Str(format!("{e:#}"))),
+                        ("quarantined", Json::Bool(quarantined)),
+                    ],
+                )?;
+                journal.flush()?;
+            }
+        }
+    }
+    Ok(None)
+}
+
+/// Options for [`Campaign::resume_opts`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResumeOptions {
+    /// Transform the newest snapshot to the config's physical topology
+    /// (`dp_workers`/`pods`/`bucket_bytes`) instead of refusing the
+    /// mismatch — the `campaign resume --reshard` flag. Numerics
+    /// mismatches still refuse.
+    pub reshard: bool,
+}
+
 /// In-memory cap on [`CampaignReport::losses`] — enough for any drill
 /// or test to see the full record, flat memory for multi-week runs.
 pub const LOSS_RECORD_CAP: usize = 65_536;
@@ -450,29 +574,93 @@ pub fn default_dir(cfg: &TrainConfig) -> PathBuf {
 /// campaign would interleave journal events, prune each other's
 /// snapshots, and — worst — write the same `snap_*.tmp` path
 /// concurrently, publishing a corrupt file through the atomic rename.
-/// The lock file holds the owner's PID; it is removed on drop. After
-/// a hard crash the stale file must be deleted by the operator — the
-/// error message says so.
-struct DirLock {
+/// The lock file holds the owner's PID; it is removed on drop.
+///
+/// A crashed owner no longer strands the campaign forever: on an
+/// `AlreadyExists` refusal, acquire reads the recorded pid and — on
+/// Linux, where `/proc/<pid>` is an authoritative liveness probe —
+/// reclaims the lock when the owner is provably dead (recorded in
+/// [`DirLock::reclaimed_from`] so the campaign can journal a
+/// `lock_reclaimed` event). A live owner, an unparsable lock file, or
+/// a non-Linux host all still refuse conservatively — the error says
+/// how to recover by hand.
+pub struct DirLock {
     path: PathBuf,
+    reclaimed_from: Option<u32>,
+}
+
+/// If `path` is a lock file whose recorded owner is *provably* dead,
+/// return that pid; `None` means "do not touch it" (owner alive, file
+/// unreadable/garbage, pid 0 or our own, or no trustworthy liveness
+/// probe on this platform).
+fn stale_lock_owner(path: &Path) -> Option<u32> {
+    let pid: u32 = std::fs::read_to_string(path).ok()?.trim().parse().ok()?;
+    if pid == 0 || pid == std::process::id() {
+        return None;
+    }
+    #[cfg(target_os = "linux")]
+    {
+        // /proc/<pid> exists for zombies too, so a live-but-wedged
+        // owner is never reclaimed out from under
+        if Path::new(&format!("/proc/{pid}")).exists() {
+            None
+        } else {
+            Some(pid)
+        }
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = pid; // no authoritative probe here: conservative refusal
+        None
+    }
 }
 
 impl DirLock {
-    fn acquire(dir: &Path) -> Result<Self> {
+    /// Take the exclusive lock on `dir`, reclaiming a provably-stale
+    /// one (dead owner) exactly once before refusing.
+    pub fn acquire(dir: &Path) -> Result<Self> {
         let path = dir.join("LOCK");
-        match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
-            Ok(mut f) => {
-                use std::io::Write as _;
-                let _ = writeln!(f, "{}", std::process::id());
-                Ok(Self { path })
+        let mut reclaimed_from = None;
+        for attempt in 0..2 {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    use std::io::Write as _;
+                    let _ = writeln!(f, "{}", std::process::id());
+                    return Ok(Self { path, reclaimed_from });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    if attempt == 0 {
+                        if let Some(pid) = stale_lock_owner(&path) {
+                            std::fs::remove_file(&path).map_err(|e| {
+                                anyhow!(
+                                    "removing stale campaign lock {} (dead owner pid {pid}): {e}",
+                                    path.display()
+                                )
+                            })?;
+                            reclaimed_from = Some(pid);
+                            continue; // one more create_new — a raced
+                                      // rival winning it is a live lock
+                        }
+                    }
+                    return Err(anyhow!(
+                        "campaign dir is locked by another process ({} exists, owner pid \
+                         inside) — locks with a provably dead owner are reclaimed \
+                         automatically on Linux, so this owner is alive, unverifiable, or \
+                         the file is unreadable; if you are certain the process is gone, \
+                         delete the file and retry",
+                        path.display()
+                    ));
+                }
+                Err(e) => return Err(anyhow!("acquiring campaign lock {}: {e}", path.display())),
             }
-            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Err(anyhow!(
-                "campaign dir is locked by another process ({} exists, owner pid inside) — \
-                 if that process crashed, delete the file and retry",
-                path.display()
-            )),
-            Err(e) => Err(anyhow!("acquiring campaign lock {}: {e}", path.display())),
         }
+        unreachable!("lock acquire loop always returns")
+    }
+
+    /// Pid of the dead owner whose stale lock this acquire reclaimed,
+    /// if any — the campaign journals it as a `lock_reclaimed` event.
+    pub fn reclaimed_from(&self) -> Option<u32> {
+        self.reclaimed_from
     }
 }
 

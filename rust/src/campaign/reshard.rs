@@ -1,0 +1,282 @@
+//! Deterministic elastic resharding — `campaign resume --reshard`.
+//!
+//! A trillion-token campaign outlives its fleet: nodes die, pods get
+//! rearranged, a worker count that was right in week one is wrong in
+//! week six. The snapshot fingerprint splits the run's identity into a
+//! **numerics** term (everything the loss curve is a function of —
+//! pinned forever) and a **physical topology** term
+//! (`shard=w…;topo=p…;bucket=b…` — provably bit-invisible). This
+//! module transforms the latter: given a snapshot and a config whose
+//! numerics match but whose physical topology differs, it proves the
+//! snapshot's FP8 Adam moment state re-partitions bit-exactly onto the
+//! new `ShardLayout` and rewrites the snapshot's topology metadata.
+//!
+//! Why the proof is cheap: snapshots store moments *flat* (already
+//! gathered from the old shards), and the ZeRO-1 owner map is
+//! chunk-aligned on the **absolute** Adam chunk grid — every per-chunk
+//! FP8 scale group has exactly one owner under any worker count, so
+//! scattering the flat buffer into W′ shards and gathering it back is
+//! the identity on bits. The transform still *verifies* that identity
+//! per moment buffer (repartition → pack exact-FP8 → gather → bit
+//! compare) and refuses before anything touches disk if a single bit
+//! moves — a corrupted buffer or a future layout bug produces a
+//! refusal, never a forked snapshot.
+//!
+//! The logical stream plan (`streams`/`stream_pods` in the meta) is
+//! untouched: it is numerics identity, pinned at campaign start, and
+//! the resume path adopts it into the new config so the batch
+//! schedule, merge order, and collective summation tree stay exactly
+//! what they were on the old topology.
+
+use anyhow::{bail, Result};
+
+use crate::config::TrainConfig;
+use crate::optimizer::{gather, repartition, MomentStore, ShardLayout};
+
+use super::snapshot::{
+    diff_fingerprint_terms, numerics_fingerprint, render_term_diff, topology_fingerprint,
+    TrainState,
+};
+
+/// What a reshard did — journaled as the `reshard` event and echoed by
+/// the CLI so the operator sees the old→new arrangement explicitly.
+#[derive(Clone, Debug)]
+pub struct ReshardReport {
+    /// snapshot step the transform ran at
+    pub step: usize,
+    /// ZeRO-1 shard count the snapshot was captured under
+    pub from_workers: usize,
+    /// shard count it was transformed to
+    pub to_workers: usize,
+    /// full physical-topology fingerprint at capture
+    pub from_topology: String,
+    /// full physical-topology fingerprint after the transform
+    pub to_topology: String,
+}
+
+/// Transform `st` to `cfg`'s physical topology. Pure — returns the new
+/// state; the caller decides when (and whether) it reaches disk.
+///
+/// Refuses when:
+/// * the numerics fingerprints differ (resharding never changes the
+///   curve — a numerics change is a different run, not a topology
+///   move);
+/// * any identity field differs (recipe/size/seed/corpus
+///   seed/grad_accum/schedule);
+/// * the roundtrip verification finds a bit that does not survive the
+///   re-partition (corrupt state, or a layout invariant broken).
+///
+/// `adam_chunk` is the live trainer's Adam artifact chunk — the grid
+/// the new shard boundaries must align to. The numerics check already
+/// pins it (`grid=c…`), so a mismatch with the snapshot's recorded
+/// `moment_chunk` is impossible past that gate.
+pub fn reshard_state(
+    st: &TrainState,
+    cfg: &TrainConfig,
+    adam_chunk: usize,
+) -> Result<(TrainState, ReshardReport)> {
+    reshard_state_with(st, cfg, adam_chunk, None)
+}
+
+/// [`reshard_state`] with a corrupt-injection hook for the refusal
+/// drill: `inject_corrupt_shard = Some(i)` flips one bit in the i-th
+/// re-packed shard of the first moment before verification, proving
+/// the roundtrip gate actually refuses. Not a production entry point.
+#[doc(hidden)]
+pub fn reshard_state_with(
+    st: &TrainState,
+    cfg: &TrainConfig,
+    adam_chunk: usize,
+    inject_corrupt_shard: Option<usize>,
+) -> Result<(TrainState, ReshardReport)> {
+    let m = &st.meta;
+    let cfg_numerics = numerics_fingerprint(cfg, adam_chunk);
+    if m.numerics != cfg_numerics {
+        let diff = diff_fingerprint_terms(&m.numerics, &cfg_numerics);
+        bail!(
+            "reshard refused: numerics term(s) differ [{}] — resharding only moves \
+             physical topology; a numerics change would fork the curve",
+            render_term_diff(&diff)
+        );
+    }
+    let identity: [(&str, String, String); 6] = [
+        ("recipe", m.recipe.clone(), cfg.recipe.clone()),
+        ("size", m.size.clone(), cfg.size.clone()),
+        ("seed", m.seed.to_string(), cfg.seed.to_string()),
+        ("corpus_seed", m.corpus_seed.to_string(), cfg.corpus_seed().to_string()),
+        ("grad_accum", m.grad_accum.to_string(), cfg.grad_accum.to_string()),
+        (
+            "steps/warmup",
+            format!("{}/{}", m.steps, m.warmup_steps),
+            format!("{}/{}", cfg.steps, cfg.warmup_steps),
+        ),
+    ];
+    for (what, snap, new) in &identity {
+        if snap != new {
+            bail!(
+                "reshard refused: identity mismatch on {what} (snapshot '{snap}', config \
+                 '{new}') — reshard continues the same run on new hardware, it does not \
+                 start a different one"
+            );
+        }
+    }
+    let to_topology = topology_fingerprint(cfg);
+    let chunk = adam_chunk.max(1);
+    let layout = ShardLayout::chunk_aligned(st.m.len(), cfg.dp_workers, chunk);
+    let m_store = MomentStore::from_name(&m.m_fmt);
+    verify_roundtrip(&st.m, &layout, m_store, "adam.m", inject_corrupt_shard)?;
+    let v_layout = ShardLayout::chunk_aligned(st.v.len(), cfg.dp_workers, chunk);
+    verify_roundtrip(&st.v, &v_layout, MomentStore::from_name(&m.v_fmt), "adam.v", None)?;
+
+    let mut new_st = st.clone();
+    new_st.meta.dp_workers = cfg.dp_workers;
+    new_st.meta.topology = to_topology.clone();
+    let report = ReshardReport {
+        step: m.step,
+        from_workers: m.dp_workers,
+        to_workers: cfg.dp_workers,
+        from_topology: m.topology.clone(),
+        to_topology,
+    };
+    Ok((new_st, report))
+}
+
+/// Scatter `flat` into the new layout's shards (exact-FP8 re-pack),
+/// gather them back, and demand bitwise identity — the proof that the
+/// new partition stores exactly the state the old one did. Runs
+/// entirely in memory; a refusal here means nothing was written.
+fn verify_roundtrip(
+    flat: &[f32],
+    layout: &ShardLayout,
+    store: MomentStore,
+    label: &str,
+    inject_corrupt_shard: Option<usize>,
+) -> Result<()> {
+    let mut shards = repartition(flat, layout, store);
+    if let Some(i) = inject_corrupt_shard {
+        if let Some(s) = shards.get_mut(i) {
+            s.corrupt_one_bit_for_test();
+        }
+    }
+    let back = gather(&shards);
+    if back.len() != flat.len() {
+        bail!(
+            "reshard refused: {label} roundtrip changed length ({} -> {}) — aborting \
+             before writing anything",
+            flat.len(),
+            back.len()
+        );
+    }
+    for (i, (a, b)) in flat.iter().zip(&back).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            bail!(
+                "reshard refused: {label}[{i}] does not survive the re-partition \
+                 ({a:?} -> {b:?}, bits {:08x} -> {:08x}) — the snapshot state is not on \
+                 the expected per-chunk FP8 grid (corrupt state or a layout bug); \
+                 aborting before writing anything",
+                a.to_bits(),
+                b.to_bits()
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::snapshot::{numerics_fingerprint, topology_fingerprint, SnapshotMeta};
+    use crate::coordinator::DetectorState;
+    use crate::scaling::ScaleState;
+
+    /// Build a minimal in-grid TrainState for a config: moment values
+    /// that are exactly representable per-chunk (zeros + small powers
+    /// of two), so the exact-FP8 roundtrip must hold.
+    fn state_for(cfg: &TrainConfig, chunk: usize, total: usize) -> TrainState {
+        let mut m = vec![0.0f32; total];
+        let mut v = vec![0.0f32; total];
+        for (i, (mi, vi)) in m.iter_mut().zip(v.iter_mut()).enumerate() {
+            *mi = ((i % 7) as f32) * 0.25;
+            *vi = ((i % 5) as f32) * 0.5;
+        }
+        TrainState {
+            meta: SnapshotMeta {
+                step: 3,
+                recipe: cfg.recipe.clone(),
+                size: cfg.size.clone(),
+                seed: cfg.seed,
+                corpus_seed: cfg.corpus_seed(),
+                dp_workers: cfg.dp_workers,
+                streams: cfg.streams(),
+                stream_pods: cfg.stream_pod_count(),
+                grad_accum: cfg.grad_accum,
+                steps: cfg.steps,
+                warmup_steps: cfg.warmup_steps,
+                amax_history: cfg.amax_history,
+                margin_pow2: cfg.margin_pow2,
+                recoveries: 0,
+                m_fmt: "e4m3".into(),
+                v_fmt: "e5m2".into(),
+                moment_chunk: chunk,
+                numerics: numerics_fingerprint(cfg, chunk),
+                topology: topology_fingerprint(cfg),
+            },
+            params: vec![("w".into(), vec![0.0; total])],
+            m,
+            v,
+            scale: ScaleState { histories: vec![], scales: vec![], overflow_events: 0 },
+            detector: DetectorState { ema: 0.0, warmed: false, diverged_at: None },
+        }
+    }
+
+    #[test]
+    fn reshard_rewrites_topology_and_nothing_else() {
+        let old = TrainConfig { dp_workers: 4, pods: 2, ..Default::default() };
+        let chunk = 64;
+        let st = state_for(&old, chunk, 64 * 5 + 17);
+        // shrink to 3 workers / 1 pod, logical plan pinned to the old
+        // shape (what resume_opts' adoption produces)
+        let new = TrainConfig {
+            dp_workers: 3,
+            pods: 1,
+            grad_streams: 4,
+            stream_pods: 2,
+            ..Default::default()
+        };
+        assert_eq!(st.meta.numerics, numerics_fingerprint(&new, chunk), "plan pinned");
+        let (out, rep) = reshard_state(&st, &new, chunk).expect("reshard");
+        assert_eq!(out.meta.dp_workers, 3);
+        assert_eq!(out.meta.topology, topology_fingerprint(&new));
+        assert_eq!(rep.from_workers, 4);
+        assert_eq!(rep.to_workers, 3);
+        // every numeric payload and every other meta field is untouched
+        assert_eq!(out.m, st.m);
+        assert_eq!(out.v, st.v);
+        assert_eq!(out.meta.streams, st.meta.streams);
+        assert_eq!(out.meta.numerics, st.meta.numerics);
+        assert_eq!(out.meta.step, st.meta.step);
+    }
+
+    #[test]
+    fn reshard_refuses_numerics_change_and_corrupt_shard() {
+        let old = TrainConfig { dp_workers: 2, ..Default::default() };
+        let chunk = 32;
+        let st = state_for(&old, chunk, 32 * 3 + 5);
+        // a numerics change (lr) must refuse even with --reshard
+        let mut hot = TrainConfig { dp_workers: 1, grad_streams: 2, ..Default::default() };
+        hot.lr *= 2.0;
+        let err = reshard_state(&st, &hot, chunk).unwrap_err().to_string();
+        assert!(err.contains("numerics"), "refusal must name the numerics term: {err}");
+        assert!(err.contains("lr:"), "diff must name the changed key: {err}");
+
+        // corrupt-injection: the roundtrip gate refuses, nothing forks
+        let new = TrainConfig { dp_workers: 1, grad_streams: 2, ..Default::default() };
+        let err = reshard_state_with(&st, &new, chunk, Some(0)).unwrap_err().to_string();
+        assert!(
+            err.contains("does not survive") || err.contains("roundtrip"),
+            "corrupt shard must trip the roundtrip verification: {err}"
+        );
+        // and without injection the same transform succeeds
+        reshard_state(&st, &new, chunk).expect("clean reshard");
+    }
+}

@@ -63,12 +63,22 @@ pub const MOMENT_CHUNK: usize = 262_144;
 /// partition refuses (conservatively: the partition is designed to be
 /// bit-invisible, but it changes per-bucket wire framing and the
 /// pipeline's dispatch windows, so it is pinned like the topology).
-/// `overlap_comm` is deliberately NOT in the fingerprint — toggling
+/// 1.4: the fingerprint split in two. The **numerics** term keeps
+/// everything the loss curve is a function of — including the logical
+/// gradient-stream plan (`streams=s{S}p{Π}`, replacing the physical
+/// worker/pod terms) and the absolute Adam chunk grid (`grid=c{…}`,
+/// pulled out of the old `shard=` term). The **topology** term
+/// (`shard=w…;topo=p…;bucket=b…`, a separate meta field) holds the
+/// physical shard/pod/bucket arrangement, which is proven
+/// bit-invisible and may be transformed by `campaign resume
+/// --reshard`; a plain resume still refuses a topology mismatch, but
+/// with an actionable hint instead of a bare refusal.
+/// `overlap_comm` is deliberately NOT in either fingerprint — toggling
 /// the schedule is proven bit-invisible, so it must never refuse a
 /// resume. Older snapshots still load; their fingerprint will not
 /// match a newer binary's, so applying them refuses — conservative by
 /// design.
-pub const SNAPSHOT_VERSION: f64 = 1.3;
+pub const SNAPSHOT_VERSION: f64 = 1.4;
 
 /// Identity and position metadata of one snapshot.
 #[derive(Clone, Debug, PartialEq)]
@@ -86,8 +96,18 @@ pub struct SnapshotMeta {
     /// derived corpus PRNG root — with `step`, the complete
     /// data-corpus cursor (the batcher is stateless)
     pub corpus_seed: u64,
-    /// data-parallel worker count (part of batch identity)
+    /// **physical** data-parallel worker count at capture (ZeRO-1
+    /// shard count + thread lanes). NOT batch identity since the
+    /// logical/physical split — `streams` is; this field is part of
+    /// the reshardable topology term and `--reshard` rewrites it
     pub dp_workers: usize,
+    /// **logical** gradient-stream count (batch identity, merge
+    /// denominator, collective replica count) — pinned for the life of
+    /// the campaign; `--reshard` adopts it into the resuming config
+    pub streams: usize,
+    /// **logical** plan-pod count of the collective reduction tree
+    /// (with `streams`, the complete summation-plan identity)
+    pub stream_pods: usize,
     /// gradient-accumulation microbatches (part of batch identity)
     pub grad_accum: usize,
     /// total schedule length (the LR curve depends on it)
@@ -113,31 +133,35 @@ pub struct SnapshotMeta {
     /// fingerprint of every remaining numerics-relevant config field
     /// (lr/min_lr_frac/weight_decay/grad_clip as exact f32 bits,
     /// corpus knobs, outlier seeding, non-finite-update policy, base
-    /// scaling config, the ZeRO-1 shard layout, and the collective
-    /// compression setup) — compared wholesale on apply so a resume
-    /// under any changed numeric silently forking the curve is
-    /// impossible
+    /// scaling config, the absolute Adam chunk grid, the logical
+    /// stream plan, and the collective compression setup) — compared
+    /// wholesale on apply so a resume under any changed numeric
+    /// silently forking the curve is impossible
     pub numerics: String,
+    /// fingerprint of the **physical** topology at capture
+    /// (`shard=w…;topo=p…;bucket=b…`) — the only term `campaign resume
+    /// --reshard` may transform; a plain resume refuses a mismatch
+    /// with a hint to rerun with the flag
+    pub topology: String,
 }
 
-/// Canonical fingerprint of the config fields that influence the
-/// numbers but are not individually recorded in [`SnapshotMeta`].
-/// f32/f64 fields go in as exact bit patterns. `shard_chunk` is the
-/// live Adam artifact chunk ([`Trainer::adam_chunk`]): with
-/// `dp_workers` it determines the chunk-aligned ZeRO-1 owner map *and*
-/// the collective's per-chunk scale grid, so a resume under a changed
-/// sharding config refuses. The collective topology (`pods`) and the
+/// Canonical **numerics** fingerprint: the config fields the loss
+/// curve is a function of that are not individually recorded in
+/// [`SnapshotMeta`]. f32/f64 fields go in as exact bit patterns.
+/// `shard_chunk` is the live Adam artifact chunk
+/// ([`Trainer::adam_chunk`]) — the absolute quantization grid every
+/// per-chunk FP8 moment/wire scale lives on (`grid=c…`), so a resume
+/// under a different chunk granularity refuses. The logical stream
+/// plan (`streams=s{S}p{Π}`, the *effective*
+/// `TrainConfig::streams`/`stream_pod_count` values) is the
+/// data-parallel identity: batch streams, merge denominator, and the
+/// collective's two-level summation tree — including which legs the
 /// per-level compression flags
-/// (`collective_fp8_intra`/`collective_fp8_inter`/`collective_fmt`)
-/// change which qdq legs the gradient passes through (and, for the
-/// pure-f32 two-level schedule at non-power-of-two pod sizes, the
-/// summation order), so any topology change refuses — deliberately
-/// conservative: the flags are recorded raw even in the shapes where
-/// a particular level is a numeric no-op. The gradient bucket
-/// schedule (`bucket_bytes`) is pinned the same conservative way: the
-/// partition is designed to be bit-invisible, but it decides the
-/// per-bucket wire framing, so a changed `bucket_bytes` refuses.
-/// `pack_moments` and `overlap_comm` are deliberately **excluded**
+/// (`collective_fp8_intra`/`collective_fp8_inter`/`collective_fmt`,
+/// the `cfp8=` term) put a qdq pass on. Physical `dp_workers`/`pods`/
+/// `bucket_bytes` are deliberately NOT here — they live in
+/// [`topology_fingerprint`], the reshardable term. `pack_moments` and
+/// `overlap_comm` are deliberately **excluded entirely**
 /// (exact-verified packing is bit-preserving, and the overlapped
 /// schedule is test-pinned bit-identical to the phased one — toggling
 /// either must never refuse a resume), and the compressed collective's
@@ -147,8 +171,8 @@ pub struct SnapshotMeta {
 pub fn numerics_fingerprint(cfg: &crate::config::TrainConfig, shard_chunk: usize) -> String {
     format!(
         "lr={:08x};minfrac={:08x};wd={:08x};clip={:08x};order={};skew={:016x};\
-         outlier={}:{:08x};skipnf={};amax={};margin={};shard=c{}w{};topo=p{};\
-         cfp8=i{}:x{}:{};bucket=b{}",
+         outlier={}:{:08x};skipnf={};amax={};margin={};grid=c{};streams=s{}p{};\
+         cfp8=i{}:x{}:{}",
         cfg.lr.to_bits(),
         cfg.min_lr_frac.to_bits(),
         cfg.weight_decay.to_bits(),
@@ -161,13 +185,65 @@ pub fn numerics_fingerprint(cfg: &crate::config::TrainConfig, shard_chunk: usize
         cfg.amax_history,
         cfg.margin_pow2,
         shard_chunk,
-        cfg.dp_workers,
-        cfg.pods,
+        cfg.streams(),
+        cfg.stream_pod_count(),
         cfg.collective_fp8_intra,
         cfg.collective_fp8_inter,
         cfg.collective_fmt,
-        cfg.bucket_bytes,
     )
+}
+
+/// Canonical **topology** fingerprint: the physical arrangement —
+/// ZeRO-1 shard count (`shard=w…`), pod placement (`topo=p…`), and the
+/// overlapped pipeline's bucket partition (`bucket=b…`). All three are
+/// proven bit-invisible to the loss curve (chunk grids are absolute,
+/// the collective plan is logical, and per-bucket ≡ whole-buffer was
+/// pinned when the pipeline landed), so this is the one term `campaign
+/// resume --reshard` may transform; a plain resume still refuses a
+/// mismatch, with a hint naming the flag.
+pub fn topology_fingerprint(cfg: &crate::config::TrainConfig) -> String {
+    format!("shard=w{};topo=p{};bucket=b{}", cfg.dp_workers, cfg.pods, cfg.bucket_bytes)
+}
+
+/// Diff two canonical `key=value;…` fingerprints term-by-term:
+/// `(key, snapshot value, config value)` for every term that differs
+/// (`<absent>` when one side lacks the key). Both refusal paths print
+/// this instead of the two opaque strings, so the operator sees *what*
+/// changed — the actionable-diagnostics half of the reshard story.
+pub fn diff_fingerprint_terms(snap: &str, cfg: &str) -> Vec<(String, String, String)> {
+    let parse = |s: &str| -> Vec<(String, String)> {
+        s.split(';')
+            .filter(|t| !t.is_empty())
+            .map(|t| match t.split_once('=') {
+                Some((k, v)) => (k.to_string(), v.to_string()),
+                None => (t.to_string(), String::new()),
+            })
+            .collect()
+    };
+    let a = parse(snap);
+    let b = parse(cfg);
+    let mut out = Vec::new();
+    for (k, va) in &a {
+        match b.iter().find(|(kb, _)| kb == k) {
+            Some((_, vb)) if vb == va => {}
+            Some((_, vb)) => out.push((k.clone(), va.clone(), vb.clone())),
+            None => out.push((k.clone(), va.clone(), "<absent>".into())),
+        }
+    }
+    for (k, vb) in &b {
+        if !a.iter().any(|(ka, _)| ka == k) {
+            out.push((k.clone(), "<absent>".into(), vb.clone()));
+        }
+    }
+    out
+}
+
+/// Render a [`diff_fingerprint_terms`] result for an error message.
+pub fn render_term_diff(diff: &[(String, String, String)]) -> String {
+    diff.iter()
+        .map(|(k, s, c)| format!("{k}: snapshot has '{s}', config has '{c}'"))
+        .collect::<Vec<_>>()
+        .join("; ")
 }
 
 /// A complete, serializable training state (see the module docs).
@@ -235,6 +311,8 @@ impl TrainState {
                 seed: t.cfg.seed,
                 corpus_seed: t.cfg.corpus_seed(),
                 dp_workers: t.cfg.dp_workers,
+                streams: t.cfg.streams(),
+                stream_pods: t.cfg.stream_pod_count(),
                 grad_accum: t.cfg.grad_accum,
                 steps: t.cfg.steps,
                 warmup_steps: t.cfg.warmup_steps,
@@ -245,6 +323,7 @@ impl TrainState {
                 v_fmt: norm(&rc.v_fmt),
                 moment_chunk: t.adam_chunk().max(1),
                 numerics: numerics_fingerprint(&t.cfg, t.adam_chunk()),
+                topology: topology_fingerprint(&t.cfg),
             },
             params: t
                 .params
@@ -273,6 +352,8 @@ impl TrainState {
             ("seed", Json::Str(m.seed.to_string())),
             ("corpus_seed", Json::Str(m.corpus_seed.to_string())),
             ("dp_workers", Json::Num(m.dp_workers as f64)),
+            ("streams", Json::Num(m.streams as f64)),
+            ("stream_pods", Json::Num(m.stream_pods as f64)),
             ("grad_accum", Json::Num(m.grad_accum as f64)),
             ("steps", Json::Num(m.steps as f64)),
             ("warmup_steps", Json::Num(m.warmup_steps as f64)),
@@ -283,6 +364,7 @@ impl TrainState {
             ("v_fmt", Json::Str(m.v_fmt.clone())),
             ("moment_chunk", Json::Num(m.moment_chunk as f64)),
             ("numerics", Json::Str(m.numerics.clone())),
+            ("topology", Json::Str(m.topology.clone())),
             // f32 state that must restore bit-exactly rides as bits
             ("detector_ema_bits", Json::Num(self.detector.ema.to_bits() as f64)),
             ("detector_warmed", Json::Bool(self.detector.warmed)),
@@ -384,6 +466,12 @@ impl TrainState {
         if params.is_empty() {
             bail!("snapshot holds no parameter tensors");
         }
+        // pre-1.4 snapshots had no logical/physical split: their
+        // streams followed dp_workers (plan pods followed `pods`, not
+        // recorded — default 1 is only reached on those old files, and
+        // applying them refuses anyway: the old fingerprint format
+        // never matches a 1.4 binary's)
+        let dp_workers = usize_of("dp_workers")?;
         Ok(Self {
             meta: SnapshotMeta {
                 step: usize_of("step")?,
@@ -391,7 +479,9 @@ impl TrainState {
                 size: meta.str_of("size").map_err(|e| anyhow!(e))?.to_string(),
                 seed: u64_of("seed")?,
                 corpus_seed: u64_of("corpus_seed")?,
-                dp_workers: usize_of("dp_workers")?,
+                dp_workers,
+                streams: meta.get("streams").and_then(|v| v.as_usize()).unwrap_or(dp_workers),
+                stream_pods: meta.get("stream_pods").and_then(|v| v.as_usize()).unwrap_or(1),
                 grad_accum: usize_of("grad_accum")?,
                 steps: usize_of("steps")?,
                 warmup_steps: usize_of("warmup_steps")?,
@@ -405,6 +495,7 @@ impl TrainState {
                     .and_then(|v| v.as_usize())
                     .unwrap_or(MOMENT_CHUNK),
                 numerics: meta.str_of("numerics").map_err(|e| anyhow!(e))?.to_string(),
+                topology: meta.str_or("topology", ""),
             },
             params,
             m,
@@ -420,24 +511,33 @@ impl TrainState {
 
     /// Restore this state into a trainer built from the same config.
     ///
-    /// Validates the identity fields (recipe, size, seed, worker
-    /// topology, schedule length) and every tensor arity before
-    /// touching anything; on success the trainer's next `step()`
-    /// produces exactly the outcome the snapshotted run's next step
-    /// would have.
+    /// Validates the numerics fingerprint, the identity fields
+    /// (recipe, size, seed, schedule length), the physical topology
+    /// fingerprint, and every tensor arity before touching anything;
+    /// on success the trainer's next `step()` produces exactly the
+    /// outcome the snapshotted run's next step would have.
+    ///
+    /// Check order matters for diagnostics: numerics bails first, so a
+    /// topology refusal implies the numerics already matched — its
+    /// hint to rerun with `--reshard` is therefore always sound (if
+    /// both differed, the operator sees the numerics refusal, where
+    /// resharding would not help).
     pub fn apply_to(&self, t: &mut Trainer) -> Result<()> {
         let m = &self.meta;
-        let checks: [(&str, String, String); 8] = [
-            (
-                "numerics config",
-                m.numerics.clone(),
-                numerics_fingerprint(&t.cfg, t.adam_chunk()),
-            ),
+        let cfg_numerics = numerics_fingerprint(&t.cfg, t.adam_chunk());
+        if m.numerics != cfg_numerics {
+            let diff = diff_fingerprint_terms(&m.numerics, &cfg_numerics);
+            bail!(
+                "snapshot/config mismatch on numerics term(s) [{}] — resuming would fork \
+                 the curve, refusing",
+                render_term_diff(&diff)
+            );
+        }
+        let checks: [(&str, String, String); 6] = [
             ("recipe", m.recipe.clone(), t.cfg.recipe.clone()),
             ("size", m.size.clone(), t.cfg.size.clone()),
             ("seed", m.seed.to_string(), t.cfg.seed.to_string()),
             ("corpus_seed", m.corpus_seed.to_string(), t.cfg.corpus_seed().to_string()),
-            ("dp_workers", m.dp_workers.to_string(), t.cfg.dp_workers.to_string()),
             ("grad_accum", m.grad_accum.to_string(), t.cfg.grad_accum.to_string()),
             (
                 "steps/warmup",
@@ -452,6 +552,17 @@ impl TrainState {
                      '{cfg}' — resuming would fork the curve, refusing"
                 );
             }
+        }
+        let cfg_topology = topology_fingerprint(&t.cfg);
+        if m.topology != cfg_topology {
+            let diff = diff_fingerprint_terms(&m.topology, &cfg_topology);
+            bail!(
+                "snapshot/config mismatch on physical-topology term(s) [{}] — worker \
+                 shards / pod placement / bucket partition changed. The numerics identity \
+                 matches, so this snapshot can be transformed deterministically: rerun \
+                 with `campaign resume --reshard`",
+                render_term_diff(&diff)
+            );
         }
         let total = t.params.total_elems();
         if self.m.len() != total || self.v.len() != total {
@@ -529,14 +640,17 @@ impl TrainState {
 
 #[cfg(test)]
 mod tests {
-    use super::numerics_fingerprint;
+    use super::{
+        diff_fingerprint_terms, numerics_fingerprint, render_term_diff, topology_fingerprint,
+    };
     use crate::config::TrainConfig;
 
     #[test]
-    fn fingerprint_refuses_topology_changes() {
-        // apply_to compares fingerprints wholesale, so any pod/
-        // compression change must alter the string — a resume under a
-        // changed collective topology refuses instead of forking
+    fn fingerprint_refuses_stream_plan_changes() {
+        // the numerics term pins the *effective* logical stream plan:
+        // with the stream keys defaulted (0 = follow physical), a bare
+        // pods or dp_workers change still alters effective S/Π and must
+        // refuse — backward-compatible with the pre-split behavior
         let base = TrainConfig { dp_workers: 8, ..Default::default() };
         let fp = |c: &TrainConfig| numerics_fingerprint(c, 262_144);
         let f0 = fp(&base);
@@ -544,7 +658,32 @@ mod tests {
 
         let mut pods = base.clone();
         pods.pods = 2;
-        assert_ne!(f0, fp(&pods), "changed pods must change the fingerprint");
+        assert_ne!(f0, fp(&pods), "bare pods change shifts effective stream_pods: refuses");
+        let mut dp = base.clone();
+        dp.dp_workers = 4;
+        assert_ne!(f0, fp(&dp), "bare dp_workers change shifts effective streams: refuses");
+
+        // with the logical plan pinned explicitly, physical changes
+        // leave the numerics term alone — they move to the topology
+        // term, which is the whole point of the split
+        let pinned = TrainConfig {
+            dp_workers: 8,
+            pods: 2,
+            grad_streams: 8,
+            stream_pods: 2,
+            ..Default::default()
+        };
+        let p0 = fp(&pinned);
+        let mut shrunk = pinned.clone();
+        shrunk.dp_workers = 6;
+        shrunk.pods = 1;
+        assert_eq!(p0, fp(&shrunk), "pinned plan: physical shrink must not touch numerics");
+        assert_ne!(
+            topology_fingerprint(&pinned),
+            topology_fingerprint(&shrunk),
+            "…but it must change the topology term"
+        );
+
         let mut intra = base.clone();
         intra.collective_fp8_intra = true;
         assert_ne!(f0, fp(&intra), "intra compression flag is numerics identity");
@@ -561,25 +700,65 @@ mod tests {
     }
 
     #[test]
-    fn fingerprint_pins_bucket_schedule_but_not_overlap() {
-        // the bucket partition is pinned conservatively (it decides
-        // per-bucket wire framing), while toggling the overlapped
-        // schedule itself is test-pinned bit-invisible and must never
-        // refuse a resume
+    fn fingerprint_pins_bucket_schedule_in_topology_not_numerics() {
+        // the bucket partition is bit-invisible (pinned by the
+        // overlapped-pipeline tests), so since the 1.4 split it lives
+        // in the reshardable topology term; toggling the overlapped
+        // schedule itself stays out of both terms
         let base = TrainConfig { dp_workers: 4, ..Default::default() };
         let fp = |c: &TrainConfig| numerics_fingerprint(c, 262_144);
         let f0 = fp(&base);
 
         let mut bb = base.clone();
         bb.bucket_bytes = 1_048_576;
-        assert_ne!(f0, fp(&bb), "changed bucket_bytes must refuse a resume");
+        assert_eq!(f0, fp(&bb), "bucket_bytes must NOT be numerics identity since 1.4");
+        assert_ne!(
+            topology_fingerprint(&base),
+            topology_fingerprint(&bb),
+            "changed bucket_bytes must change the topology term"
+        );
         assert!(
-            f0.contains(&format!("bucket=b{}", base.bucket_bytes)),
-            "the bucket key must be recorded explicitly: {f0}"
+            topology_fingerprint(&base).contains(&format!("bucket=b{}", base.bucket_bytes)),
+            "the bucket key must be recorded explicitly: {}",
+            topology_fingerprint(&base)
         );
 
         let mut ov = base.clone();
         ov.overlap_comm = !ov.overlap_comm;
         assert_eq!(f0, fp(&ov), "toggled overlap_comm must NOT refuse a resume");
+        assert_eq!(
+            topology_fingerprint(&base),
+            topology_fingerprint(&ov),
+            "overlap_comm is not topology either"
+        );
+    }
+
+    #[test]
+    fn term_diff_reports_exactly_the_changed_keys() {
+        let a = "shard=w4;topo=p2;bucket=b4194304";
+        let b = "shard=w3;topo=p1;bucket=b4194304";
+        let d = diff_fingerprint_terms(a, b);
+        assert_eq!(
+            d,
+            vec![
+                ("shard".into(), "w4".into(), "w3".into()),
+                ("topo".into(), "p2".into(), "p1".into()),
+            ]
+        );
+        let msg = render_term_diff(&d);
+        assert!(msg.contains("shard: snapshot has 'w4', config has 'w3'"), "{msg}");
+        assert!(!msg.contains("bucket"), "unchanged terms must not be reported: {msg}");
+
+        // keys present on only one side render as <absent> — this is
+        // how a pre-1.4 fingerprint's mismatch stays readable
+        let d2 = diff_fingerprint_terms("a=1;old=2", "a=1;new=3");
+        assert_eq!(
+            d2,
+            vec![
+                ("old".into(), "2".into(), "<absent>".into()),
+                ("new".into(), "<absent>".into(), "3".into()),
+            ]
+        );
+        assert!(diff_fingerprint_terms(a, a).is_empty(), "equal strings: empty diff");
     }
 }

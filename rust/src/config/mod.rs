@@ -82,10 +82,32 @@ pub struct TrainConfig {
     pub weight_decay: f32,
     pub grad_clip: f32,
     pub seed: u64,
-    /// data-parallel worker count (simulated Gaudi2 pool)
+    /// data-parallel worker count (simulated Gaudi2 pool). Since the
+    /// logical/physical split this is **physical** topology: how many
+    /// thread lanes run the gradient streams and how many ZeRO-1
+    /// shards the moments are partitioned into. The loss curve is a
+    /// function of [`TrainConfig::streams`], not of this knob, so a
+    /// campaign can be resharded onto a different `dp_workers`
+    /// bit-exactly (`campaign resume --reshard`).
     pub dp_workers: usize,
     /// gradient-accumulation microbatches per step
     pub grad_accum: usize,
+    /// **logical** gradient-stream count — the data-parallel width the
+    /// numerics are defined over: batch identity (`(step, stream,
+    /// micro)`), the merge denominator, and the replica count of the
+    /// gradient collective. `0` (default) follows `dp_workers`, which
+    /// reproduces the historical behaviour where logical and physical
+    /// width coincide. Pinned in the snapshot numerics fingerprint for
+    /// the life of a campaign; `campaign resume --reshard` carries it
+    /// across a `dp_workers` change automatically.
+    pub grad_streams: usize,
+    /// **logical** pod count of the collective reduction plan: with
+    /// [`TrainConfig::streams`] it fixes the two-level summation tree
+    /// and which legs get FP8 wire compression — i.e. the gradient
+    /// *bits*. `0` (default) follows `pods`. Must divide the effective
+    /// stream count. Pinned in the numerics fingerprint; `--reshard`
+    /// carries it across a `pods` change.
+    pub stream_pods: usize,
     /// delayed-scaling amax history length
     pub amax_history: usize,
     /// scale margin: 2^margin headroom below the format max (TE-style)
@@ -173,6 +195,8 @@ impl Default for TrainConfig {
             seed: 20260711,
             dp_workers: 1,
             grad_accum: 1,
+            grad_streams: 0,
+            stream_pods: 0,
             amax_history: 16,
             margin_pow2: 1,
             corpus_order: 2,
@@ -229,6 +253,8 @@ impl TrainConfig {
                 "train.seed" | "seed" => c.seed = v.as_usize()? as u64,
                 "train.dp_workers" | "dp_workers" => c.dp_workers = v.as_usize()?,
                 "train.grad_accum" | "grad_accum" => c.grad_accum = v.as_usize()?,
+                "train.grad_streams" | "grad_streams" => c.grad_streams = v.as_usize()?,
+                "collective.stream_pods" | "stream_pods" => c.stream_pods = v.as_usize()?,
                 "scaling.amax_history" | "amax_history" => c.amax_history = v.as_usize()?,
                 "scaling.margin_pow2" | "margin_pow2" => c.margin_pow2 = v.as_f64()? as i32,
                 "data.corpus_order" | "corpus_order" => c.corpus_order = v.as_usize()?,
@@ -295,6 +321,15 @@ impl TrainConfig {
                 c.pods, c.dp_workers
             ));
         }
+        let s = c.streams();
+        let sp = c.stream_pod_count();
+        if sp > s || s % sp != 0 {
+            return Err(format!(
+                "stream_pods ({sp}) must divide grad_streams ({s}) evenly — the \
+                 logical collective plan needs equal contiguous pods (effective \
+                 values; 0 means follow pods/dp_workers)"
+            ));
+        }
         if c.snapshot_keep == 0 {
             return Err("snapshot_keep must be >= 1 (the rollback target)".into());
         }
@@ -321,6 +356,21 @@ impl TrainConfig {
         RecipeConfig::by_name(&self.recipe)
     }
 
+    /// Effective **logical** gradient-stream count: the data-parallel
+    /// width the loss curve is defined over. Every numerics-bearing
+    /// consumer (batch identity, merge denominator, collective replica
+    /// count) must go through this accessor, never `dp_workers`.
+    pub fn streams(&self) -> usize {
+        if self.grad_streams == 0 { self.dp_workers } else { self.grad_streams }
+    }
+
+    /// Effective **logical** pod count of the collective reduction
+    /// plan (pairs with [`TrainConfig::streams`] the way `pods` pairs
+    /// with `dp_workers`).
+    pub fn stream_pod_count(&self) -> usize {
+        if self.stream_pods == 0 { self.pods } else { self.stream_pods }
+    }
+
     /// The derived corpus PRNG root seed — the single number that,
     /// together with a step index, determines every training batch
     /// (the data pipeline is stateless: batches are pure functions of
@@ -342,6 +392,8 @@ impl TrainConfig {
             ("seed", Json::Num(self.seed as f64)),
             ("dp_workers", Json::Num(self.dp_workers as f64)),
             ("grad_accum", Json::Num(self.grad_accum as f64)),
+            ("grad_streams", Json::Num(self.streams() as f64)),
+            ("stream_pods", Json::Num(self.stream_pod_count() as f64)),
             ("amax_history", Json::Num(self.amax_history as f64)),
             ("seed_outlier_channel", Json::Bool(self.seed_outlier_channel)),
             ("pods", Json::Num(self.pods as f64)),
@@ -445,6 +497,48 @@ mod tests {
         assert!(
             TrainConfig::load(None, &[("pods".into(), "2".into())]).is_err(),
             "pods cannot exceed dp_workers (default 1)"
+        );
+    }
+
+    #[test]
+    fn stream_keys_follow_physical_by_default() {
+        let d = TrainConfig::default();
+        assert_eq!(d.grad_streams, 0, "0 = follow dp_workers");
+        assert_eq!(d.stream_pods, 0, "0 = follow pods");
+        let c = TrainConfig::load(
+            None,
+            &[("dp_workers".into(), "4".into()), ("pods".into(), "2".into())],
+        )
+        .unwrap();
+        assert_eq!(c.streams(), 4, "defaulted streams track the worker pool");
+        assert_eq!(c.stream_pod_count(), 2, "defaulted plan pods track physical pods");
+        // the elastic case: plan pinned wider than the surviving pool
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("dp_workers".into(), "3".into()),
+                ("train.grad_streams".into(), "4".into()),
+                ("collective.stream_pods".into(), "2".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.streams(), 4);
+        assert_eq!(c.stream_pod_count(), 2);
+        assert!(
+            TrainConfig::load(
+                None,
+                &[("grad_streams".into(), "4".into()), ("stream_pods".into(), "3".into())]
+            )
+            .is_err(),
+            "ragged logical pods must refuse like ragged physical pods"
+        );
+        assert!(
+            TrainConfig::load(
+                None,
+                &[("dp_workers".into(), "4".into()), ("stream_pods".into(), "8".into())]
+            )
+            .is_err(),
+            "plan pods cannot exceed the effective stream count"
         );
     }
 

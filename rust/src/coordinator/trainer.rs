@@ -2,19 +2,32 @@
 //! collective → clip → sharded chunked AdamW artifact →
 //! delayed-scaling update → divergence check.
 //!
-//! Hot-path structure (see rust/EXPERIMENTS.md §Perf, §Sharding and
-//! §Overlap):
-//! * the `dp_workers` gradient passes run concurrently on scoped
-//!   threads (the PJRT CPU client accepts concurrent executions), with
-//!   a fixed-order merge of loss/amax/monitor so results are
-//!   bit-identical to the serial schedule at any worker count;
+//! Hot-path structure (see rust/EXPERIMENTS.md §Perf, §Sharding,
+//! §Overlap and §Resharding):
+//! * the numerics are defined over **logical gradient streams**
+//!   (`cfg.streams()`, default = `dp_workers`), not over the physical
+//!   worker pool: batch identity is `(step, stream, micro)`, the loss
+//!   merge divides by `streams · grad_accum`, and the collective
+//!   reduces `streams` replica buffers on the **logical plan topology**
+//!   (`cfg.stream_pod_count()` plan pods). The physical `dp_workers` /
+//!   `pods` only decide how many threads run those streams (streams
+//!   deal round-robin onto `min(W, S)` lanes; each lane runs its
+//!   streams in ascending order and the merge re-sorts by stream id,
+//!   so the fan-out is bit-invisible) and how the ZeRO-1 moments are
+//!   sharded — which is what makes a campaign reshardable onto a
+//!   different worker/pod count bit-exactly (`campaign resume
+//!   --reshard`);
+//! * the gradient passes run concurrently on scoped threads (the PJRT
+//!   CPU client accepts concurrent executions), with a fixed-order
+//!   merge of loss/amax/monitor so results are bit-identical to the
+//!   serial schedule at any lane count;
 //! * the gradient collective is the pod-aware two-level schedule
 //!   (`topology::hier_bucket_collective` per bucket, the whole-buffer
-//!   `hier_grad_collective_with` on the phased path): deterministic
-//!   intra-pod reduce-scatter → inter-pod exchange over pod leaders →
-//!   intra-pod all-gather, with FP8 wire compression selectable per
-//!   level (`collective_fp8_intra` / `collective_fp8_inter`, per-chunk
-//!   pow2 auto-scales);
+//!   `hier_grad_collective_with` on the phased path) over the logical
+//!   plan topology: deterministic intra-pod reduce-scatter → inter-pod
+//!   exchange over pod leaders → intra-pod all-gather, with FP8 wire
+//!   compression selectable per level (`collective_fp8_intra` /
+//!   `collective_fp8_inter`, per-chunk pow2 auto-scales);
 //! * the step is **bucketed and overlapped** (`overlap_comm`, default
 //!   on): the flat gradient is partitioned into `bucket_bytes`-sized,
 //!   Adam-chunk-aligned buckets (`pipeline::BucketSchedule`); each
@@ -92,10 +105,12 @@ pub struct StepOutcome {
     pub stats: StepStats,
 }
 
-/// One worker's per-step reduction state, merged in worker index order
-/// after the (possibly parallel) passes complete. Keeping the merge
-/// out of the passes is what makes thread scheduling invisible to the
-/// numbers: each worker's partials depend only on its own batches.
+/// One logical stream's per-step reduction state, merged in ascending
+/// stream order after the (possibly parallel) passes complete. Keeping
+/// the merge out of the passes is what makes thread scheduling
+/// invisible to the numbers: each stream's partials depend only on its
+/// own batches, and the merge re-sorts by stream id regardless of
+/// which physical lane ran which stream.
 struct WorkerPass {
     loss_sum: f64,
     amax: Vec<f32>,
@@ -173,14 +188,15 @@ struct PassCtx<'a> {
     grad_accum: usize,
     ns: usize,
     step: usize,
-    /// tests only: worker index whose pass should deliberately panic,
+    /// tests only: stream index whose pass should deliberately panic,
     /// exercising the panic-containment path end to end
     panic_drill: Option<usize>,
 }
 
-/// One worker's microbatched gradient pass: accumulate grads into
-/// `buf`, return the worker-local loss/amax/monitor partials. Pure in
-/// the worker index — safe to run on any thread.
+/// One logical stream's microbatched gradient pass: accumulate grads
+/// into `buf`, return the stream-local loss/amax/monitor partials.
+/// Pure in the stream index — safe to run on any thread (`w` is the
+/// stream id, which is also the batch-identity coordinate).
 fn run_worker_pass(
     ctx: &PassCtx<'_>,
     w: usize,
@@ -237,9 +253,10 @@ fn run_worker_pass(
     Ok(pass)
 }
 
-/// Fixed-order merge of the per-worker partials (worker index order):
-/// f64 loss fold and elementwise max folds are independent of which
-/// thread ran which worker, so any schedule gives these exact bits.
+/// Fixed-order merge of the per-stream partials (ascending stream
+/// order — callers sort by stream id first): the f64 loss fold and
+/// elementwise max folds are then independent of which thread ran
+/// which stream, so any lane schedule gives these exact bits.
 fn merge_passes(
     passes: &[WorkerPass],
     ns: usize,
@@ -330,9 +347,12 @@ pub struct Trainer {
     pub detector: DivergenceDetector,
     batcher: Batcher,
     sched: LrSchedule,
-    /// ZeRO-1 owner map: the flat param space split across
-    /// `dp_workers` on boundaries aligned to the Adam artifact chunk,
-    /// so every per-chunk FP8 moment grid has exactly one owner
+    /// ZeRO-1 owner map: the flat param space split across the
+    /// **physical** `dp_workers` on boundaries aligned to the Adam
+    /// artifact chunk, so every per-chunk FP8 moment grid has exactly
+    /// one owner. Physical-only: because the chunk grid is absolute,
+    /// re-partitioning for a different worker count never changes any
+    /// bit (the reshard transform relies on this)
     pub shard_map: ShardLayout,
     /// per-worker first-moment shards (values lie on the recipe's fp8
     /// grid; exact-verified FP8 packing between steps when
@@ -340,9 +360,11 @@ pub struct Trainer {
     m_shards: Vec<MomentBuffer>,
     /// per-worker second-moment shards (see `m_shards`)
     v_shards: Vec<MomentBuffer>,
-    /// pod arrangement of the worker pool (validated in `new`): the
-    /// two-level collective runs intra-pod → leaders → intra-pod;
-    /// `pods = 1` is the flat collective
+    /// the **logical collective plan** (validated in `new`): the
+    /// two-level reduction tree over `cfg.streams()` replica buffers
+    /// arranged in `cfg.stream_pod_count()` plan pods — numerics
+    /// identity, pinned by the snapshot fingerprint, independent of
+    /// the physical pool; plan pods = 1 is the flat collective
     topo: PodTopology,
     /// FP8 wire format of the intra-pod collective legs
     /// (None = bit-exact f32 legs, the pinned baseline)
@@ -375,8 +397,9 @@ pub struct Trainer {
     /// bit-for-bit (pinned by tests/integration.rs); also settable as
     /// a campaign session key
     pub force_phased_step: bool,
-    /// tests only: make this worker index's grad pass panic, to
-    /// exercise panic containment (None in production)
+    /// tests only: make this stream index's grad pass panic (taking
+    /// down the lane running it), to exercise panic containment (None
+    /// in production)
     pub inject_worker_panic: Option<usize>,
     /// set when a failed or panicked optimizer/pipeline stage may have
     /// left state partially advanced: chunk results stream into the
@@ -455,7 +478,9 @@ impl Trainer {
             total_steps: cfg.steps,
             min_frac: cfg.min_lr_frac,
         };
-        let flops = man.flops_per_step * (cfg.dp_workers * cfg.grad_accum) as f64;
+        // work per step is logical: S stream passes run regardless of
+        // how many physical lanes carry them
+        let flops = man.flops_per_step * (cfg.streams() * cfg.grad_accum) as f64;
 
         // Chunk work list: (offset, len, weight_decay), C-aligned to
         // absolute multiples of the artifact chunk so per-chunk FP8
@@ -515,7 +540,20 @@ impl Trainer {
         };
         let fp8_intra = cfg.collective_fp8_intra.then_some(wire_fmt);
         let fp8_inter = cfg.collective_fp8_inter.then_some(wire_fmt);
-        let topo = PodTopology::new(cfg.dp_workers, cfg.pods).map_err(|e| anyhow!(e))?;
+        // the collective plan is the LOGICAL topology (streams × plan
+        // pods) — the physical pool only carries it
+        let topo =
+            PodTopology::new(cfg.streams(), cfg.stream_pod_count()).map_err(|e| anyhow!(e))?;
+        // physical placement still has to be well-formed (equal
+        // contiguous pods), validated here too because tests and
+        // embedders build configs programmatically
+        if cfg.pods == 0 || cfg.pods > cfg.dp_workers || cfg.dp_workers % cfg.pods != 0 {
+            return Err(anyhow!(
+                "pods ({}) must divide dp_workers ({}) evenly",
+                cfg.pods,
+                cfg.dp_workers
+            ));
+        }
         let bucket_sched = BucketSchedule::new(total, cfg.bucket_bytes, chunk);
 
         Ok(Self {
@@ -529,7 +567,7 @@ impl Trainer {
             collective_scratch: CollectiveScratch::default(),
             collective_scratch_alt: CollectiveScratch::default(),
             bucket_sched,
-            worker_grads: vec![Vec::new(); cfg.dp_workers],
+            worker_grads: vec![Vec::new(); cfg.streams()],
             p_flat: Vec::new(),
             adam_work,
             adam_scratch,
@@ -556,8 +594,10 @@ impl Trainer {
         &self.rt
     }
 
-    /// The validated pod topology the gradient collective runs on
-    /// (`pods = 1` is the flat collective).
+    /// The validated **logical plan** topology the gradient collective
+    /// runs on: `cfg.streams()` replicas in `cfg.stream_pod_count()`
+    /// plan pods (plan pods = 1 is the flat collective). This is
+    /// numerics identity — it survives a physical reshard unchanged.
     pub fn topology(&self) -> PodTopology {
         self.topo
     }
@@ -590,11 +630,11 @@ impl Trainer {
         &self.grad_art.manifest
     }
 
-    /// Tokens consumed per optimizer step across all workers and
-    /// microbatches.
+    /// Tokens consumed per optimizer step across all logical streams
+    /// and microbatches (independent of the physical lane count).
     pub fn tokens_per_step(&self) -> usize {
         let m = &self.grad_art.manifest;
-        m.batch * m.seq_len * self.cfg.dp_workers * self.cfg.grad_accum
+        m.batch * m.seq_len * self.cfg.streams() * self.cfg.grad_accum
     }
 
     /// The chunked Adam artifact's chunk size — the granularity at
@@ -712,47 +752,79 @@ impl Trainer {
             ..Default::default()
         };
 
-        // ---- (1) per-worker microbatched grads, one scoped thread per
-        //      worker (PJRT CPU executions are thread-safe; apply_adam
-        //      already relies on this). `force_serial_workers` runs the
-        //      identical passes inline — same partials, same merge, so
-        //      the two schedules are bit-identical.
+        // ---- (1) per-stream microbatched grads, the S logical
+        //      streams dealt round-robin onto min(W, S) physical lanes
+        //      (one scoped thread each; PJRT CPU executions are
+        //      thread-safe — apply_adam already relies on this). Each
+        //      lane runs its streams in ascending order and the merge
+        //      re-sorts by stream id, so the lane count is invisible to
+        //      the numbers. `force_serial_workers` runs the identical
+        //      passes inline — same partials, same merge, so the two
+        //      schedules are bit-identical.
         let t_grad = Instant::now();
+        let streams = self.cfg.streams();
+        let lanes_n = self.cfg.dp_workers.min(streams).max(1);
         let mut grads = std::mem::take(&mut self.worker_grads);
         let ctx = self.pass_ctx();
         let mut panic_err: Option<anyhow::Error> = None;
-        let passes_res: Result<Vec<WorkerPass>> =
-            if self.cfg.dp_workers == 1 || self.force_serial_workers {
-                grads
-                    .iter_mut()
-                    .enumerate()
-                    .map(|(w, buf)| run_worker_pass(&ctx, w, &scales, buf))
-                    .collect()
-            } else {
-                let ctx_ref = &ctx;
-                let scales_ref = &scales;
-                std::thread::scope(|s| {
-                    let handles: Vec<_> = grads
-                        .iter_mut()
-                        .enumerate()
-                        .map(|(w, buf)| {
-                            s.spawn(move || run_worker_pass(ctx_ref, w, scales_ref, buf))
+        let passes_res: Result<Vec<WorkerPass>> = if lanes_n == 1 || self.force_serial_workers
+        {
+            grads
+                .iter_mut()
+                .enumerate()
+                .map(|(sid, buf)| run_worker_pass(&ctx, sid, &scales, buf))
+                .collect()
+        } else {
+            let ctx_ref = &ctx;
+            let scales_ref = &scales;
+            let mut lane_work: Vec<Vec<(usize, &mut Vec<f32>)>> =
+                (0..lanes_n).map(|_| Vec::new()).collect();
+            for (sid, buf) in grads.iter_mut().enumerate() {
+                lane_work[sid % lanes_n].push((sid, buf));
+            }
+            std::thread::scope(|s| {
+                let handles: Vec<_> = lane_work
+                    .into_iter()
+                    .map(|work| {
+                        s.spawn(move || -> Vec<(usize, Result<WorkerPass>)> {
+                            work.into_iter()
+                                .map(|(sid, buf)| {
+                                    (sid, run_worker_pass(ctx_ref, sid, scales_ref, buf))
+                                })
+                                .collect()
                         })
-                        .collect();
-                    let mut out = Vec::with_capacity(handles.len());
-                    for (w, h) in handles.into_iter().enumerate() {
-                        match contain_panic(h.join(), "grad worker") {
-                            Ok(res) => out.push(res),
-                            Err(e) => {
-                                panic_err.get_or_insert(
-                                    e.context(format!("grad worker {w} panicked")),
-                                );
+                    })
+                    .collect();
+                let mut tagged: Vec<(usize, WorkerPass)> = Vec::with_capacity(streams);
+                let mut first_err: Option<anyhow::Error> = None;
+                for (lane, h) in handles.into_iter().enumerate() {
+                    match contain_panic(h.join(), "grad worker") {
+                        Ok(results) => {
+                            for (sid, res) in results {
+                                match res {
+                                    Ok(p) => tagged.push((sid, p)),
+                                    Err(e) => {
+                                        first_err.get_or_insert(
+                                            e.context(format!("grad stream {sid} failed")),
+                                        );
+                                    }
+                                }
                             }
                         }
+                        Err(e) => {
+                            panic_err.get_or_insert(
+                                e.context(format!("grad worker lane {lane} panicked")),
+                            );
+                        }
                     }
-                    out.into_iter().collect::<Result<Vec<_>>>()
-                })
-            };
+                }
+                if let Some(e) = first_err {
+                    return Err(e);
+                }
+                tagged.sort_unstable_by_key(|&(sid, _)| sid);
+                Ok(tagged.into_iter().map(|(_, p)| p).collect())
+            })
+        };
         drop(ctx);
         // restore the buffers before propagating any error: a failed
         // step must leave the trainer stepable (a second step() should
@@ -772,12 +844,8 @@ impl Trainer {
         let passes = passes_res?;
         timers.grad_s = t_grad.elapsed().as_secs_f64();
 
-        let (loss, amax, monitor) = merge_passes(
-            &passes,
-            ns,
-            man.n_layers,
-            self.cfg.dp_workers * self.cfg.grad_accum,
-        );
+        let (loss, amax, monitor) =
+            merge_passes(&passes, ns, man.n_layers, streams * self.cfg.grad_accum);
 
         // ---- (2) gradient collective: pod-aware two-level schedule —
         //      intra-pod reduce-scatter → inter-pod exchange over pod
@@ -846,15 +914,19 @@ impl Trainer {
     /// The bucketed overlapped pipeline. Three thread roles inside one
     /// scope:
     ///
-    /// * **grad workers** (one per dp worker): run the microbatched
-    ///   pass into their replica buffer, then split the buffer into
-    ///   the bucket windows and send each window — in ascending bucket
-    ///   order — to the comms thread;
-    /// * **comms thread**: for each bucket in order, receives all W
-    ///   windows (worker order), runs the two-level per-bucket
-    ///   collective on alternating scratch sets, and ships rank-0's
-    ///   reduced window to the main thread together with the wire
-    ///   stats and the instant the collective started;
+    /// * **grad lanes** (min(W, S) scoped threads): each lane runs its
+    ///   round-robin share of the S logical streams in ascending
+    ///   stream order — pass into the stream's replica buffer, then
+    ///   split the buffer into the bucket windows and send each window
+    ///   — in ascending bucket order — down the stream's channel to
+    ///   the comms thread (channels are unbounded, so a lane never
+    ///   blocks on a later stream while comms waits on an earlier one);
+    /// * **comms thread**: for each bucket in order, receives all S
+    ///   windows (stream order), runs the two-level per-bucket
+    ///   collective over the logical plan topology on alternating
+    ///   scratch sets, and ships rank-0's reduced window to the main
+    ///   thread together with the wire stats and the instant the
+    ///   collective started;
     /// * **main thread**: as each bucket lands, folds its norm partial
     ///   (`NormStream`, exact `global_norm` fold order) and — when the
     ///   clip factor is provably 1 before the norm exists (grad_clip
@@ -873,7 +945,8 @@ impl Trainer {
         let ns = self.scale_mgr.n_sites();
         let scales = HostTensor::from_f32(&[ns], self.scale_mgr.scales().to_vec());
         let n_params = self.params.total_elems();
-        let dp = self.cfg.dp_workers;
+        let streams = self.cfg.streams();
+        let lanes_n = self.cfg.dp_workers.min(streams).max(1);
         let grad_accum = self.cfg.grad_accum;
         let grad_clip = self.cfg.grad_clip;
         let skip_nonfinite = self.cfg.skip_nonfinite_updates;
@@ -972,7 +1045,7 @@ impl Trainer {
         let sched: &[(usize, usize)] = &bucket_sched.buckets;
 
         // pipeline outcome state, written inside the scope
-        let mut passes: Vec<WorkerPass> = Vec::with_capacity(dp);
+        let mut passes: Vec<WorkerPass> = Vec::with_capacity(streams);
         let mut worker_err: Option<anyhow::Error> = None;
         let mut panicked = false;
         let mut pipe_err: Option<anyhow::Error> = None;
@@ -988,11 +1061,12 @@ impl Trainer {
         };
 
         std::thread::scope(|s| {
-            // one channel per worker: the worker streams its bucket
-            // windows (ascending bucket order) to the comms thread
-            let mut bucket_txs = Vec::with_capacity(dp);
-            let mut bucket_rxs = Vec::with_capacity(dp);
-            for _ in 0..dp {
+            // one channel per logical stream: whichever lane runs the
+            // stream sends its bucket windows (ascending bucket order)
+            // to the comms thread
+            let mut bucket_txs = Vec::with_capacity(streams);
+            let mut bucket_rxs = Vec::with_capacity(streams);
+            for _ in 0..streams {
                 let (tx, rx) = mpsc::channel::<&mut [f32]>();
                 bucket_txs.push(tx);
                 bucket_rxs.push(rx);
@@ -1003,30 +1077,40 @@ impl Trainer {
 
             let ctx_ref = &ctx;
             let scales_ref = &scales;
-            let worker_handles: Vec<_> = grads
-                .iter_mut()
-                .zip(bucket_txs)
-                .enumerate()
-                .map(|(w, (buf, tx))| {
-                    s.spawn(move || -> (Result<WorkerPass>, f64) {
-                        let t0 = Instant::now();
-                        let res = run_worker_pass(ctx_ref, w, scales_ref, &mut *buf);
-                        let dt = t0.elapsed().as_secs_f64();
-                        if res.is_ok() {
-                            // split the replica buffer into the bucket
-                            // windows and hand them to comms in order;
-                            // if comms already exited (pipeline error),
-                            // sends fail and we just stop
-                            let mut rest = buf.as_mut_slice();
-                            for &(_, len) in sched {
-                                let (win, tail) = rest.split_at_mut(len);
-                                rest = tail;
-                                if tx.send(win).is_err() {
-                                    break;
+            // deal the S streams round-robin onto the physical lanes;
+            // a lane runs its streams sequentially in ascending order
+            let mut lane_work: Vec<Vec<(usize, &mut Vec<f32>, mpsc::Sender<&mut [f32]>)>> =
+                (0..lanes_n).map(|_| Vec::new()).collect();
+            for ((sid, buf), tx) in grads.iter_mut().enumerate().zip(bucket_txs) {
+                lane_work[sid % lanes_n].push((sid, buf, tx));
+            }
+            let worker_handles: Vec<_> = lane_work
+                .into_iter()
+                .map(|work| {
+                    s.spawn(move || -> Vec<(usize, Result<WorkerPass>, f64)> {
+                        let mut out = Vec::with_capacity(work.len());
+                        for (sid, buf, tx) in work {
+                            let t0 = Instant::now();
+                            let res = run_worker_pass(ctx_ref, sid, scales_ref, &mut *buf);
+                            let dt = t0.elapsed().as_secs_f64();
+                            if res.is_ok() {
+                                // split the replica buffer into the
+                                // bucket windows and hand them to comms
+                                // in order; if comms already exited
+                                // (pipeline error), sends fail and we
+                                // just stop
+                                let mut rest = buf.as_mut_slice();
+                                for &(_, len) in sched {
+                                    let (win, tail) = rest.split_at_mut(len);
+                                    rest = tail;
+                                    if tx.send(win).is_err() {
+                                        break;
+                                    }
                                 }
                             }
+                            out.push((sid, res, dt));
                         }
-                        (res, dt)
+                        out
                     })
                 })
                 .collect();
@@ -1035,14 +1119,14 @@ impl Trainer {
             let comms_handle = s.spawn(move || -> Result<f64> {
                 let mut busy = 0.0f64;
                 for (k, &(off, _)) in sched.iter().enumerate() {
-                    let mut wins: Vec<&mut [f32]> = Vec::with_capacity(dp);
-                    for (w, rx) in bucket_rxs.iter().enumerate() {
+                    let mut wins: Vec<&mut [f32]> = Vec::with_capacity(streams);
+                    for (sid, rx) in bucket_rxs.iter().enumerate() {
                         match rx.recv() {
                             Ok(win) => wins.push(win),
                             Err(_) => {
                                 return Err(anyhow!(
-                                    "grad worker {w} stopped before sending bucket {k} \
-                                     (its pass failed or panicked)"
+                                    "grad stream {sid} stopped before sending bucket {k} \
+                                     (its pass failed or its lane panicked)"
                                 ))
                             }
                         }
@@ -1145,22 +1229,32 @@ impl Trainer {
             }
             drop(land_rx); // let any still-running comms send fail fast
 
-            for (w, h) in worker_handles.into_iter().enumerate() {
+            let mut tagged: Vec<(usize, WorkerPass)> = Vec::with_capacity(streams);
+            for (lane, h) in worker_handles.into_iter().enumerate() {
                 match contain_panic(h.join(), "grad worker") {
-                    Ok((Ok(pass), dt)) => {
-                        timers.grad_s = timers.grad_s.max(dt);
-                        passes.push(pass);
-                    }
-                    Ok((Err(e), _)) => {
-                        worker_err.get_or_insert(e.context(format!("grad worker {w} failed")));
+                    Ok(results) => {
+                        for (sid, res, dt) in results {
+                            timers.grad_s = timers.grad_s.max(dt);
+                            match res {
+                                Ok(pass) => tagged.push((sid, pass)),
+                                Err(e) => {
+                                    worker_err.get_or_insert(
+                                        e.context(format!("grad stream {sid} failed")),
+                                    );
+                                }
+                            }
+                        }
                     }
                     Err(e) => {
                         panicked = true;
                         worker_err
-                            .get_or_insert(e.context(format!("grad worker {w} panicked")));
+                            .get_or_insert(e.context(format!("grad worker lane {lane} panicked")));
                     }
                 }
             }
+            // ascending stream order, independent of lane assignment
+            tagged.sort_unstable_by_key(|&(sid, _)| sid);
+            passes.extend(tagged.into_iter().map(|(_, p)| p));
             match contain_panic(comms_handle.join(), "collective comms thread") {
                 Ok(Ok(busy)) => timers.collective_s = busy,
                 Ok(Err(e)) => {
@@ -1223,7 +1317,8 @@ impl Trainer {
             }
         }
 
-        let (loss, amax, monitor) = merge_passes(&passes, ns, man.n_layers, dp * grad_accum);
+        let (loss, amax, monitor) =
+            merge_passes(&passes, ns, man.n_layers, streams * grad_accum);
         self.scale_mgr.update(&amax);
         let verdict = self
             .detector

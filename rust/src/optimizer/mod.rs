@@ -229,6 +229,70 @@ impl MomentBuffer {
         }
     }
 
+    /// CRC-32 digest of the canonical packed representation (packs
+    /// first if needed — a no-op for the f32 store). Two buffers with
+    /// the same store/chunk and the same packed bytes digest equal;
+    /// the reshard property tests use this to pin "W→W′→W reproduces
+    /// the original shard bytes" without holding both byte sets.
+    pub fn packed_digest(&mut self) -> u32 {
+        self.pack();
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(&(self.len as u64).to_le_bytes());
+        bytes.extend_from_slice(&(self.chunk as u64).to_le_bytes());
+        match self.store {
+            MomentStore::F32 => {
+                bytes.push(2); // store tag
+                for x in &self.f32_buf {
+                    bytes.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+            MomentStore::Fp8(_) => {
+                for slot in &self.slots {
+                    // tag keeps an FP8 chunk and a raw-fallback chunk
+                    // with identical payload bytes from colliding
+                    bytes.push(u8::from(!slot.raw.is_empty()));
+                    bytes.extend_from_slice(&slot.scale.to_bits().to_le_bytes());
+                    if slot.raw.is_empty() {
+                        bytes.extend_from_slice(&slot.bytes);
+                    } else {
+                        for x in &slot.raw {
+                            bytes.extend_from_slice(&x.to_bits().to_le_bytes());
+                        }
+                    }
+                }
+            }
+        }
+        crate::util::crc32(&bytes)
+    }
+
+    /// Test hook for the reshard corrupt-injection drill: flip one bit
+    /// of the packed payload (packing first if needed) so the
+    /// roundtrip verification sees a shard that no longer reproduces
+    /// the source bits. Not part of any production path.
+    #[doc(hidden)]
+    pub fn corrupt_one_bit_for_test(&mut self) {
+        self.pack();
+        match self.store {
+            MomentStore::F32 => {
+                if let Some(x) = self.f32_buf.first_mut() {
+                    *x = f32::from_bits(x.to_bits() ^ 1);
+                }
+            }
+            MomentStore::Fp8(_) => {
+                for slot in self.slots.iter_mut() {
+                    if !slot.bytes.is_empty() {
+                        slot.bytes[0] ^= 1;
+                        return;
+                    }
+                    if !slot.raw.is_empty() {
+                        slot.raw[0] = f32::from_bits(slot.raw[0].to_bits() ^ 1);
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
     /// Resident bytes in the packed state (the Table 4 measurement).
     pub fn resident_bytes(&self) -> usize {
         match self.store {
@@ -355,6 +419,49 @@ impl ShardLayout {
     pub fn max_shard_elems(&self) -> usize {
         self.shards.iter().map(|&(_, n)| n).max().unwrap_or(0)
     }
+}
+
+/// Re-partition an already-gathered flat moment vector into the packed
+/// per-worker shards of `layout` — the scatter half of the campaign
+/// reshard transform. Each shard is built in exact mode
+/// ([`MomentBuffer::zeros_exact`]) and packed immediately, so the
+/// result is exactly what a freshly-constructed trainer on the new
+/// topology would hold after its first `pack()`.
+///
+/// Because `layout` boundaries land on absolute multiples of
+/// `layout.chunk` (see [`ShardLayout::chunk_aligned`]) and the FP8
+/// scale grid is per-absolute-chunk, re-partitioning never moves an
+/// element across a chunk boundary: the packed bytes of every chunk
+/// are independent of which worker owns it.
+///
+/// # Panics
+///
+/// Panics if `flat.len() != layout.total` — callers validate arity
+/// before invoking the transform.
+pub fn repartition(flat: &[f32], layout: &ShardLayout, store: MomentStore) -> Vec<MomentBuffer> {
+    assert_eq!(flat.len(), layout.total, "flat moment length vs shard layout total");
+    let mut shards = Vec::with_capacity(layout.n_workers());
+    for &(off, len) in &layout.shards {
+        let mut buf = MomentBuffer::zeros_exact(len, store, layout.chunk);
+        buf.load_from(&flat[off..off + len]);
+        buf.pack();
+        shards.push(buf);
+    }
+    shards
+}
+
+/// Gather packed shards back into one flat vector (the inverse of
+/// [`repartition`]) without disturbing the shards' resident state —
+/// pure-LUT decode via [`MomentBuffer::snapshot_into`].
+pub fn gather(shards: &[MomentBuffer]) -> Vec<f32> {
+    let total: usize = shards.iter().map(|s| s.len()).sum();
+    let mut flat = Vec::with_capacity(total);
+    let mut tmp = Vec::new();
+    for s in shards {
+        s.snapshot_into(&mut tmp);
+        flat.extend_from_slice(&tmp);
+    }
+    flat
 }
 
 /// Memory accounting for one training configuration (Table 4).
@@ -516,6 +623,52 @@ mod tests {
         let src: Vec<f32> = (0..n).map(|i| (i as f32) * 1e-3).collect();
         m.load_from(&src);
         assert_eq!(m.as_f32().as_slice(), src.as_slice());
+    }
+
+    #[test]
+    fn repartition_gather_roundtrip_is_bit_exact_across_worker_counts() {
+        // mixed data: on-grid chunks (the steady-state Adam output)
+        // plus off-grid chunks (forces the raw-f32 fallback) — the
+        // reshard transform must survive both, for any worker count,
+        // because chunk grids are absolute.
+        let chunk = 64usize;
+        let total = chunk * 7 + 13; // ragged tail
+        let flat: Vec<f32> = (0..total)
+            .map(|i| {
+                if (i / chunk) % 2 == 0 {
+                    E4M3.decode(((i % 120) * 2) as u8) / 8.0
+                } else {
+                    ((i as f32) * 0.7311).sin() * 3.7
+                }
+            })
+            .collect();
+        for store in [MomentStore::Fp8(E4M3), MomentStore::Fp8(E5M2), MomentStore::F32] {
+            let mut digests_by_w: Vec<Vec<(usize, u32)>> = Vec::new();
+            for w in [1usize, 2, 3, 5] {
+                let layout = ShardLayout::chunk_aligned(total, w, chunk);
+                let mut shards = repartition(&flat, &layout, store);
+                let back = gather(&shards);
+                assert_eq!(back.len(), flat.len());
+                for (i, (a, b)) in flat.iter().zip(&back).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "w={w} i={i}");
+                }
+                digests_by_w.push(
+                    shards
+                        .iter_mut()
+                        .zip(&layout.shards)
+                        .map(|(s, &(off, _))| (off, s.packed_digest()))
+                        .collect(),
+                );
+            }
+            // determinism: re-running the same partition digests equal
+            let layout = ShardLayout::chunk_aligned(total, 3, chunk);
+            let again: Vec<(usize, u32)> = repartition(&flat, &layout, store)
+                .iter_mut()
+                .zip(&layout.shards)
+                .map(|(s, &(off, _))| (off, s.packed_digest()))
+                .collect();
+            assert_eq!(again, digests_by_w[2], "repartition must be deterministic");
+        }
     }
 
     #[test]

@@ -16,9 +16,10 @@ use std::sync::{Arc, OnceLock};
 use fp8_trainer::campaign::journal;
 use fp8_trainer::campaign::snapshot::{SnapshotMeta, TrainState};
 use fp8_trainer::campaign::store::{list_snapshots, SnapshotStore};
-use fp8_trainer::campaign::Campaign;
+use fp8_trainer::campaign::{Campaign, DirLock, ResumeOptions};
 use fp8_trainer::config::TrainConfig;
 use fp8_trainer::coordinator::{DetectorState, Trainer};
+use fp8_trainer::optimizer::{gather, repartition, MomentStore, ShardLayout};
 use fp8_trainer::runtime::Runtime;
 use fp8_trainer::scaling::{Policy, ScaleManager, ScaleState};
 use fp8_trainer::util::prng::Rng;
@@ -64,6 +65,8 @@ fn synth_state(rng: &mut Rng) -> TrainState {
             seed: rng.next_u64() | (1 << 60),
             corpus_seed: rng.next_u64() | (1 << 59),
             dp_workers: 1 + rng.below(8) as usize,
+            streams: 1 + rng.below(8) as usize,
+            stream_pods: 1 + rng.below(2) as usize,
             grad_accum: 1 + rng.below(4) as usize,
             steps: 1000,
             warmup_steps: 100,
@@ -76,6 +79,12 @@ fn synth_state(rng: &mut Rng) -> TrainState {
             // multi-chunk exact-FP8 path is exercised every case
             moment_chunk: 16 + rng.below(48) as usize,
             numerics: format!("synthetic-fingerprint-{}", rng.below(1000)),
+            topology: format!(
+                "shard=w{};topo=p{};bucket=b{}",
+                1 + rng.below(8),
+                1 + rng.below(2),
+                4096
+            ),
         },
         params: vec![
             ("embed".into(), vals(rng, 32 + rng.below(64) as usize, 2.0)),
@@ -221,6 +230,95 @@ fn snapshot_load_rejects_damage() {
     w.finish(&plain).unwrap();
     assert!(TrainState::load(&plain).is_err(), "kind check must reject");
     std::fs::remove_file(&plain).ok();
+}
+
+#[test]
+fn prop_reshard_roundtrip_reproduces_original_shard_bytes() {
+    // W → W′ → W across worker counts 1..=6, chunk-offset totals, and
+    // all three moment stores: re-partitioning the gathered state and
+    // coming back must reproduce the ORIGINAL shard bytes (packed
+    // digests), not merely close values — the property `campaign
+    // resume --reshard` stands on
+    struct Case {
+        data: Vec<f32>,
+        chunk: usize,
+        w: usize,
+        w2: usize,
+        store: MomentStore,
+    }
+    let gen = |rng: &mut Rng| {
+        let chunk = 8 + rng.below(56) as usize;
+        let n_chunks = 1 + rng.below(9) as usize;
+        let total = chunk * n_chunks + rng.below(chunk as u64) as usize;
+        let mut data = vals(rng, total, 2e-3);
+        if total > 4 {
+            data[1] = f32::from_bits(0x7fc0_0001); // NaN payload
+            data[3] = -0.0;
+        }
+        let store = match rng.below(3) {
+            0 => MomentStore::F32,
+            1 => MomentStore::Fp8(fp8_trainer::fp8::E4M3),
+            _ => MomentStore::Fp8(fp8_trainer::fp8::E5M2),
+        };
+        Case {
+            data,
+            chunk,
+            w: 1 + rng.below(6) as usize,
+            w2: 1 + rng.below(6) as usize,
+            store,
+        }
+    };
+    Prop::new(48).check("reshard-roundtrip", gen, |c| {
+        let lay_w = ShardLayout::chunk_aligned(c.data.len(), c.w, c.chunk);
+        let lay_w2 = ShardLayout::chunk_aligned(c.data.len(), c.w2, c.chunk);
+        let mut original = repartition(&c.data, &lay_w, c.store);
+        let digests: Vec<u32> = original.iter_mut().map(|s| s.packed_digest()).collect();
+        // W → W′: gather and re-partition for the new worker count
+        let flat1 = gather(&original);
+        if !bits_eq(&flat1, &c.data) {
+            return false;
+        }
+        let prime = repartition(&flat1, &lay_w2, c.store);
+        let flat2 = gather(&prime);
+        if !bits_eq(&flat2, &c.data) {
+            return false;
+        }
+        // W′ → W: the original shard bytes come back exactly
+        let mut back = repartition(&flat2, &lay_w, c.store);
+        let digests2: Vec<u32> = back.iter_mut().map(|s| s.packed_digest()).collect();
+        digests == digests2
+    });
+}
+
+#[test]
+#[cfg(target_os = "linux")]
+fn stale_lock_with_dead_owner_is_reclaimed() {
+    let dir = tmp_path("stale_lock");
+    std::fs::create_dir_all(&dir).unwrap();
+    // pid 999999999 exceeds the kernel's pid_max (4194304): provably
+    // no live owner, so acquire must reclaim and remember the pid
+    std::fs::write(dir.join("LOCK"), "999999999\n").unwrap();
+    let lock = DirLock::acquire(&dir).expect("dead-owner lock must be reclaimed");
+    assert_eq!(lock.reclaimed_from(), Some(999_999_999));
+    drop(lock);
+    assert!(!dir.join("LOCK").exists(), "drop must release the reclaimed lock");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn live_or_garbage_lock_refuses_conservatively() {
+    let dir = tmp_path("live_lock");
+    std::fs::create_dir_all(&dir).unwrap();
+    // our own pid is alive by definition — never reclaimed
+    std::fs::write(dir.join("LOCK"), format!("{}\n", std::process::id())).unwrap();
+    let err = DirLock::acquire(&dir).unwrap_err().to_string();
+    assert!(err.contains("locked"), "live owner must refuse: {err}");
+    assert!(dir.join("LOCK").exists(), "refusal must not touch the live lock");
+    // garbage contents: no pid to probe, conservative refusal
+    std::fs::write(dir.join("LOCK"), "not-a-pid\n").unwrap();
+    assert!(DirLock::acquire(&dir).is_err(), "unparsable lock must refuse");
+    assert!(dir.join("LOCK").exists());
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 // ------------------------------------------------ artifact-gated tier
@@ -374,4 +472,122 @@ fn campaign_auto_recovers_from_injected_divergence() {
     assert_eq!(rec.usize_of("margin_pow2").unwrap(), 2);
     assert_eq!(rec.usize_of("amax_history").unwrap(), 8); // 16 / 2
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn worker_loss_drill_reshard_resumes_bit_exact() {
+    // The elastic-resharding drill: a campaign on W=4/pods=2 loses a
+    // worker mid-run; `resume --reshard` continues it on W=3/pods=1
+    // with a bit-identical loss curve, the reshard journaled, and a
+    // stale lock from the "crashed" process reclaimed on the way in.
+    let rt = need_artifacts!();
+    let mut cfg = tiny_cfg("fp8_full");
+    cfg.steps = 10;
+    cfg.snapshot_every = 3;
+    cfg.dp_workers = 4;
+    cfg.pods = 2;
+    let base = tmp_path("reshard_drill");
+    // reference: uninterrupted campaign on the full fleet
+    let mut ca = Campaign::new(rt.clone(), cfg.clone(), base.join("a")).unwrap();
+    let ra = ca.run().unwrap();
+    assert!(ra.completed);
+    // the drill campaign, "killed" at step 4 (orderly pause = the
+    // deterministic stand-in for a node loss)
+    let mut cb = Campaign::new(rt.clone(), cfg.clone(), base.join("b")).unwrap();
+    cb.stop_after = Some(4);
+    let rb1 = cb.run().unwrap();
+    assert!(rb1.paused);
+    drop(cb);
+
+    // one worker gone, pods collapse: W=3 / pods=1
+    let mut lost = cfg.clone();
+    lost.dp_workers = 3;
+    lost.pods = 1;
+
+    // bare resume with the logical plan pinned: numerics match, only
+    // topology differs — the refusal must name the flag
+    let mut pinned = lost.clone();
+    pinned.grad_streams = 4;
+    pinned.stream_pods = 2;
+    let err =
+        Campaign::resume(rt.clone(), pinned, base.join("b")).unwrap_err().to_string();
+    assert!(err.contains("--reshard"), "topology refusal must suggest the flag: {err}");
+    assert!(err.contains("shard"), "diff must name the changed term: {err}");
+
+    // bare resume with defaulted stream keys: the *effective* logical
+    // plan would move with W — a numerics refusal, reshard can't help
+    let err2 =
+        Campaign::resume(rt.clone(), lost.clone(), base.join("b")).unwrap_err().to_string();
+    assert!(err2.contains("numerics"), "moved plan is a numerics refusal: {err2}");
+
+    // a changed numerics term refuses even WITH --reshard
+    let mut hot = lost.clone();
+    hot.lr *= 2.0;
+    let err3 = Campaign::resume_opts(
+        rt.clone(),
+        hot,
+        base.join("b"),
+        ResumeOptions { reshard: true },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err3.contains("numerics"), "reshard must never move numerics: {err3}");
+
+    // plant a dead-owner lock, as a crashed run would leave behind
+    #[cfg(target_os = "linux")]
+    std::fs::write(base.join("b").join("LOCK"), "999999999\n").unwrap();
+
+    // the real thing: resume --reshard on the shrunken fleet
+    let mut cb2 = Campaign::resume_opts(
+        rt.clone(),
+        lost.clone(),
+        base.join("b"),
+        ResumeOptions { reshard: true },
+    )
+    .unwrap();
+    assert_eq!(cb2.trainer.cfg.dp_workers, 3);
+    assert_eq!(cb2.trainer.cfg.streams(), 4, "adopted logical plan");
+    assert_eq!(cb2.trainer.cfg.stream_pod_count(), 2, "adopted plan pods");
+    let rb2 = cb2.run().unwrap();
+    assert!(rb2.completed);
+
+    // the continued curve is bit-identical to the uninterrupted W=4 run
+    let merged: Vec<(usize, u32)> = rb1
+        .losses
+        .iter()
+        .chain(rb2.losses.iter())
+        .map(|&(s, l)| (s, l.to_bits()))
+        .collect();
+    let reference: Vec<(usize, u32)> =
+        ra.losses.iter().map(|&(s, l)| (s, l.to_bits())).collect();
+    assert_eq!(merged, reference, "resharded campaign must equal the uninterrupted one");
+    for (ta, tb) in ca.trainer.params.tensors.iter().zip(&cb2.trainer.params.tensors) {
+        assert!(bits_eq(ta.f32s(), tb.f32s()), "final params must be bit-identical");
+    }
+    let (am, av) = ca.trainer.moments_flat();
+    let (bm, bv) = cb2.trainer.moments_flat();
+    assert!(bits_eq(&am, &bm), "first moment across topologies");
+    assert!(bits_eq(&av, &bv), "second moment across topologies");
+    assert!(
+        bits_eq(ca.trainer.scale_mgr.scales(), cb2.trainer.scale_mgr.scales()),
+        "delayed-scaling state across topologies"
+    );
+
+    // topology history on the record: reshard event with old→new
+    let ev = journal::read(base.join("b").join("journal.jsonl")).unwrap();
+    assert_eq!(journal::count(&ev, "reshard"), 1);
+    let rs = journal::last(&ev, "reshard").unwrap();
+    assert_eq!(rs.usize_of("from_workers").unwrap(), 4);
+    assert_eq!(rs.usize_of("to_workers").unwrap(), 3);
+    assert!(rs.str_of("from_topology").unwrap().contains("w4"));
+    assert!(rs.str_of("to_topology").unwrap().contains("w3"));
+    #[cfg(target_os = "linux")]
+    assert_eq!(journal::count(&ev, "lock_reclaimed"), 1, "stale-lock reclaim journaled");
+    let res = journal::last(&ev, "resume").unwrap();
+    assert_eq!(
+        res.get("resharded"),
+        Some(&fp8_trainer::util::json::Json::Bool(true)),
+        "the resume event records that it resharded"
+    );
+    std::fs::remove_dir_all(&base).ok();
 }

@@ -179,6 +179,47 @@ fn parallel_workers_bit_identical_to_serial() {
 }
 
 #[test]
+fn logical_streams_decouple_batch_identity_from_workers() {
+    // the elastic-resharding foundation: the loss curve is a function
+    // of the LOGICAL stream plan (grad_streams × stream_pods), not of
+    // the physical worker/pod count. A 4-stream plan run on 4 workers
+    // and the same plan squeezed onto 2 workers / 1 pod must produce
+    // bit-identical everything — this is what lets `campaign resume
+    // --reshard` continue a W=4 campaign on whatever fleet is left.
+    let rt = runtime();
+    let mut full = tiny_cfg("fp8_full");
+    full.dp_workers = 4;
+    full.pods = 2;
+    full.grad_accum = 2;
+    let mut shrunk = full.clone();
+    shrunk.dp_workers = 2;
+    shrunk.pods = 1;
+    shrunk.grad_streams = 4; // pin the logical plan to the full shape
+    shrunk.stream_pods = 2;
+    let mut a = Trainer::new(rt.clone(), full).unwrap();
+    let mut b = Trainer::new(rt, shrunk).unwrap();
+    for _ in 0..3 {
+        let oa = a.step().unwrap();
+        let ob = b.step().unwrap();
+        assert_eq!(oa.loss.to_bits(), ob.loss.to_bits(), "loss must not see the fleet size");
+        assert_eq!(oa.grad_norm.to_bits(), ob.grad_norm.to_bits(), "grad norm");
+        for (ma, mb) in oa.monitor.iter().zip(&ob.monitor) {
+            for k in 0..3 {
+                assert_eq!(ma[k].to_bits(), mb[k].to_bits(), "monitor must match");
+            }
+        }
+    }
+    assert_eq!(a.scale_mgr.scales(), b.scale_mgr.scales(), "amax/scale history");
+    for (ta, tb) in a.params.tensors.iter().zip(&b.params.tensors) {
+        assert_eq!(ta.f32s(), tb.f32s(), "params across physical topologies");
+    }
+    let (am, av) = a.moments_flat();
+    let (bm, bv) = b.moments_flat();
+    assert_eq!(am, bm, "first moment");
+    assert_eq!(av, bv, "second moment");
+}
+
+#[test]
 fn sharded_fp8_path_bit_identical_to_f32_resident_baseline() {
     // the pinned ISSUE-4 equivalence: with collective_fp8_intra =
     // false (default), the ZeRO-1 sharded step with exact-FP8-packed moment

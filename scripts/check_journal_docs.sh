@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# Docs gate: every journal event kind the campaign subsystem can emit
+# must be documented in docs/OPERATIONS.md (the journal event
+# reference) — an operator reading a journal line should never meet an
+# event the runbook does not explain, and a new event kind without a
+# docs row fails CI.
+#
+# Kind sources scanned: every `.record("<kind>"` call site under
+# rust/src/campaign/ and rust/src/bin/ (the journal's only producers).
+# The call spans lines in rustfmt output, so files are flattened before
+# matching. A kind counts as documented when it appears backticked
+# (`kind`) in docs/OPERATIONS.md.
+#
+# Pure POSIX shell + grep/sed/tr — no toolchain needed, so this gate
+# runs unconditionally in scripts/verify.sh and the CI docs job.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+DOC=docs/OPERATIONS.md
+
+if [ ! -f "$DOC" ]; then
+  echo "check_journal_docs: missing $DOC" >&2
+  exit 1
+fi
+
+kinds=$(
+  for f in rust/src/campaign/*.rs rust/src/bin/*.rs; do
+    tr '\n' ' ' <"$f"
+  done |
+    grep -oE '\.record\(\s*"[a-z_]+"' |
+    grep -oE '"[a-z_]+"' | tr -d '"' | sort -u
+)
+
+# Sanity floor: the subsystem emits many kinds; extracting almost none
+# means the call-site pattern drifted, which must fail loudly rather
+# than silently gate nothing.
+n=$(echo "$kinds" | grep -c . || true)
+if [ "$n" -lt 5 ]; then
+  echo "check_journal_docs: extracted only $n event kind(s) — did the" >&2
+  echo "  Journal::record call-site pattern change? (expected >= 5)" >&2
+  exit 1
+fi
+
+missing=0
+for k in $kinds; do
+  if ! grep -qF "\`$k\`" "$DOC"; then
+    echo "UNDOCUMENTED journal event kind: $k — add it to $DOC" >&2
+    missing=1
+  fi
+done
+
+if [ "$missing" -ne 0 ]; then
+  echo "check_journal_docs: FAIL (see kinds above)" >&2
+  exit 1
+fi
+echo "check_journal_docs: OK ($n event kinds documented in $DOC)"

@@ -1,0 +1,74 @@
+#!/usr/bin/env bash
+# Worker-loss drill: the end-to-end elastic-resharding exercise through
+# the real `campaign` CLI — the operational twin of the
+# `worker_loss_drill_reshard_resumes_bit_exact` test.
+#
+# Scenario:
+#   1. reference campaign runs uninterrupted on W=4 / pods=2;
+#   2. the drill campaign runs on the same topology but is "killed"
+#      (orderly pause) at step 4;
+#   3. a worker is lost: `campaign resume --reshard dp_workers=3
+#      pods=1` continues it on the shrunken fleet;
+#   4. the final loss must be BIT-identical to the reference run's, the
+#      `reshard` event must be journaled, and `campaign status` must
+#      show the topology history.
+#
+# Self-skips (exit 0 with a note) on a bare checkout: no cargo, or no
+# artifacts/ directory — same convention as the artifact-gated tests.
+#
+# Run from the repo root: scripts/drill_worker_loss.sh
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "drill_worker_loss: [skip] cargo not installed"
+  exit 0
+fi
+ARTIFACTS="${FP8_ARTIFACTS:-artifacts}"
+if [ ! -d "$ARTIFACTS" ]; then
+  echo "drill_worker_loss: [skip] $ARTIFACTS/ not found (run \`make artifacts\` first)"
+  exit 0
+fi
+
+cargo build --release --bin campaign
+BIN=target/release/campaign
+
+WORK=$(mktemp -d "${TMPDIR:-/tmp}/fp8_worker_loss_drill.XXXXXX")
+trap 'rm -rf "$WORK"' EXIT
+
+COMMON="size=tiny recipe=fp8_full steps=10 warmup_steps=2 lr=1e-3 snapshot_every=3"
+FULL="dp_workers=4 pods=2"
+
+echo "== reference: uninterrupted campaign on W=4/pods=2"
+"$BIN" run --dir "$WORK/ref" $COMMON $FULL | tee "$WORK/ref.out"
+
+echo "== drill: same campaign, killed at step 4"
+"$BIN" run --dir "$WORK/drill" $COMMON $FULL stop_after=4
+
+echo "== worker lost: resume --reshard on W=3/pods=1"
+"$BIN" resume --dir "$WORK/drill" --reshard $COMMON dp_workers=3 pods=1 |
+  tee "$WORK/drill.out"
+
+# bit-exactness: the journal's `complete` event records final_loss via
+# the shortest-roundtrip f64 emitter, so string equality here IS bit
+# equality of the final loss across the two topologies
+ref_loss=$(grep -o '"final_loss":[^,}]*' "$WORK/ref/journal.jsonl" | tail -1)
+drill_loss=$(grep -o '"final_loss":[^,}]*' "$WORK/drill/journal.jsonl" | tail -1)
+if [ -z "$ref_loss" ] || [ "$ref_loss" != "$drill_loss" ]; then
+  echo "drill_worker_loss: FAIL — final loss diverged ('$ref_loss' vs '$drill_loss')" >&2
+  exit 1
+fi
+
+# the reshard must be on the journal and visible in status
+if ! grep -q '"event":"reshard"' "$WORK/drill/journal.jsonl"; then
+  echo "drill_worker_loss: FAIL — no reshard event in the journal" >&2
+  exit 1
+fi
+"$BIN" status --dir "$WORK/drill" | tee "$WORK/status.out"
+if ! grep -q 'topology history' "$WORK/status.out"; then
+  echo "drill_worker_loss: FAIL — \`campaign status\` does not show the topology history" >&2
+  exit 1
+fi
+
+echo "drill_worker_loss: OK (resharded campaign matched the reference: $drill_loss)"

@@ -17,6 +17,13 @@
 #   6. config-docs gate: every config key the loader accepts must be
 #      documented in docs/OPERATIONS.md
 #      (scripts/check_config_docs.sh — pure shell, always runs)
+#   7. journal-docs gate: every journal event kind the campaign can
+#      emit must be documented in docs/OPERATIONS.md
+#      (scripts/check_journal_docs.sh — pure shell, always runs)
+#   8. worker-loss drill: kill a W=4/pods=2 campaign mid-run, resume
+#      with `--reshard` on W=3/pods=1 through the real CLI, demand a
+#      bit-identical final loss + journaled reshard
+#      (scripts/drill_worker_loss.sh — self-skips on bare checkouts)
 #
 # VERIFY_SKIP_LINT=1 skips steps 4/5 — CI sets it in the verify job so
 # fmt/clippy run exactly once, in the dedicated lint job.
@@ -26,13 +33,13 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== [1/6] cargo build --release"
+echo "== [1/8] cargo build --release"
 cargo build --release
 
-echo "== [2/6] cargo test -q"
+echo "== [2/8] cargo test -q"
 cargo test -q
 
-echo "== [3/6] cargo doc --no-deps (doc-link gate)"
+echo "== [3/8] cargo doc --no-deps (doc-link gate)"
 # -W unused: rustdoc's own unused-lint pass stays advisory; the doc
 # correctness lints below are the gate.
 RUSTDOCFLAGS="${RUSTDOCFLAGS:-} \
@@ -42,7 +49,7 @@ RUSTDOCFLAGS="${RUSTDOCFLAGS:-} \
   -D rustdoc::bare-urls" \
   cargo doc --no-deps
 
-echo "== [4/6] cargo fmt --check"
+echo "== [4/8] cargo fmt --check"
 if [ "${VERIFY_SKIP_LINT:-0}" = "1" ]; then
   echo "  [skip] VERIFY_SKIP_LINT=1 (CI runs fmt/clippy in the lint job)"
 elif cargo fmt --version >/dev/null 2>&1; then
@@ -51,7 +58,7 @@ else
   echo "  [skip] rustfmt component not installed (rustup component add rustfmt)"
 fi
 
-echo "== [5/6] cargo clippy --all-targets -- -D warnings"
+echo "== [5/8] cargo clippy --all-targets -- -D warnings"
 if [ "${VERIFY_SKIP_LINT:-0}" = "1" ]; then
   echo "  [skip] VERIFY_SKIP_LINT=1 (CI runs fmt/clippy in the lint job)"
 elif cargo clippy --version >/dev/null 2>&1; then
@@ -60,7 +67,13 @@ else
   echo "  [skip] clippy component not installed (rustup component add clippy)"
 fi
 
-echo "== [6/6] config-key docs coverage (docs/OPERATIONS.md)"
+echo "== [6/8] config-key docs coverage (docs/OPERATIONS.md)"
 scripts/check_config_docs.sh
+
+echo "== [7/8] journal-event docs coverage (docs/OPERATIONS.md)"
+scripts/check_journal_docs.sh
+
+echo "== [8/8] worker-loss reshard drill (self-skips on bare checkouts)"
+scripts/drill_worker_loss.sh
 
 echo "verify: OK"
