@@ -78,7 +78,12 @@ pub const MOMENT_CHUNK: usize = 262_144;
 /// resume. Older snapshots still load; their fingerprint will not
 /// match a newer binary's, so applying them refuses — conservative by
 /// design.
-pub const SNAPSHOT_VERSION: f64 = 1.4;
+/// 1.5: the numerics fingerprint gained the tile-wise GEMM compute
+/// path (`gemm=off` or `gemm=t{tile}:w{fmt}:x{fmt}:g{fmt}`) — under an
+/// `fp8_gemm` recipe every per-tile pow2 grid is a function of the
+/// tile size and the per-operand formats, so a resume under a changed
+/// GEMM setup refuses with the term diff naming the `gemm` key.
+pub const SNAPSHOT_VERSION: f64 = 1.5;
 
 /// Identity and position metadata of one snapshot.
 #[derive(Clone, Debug, PartialEq)]
@@ -169,10 +174,20 @@ pub struct SnapshotMeta {
 /// own gradients — so there is no cross-step collective scale state to
 /// capture.
 pub fn numerics_fingerprint(cfg: &crate::config::TrainConfig, shard_chunk: usize) -> String {
+    // the tile-wise GEMM compute path is numerics identity whenever a
+    // gemm recipe is active: the tile size and per-operand formats
+    // decide every per-tile pow2 grid the weights and grads land on.
+    // Other recipes pin `off` so the term diffs cleanly (not <absent>)
+    // when a resume switches the compute path itself.
+    let gemm = if crate::config::is_gemm_recipe(&cfg.recipe) {
+        format!("t{}:w{}:x{}:g{}", cfg.gemm_tile, cfg.gemm_w_fmt, cfg.gemm_x_fmt, cfg.gemm_g_fmt)
+    } else {
+        "off".to_string()
+    };
     format!(
         "lr={:08x};minfrac={:08x};wd={:08x};clip={:08x};order={};skew={:016x};\
          outlier={}:{:08x};skipnf={};amax={};margin={};grid=c{};streams=s{}p{};\
-         cfp8=i{}:x{}:{}",
+         cfp8=i{}:x{}:{};gemm={gemm}",
         cfg.lr.to_bits(),
         cfg.min_lr_frac.to_bits(),
         cfg.weight_decay.to_bits(),
@@ -730,6 +745,44 @@ mod tests {
             topology_fingerprint(&base),
             topology_fingerprint(&ov),
             "overlap_comm is not topology either"
+        );
+    }
+
+    #[test]
+    fn fingerprint_pins_gemm_tile_and_formats_for_gemm_recipes() {
+        // under an fp8_gemm recipe every per-tile pow2 grid is a
+        // function of (tile, w_fmt, x_fmt, g_fmt): all four are
+        // numerics identity, and a resume under any change refuses
+        // with the 'gemm' term named in the diff
+        let base = TrainConfig { recipe: "fp8_gemm".into(), ..Default::default() };
+        let fp = |c: &TrainConfig| numerics_fingerprint(c, 262_144);
+        let f0 = fp(&base);
+        assert!(f0.contains("gemm=t128:we4m3:xe4m3:ge5m2"), "{f0}");
+
+        let mut tile = base.clone();
+        tile.gemm_tile = 64;
+        assert_ne!(f0, fp(&tile), "tile size is numerics identity under fp8_gemm");
+        let d = diff_fingerprint_terms(&f0, &fp(&tile));
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].0, "gemm", "the diff must name the gemm term: {d:?}");
+
+        let mut gfmt = base.clone();
+        gfmt.gemm_g_fmt = "e4m3".into();
+        assert_ne!(f0, fp(&gfmt), "grad operand format is numerics identity");
+
+        // non-gemm recipes pin 'gemm=off' so the gemm keys are inert
+        // noise there, and switching the compute path itself diffs as
+        // off → t…, not as <absent>
+        let plain = TrainConfig::default();
+        let p0 = fp(&plain);
+        assert!(p0.contains("gemm=off"), "{p0}");
+        let mut plain_tile = plain.clone();
+        plain_tile.gemm_tile = 64;
+        assert_eq!(p0, fp(&plain_tile), "gemm keys are inert for non-gemm recipes");
+        let d2 = diff_fingerprint_terms(&p0, &f0);
+        assert!(
+            d2.iter().any(|(k, a, b)| k == "gemm" && a == "off" && b.starts_with("t128")),
+            "{d2:?}"
         );
     }
 

@@ -62,12 +62,29 @@ impl RecipeConfig {
 
 /// The grad artifact a logical recipe runs on (fp8_full trains on the
 /// fp8_smooth graph — moment formats only affect the optimizer artifact).
+///
+/// The `fp8_gemm*` pair routes host-side compute through the tile-wise
+/// FP8 GEMM path (`gemm::GemmEngine`) on top of the matching FP8
+/// graphs: `fp8_gemm` runs the plain-SwiGLU `fp8` graph (the
+/// configuration Fig. 2 shows destabilizing) and `fp8_gemm_smooth`
+/// the Smooth-SwiGLU `fp8_smooth` graph. Moments stay f32 so the two
+/// differ *only* in the compute recipe.
 pub fn grad_recipe_of(name: &str) -> &str {
     match name {
         "fp8_full" => "fp8_smooth",
         n if n.starts_with("fp8_adam_") => "fp8_smooth",
+        "fp8_gemm" => "fp8",
+        "fp8_gemm_smooth" => "fp8_smooth",
         n => n,
     }
+}
+
+/// Whether a logical recipe routes the step through the tile-wise FP8
+/// GEMM path (per-tile weight/grad quantization + amax feedback; see
+/// `gemm::GemmEngine`). These recipes carry the `gemm_*` keys into the
+/// snapshot numerics fingerprint.
+pub fn is_gemm_recipe(name: &str) -> bool {
+    matches!(name, "fp8_gemm" | "fp8_gemm_smooth")
 }
 
 /// Training-run configuration.
@@ -179,6 +196,21 @@ pub struct TrainConfig {
     /// attempt (shorter window forgets the pre-spike amaxes faster);
     /// effective history never drops below 2
     pub recovery_history_shrink: f64,
+    /// tile edge of the tile-wise FP8 GEMM path (`gemm::TileQuant`):
+    /// operands are quantized in `gemm_tile × gemm_tile` blocks, each
+    /// with its own pow2 amax scale. Only consumed by the `fp8_gemm*`
+    /// recipes, where it enters the numerics fingerprint — changing it
+    /// mid-campaign refuses to resume.
+    pub gemm_tile: usize,
+    /// FP8 format of the GEMM weight operand ("e4m3" | "e5m2")
+    pub gemm_w_fmt: String,
+    /// FP8 format of the GEMM activation operand ("e4m3" | "e5m2") —
+    /// consumed by the host-side GEMM API and benches; in-graph
+    /// activations keep their per-site delayed scales
+    pub gemm_x_fmt: String,
+    /// FP8 format of the GEMM gradient operand ("e4m3" | "e5m2";
+    /// default e5m2 — gradients need the range, PAPER.md §3)
+    pub gemm_g_fmt: String,
 }
 
 impl Default for TrainConfig {
@@ -219,6 +251,10 @@ impl Default for TrainConfig {
             max_recoveries: 4,
             recovery_margin_backoff: 1,
             recovery_history_shrink: 0.5,
+            gemm_tile: 128,
+            gemm_w_fmt: "e4m3".into(),
+            gemm_x_fmt: "e4m3".into(),
+            gemm_g_fmt: "e5m2".into(),
         }
     }
 }
@@ -305,6 +341,10 @@ impl TrainConfig {
                 "campaign.recovery_history_shrink" | "recovery_history_shrink" => {
                     c.recovery_history_shrink = v.as_f64()?
                 }
+                "gemm.tile" | "gemm_tile" => c.gemm_tile = v.as_usize()?,
+                "gemm.w_fmt" | "gemm_w_fmt" => c.gemm_w_fmt = v.as_str()?,
+                "gemm.x_fmt" | "gemm_x_fmt" => c.gemm_x_fmt = v.as_str()?,
+                "gemm.g_fmt" | "gemm_g_fmt" => c.gemm_g_fmt = v.as_str()?,
                 _ => return Err(format!("unknown config key '{k}'")),
             }
         }
@@ -349,11 +389,25 @@ impl TrainConfig {
                 c.collective_fmt
             ));
         }
+        // the gemm keys validate even when no gemm recipe is active, so
+        // a typo'd format cannot lurk until someone flips the recipe
+        c.gemm_config()?;
         Ok(c)
     }
 
     pub fn recipe_config(&self) -> RecipeConfig {
         RecipeConfig::by_name(&self.recipe)
+    }
+
+    /// The tile-wise GEMM operand configuration built from the
+    /// `gemm_*` keys (validated — see [`crate::gemm::GemmConfig`]).
+    pub fn gemm_config(&self) -> Result<crate::gemm::GemmConfig, String> {
+        crate::gemm::GemmConfig::from_keys(
+            self.gemm_tile,
+            &self.gemm_w_fmt,
+            &self.gemm_x_fmt,
+            &self.gemm_g_fmt,
+        )
     }
 
     /// Effective **logical** gradient-stream count: the data-parallel
@@ -408,6 +462,10 @@ impl TrainConfig {
             ("max_recoveries", Json::Num(self.max_recoveries as f64)),
             ("recovery_margin_backoff", Json::Num(self.recovery_margin_backoff as f64)),
             ("recovery_history_shrink", Json::Num(self.recovery_history_shrink)),
+            ("gemm_tile", Json::Num(self.gemm_tile as f64)),
+            ("gemm_w_fmt", Json::Str(self.gemm_w_fmt.clone())),
+            ("gemm_x_fmt", Json::Str(self.gemm_x_fmt.clone())),
+            ("gemm_g_fmt", Json::Str(self.gemm_g_fmt.clone())),
         ])
     }
 }
@@ -440,6 +498,57 @@ mod tests {
     #[test]
     fn unknown_key_rejected() {
         assert!(TrainConfig::load(None, &[("nope".into(), "1".into())]).is_err());
+    }
+
+    #[test]
+    fn gemm_recipes_select_the_matching_graphs() {
+        // fp8_gemm runs the plain-SwiGLU fp8 graph — the configuration
+        // Fig. 2 destabilizes — while fp8_gemm_smooth runs fp8_smooth;
+        // moments stay f32 so the pair differs only in compute
+        assert_eq!(grad_recipe_of("fp8_gemm"), "fp8");
+        assert_eq!(grad_recipe_of("fp8_gemm_smooth"), "fp8_smooth");
+        for name in ["fp8_gemm", "fp8_gemm_smooth"] {
+            assert!(is_gemm_recipe(name));
+            let rc = RecipeConfig::by_name(name);
+            assert_eq!(rc.name, grad_recipe_of(name));
+            assert_eq!(rc.m_fmt, "fp32");
+            assert_eq!(rc.v_fmt, "fp32");
+            assert_eq!(rc.master_dtype, "f32");
+        }
+        for name in ["bf16", "fp8", "fp8_smooth", "fp8_full", "fp8_adam_e4m3_e5m2"] {
+            assert!(!is_gemm_recipe(name), "{name} must not gate the gemm path");
+        }
+    }
+
+    #[test]
+    fn gemm_keys_parse_and_validate() {
+        let d = TrainConfig::default();
+        assert_eq!(d.gemm_tile, 128, "MXU-shaped tiles by default");
+        assert_eq!((d.gemm_w_fmt.as_str(), d.gemm_x_fmt.as_str()), ("e4m3", "e4m3"));
+        assert_eq!(d.gemm_g_fmt, "e5m2", "grads need E5M2 range by default");
+        d.gemm_config().unwrap();
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("gemm.tile".into(), "64".into()),
+                ("gemm_w_fmt".into(), "e5m2".into()),
+                ("gemm.g_fmt".into(), "e4m3".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(c.gemm_tile, 64);
+        assert_eq!(c.gemm_w_fmt, "e5m2");
+        assert_eq!(c.gemm_g_fmt, "e4m3");
+        let gc = c.gemm_config().unwrap();
+        assert_eq!(gc.tile, 64);
+        assert!(
+            TrainConfig::load(None, &[("gemm_tile".into(), "0".into())]).is_err(),
+            "a zero tile cannot partition a matrix"
+        );
+        assert!(
+            TrainConfig::load(None, &[("gemm_x_fmt".into(), "bf16".into())]).is_err(),
+            "only the two FP8 formats exist as GEMM operands"
+        );
     }
 
     #[test]

@@ -77,6 +77,7 @@ use crate::coordinator::topology::{
 };
 use crate::data::{Batcher, Corpus, CorpusConfig};
 use crate::fp8::{Fp8Format, E4M3, E5M2};
+use crate::gemm::GemmEngine;
 use crate::metrics::{StepMeter, StepStats};
 use crate::optimizer::{decay_groups, MomentBuffer, MomentStore, ShardLayout};
 use crate::runtime::tensor::HostTensor;
@@ -185,6 +186,10 @@ struct PassCtx<'a> {
     art: &'a Artifact,
     batcher: &'a Batcher,
     params: &'a ParamStore,
+    /// the tile-wise FP8 GEMM engine when an `fp8_gemm` recipe is
+    /// active (None otherwise); `params` then points at its QDQ'd
+    /// weight copy and each pass re-grids its gradients on exit
+    gemm: Option<&'a GemmEngine>,
     grad_accum: usize,
     ns: usize,
     step: usize,
@@ -249,6 +254,13 @@ fn run_worker_pass(
     let inv = 1.0 / ctx.grad_accum as f32;
     for g in buf.iter_mut() {
         *g *= inv;
+    }
+    // fp8_gemm recipes: put this stream's gradient matrices onto the
+    // per-tile E5M2 grid and feed the per-site amaxes. Same point in
+    // every schedule — after the microbatch mean, before any merge —
+    // so lane assignment and bucket overlap stay bit-invisible.
+    if let Some(g) = ctx.gemm {
+        g.qdq_grads(buf, &mut pass.amax);
     }
     Ok(pass)
 }
@@ -343,6 +355,12 @@ pub struct Trainer {
     pub params: ParamStore,
     /// the FP8 delayed-scaling state machine
     pub scale_mgr: ScaleManager,
+    /// tile-wise FP8 GEMM engine (`fp8_gemm` recipes only): holds the
+    /// per-step QDQ'd weight copy the grad passes read, while the f32
+    /// masters in `params` stay the optimizer's source of truth. Not
+    /// snapshot state — `refresh` rebuilds it from the masters every
+    /// step, so a resumed run re-derives identical bits
+    gemm: Option<GemmEngine>,
     /// loss-EMA / overflow divergence detector
     pub detector: DivergenceDetector,
     batcher: Batcher,
@@ -471,6 +489,18 @@ impl Trainer {
             },
         );
 
+        // fp8_gemm recipes: the tile-wise compute path — weights
+        // re-grid from the f32 masters once per step, grads re-grid
+        // per stream (see gemm::GemmEngine). Config keys validated
+        // here too, not only in TrainConfig::load, because tests and
+        // embedders build configs programmatically.
+        let gemm = if crate::config::is_gemm_recipe(&cfg.recipe) {
+            let gc = cfg.gemm_config().map_err(|e| anyhow!(e))?;
+            Some(GemmEngine::new(gc, man, &params))
+        } else {
+            None
+        };
+
         let total = params.total_elems();
         let sched = LrSchedule {
             peak: cfg.lr,
@@ -579,6 +609,7 @@ impl Trainer {
             poisoned: false,
             params,
             scale_mgr,
+            gemm,
             detector: DivergenceDetector::default(),
             batcher,
             sched,
@@ -708,10 +739,14 @@ impl Trainer {
     }
 
     fn pass_ctx(&self) -> PassCtx<'_> {
+        let gemm = self.gemm.as_ref();
         PassCtx {
             art: &self.grad_art,
             batcher: &self.batcher,
-            params: &self.params,
+            // gemm recipes read the tile-gridded weight copy; the f32
+            // masters stay with the optimizer
+            params: gemm.map(|g| &g.qparams).unwrap_or(&self.params),
+            gemm,
             grad_accum: self.cfg.grad_accum,
             ns: self.scale_mgr.n_sites(),
             step: self.step,
@@ -731,6 +766,12 @@ impl Trainer {
                 "trainer state is inconsistent after a failed optimizer step \
                  (moments partially updated); restart from a checkpoint"
             ));
+        }
+        // fp8_gemm recipes: refresh the tile-gridded weight copy from
+        // the masters once per step, before any pass — every schedule
+        // then reads identical quantized weights
+        if let Some(g) = self.gemm.as_mut() {
+            g.refresh(&self.params);
         }
         if self.force_phased_step || self.force_serial_workers || !self.cfg.overlap_comm {
             self.step_phased()
@@ -970,6 +1011,7 @@ impl Trainer {
             adam_art,
             params,
             batcher,
+            gemm,
             scale_mgr,
             shard_map,
             m_shards,
@@ -994,10 +1036,14 @@ impl Trainer {
         let chunk = shard_map.chunk;
         let step_now = *step_now;
         let panic_drill = *inject_worker_panic;
+        // step() already refreshed the engine's weight copy from the
+        // masters; the passes read that copy, Adam reads the masters
+        let gemm = gemm.as_ref();
         let ctx = PassCtx {
             art: grad_art,
             batcher,
-            params,
+            params: gemm.map(|g| &g.qparams).unwrap_or(params),
+            gemm,
             grad_accum,
             ns: scale_mgr.n_sites(),
             step: step_now,

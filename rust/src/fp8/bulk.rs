@@ -55,7 +55,7 @@ pub fn decode_lut(fmt: Fp8Format) -> &'static [f32; 256] {
 /// (61440, 65536) carry into biased exponent 31 with mantissa 0 —
 /// which *is* the ±inf code 0x7c.
 #[derive(Clone, Copy)]
-struct EncodeParams {
+pub struct EncodeParams {
     shift: u32,
     rebias: u32,
     hot_lo: u32,
@@ -63,7 +63,8 @@ struct EncodeParams {
 }
 
 impl EncodeParams {
-    fn of(fmt: Fp8Format) -> Self {
+    /// The encode constants for `fmt` (hoist out of per-element loops).
+    pub fn of(fmt: Fp8Format) -> Self {
         match fmt {
             // shift = 23 - man_bits; rebias = (127 - bias) << man_bits
             Fp8Format::E4M3 => EncodeParams {
@@ -83,9 +84,12 @@ impl EncodeParams {
 }
 
 /// One element through the table-driven encoder. Exactly equivalent to
-/// `fmt.encode(x)` for every f32 bit pattern (pinned by tests).
+/// `fmt.encode(x)` for every f32 bit pattern (pinned by tests). Public
+/// for callers with their own scaling policy (the tile-wise GEMM
+/// quantizer in [`crate::gemm`]); slice-at-a-time callers should prefer
+/// [`encode_slice_into`] / [`pack_scaled_into`].
 #[inline]
-fn encode_one(fmt: Fp8Format, p: EncodeParams, x: f32) -> u8 {
+pub fn encode_one(fmt: Fp8Format, p: EncodeParams, x: f32) -> u8 {
     let bits = x.to_bits();
     let abs = bits & 0x7fff_ffff;
     if abs >= p.hot_lo && abs < p.hot_hi {

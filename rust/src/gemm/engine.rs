@@ -1,0 +1,240 @@
+//! Trainer wiring for the `fp8_gemm` recipes: what the step loop does
+//! with the tile-wise quantizer every step.
+//!
+//! The grad graph itself is an AOT-compiled artifact, so the Rust side
+//! cannot swap individual matmuls inside it. What it *can* do — and
+//! what this engine does — is put every weight matrix the grad pass
+//! consumes onto the per-tile FP8 grid on entry, put every gradient
+//! matrix the optimizer consumes onto the per-tile E5M2 grid on exit,
+//! and feed the observed per-site amaxes back into the delayed-scaling
+//! [`crate::scaling::ScaleManager`]. Together with the FP8 artifact
+//! recipes (which quantize the activations at the in-graph sites) this
+//! closes the "fully-FP8 step" loop of PAPER.md §4; the standalone
+//! kernels in [`super::matmul`] are the bit-exact reference for what
+//! the fused compute does to tile-gridded operands.
+//!
+//! Schedule invariance (the property `rust/tests/collective.rs` and
+//! the trainer tests guard jealously): both hooks are defined purely
+//! per stream / per step —
+//!
+//! * the weight QDQ happens once per step, *before* any pass, on a
+//!   persistent copy of the master params (Adam keeps updating the f32
+//!   masters, exactly like the master-weight discipline of the FP8
+//!   recipes);
+//! * the gradient QDQ happens inside each stream's own pass, after the
+//!   microbatch mean — the same point for the serial, phased and
+//!   overlapped schedules — so grad merge order and bucket overlap
+//!   cannot observe different bits.
+
+use crate::coordinator::params::ParamStore;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::HostTensor;
+
+use super::tile::qdq_tilewise;
+use super::GemmConfig;
+
+/// One quantizable weight tensor: trailing two dims form the matrices,
+/// leading dims stack them (one per layer for `[L, d, f]` weights).
+struct MatSpec {
+    /// index into `ParamStore::tensors`
+    param_idx: usize,
+    /// element offset of this tensor in the flat grad space
+    flat_off: usize,
+    /// matrix rows (second-to-last dim)
+    rows: usize,
+    /// matrix cols (last dim)
+    cols: usize,
+    /// number of stacked matrices (product of leading dims)
+    count: usize,
+    /// per stacked matrix: the weight amax site, if the manifest has
+    /// a quantization site named after this param
+    w_sites: Vec<Option<usize>>,
+    /// per stacked matrix: the gradient amax site (`g_<name>`), if any
+    g_sites: Vec<Option<usize>>,
+}
+
+/// Per-step state of the tile-wise FP8 GEMM path (see module doc).
+pub struct GemmEngine {
+    /// the operand formats and tile size in force
+    pub cfg: GemmConfig,
+    /// per-tile QDQ'd copy of the params — what the grad passes read
+    pub qparams: ParamStore,
+    mats: Vec<MatSpec>,
+    /// per-site weight amaxes observed at the last
+    /// [`refresh`](Self::refresh); zero where this engine feeds nothing
+    site_amax: Vec<f32>,
+}
+
+impl GemmEngine {
+    /// Build the engine for a manifest + freshly-initialized params.
+    ///
+    /// Quantizable tensors are the normal-init weights with at least
+    /// two dims; norm gains (`init_std < 0`) and vectors stay f32 —
+    /// the paper keeps those high-precision too.
+    pub fn new(cfg: GemmConfig, man: &Manifest, params: &ParamStore) -> Self {
+        let tensors = params
+            .specs
+            .iter()
+            .zip(&params.tensors)
+            .map(|(s, t)| HostTensor::from_f32(&s.shape, t.f32s().to_vec()))
+            .collect();
+        let qparams = ParamStore { specs: params.specs.clone(), tensors };
+        let mut mats = Vec::new();
+        let mut flat_off = 0usize;
+        for (idx, spec) in params.specs.iter().enumerate() {
+            let numel = spec.numel();
+            if spec.init_std >= 0.0 && spec.shape.len() >= 2 {
+                let rows = spec.shape[spec.shape.len() - 2];
+                let cols = spec.shape[spec.shape.len() - 1];
+                let count = numel / (rows * cols).max(1);
+                let g_name = format!("g_{}", spec.name);
+                let w_sites =
+                    (0..count).map(|l| man.site_index(l, &spec.name)).collect();
+                let g_sites = (0..count).map(|l| man.site_index(l, &g_name)).collect();
+                mats.push(MatSpec { param_idx: idx, flat_off, rows, cols, count, w_sites, g_sites });
+            }
+            flat_off += numel;
+        }
+        let n_sites = man.n_layers * man.sites_per_layer.len();
+        Self { cfg, qparams, mats, site_amax: vec![0.0; n_sites] }
+    }
+
+    /// Once per step, before any pass: copy the f32 masters and put
+    /// every weight matrix onto the per-tile `w_fmt` grid, recording
+    /// per-matrix amaxes for the site feed. Deterministic given the
+    /// masters — every stream sees the same quantized weights.
+    pub fn refresh(&mut self, params: &ParamStore) {
+        self.site_amax.fill(0.0);
+        for (dst, src) in self.qparams.tensors.iter_mut().zip(&params.tensors) {
+            dst.f32s_mut().copy_from_slice(src.f32s());
+        }
+        for m in &self.mats {
+            let per = m.rows * m.cols;
+            let data = self.qparams.tensors[m.param_idx].f32s_mut();
+            for l in 0..m.count {
+                let sub = &mut data[l * per..(l + 1) * per];
+                let amax = qdq_tilewise(self.cfg.w_fmt, self.cfg.tile, sub, m.rows, m.cols);
+                if let Some(s) = m.w_sites[l] {
+                    if s < self.site_amax.len() {
+                        self.site_amax[s] = self.site_amax[s].max(amax);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Per stream, after the microbatch mean: put every weight-shaped
+    /// gradient matrix of the flat buffer onto the per-tile `g_fmt`
+    /// grid (E5M2 by default) and max-fold the observed amaxes into
+    /// this pass's amax vector at the `g_*` sites, alongside the
+    /// weight amaxes from the last [`refresh`](Self::refresh). The
+    /// max-fold is idempotent and order-free, so merging passes in any
+    /// schedule yields the same amax vector.
+    pub fn qdq_grads(&self, grads: &mut [f32], amax: &mut [f32]) {
+        for m in &self.mats {
+            let per = m.rows * m.cols;
+            for l in 0..m.count {
+                let off = m.flat_off + l * per;
+                if off + per > grads.len() {
+                    break; // foreign (non-param) flat layout: feed nothing
+                }
+                let sub = &mut grads[off..off + per];
+                let a = qdq_tilewise(self.cfg.g_fmt, self.cfg.tile, sub, m.rows, m.cols);
+                if let Some(s) = m.g_sites[l] {
+                    if s < amax.len() {
+                        amax[s] = amax[s].max(a);
+                    }
+                }
+            }
+        }
+        for (dst, &w) in amax.iter_mut().zip(&self.site_amax) {
+            if w > 0.0 {
+                *dst = dst.max(w);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn manifest() -> Manifest {
+        let j = Json::parse(
+            r#"{"kind":"grad","n_layers":2,
+                "sites_per_layer":["w1","g_w1"],
+                "params":[
+                  {"name":"ln_1","shape":[2,8],"init_std":-1.0},
+                  {"name":"w1","shape":[2,8,6],"init_std":0.02},
+                  {"name":"head","shape":[8,4],"init_std":0.02}]}"#,
+        )
+        .unwrap();
+        Manifest::from_json("t".into(), j).unwrap()
+    }
+
+    fn engine() -> (GemmEngine, ParamStore) {
+        let man = manifest();
+        let params = ParamStore::init(&man, 7);
+        let cfg = GemmConfig { tile: 4, ..Default::default() };
+        (GemmEngine::new(cfg, &man, &params), params)
+    }
+
+    #[test]
+    fn refresh_grids_weights_and_leaves_gains_alone() {
+        let (mut e, params) = engine();
+        e.refresh(&params);
+        // norm gains copied verbatim
+        assert_eq!(e.qparams.tensors[0].f32s(), params.tensors[0].f32s());
+        // w1 landed on the E4M3 tile grid: QDQ is idempotent
+        let w1 = e.qparams.tensors[1].f32s().to_vec();
+        let mut again = w1.clone();
+        for l in 0..2 {
+            qdq_tilewise(e.cfg.w_fmt, e.cfg.tile, &mut again[l * 48..(l + 1) * 48], 8, 6);
+        }
+        for (a, b) in w1.iter().zip(&again) {
+            assert_eq!(a.to_bits(), b.to_bits(), "weight copy must already be on-grid");
+        }
+        // ... and differs from the masters (0.02-std weights are off-grid)
+        assert_ne!(e.qparams.tensors[1].f32s(), params.tensors[1].f32s());
+        // weight amax fed at the per-layer w1 sites (indices 0 and 2)
+        assert!(e.site_amax[0] > 0.0 && e.site_amax[2] > 0.0);
+        assert_eq!(e.site_amax[1], 0.0, "no weight feed at the g_w1 site");
+    }
+
+    #[test]
+    fn refresh_is_deterministic_and_tracks_masters() {
+        let (mut e, mut params) = engine();
+        e.refresh(&params);
+        let first = e.qparams.tensors[1].f32s().to_vec();
+        e.refresh(&params);
+        assert_eq!(e.qparams.tensors[1].f32s(), &first[..], "same masters, same grid");
+        params.tensors[1].f32s_mut()[0] = 3.0;
+        e.refresh(&params);
+        assert_ne!(e.qparams.tensors[1].f32s(), &first[..], "master update must show up");
+    }
+
+    #[test]
+    fn qdq_grads_grids_weight_grads_and_feeds_amax() {
+        let (mut e, params) = engine();
+        e.refresh(&params);
+        let n: usize = params.specs.iter().map(|s| s.numel()).sum();
+        let mut grads: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.37).sin() * 0.1).collect();
+        let before = grads.clone();
+        let mut amax = vec![0.0f32; 4];
+        e.qdq_grads(&mut grads, &mut amax);
+        // the ln_1 slice (first 16 elements) is untouched
+        assert_eq!(&grads[..16], &before[..16]);
+        // the w1 slice moved onto the E5M2 grid
+        assert_ne!(&grads[16..16 + 96], &before[16..16 + 96]);
+        // grad amax fed at g_w1 sites (1 and 3), weight amax at 0 and 2
+        assert!(amax[1] > 0.0 && amax[3] > 0.0);
+        assert!(amax[0] > 0.0 && amax[2] > 0.0);
+        // idempotent: a second QDQ of the already-gridded grads is a no-op
+        let mut twice = grads.clone();
+        e.qdq_grads(&mut twice, &mut amax);
+        for (a, b) in grads.iter().zip(&twice) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

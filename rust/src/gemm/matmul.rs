@@ -1,0 +1,308 @@
+//! Tile-wise-scaled FP8 matmul, forward and backward, with f32
+//! accumulation in a **pinned summation order**.
+//!
+//! The order contract, which every kernel in this module obeys and the
+//! differential suite in `rust/tests/gemm.rs` enforces bit for bit:
+//!
+//! > each output element `C[i, j]` is one f32 accumulator, fed the
+//! > products `op(A)[i, k] · op(B)[k, j]` in ascending `k`, starting
+//! > from `0.0`.
+//!
+//! Tiles therefore affect only the *quantization grid* of the
+//! operands, never the summation order: the cache-friendly `i-k-j`
+//! kernel below feeds every `C[i, j]` in exactly the same order as the
+//! naive `i-j-k` triple loop, so the fast path and the scalar serial
+//! reference are bit-identical by construction (f32 addition is not
+//! associative — pinning the order is what makes "bit-exact" a
+//! meaningful test rather than a tolerance).
+//!
+//! FP8 operands decode as `decode(byte) / tile_scale` (real division;
+//! see [`super::tile`]), are never re-rounded, and accumulate in f32 —
+//! the recipe of "Towards Fully FP8 GEMM LLM Training at Scale" and
+//! PAPER.md §4's compute path. NaN is transparent: a poisoned operand
+//! element poisons exactly the output row/column pairs whose dot
+//! products consume it.
+
+use super::tile::TileQuant;
+use super::GemmConfig;
+
+/// A dense row-major f32 result matrix.
+#[derive(Clone, Debug)]
+pub struct Matrix {
+    /// row-major `[rows, cols]` values
+    pub data: Vec<f32>,
+    /// result rows
+    pub rows: usize,
+    /// result cols
+    pub cols: usize,
+}
+
+impl Matrix {
+    /// Element accessor (row-major).
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+}
+
+/// Dims of `op(M)` for a `[rows, cols]` operand under an optional
+/// transpose.
+#[inline]
+fn op_dims(rows: usize, cols: usize, trans: bool) -> (usize, usize) {
+    if trans {
+        (cols, rows)
+    } else {
+        (rows, cols)
+    }
+}
+
+/// Materialize `op(M)` as a row-major copy (gather transpose).
+fn gather(src: &[f32], rows: usize, cols: usize, trans: bool) -> Vec<f32> {
+    if !trans {
+        return src.to_vec();
+    }
+    let mut out = vec![0.0f32; src.len()];
+    for i in 0..rows {
+        for j in 0..cols {
+            out[j * rows + i] = src[i * cols + j];
+        }
+    }
+    out
+}
+
+/// Shared shape check: `op(A)` must be `[m, k]`, `op(B)` `[k, n]`.
+fn check_shapes(
+    (ar, ac): (usize, usize),
+    ta: bool,
+    (br, bc): (usize, usize),
+    tb: bool,
+) -> Result<(usize, usize, usize), String> {
+    let (m, k) = op_dims(ar, ac, ta);
+    let (kb, n) = op_dims(br, bc, tb);
+    if k != kb {
+        return Err(format!(
+            "gemm shape mismatch: op(A) is [{m}, {k}] but op(B) is [{kb}, {n}]"
+        ));
+    }
+    Ok((m, n, k))
+}
+
+/// The pinned-order f32 kernel over pre-materialized row-major
+/// operands: `i-k-j` loop order, one accumulator per output element,
+/// ascending `k` — see the module doc for why this is bit-identical to
+/// the naive `i-j-k` reference.
+fn kernel_f32(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// f32-mode tiled GEMM: `C = op(A) · op(B)` over plain f32 operands
+/// under the pinned accumulation order. Used as the bf16-free baseline
+/// in benches and as the carrier kernel of [`matmul_fp8`].
+pub fn matmul_f32(
+    a: &[f32],
+    a_rows: usize,
+    a_cols: usize,
+    trans_a: bool,
+    b: &[f32],
+    b_rows: usize,
+    b_cols: usize,
+    trans_b: bool,
+) -> Result<Matrix, String> {
+    assert_eq!(a.len(), a_rows * a_cols, "operand A length mismatch");
+    assert_eq!(b.len(), b_rows * b_cols, "operand B length mismatch");
+    let (m, n, k) = check_shapes((a_rows, a_cols), trans_a, (b_rows, b_cols), trans_b)?;
+    let ae = gather(a, a_rows, a_cols, trans_a);
+    let be = gather(b, b_rows, b_cols, trans_b);
+    Ok(Matrix { data: kernel_f32(&ae, &be, m, n, k), rows: m, cols: n })
+}
+
+/// Naive serial f32 reference: direct `i-j-k` triple loop indexing the
+/// original (untransposed) operand storage. The accumulation order per
+/// output element is identical to [`matmul_f32`]'s — ascending `k`
+/// into one f32 accumulator — which the differential tests hold to
+/// bit-equality.
+pub fn matmul_f32_naive(
+    a: &[f32],
+    a_rows: usize,
+    a_cols: usize,
+    trans_a: bool,
+    b: &[f32],
+    b_rows: usize,
+    b_cols: usize,
+    trans_b: bool,
+) -> Result<Matrix, String> {
+    assert_eq!(a.len(), a_rows * a_cols, "operand A length mismatch");
+    assert_eq!(b.len(), b_rows * b_cols, "operand B length mismatch");
+    let (m, n, k) = check_shapes((a_rows, a_cols), trans_a, (b_rows, b_cols), trans_b)?;
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                let av = if trans_a { a[kk * a_cols + i] } else { a[i * a_cols + kk] };
+                let bv = if trans_b { b[j * b_cols + kk] } else { b[kk * b_cols + j] };
+                acc += av * bv;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    Ok(Matrix { data: c, rows: m, cols: n })
+}
+
+/// Tile-wise-scaled FP8 GEMM: bulk-decode both operands on their tile
+/// grids (`LUT / scale`, bit-identical to the scalar decode) and run
+/// the pinned-order f32 kernel. `C = op(A) · op(B)`.
+pub fn matmul_fp8(
+    a: &TileQuant,
+    trans_a: bool,
+    b: &TileQuant,
+    trans_b: bool,
+) -> Result<Matrix, String> {
+    let (m, n, k) = check_shapes((a.rows, a.cols), trans_a, (b.rows, b.cols), trans_b)?;
+    let mut ad = vec![0.0f32; a.rows * a.cols];
+    a.dequantize_buf(&mut ad);
+    let mut bd = vec![0.0f32; b.rows * b.cols];
+    b.dequantize_buf(&mut bd);
+    let ae = gather(&ad, a.rows, a.cols, trans_a);
+    let be = gather(&bd, b.rows, b.cols, trans_b);
+    Ok(Matrix { data: kernel_f32(&ae, &be, m, n, k), rows: m, cols: n })
+}
+
+/// Scalar serial FP8 reference: decodes each element on the fly
+/// through the scalar codec ([`TileQuant::get`]) inside a naive
+/// `i-j-k` loop. [`matmul_fp8`] must match this bit for bit across
+/// every shape × format × transpose combination (pinned by
+/// `rust/tests/gemm.rs`).
+pub fn matmul_fp8_ref(
+    a: &TileQuant,
+    trans_a: bool,
+    b: &TileQuant,
+    trans_b: bool,
+) -> Result<Matrix, String> {
+    let (m, n, k) = check_shapes((a.rows, a.cols), trans_a, (b.rows, b.cols), trans_b)?;
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                let av = if trans_a { a.get(kk, i) } else { a.get(i, kk) };
+                let bv = if trans_b { b.get(j, kk) } else { b.get(kk, j) };
+                acc += av * bv;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    Ok(Matrix { data: c, rows: m, cols: n })
+}
+
+/// Forward pass of a linear layer `Y = X · W` with per-tile
+/// quantization of both operands (`X` in `cfg.x_fmt`, `W` in
+/// `cfg.w_fmt`). Returns the output along with the quantized operands
+/// so the backward pass can reuse them — exactly the buffers a real
+/// kernel would keep resident.
+pub fn fp8_linear_fwd(
+    cfg: &GemmConfig,
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+) -> Result<(Matrix, TileQuant, TileQuant), String> {
+    let xq = TileQuant::quantize(cfg.x_fmt, cfg.tile, x, m, k);
+    let wq = TileQuant::quantize(cfg.w_fmt, cfg.tile, w, k, n);
+    let y = matmul_fp8(&xq, false, &wq, false)?;
+    Ok((y, xq, wq))
+}
+
+/// Backward pass of `Y = X · W` given the upstream gradient `dY`
+/// (quantized per tile to `cfg.g_fmt`, E5M2 by default — gradients
+/// need E5M2's range, PAPER.md §3):
+///
+/// * `dX = dY · Wᵀ`
+/// * `dW = Xᵀ · dY`
+///
+/// Both are tile-wise-scaled FP8 GEMMs under the pinned f32
+/// accumulation order.
+pub fn fp8_linear_bwd(
+    cfg: &GemmConfig,
+    dy: &[f32],
+    xq: &TileQuant,
+    wq: &TileQuant,
+) -> Result<(Matrix, Matrix), String> {
+    let (m, n) = (xq.rows, wq.cols);
+    assert_eq!(dy.len(), m * n, "dY length mismatch");
+    let dyq = TileQuant::quantize(cfg.g_fmt, cfg.tile, dy, m, n);
+    let dx = matmul_fp8(&dyq, false, wq, true)?;
+    let dw = matmul_fp8(xq, true, &dyq, false)?;
+    Ok((dx, dw))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::{E4M3, E5M2};
+
+    fn ramp(n: usize, phase: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i as f32) * 0.173 + phase).sin() * 2.0).collect()
+    }
+
+    #[test]
+    fn f32_tiled_matches_naive_bitwise() {
+        let (m, k, n) = (9, 7, 11);
+        let a = ramp(m * k, 0.0);
+        let b = ramp(k * n, 1.0);
+        let fast = matmul_f32(&a, m, k, false, &b, k, n, false).unwrap();
+        let slow = matmul_f32_naive(&a, m, k, false, &b, k, n, false).unwrap();
+        for (x, y) in fast.data.iter().zip(&slow.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn fp8_fast_matches_scalar_reference_bitwise() {
+        let (m, k, n) = (10, 6, 8);
+        let a = TileQuant::quantize(E4M3, 4, &ramp(m * k, 0.2), m, k);
+        let b = TileQuant::quantize(E5M2, 4, &ramp(k * n, 0.9), k, n);
+        let fast = matmul_fp8(&a, false, &b, false).unwrap();
+        let slow = matmul_fp8_ref(&a, false, &b, false).unwrap();
+        for (x, y) in fast.data.iter().zip(&slow.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error() {
+        let a = ramp(6, 0.0);
+        let b = ramp(6, 0.0);
+        assert!(matmul_f32(&a, 2, 3, false, &b, 2, 3, false).is_err());
+        assert!(matmul_f32(&a, 2, 3, false, &b, 3, 2, false).is_ok());
+        assert!(matmul_f32(&a, 2, 3, true, &b, 2, 3, false).is_ok());
+    }
+
+    #[test]
+    fn linear_fwd_bwd_shapes_and_nan_transparency() {
+        let cfg = GemmConfig::default();
+        let (m, k, n) = (5, 4, 3);
+        let mut x = ramp(m * k, 0.1);
+        let w = ramp(k * n, 0.7);
+        x[k] = f32::NAN; // poisons row 1 of Y
+        let (y, xq, wq) = fp8_linear_fwd(&cfg, &x, m, k, &w, n).unwrap();
+        assert_eq!((y.rows, y.cols), (m, n));
+        assert!((0..n).all(|j| y.at(1, j).is_nan()), "poisoned row is NaN");
+        assert!(y.at(0, 0).is_finite(), "other rows unharmed");
+        let dy = ramp(m * n, 0.4);
+        let (dx, dw) = fp8_linear_bwd(&cfg, &dy, &xq, &wq).unwrap();
+        assert_eq!((dx.rows, dx.cols), (m, k));
+        assert_eq!((dw.rows, dw.cols), (k, n));
+    }
+}

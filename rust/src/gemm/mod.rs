@@ -1,0 +1,124 @@
+//! Tile-wise-scaled FP8 GEMM — the paper's *compute* path, in Rust.
+//!
+//! PAPER.md §4 claims stable FP8 compute over trillion-token horizons;
+//! until this module, the repo exercised FP8 only in the optimizer
+//! moments, the checkpoints and on the wire, while the grad passes
+//! accumulated in f32 end to end. This subsystem adds the missing
+//! column, following "Towards Fully FP8 GEMM LLM Training at Scale"
+//! (PAPERS.md): per-tile (default 128 × 128, matching the MXU systolic
+//! array) pow2 amax scaling, E4M3 weights/activations, E5M2 gradients,
+//! and f32 accumulation in a pinned summation order so bit-exactness
+//! is testable rather than aspirational.
+//!
+//! Layout of the subsystem:
+//!
+//! * [`tile`] — the per-tile quantizer ([`TileQuant`],
+//!   [`qdq_tilewise`]): finite-only amax per tile, pow2 scale via
+//!   [`crate::fp8::compute_scale`], NaN/Inf transparent, encode/decode
+//!   through the table-driven [`crate::fp8::bulk`] codec.
+//! * [`matmul`] — forward `Y = X·W` and backward `dX = dY·Wᵀ`,
+//!   `dW = Xᵀ·dY` kernels, each with a scalar serial reference the
+//!   fast path must match bit for bit (`rust/tests/gemm.rs`).
+//! * [`engine`] — the trainer wiring for the `fp8_gemm` /
+//!   `fp8_gemm_smooth` recipes: per-tile QDQ of the weight copy the
+//!   grad passes consume, per-stream E5M2 QDQ of the accumulated
+//!   gradients, and per-site amax feedback into the delayed-scaling
+//!   [`crate::scaling::ScaleManager`].
+//!
+//! Smooth-SwiGLU's per-channel pow2 scales
+//! ([`crate::coordinator::folding`], `examples/smooth_swiglu_inference.rs`)
+//! commute with the tile quantization grid — multiplying by 2^e only
+//! shifts the f32 exponent, so `qdq(x · 2^e) == qdq(x) · 2^e` bit for
+//! bit inside the safe exponent band (pinned by the property suite).
+//! That commutation is exactly why folding the scales into `w1`/`w3`
+//! costs nothing in quantization fidelity.
+
+pub mod engine;
+pub mod matmul;
+pub mod tile;
+
+pub use engine::GemmEngine;
+pub use matmul::{
+    fp8_linear_bwd, fp8_linear_fwd, matmul_f32, matmul_f32_naive, matmul_fp8, matmul_fp8_ref,
+    Matrix,
+};
+pub use tile::{qdq_tilewise, scale_pow2, TileQuant};
+
+use crate::fp8::{Fp8Format, E4M3, E5M2};
+
+/// Per-operand configuration of the tile-wise FP8 GEMM path, built
+/// from the `gemm_*` config keys (see docs/OPERATIONS.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmConfig {
+    /// tile edge length (tiles are `tile × tile`; default 128)
+    pub tile: usize,
+    /// weight operand format (default E4M3)
+    pub w_fmt: Fp8Format,
+    /// activation operand format (default E4M3)
+    pub x_fmt: Fp8Format,
+    /// gradient operand format (default E5M2 — gradients need range)
+    pub g_fmt: Fp8Format,
+}
+
+impl Default for GemmConfig {
+    fn default() -> Self {
+        Self { tile: 128, w_fmt: E4M3, x_fmt: E4M3, g_fmt: E5M2 }
+    }
+}
+
+impl GemmConfig {
+    /// Build from the raw config-key values, validating tile and
+    /// format names (`"e4m3"` / `"e5m2"`). Shared by the config
+    /// loader's validation and `Trainer::new` so both reject the same
+    /// inputs.
+    pub fn from_keys(tile: usize, w_fmt: &str, x_fmt: &str, g_fmt: &str) -> Result<Self, String> {
+        if tile < 1 {
+            return Err("gemm_tile must be >= 1".into());
+        }
+        Ok(Self {
+            tile,
+            w_fmt: parse_fmt(w_fmt)?,
+            x_fmt: parse_fmt(x_fmt)?,
+            g_fmt: parse_fmt(g_fmt)?,
+        })
+    }
+}
+
+/// Parse an FP8 format name as the `gemm_*_fmt` config keys spell it.
+pub fn parse_fmt(name: &str) -> Result<Fp8Format, String> {
+    match name {
+        "e4m3" => Ok(E4M3),
+        "e5m2" => Ok(E5M2),
+        other => Err(format!("unknown FP8 format '{other}' (expected e4m3 or e5m2)")),
+    }
+}
+
+/// Canonical config-key spelling of an FP8 format (inverse of
+/// [`parse_fmt`]; used by the numerics fingerprint).
+pub fn fmt_name(fmt: Fp8Format) -> &'static str {
+    match fmt {
+        Fp8Format::E4M3 => "e4m3",
+        Fp8Format::E5M2 => "e5m2",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_from_keys_validates() {
+        let c = GemmConfig::from_keys(64, "e4m3", "e4m3", "e5m2").unwrap();
+        assert_eq!(c, GemmConfig { tile: 64, w_fmt: E4M3, x_fmt: E4M3, g_fmt: E5M2 });
+        assert!(GemmConfig::from_keys(0, "e4m3", "e4m3", "e5m2").is_err());
+        assert!(GemmConfig::from_keys(64, "fp16", "e4m3", "e5m2").is_err());
+        assert_eq!(GemmConfig::default(), GemmConfig::from_keys(128, "e4m3", "e4m3", "e5m2").unwrap());
+    }
+
+    #[test]
+    fn fmt_name_roundtrips() {
+        for fmt in [E4M3, E5M2] {
+            assert_eq!(parse_fmt(fmt_name(fmt)).unwrap(), fmt);
+        }
+    }
+}

@@ -1,0 +1,315 @@
+//! Per-tile pow2 amax quantization for the FP8 GEMM operands.
+//!
+//! A row-major `[rows, cols]` f32 matrix is cut into `tile × tile`
+//! blocks (ragged at the right/bottom edges); every block gets its own
+//! just-in-time pow2 scale and is encoded to FP8 bytes through the
+//! table-driven codec in [`crate::fp8::bulk`]. The documented scale
+//! rule, pinned by the property suite in `rust/tests/property.rs`:
+//!
+//! * **amax** is the maximum `|x|` over the tile's *finite* elements
+//!   only. NaN and ±Inf are invisible to the fold, so a poisoned tile
+//!   still picks a finite scale and a poisoned *matrix* never perturbs
+//!   the scale of any other tile.
+//! * **scale** is [`fp8::compute_scale`]`(fmt, amax)` — the same pow2
+//!   policy as the delayed-scaling state machine and the Python side:
+//!   `2^floor(log2(fmt.max / amax))`, halved if `amax * scale` still
+//!   overshoots. An all-zero (or all-non-finite) tile has amax 0,
+//!   which the `1e-12` clamp inside `compute_scale` maps to the
+//!   largest representable pow2 scale — zeros encode to zero under any
+//!   scale, so the choice is benign and deterministic.
+//! * **non-finite elements** encode through the scalar codec with no
+//!   scaling or saturation: NaN stays NaN in either format, and ±Inf
+//!   becomes ±Inf in E5M2 / NaN in E4M3. Unlike the wire codec's
+//!   [`fp8::bulk::pack_scaled_into`] (which clamps, because a
+//!   collective must deliver *bounded* payloads), the GEMM must not
+//!   turn an Inf into a plausible ±448 contribution — a poisoned tile
+//!   poisons its dot products, and the divergence detector sees it.
+//!
+//! Dequantization is `decode(byte) / scale` with real division (not a
+//! reciprocal multiply), bit-identical to the scalar reference
+//! `Fp8Format::decode` for every code — the differential suite in
+//! `rust/tests/gemm.rs` holds the fast and reference paths to equality
+//! bit for bit.
+
+use crate::fp8::{self, bulk, Fp8Format};
+
+/// A tile-quantized matrix: FP8 bytes in the source's row-major layout
+/// plus one pow2 scale (and the finite amax it was chosen from) per
+/// `tile × tile` block.
+#[derive(Clone, Debug)]
+pub struct TileQuant {
+    /// element format of `bytes`
+    pub fmt: Fp8Format,
+    /// tile edge length (blocks are `tile × tile`, ragged at the edges)
+    pub tile: usize,
+    /// matrix rows
+    pub rows: usize,
+    /// matrix cols
+    pub cols: usize,
+    /// FP8 codes, row-major `[rows, cols]` (same layout as the input)
+    pub bytes: Vec<u8>,
+    /// per-tile pow2 scales, row-major `[tile_rows, tile_cols]`
+    pub scales: Vec<f32>,
+    /// per-tile finite amaxes the scales were chosen from (same layout)
+    pub amaxes: Vec<f32>,
+}
+
+#[inline]
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Finite-only amax over one tile of a row-major matrix.
+#[inline]
+fn tile_finite_amax(data: &[f32], cols: usize, r0: usize, r1: usize, c0: usize, c1: usize) -> f32 {
+    let mut a = 0.0f32;
+    for i in r0..r1 {
+        for &x in &data[i * cols + c0..i * cols + c1] {
+            if x.is_finite() {
+                a = a.max(x.abs());
+            }
+        }
+    }
+    a
+}
+
+/// One element through the tile encoder: finite values are scaled,
+/// clamped to the format range and encoded on the hot path; non-finite
+/// values go straight through the scalar codec (no scale, no clamp —
+/// see the module doc on Inf propagation).
+#[inline]
+fn encode_elem(fmt: Fp8Format, p: bulk::EncodeParams, max: f32, scale: f32, x: f32) -> u8 {
+    if x.is_finite() {
+        bulk::encode_one(fmt, p, (x * scale).clamp(-max, max))
+    } else {
+        fmt.encode(x)
+    }
+}
+
+impl TileQuant {
+    /// Quantize a row-major `[rows, cols]` f32 matrix with per-tile
+    /// pow2 scaling (see the module doc for the exact scale rule).
+    pub fn quantize(fmt: Fp8Format, tile: usize, data: &[f32], rows: usize, cols: usize) -> Self {
+        assert!(tile >= 1, "gemm tile must be >= 1");
+        assert_eq!(data.len(), rows * cols, "matrix data length mismatch");
+        let (tr, tc) = (ceil_div(rows, tile.max(1)), ceil_div(cols, tile.max(1)));
+        let mut scales = vec![1.0f32; tr * tc];
+        let mut amaxes = vec![0.0f32; tr * tc];
+        let mut bytes = vec![0u8; data.len()];
+        let p = bulk::EncodeParams::of(fmt);
+        let max = fmt.max();
+        for ti in 0..tr {
+            let (r0, r1) = (ti * tile, (ti * tile + tile).min(rows));
+            for tj in 0..tc {
+                let (c0, c1) = (tj * tile, (tj * tile + tile).min(cols));
+                let a = tile_finite_amax(data, cols, r0, r1, c0, c1);
+                let s = fp8::compute_scale(fmt, a);
+                amaxes[ti * tc + tj] = a;
+                scales[ti * tc + tj] = s;
+                for i in r0..r1 {
+                    for j in c0..c1 {
+                        bytes[i * cols + j] = encode_elem(fmt, p, max, s, data[i * cols + j]);
+                    }
+                }
+            }
+        }
+        Self { fmt, tile, rows, cols, bytes, scales, amaxes }
+    }
+
+    /// Tile-grid shape `(tile_rows, tile_cols)`.
+    pub fn tiles(&self) -> (usize, usize) {
+        (ceil_div(self.rows, self.tile), ceil_div(self.cols, self.tile))
+    }
+
+    /// The pow2 scale governing element `(i, j)`.
+    pub fn scale_at(&self, i: usize, j: usize) -> f32 {
+        let tc = ceil_div(self.cols, self.tile);
+        self.scales[(i / self.tile) * tc + j / self.tile]
+    }
+
+    /// Scalar-reference decode of element `(i, j)`:
+    /// `Fp8Format::decode(byte) / scale`. The differential tests pin
+    /// [`dequantize_buf`](Self::dequantize_buf) to this, bit for bit.
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.fmt.decode(self.bytes[i * self.cols + j]) / self.scale_at(i, j)
+    }
+
+    /// Bulk decode (LUT + per-tile descale division) into an
+    /// exact-size `[rows * cols]` buffer.
+    pub fn dequantize_buf(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.rows * self.cols, "dequantize buffer size mismatch");
+        let lut = bulk::decode_lut(self.fmt);
+        let (tr, tc) = self.tiles();
+        for ti in 0..tr {
+            let (r0, r1) = (ti * self.tile, (ti * self.tile + self.tile).min(self.rows));
+            for tj in 0..tc {
+                let (c0, c1) = (tj * self.tile, (tj * self.tile + self.tile).min(self.cols));
+                let s = self.scales[ti * tc + tj];
+                for i in r0..r1 {
+                    for j in c0..c1 {
+                        out[i * self.cols + j] = lut[self.bytes[i * self.cols + j] as usize] / s;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Finite amax of the whole matrix (max over the per-tile amaxes) —
+    /// the value the trainer feeds back into the delayed-scaling
+    /// [`crate::scaling::ScaleManager`] for this operand's site.
+    pub fn amax(&self) -> f32 {
+        self.amaxes.iter().fold(0.0f32, |a, &x| a.max(x))
+    }
+}
+
+/// In-place tile-wise quantize–dequantize: every element is replaced
+/// by its FP8 tile-grid representative, without materializing the byte
+/// matrix. Returns the matrix finite amax (max over tile amaxes).
+///
+/// Bit-identical to `TileQuant::quantize(..).dequantize_buf(..)` — the
+/// two share the private `encode_elem` helper and the LUT/division
+/// decode — which the
+/// inline tests below and `rust/tests/gemm.rs` pin. This is the
+/// allocation-free path the trainer uses on weight copies and per-
+/// stream gradient buffers every step.
+pub fn qdq_tilewise(fmt: Fp8Format, tile: usize, data: &mut [f32], rows: usize, cols: usize) -> f32 {
+    assert!(tile >= 1, "gemm tile must be >= 1");
+    assert_eq!(data.len(), rows * cols, "matrix data length mismatch");
+    let p = bulk::EncodeParams::of(fmt);
+    let lut = bulk::decode_lut(fmt);
+    let max = fmt.max();
+    let (tr, tc) = (ceil_div(rows, tile), ceil_div(cols, tile));
+    let mut mat_amax = 0.0f32;
+    for ti in 0..tr {
+        let (r0, r1) = (ti * tile, (ti * tile + tile).min(rows));
+        for tj in 0..tc {
+            let (c0, c1) = (tj * tile, (tj * tile + tile).min(cols));
+            let a = tile_finite_amax(data, cols, r0, r1, c0, c1);
+            let s = fp8::compute_scale(fmt, a);
+            mat_amax = mat_amax.max(a);
+            for i in r0..r1 {
+                for x in &mut data[i * cols + c0..i * cols + c1] {
+                    *x = lut[encode_elem(fmt, p, max, s, *x) as usize] / s;
+                }
+            }
+        }
+    }
+    mat_amax
+}
+
+/// Multiply every element by the exact power of two `2^e` (ldexp) —
+/// the building block of the Smooth-SwiGLU fold
+/// ([`crate::coordinator::folding`]). Pow2 multiplication only shifts
+/// the f32 exponent, so it commutes with the tile quantization grid:
+/// `qdq(x · 2^e) == qdq(x) · 2^e` bit for bit as long as neither side
+/// over/underflows f32 (pinned by `rust/tests/property.rs`).
+pub fn scale_pow2(data: &mut [f32], e: i32) {
+    let s = fp8::exp2i(e);
+    for x in data.iter_mut() {
+        *x *= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::{E4M3, E5M2};
+
+    fn ramp(n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i as f32) * 0.731).sin() * 3.0).collect()
+    }
+
+    #[test]
+    fn qdq_tilewise_matches_quantize_dequantize() {
+        for fmt in [E4M3, E5M2] {
+            for (rows, cols, tile) in [(7, 5, 3), (8, 8, 4), (1, 9, 4), (9, 1, 2), (16, 16, 16)] {
+                let data = ramp(rows * cols);
+                let q = TileQuant::quantize(fmt, tile, &data, rows, cols);
+                let mut fast = vec![0.0f32; rows * cols];
+                q.dequantize_buf(&mut fast);
+                let mut inplace = data.clone();
+                let amax = qdq_tilewise(fmt, tile, &mut inplace, rows, cols);
+                for (a, b) in fast.iter().zip(&inplace) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{fmt:?} {rows}x{cols} t{tile}");
+                }
+                assert_eq!(amax.to_bits(), q.amax().to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_get_matches_bulk_dequantize() {
+        let (rows, cols, tile) = (10, 13, 4);
+        let data = ramp(rows * cols);
+        for fmt in [E4M3, E5M2] {
+            let q = TileQuant::quantize(fmt, tile, &data, rows, cols);
+            let mut out = vec![0.0f32; rows * cols];
+            q.dequantize_buf(&mut out);
+            for i in 0..rows {
+                for j in 0..cols {
+                    assert_eq!(q.get(i, j).to_bits(), out[i * cols + j].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiles_pick_independent_scales() {
+        // one huge element in the top-left tile must not move the
+        // bottom-right tile's scale
+        let (rows, cols, tile) = (8, 8, 4);
+        let mut data = vec![0.01f32; rows * cols];
+        data[0] = 400.0;
+        let q = TileQuant::quantize(E4M3, tile, &data, rows, cols);
+        assert_eq!(q.tiles(), (2, 2));
+        assert!(q.scales[0] < q.scales[3], "outlier tile scale {} !< {}", q.scales[0], q.scales[3]);
+        assert_eq!(q.scale_at(0, 0), q.scales[0]);
+        assert_eq!(q.scale_at(7, 7), q.scales[3]);
+    }
+
+    #[test]
+    fn nonfinite_elements_propagate_without_scale_damage() {
+        let (rows, cols, tile) = (4, 8, 4);
+        let mut data = ramp(rows * cols);
+        let clean = TileQuant::quantize(E4M3, tile, &data, rows, cols);
+        data[1] = f32::NAN;
+        data[2] = f32::INFINITY;
+        let q = TileQuant::quantize(E4M3, tile, &data, rows, cols);
+        // scales identical to the clean matrix: non-finite invisible
+        for (a, b) in clean.scales.iter().zip(&q.scales) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(q.get(0, 1).is_nan(), "NaN survives");
+        assert!(q.get(0, 2).is_nan(), "E4M3 has no Inf: encodes to NaN");
+        let q5 = TileQuant::quantize(E5M2, tile, &data, rows, cols);
+        assert!(q5.get(0, 2).is_infinite(), "E5M2 keeps Inf as Inf");
+        // a finite neighbor in the same tile is still fine
+        assert!((q.get(0, 3) - data[3]).abs() <= data[3].abs() * 0.08 + 1e-3);
+    }
+
+    #[test]
+    fn zero_tile_has_documented_scale_and_roundtrips_to_zero() {
+        let data = vec![0.0f32; 16];
+        for fmt in [E4M3, E5M2] {
+            let q = TileQuant::quantize(fmt, 4, &data, 4, 4);
+            assert_eq!(q.amaxes[0], 0.0);
+            assert_eq!(q.scales[0], fp8::compute_scale(fmt, 0.0));
+            for i in 0..4 {
+                for j in 0..4 {
+                    assert_eq!(q.get(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scale_pow2_is_exact() {
+        let mut a = ramp(64);
+        let b = a.clone();
+        scale_pow2(&mut a, 3);
+        scale_pow2(&mut a, -3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

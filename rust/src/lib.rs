@@ -18,6 +18,10 @@
 //!   detection.
 //! * [`fp8`] — real u8 E4M3/E5M2 codecs (checkpoint/optimizer storage;
 //!   the Table 4 memory story is measured bytes, not simulation).
+//! * [`gemm`] — tile-wise-scaled FP8 matmul fwd/bwd (per-tile pow2
+//!   amax scales, f32 accumulation in a pinned order) and the
+//!   `fp8_gemm` recipe wiring that puts weights and grads on the tile
+//!   grid every step (PAPER.md §4's compute path).
 //! * [`data`] — deterministic synthetic Zipf-Markov corpus (the
 //!   RedPajama stand-in; see DESIGN.md §Substitutions).
 //! * [`analysis`] — w1/w2 channel correlation tracking, activation
@@ -37,6 +41,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod fp8;
+pub mod gemm;
 pub mod metrics;
 pub mod optimizer;
 pub mod perfmodel;

@@ -77,6 +77,21 @@ pub fn fp8_matmul(m: usize, n: usize, k: usize, bm: usize, bn: usize, bk: usize)
     }
 }
 
+/// The tile-wise-scaled FP8 GEMM (`gemm::GemmConfig`) at square
+/// per-tile-scale tiles: [`fp8_matmul`] with `bm = bn = bk = tile`,
+/// which is also how the host reference in `gemm::matmul` walks the
+/// operands. The per-tile f32 scale traffic
+/// (`⌈m/t⌉·⌈k/t⌉ + ⌈k/t⌉·⌈n/t⌉` extra words) is ≤ 1/t² of the operand
+/// bytes — below the model's resolution — so the estimate is the
+/// plain FP8 matmul roofline at that block shape. The perf bench
+/// records this next to the measured host throughput so the
+/// measured-vs-predicted gap is a tracked artifact.
+pub fn tiled_gemm(m: usize, n: usize, k: usize, tile: usize) -> KernelEstimate {
+    let mut e = fp8_matmul(m, n, k, tile, tile, tile);
+    e.name = format!("tiled_gemm[{m}x{n}x{k} @ t{tile}]");
+    e
+}
+
 /// Elementwise Adam: 4 reads + 3 writes of f32 (or 1-byte moments).
 pub fn adam_update(block: usize, fp8_moments: bool) -> KernelEstimate {
     let vmem = block * 4 * 7;
@@ -112,6 +127,18 @@ mod tests {
         let e = fp8_matmul(2048, 2048, 2048, 128, 128, 128);
         assert_eq!(e.bound, "mxu");
         assert!(e.roofline_fraction > 0.9);
+    }
+
+    #[test]
+    fn tiled_gemm_matches_fp8_matmul_at_square_blocks() {
+        let a = tiled_gemm(512, 256, 128, 128);
+        let b = fp8_matmul(512, 256, 128, 128, 128, 128);
+        assert_eq!(a.vmem_bytes, b.vmem_bytes);
+        assert_eq!(a.bound, b.bound);
+        assert!((a.roofline_fraction - b.roofline_fraction).abs() < 1e-12);
+        assert!(a.name.contains("t128"), "{}", a.name);
+        // the default 128-tile double-buffers comfortably in VMEM
+        assert!(a.vmem_ok);
     }
 
     #[test]

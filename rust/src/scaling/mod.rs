@@ -14,6 +14,20 @@ pub use policy::{Mode, Policy, ScaleDecision};
 
 use crate::fp8::{Fp8Format, E4M3, E5M2};
 
+/// The FP8 format a quantization site quantizes to, by site name:
+/// gradient sites (`g_` prefix) take E5M2's range, everything else
+/// (weights and activations) takes E4M3's precision — the paper's §3
+/// operand split. Shared by [`ScaleManager::new`] and the tile-wise
+/// GEMM engine's amax feed (`gemm::GemmEngine`) so the two layers can
+/// never disagree about a site's format.
+pub fn site_format_of(name: &str) -> Fp8Format {
+    if name.starts_with("g_") {
+        E5M2
+    } else {
+        E4M3
+    }
+}
+
 /// Scale manager for one training run: a ring-buffer history and a
 /// current scale per site.
 pub struct ScaleManager {
@@ -33,7 +47,7 @@ impl ScaleManager {
         let mut site_fmts = Vec::with_capacity(n);
         for _ in 0..n_layers {
             for s in sites_per_layer {
-                site_fmts.push(if s.starts_with("g_") { E5M2 } else { E4M3 });
+                site_fmts.push(site_format_of(s));
             }
         }
         Self {

@@ -1,0 +1,309 @@
+//! Tile-wise-scaled FP8 GEMM tests.
+//!
+//! Two tiers, matching the repo's integration-test convention:
+//!
+//! * **artifact-free** — the differential bit-exactness matrix: the
+//!   fast tiled kernels (`matmul_f32`, `matmul_fp8`) against their
+//!   scalar serial references (`matmul_f32_naive`, `matmul_fp8_ref`)
+//!   across shapes {ragged, tile-aligned, 1×N, N×1} × formats
+//!   {E4M3, E5M2} × every transpose variant, plus the fwd/bwd linear
+//!   pair and NaN transparency. Equality is `to_bits`, no tolerance —
+//!   the kernels pin one summation order (ascending k into a single
+//!   f32 accumulator per output element) and must agree exactly.
+//! * **artifact-gated** — the Fig. 2 divergence reproduction as a
+//!   regression test: in the *same* run configuration (seeded outlier
+//!   channel, elevated lr/wd, non-finite passthrough), the `fp8_gemm`
+//!   recipe on the plain-SwiGLU graph destabilizes while
+//!   `fp8_gemm_smooth` (Smooth-SwiGLU) tracks bf16. Skips with a note
+//!   when `artifacts/` is absent (run `make artifacts` first).
+
+use std::sync::{Arc, OnceLock};
+
+use fp8_trainer::config::TrainConfig;
+use fp8_trainer::coordinator::Trainer;
+use fp8_trainer::fp8::{E4M3, E5M2};
+use fp8_trainer::gemm::{
+    fp8_linear_bwd, fp8_linear_fwd, matmul_f32, matmul_f32_naive, matmul_fp8, matmul_fp8_ref,
+    GemmConfig, TileQuant,
+};
+use fp8_trainer::runtime::Runtime;
+
+// ---------------------------------------------------------------- helpers
+
+fn data(n: usize, phase: f32, span: f32) -> Vec<f32> {
+    (0..n).map(|i| ((i as f32) * 0.731 + phase).sin() * span).collect()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+/// The differential matrix: op-shapes (m, k, n) covering ragged,
+/// tile-aligned (at tile 4), single-row, single-column and
+/// tall-skinny; every (trans_a, trans_b) combination.
+const SHAPES: [(usize, usize, usize); 5] =
+    [(9, 7, 11), (8, 8, 8), (1, 5, 9), (9, 5, 1), (3, 17, 2)];
+const TRANSPOSES: [(bool, bool); 4] =
+    [(false, false), (true, false), (false, true), (true, true)];
+
+/// Storage dims of an operand whose op-shape is `r × c`.
+fn storage(r: usize, c: usize, trans: bool) -> (usize, usize) {
+    if trans {
+        (c, r)
+    } else {
+        (r, c)
+    }
+}
+
+// ------------------------------------------------- artifact-free tier
+
+#[test]
+fn f32_tiled_matches_naive_across_shapes_and_transposes() {
+    for &(m, k, n) in &SHAPES {
+        for &(ta, tb) in &TRANSPOSES {
+            let (ar, ac) = storage(m, k, ta);
+            let (br, bc) = storage(k, n, tb);
+            let a = data(ar * ac, 0.2, 2.0);
+            let b = data(br * bc, 1.4, 2.0);
+            let fast = matmul_f32(&a, ar, ac, ta, &b, br, bc, tb).unwrap();
+            let slow = matmul_f32_naive(&a, ar, ac, ta, &b, br, bc, tb).unwrap();
+            assert_eq!((fast.rows, fast.cols), (m, n));
+            assert_bits_eq(&fast.data, &slow.data, &format!("f32 {m}x{k}x{n} t{ta}/{tb}"));
+        }
+    }
+}
+
+#[test]
+fn fp8_tiled_matches_scalar_reference_across_full_matrix() {
+    // tile 4 exercises ragged interior tiles at these shapes; tile 128
+    // is the single-tile degenerate case (every shape fits one tile)
+    for tile in [4usize, 128] {
+        for fmt in [E4M3, E5M2] {
+            for &(m, k, n) in &SHAPES {
+                for &(ta, tb) in &TRANSPOSES {
+                    let (ar, ac) = storage(m, k, ta);
+                    let (br, bc) = storage(k, n, tb);
+                    let a = TileQuant::quantize(fmt, tile, &data(ar * ac, 0.7, 3.0), ar, ac);
+                    let b = TileQuant::quantize(fmt, tile, &data(br * bc, 2.1, 3.0), br, bc);
+                    let fast = matmul_fp8(&a, ta, &b, tb).unwrap();
+                    let slow = matmul_fp8_ref(&a, ta, &b, tb).unwrap();
+                    assert_eq!((fast.rows, fast.cols), (m, n));
+                    assert_bits_eq(
+                        &fast.data,
+                        &slow.data,
+                        &format!("fp8 {fmt:?} t{tile} {m}x{k}x{n} trans {ta}/{tb}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_operand_formats_match_reference() {
+    // E4M3 weights × E5M2 grads — the per-operand format split the
+    // backward pass uses (dX = dY·Wᵀ pairs an E5M2 operand with E4M3)
+    let (m, k, n) = (6, 10, 5);
+    let dy = TileQuant::quantize(E5M2, 4, &data(m * k, 0.3, 0.5), m, k);
+    let w = TileQuant::quantize(E4M3, 4, &data(n * k, 1.1, 0.2), n, k);
+    let fast = matmul_fp8(&dy, false, &w, true).unwrap();
+    let slow = matmul_fp8_ref(&dy, false, &w, true).unwrap();
+    assert_bits_eq(&fast.data, &slow.data, "mixed-format dY·Wᵀ");
+}
+
+#[test]
+fn linear_fwd_bwd_match_scalar_reference() {
+    let cfg = GemmConfig { tile: 4, ..Default::default() };
+    let (m, k, n) = (7, 9, 6);
+    let x = data(m * k, 0.1, 1.0);
+    let w = data(k * n, 0.9, 0.2);
+    let (y, xq, wq) = fp8_linear_fwd(&cfg, &x, m, k, &w, n).unwrap();
+    assert_eq!(xq.fmt, cfg.x_fmt);
+    assert_eq!(wq.fmt, cfg.w_fmt);
+    let y_ref = matmul_fp8_ref(&xq, false, &wq, false).unwrap();
+    assert_bits_eq(&y.data, &y_ref.data, "forward Y = X·W");
+
+    let dy = data(m * n, 1.7, 0.05);
+    let (dx, dw) = fp8_linear_bwd(&cfg, &dy, &xq, &wq).unwrap();
+    let dyq = TileQuant::quantize(cfg.g_fmt, cfg.tile, &dy, m, n);
+    assert_eq!(dyq.fmt, E5M2, "grads default to E5M2");
+    let dx_ref = matmul_fp8_ref(&dyq, false, &wq, true).unwrap();
+    let dw_ref = matmul_fp8_ref(&xq, true, &dyq, false).unwrap();
+    assert_eq!((dx.rows, dx.cols), (m, k));
+    assert_eq!((dw.rows, dw.cols), (k, n));
+    assert_bits_eq(&dx.data, &dx_ref.data, "backward dX = dY·Wᵀ");
+    assert_bits_eq(&dw.data, &dw_ref.data, "backward dW = Xᵀ·dY");
+}
+
+#[test]
+fn nan_poisons_its_output_row_and_nothing_else() {
+    let cfg = GemmConfig { tile: 4, ..Default::default() };
+    let (m, k, n) = (6, 8, 5);
+    let mut x = data(m * k, 0.4, 1.0);
+    let w = data(k * n, 1.9, 0.3);
+    let (clean, _, wq) = fp8_linear_fwd(&cfg, &x, m, k, &w, n).unwrap();
+    x[2 * k + 3] = f32::NAN;
+    let xq = TileQuant::quantize(cfg.x_fmt, cfg.tile, &x, m, k);
+    let y = matmul_fp8(&xq, false, &wq, false).unwrap();
+    for j in 0..n {
+        assert!(y.at(2, j).is_nan(), "row 2 must be fully poisoned (col {j})");
+    }
+    for i in (0..m).filter(|&i| i != 2) {
+        for j in 0..n {
+            assert_eq!(
+                y.at(i, j).to_bits(),
+                clean.at(i, j).to_bits(),
+                "row {i} must be untouched by the NaN in row 2"
+            );
+        }
+    }
+    // ... because the poisoned tile's *scale* ignored the NaN: its
+    // neighbors inside the same tile stayed on the clean grid
+    let clean_q = TileQuant::quantize(cfg.x_fmt, cfg.tile, &data(m * k, 0.4, 1.0), m, k);
+    assert_bits_eq(&xq.scales, &clean_q.scales, "tile scales under NaN");
+}
+
+#[test]
+fn shape_mismatch_is_an_error_not_a_panic() {
+    let a = data(6, 0.0, 1.0);
+    let b = data(6, 0.0, 1.0);
+    assert!(matmul_f32(&a, 2, 3, false, &b, 2, 3, false).is_err(), "3 != 2 inner dims");
+    let aq = TileQuant::quantize(E4M3, 4, &a, 2, 3);
+    let bq = TileQuant::quantize(E4M3, 4, &b, 2, 3);
+    assert!(matmul_fp8(&aq, false, &bq, false).is_err());
+    assert!(matmul_fp8(&aq, false, &bq, true).is_ok(), "A[2,3] · Bᵀ[3,2] is fine");
+}
+
+// ------------------------------------------------ artifact-gated tier
+
+/// One shared PJRT client for the whole test binary (the TFRT CPU
+/// client does not tolerate repeated create/destroy in one process),
+/// or None on a bare checkout without `artifacts/`.
+fn runtime() -> Option<Arc<Runtime>> {
+    static RT: OnceLock<Option<Arc<Runtime>>> = OnceLock::new();
+    RT.get_or_init(|| Runtime::new("artifacts").ok().map(Arc::new)).clone()
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match runtime() {
+            Some(rt) => rt,
+            None => {
+                eprintln!("skipping: artifacts/ not found (run `make artifacts` first)");
+                return;
+            }
+        }
+    };
+}
+
+/// The Fig. 2 run configuration (mirrors `benches/fig2_divergence.rs`):
+/// partially-aligned outlier channel seeded into w1/w2 of layer 0,
+/// elevated lr/wd to compress the 200B-token alignment, and non-finite
+/// updates passed through so the paper's hard divergence is visible.
+fn fig2_cfg(recipe: &str, steps: usize) -> TrainConfig {
+    TrainConfig {
+        size: "s1m".into(),
+        recipe: recipe.into(),
+        steps,
+        warmup_steps: 20,
+        lr: 8e-4,
+        weight_decay: 0.3,
+        seed_outlier_channel: true,
+        seed_outlier_gain: 3.0,
+        skip_nonfinite_updates: false,
+        out_dir: "runs/gemm_fig2_test".into(),
+        ..Default::default()
+    }
+}
+
+/// Run one recipe to completion (or until well past divergence) and
+/// report (final loss, diverged_at).
+fn fig2_run(rt: &Arc<Runtime>, recipe: &str, steps: usize) -> (f32, Option<usize>) {
+    let mut t = Trainer::new(rt.clone(), fig2_cfg(recipe, steps))
+        .unwrap_or_else(|e| panic!("trainer for {recipe}: {e}"));
+    let mut last = f32::NAN;
+    let mut after_div = 0;
+    for _ in 0..steps {
+        let o = t.step().unwrap_or_else(|e| panic!("step under {recipe}: {e}"));
+        if o.loss.is_finite() {
+            last = o.loss;
+        }
+        if t.detector.has_diverged() {
+            after_div += 1;
+            if after_div > 10 {
+                break;
+            }
+        }
+    }
+    (last, t.detector.diverged_at)
+}
+
+/// The paper's Fig. 2 contrast as a regression gate: same seeds, same
+/// data, same lr/wd, same outlier channel — the only variable is the
+/// compute path. `fp8_gemm` (tile-wise FP8 GEMMs over the plain-SwiGLU
+/// graph) must destabilize; `fp8_gemm_smooth` (identical, plus
+/// Smooth-SwiGLU's per-channel scaling) must track the bf16 reference.
+#[test]
+fn fig2_gemm_diverges_and_smooth_gemm_tracks_bf16() {
+    let rt = need_artifacts!();
+    let steps = 400;
+
+    let (bf16_loss, bf16_div) = fig2_run(&rt, "bf16", steps);
+    assert!(bf16_div.is_none(), "BF16 must stay healthy (paper Fig. 2a)");
+
+    let (_, gemm_div) = fig2_run(&rt, "fp8_gemm", steps);
+    assert!(
+        gemm_div.is_some(),
+        "fp8_gemm on the plain-SwiGLU graph must destabilize under the outlier \
+         channel (paper Fig. 2a) — the detector never fired in {steps} steps"
+    );
+
+    let (smooth_loss, smooth_div) = fig2_run(&rt, "fp8_gemm_smooth", steps);
+    assert!(
+        smooth_div.is_none(),
+        "fp8_gemm_smooth must not diverge (diverged at {smooth_div:?})"
+    );
+    let rel = (smooth_loss - bf16_loss).abs() / bf16_loss.abs().max(1e-6);
+    assert!(
+        rel < 0.25,
+        "fp8_gemm_smooth final loss {smooth_loss} must track bf16 {bf16_loss} \
+         (relative gap {rel:.3} >= 0.25)"
+    );
+}
+
+/// Resume under a changed GEMM setup must refuse with the `gemm` term
+/// named — the PR-7 actionable-diagnostics contract extended to the
+/// compute path. Artifact-gated because capture needs a live trainer.
+#[test]
+fn resume_under_changed_gemm_tile_refuses_with_term_diff() {
+    use fp8_trainer::campaign::snapshot::TrainState;
+    let rt = need_artifacts!();
+    let mut cfg = fig2_cfg("fp8_gemm_smooth", 6);
+    cfg.seed_outlier_channel = false;
+    let mut t = Trainer::new(rt.clone(), cfg.clone()).unwrap();
+    for _ in 0..3 {
+        t.step().unwrap();
+    }
+    let state = TrainState::capture(&t, 0);
+
+    let mut tile = cfg.clone();
+    tile.gemm_tile = 64;
+    let mut other = Trainer::new(rt.clone(), tile).unwrap();
+    let err = state
+        .apply_to(&mut other)
+        .expect_err("changed gemm tile must refuse to resume")
+        .to_string();
+    assert!(err.contains("gemm"), "refusal must name the gemm term: {err}");
+
+    // unchanged config still resumes cleanly
+    let mut same = Trainer::new(rt, cfg).unwrap();
+    state.apply_to(&mut same).unwrap();
+    assert_eq!(same.step, 3);
+}

@@ -369,6 +369,196 @@ fn prop_corpus_deterministic_and_in_range() {
     );
 }
 
+// ---- tile-wise FP8 GEMM quantizer (gemm::tile) --------------------
+
+/// Random (rows, cols, tile, data) for a tile-quantizer case.
+fn gen_tile_matrix(r: &mut Rng, lo: f32, hi: f32) -> (usize, usize, usize, Vec<f32>) {
+    let rows = gen::usize_in(r, 1, 12);
+    let cols = gen::usize_in(r, 1, 12);
+    let tile = gen::usize_in(r, 1, 6);
+    let data = (0..rows * cols).map(|_| gen::f32_finite(r, lo, hi)).collect();
+    (rows, cols, tile, data)
+}
+
+#[test]
+fn prop_tile_scales_are_pow2_chosen_by_the_documented_rule() {
+    use fp8_trainer::gemm::TileQuant;
+    Prop::new(500).check(
+        "tile-scale-rule",
+        |r| gen_tile_matrix(r, -100.0, 100.0),
+        |(rows, cols, tile, data)| {
+            for fmt in [E4M3, E5M2] {
+                let q = TileQuant::quantize(fmt, *tile, data, *rows, *cols);
+                for (&s, &a) in q.scales.iter().zip(&q.amaxes) {
+                    // every scale is a normal power of two …
+                    if !(s > 0.0 && s.is_finite() && (s.to_bits() & 0x007f_ffff) == 0) {
+                        return false;
+                    }
+                    // … exactly the one compute_scale picks from the
+                    // tile's finite amax, and it never overflows
+                    if s.to_bits() != fp8::compute_scale(fmt, a).to_bits()
+                        || a * s > fmt.max() * 1.000001
+                    {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_tile_qdq_lands_on_grid_and_stays_there() {
+    // every finite value's representative is a fixed point of the tile
+    // grid: a second QDQ pass changes no bit (the trainer relies on
+    // this — re-quantizing already-gridded weights/grads is a no-op)
+    use fp8_trainer::gemm::qdq_tilewise;
+    Prop::new(500).check(
+        "tile-qdq-on-grid",
+        |r| gen_tile_matrix(r, -500.0, 500.0),
+        |(rows, cols, tile, data)| {
+            for fmt in [E4M3, E5M2] {
+                let mut once = data.clone();
+                qdq_tilewise(fmt, *tile, &mut once, *rows, *cols);
+                let mut twice = once.clone();
+                qdq_tilewise(fmt, *tile, &mut twice, *rows, *cols);
+                if !once.iter().zip(&twice).all(|(a, b)| a.to_bits() == b.to_bits()) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_zero_denormal_and_outlier_tiles_pick_documented_scales() {
+    use fp8_trainer::gemm::TileQuant;
+    Prop::new(500).check(
+        "tile-scale-edge-cases",
+        |r| {
+            let tile = gen::usize_in(r, 2, 6);
+            let outlier = gen::f32_finite(r, 50.0, 5000.0);
+            let tiny = 2f32.powi(-(gen::usize_in(r, 100, 126) as i32));
+            (tile, outlier, tiny)
+        },
+        |&(tile, outlier, tiny)| {
+            for fmt in [E4M3, E5M2] {
+                // all-zero tile: amax clamps to 1e-12, the documented
+                // fallback — scale is finite, elements decode to ±0
+                let z = TileQuant::quantize(fmt, tile, &vec![0.0; tile * tile], tile, tile);
+                if z.scales[0].to_bits() != fp8::compute_scale(fmt, 0.0).to_bits() {
+                    return false;
+                }
+                if (0..tile).any(|i| (0..tile).any(|j| z.get(i, j) != 0.0)) {
+                    return false;
+                }
+                // denormal-amax tile: scale stays finite (exp2i clamp)
+                let d = TileQuant::quantize(fmt, tile, &vec![tiny; tile * tile], tile, tile);
+                if !d.scales[0].is_finite() || d.scales[0] <= 0.0 {
+                    return false;
+                }
+                // single outlier owns its tile's scale
+                let mut v = vec![0.25f32; tile * tile];
+                v[1] = outlier;
+                let o = TileQuant::quantize(fmt, tile, &v, tile, tile);
+                if o.scales[0].to_bits() != fp8::compute_scale(fmt, outlier).to_bits() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_nonfinite_values_stay_inside_their_tile() {
+    // a NaN (or Inf) must propagate through its own tile's codes
+    // without perturbing any other tile — and without perturbing even
+    // its *own* tile's scale, because the amax scan is finite-only
+    use fp8_trainer::gemm::TileQuant;
+    Prop::new(500).check(
+        "tile-nonfinite-isolation",
+        |r| {
+            let (rows, cols, tile, data) = gen_tile_matrix(r, -10.0, 10.0);
+            let pos = gen::usize_in(r, 0, rows * cols - 1);
+            let poison = if r.below(2) == 0 { f32::NAN } else { f32::INFINITY };
+            (rows, cols, tile, data, pos, poison)
+        },
+        |(rows, cols, tile, data, pos, poison)| {
+            for fmt in [E4M3, E5M2] {
+                let clean = TileQuant::quantize(fmt, *tile, data, *rows, *cols);
+                let mut poisoned_data = data.clone();
+                poisoned_data[*pos] = *poison;
+                let q = TileQuant::quantize(fmt, *tile, &poisoned_data, *rows, *cols);
+                // scales identical everywhere — non-finites are
+                // invisible to the finite-only amax
+                if !q.scales.iter().zip(&clean.scales).all(|(a, b)| a.to_bits() == b.to_bits())
+                {
+                    return false;
+                }
+                for i in 0..*rows {
+                    for j in 0..*cols {
+                        let (a, b) = (q.get(i, j), clean.get(i, j));
+                        if i * cols + j == *pos {
+                            // the poisoned element decodes non-finite:
+                            // NaN stays NaN; Inf keeps E5M2's ±inf and
+                            // becomes NaN under E4M3 (no inf code)
+                            if a.is_finite() {
+                                return false;
+                            }
+                        } else if a.to_bits() != b.to_bits() {
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_pow2_rescale_commutes_with_the_tile_grid() {
+    // uniform pow2 scaling commutes bit-exactly with tile QDQ inside
+    // the safe exponent band: QDQ(x·2^e) == QDQ(x)·2^e. This is the
+    // property that lets Smooth-SwiGLU's pow2 per-channel scales fold
+    // through the quantization grid without changing any code (see
+    // examples/smooth_swiglu_inference.rs and gemm::scale_pow2).
+    use fp8_trainer::gemm::{qdq_tilewise, scale_pow2};
+    Prop::new(500).check(
+        "tile-pow2-commutation",
+        |r| {
+            let (rows, cols, tile, mut data) = gen_tile_matrix(r, -8.0, 8.0);
+            // keep magnitudes off the denormal floor so 2^e stays exact
+            for x in data.iter_mut() {
+                if x.abs() < 1e-3 {
+                    *x = 1e-3_f32.copysign(*x);
+                }
+            }
+            let e = gen::usize_in(r, 0, 6) as i32 - 3;
+            (rows, cols, tile, data, e)
+        },
+        |(rows, cols, tile, data, e)| {
+            for fmt in [E4M3, E5M2] {
+                // scale then quantize …
+                let mut a = data.clone();
+                scale_pow2(&mut a, *e);
+                qdq_tilewise(fmt, *tile, &mut a, *rows, *cols);
+                // … vs quantize then scale
+                let mut b = data.clone();
+                qdq_tilewise(fmt, *tile, &mut b, *rows, *cols);
+                scale_pow2(&mut b, *e);
+                if !a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
 #[test]
 fn prop_correlation_bounded_and_symmetric() {
     Prop::new(200).check(

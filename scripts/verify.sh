@@ -4,7 +4,7 @@
 #
 # Steps:
 #   1. release build
-#   2. test suite (unit + property + collective + campaign;
+#   2. test suite (unit + property + collective + campaign + gemm;
 #      artifact-gated tests skip themselves with a note on a bare
 #      checkout)
 #   3. rustdoc gate: `cargo doc --no-deps` must be warning-clean —
