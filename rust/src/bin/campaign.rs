@@ -3,15 +3,29 @@
 //! ```text
 //! campaign run     [--dir D] [--config FILE] [key=value ...]
 //! campaign resume  [--dir D] [--config FILE] [--reshard] [key=value ...]
-//! campaign status  [--dir D]
+//! campaign status  [--dir D] [tail=N]
 //! campaign inspect <snapshot.ckpt>
+//! campaign fleet   <status|losses|divergences|metrics> [ROOT] [--json]
 //! ```
 //!
 //! `run` starts a fresh campaign (snapshots + journal under `--dir`,
 //! default `<out_dir>/campaign`); `resume` continues from the newest
 //! snapshot bit-exactly; `status` summarizes the journal and snapshot
-//! inventory without touching the runtime; `inspect` dumps one
+//! inventory without touching the runtime — the journal is *streamed*
+//! event-at-a-time (`journal::stream`, O(1) memory however long the
+//! campaign ran), unparseable-line counts are surfaced so a damaged
+//! journal is visible, and `tail=N` appends the last N raw events
+//! (seeked from the end, cost ∝ N not file size); `inspect` dumps one
 //! snapshot's metadata and tensor table.
+//!
+//! `fleet` aggregates every campaign dir under ROOT (default `runs`,
+//! any dir holding a `journal.jsonl`, a few levels deep) in one
+//! streaming pass per journal: `status` is the per-campaign table,
+//! `losses` the recent loss trails, `divergences` the trip log, and
+//! `metrics` a Prometheus-style text exposition for dashboard
+//! scraping; `--json` switches any mode to a machine-readable dump.
+//! docs/OPERATIONS.md §Fleet operations is the runbook,
+//! docs/JOURNAL.md the journal format specification.
 //!
 //! `resume --reshard` continues a campaign on a **changed physical
 //! topology** (fewer/more `dp_workers`, rearranged `pods`, different
@@ -33,7 +47,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use fp8_trainer::campaign::{self, journal, store, Campaign, ResumeOptions};
+use fp8_trainer::campaign::{self, fleet, journal, store, Campaign, ResumeOptions};
 use fp8_trainer::checkpoint::Checkpoint;
 use fp8_trainer::config::TrainConfig;
 use fp8_trainer::runtime::Runtime;
@@ -57,6 +71,7 @@ struct Args {
     stop_after: Option<usize>,
     force_phased_step: Option<bool>,
     reshard: bool,
+    tail: Option<usize>,
 }
 
 fn parse_args(args: &[String]) -> Result<Args> {
@@ -68,6 +83,7 @@ fn parse_args(args: &[String]) -> Result<Args> {
         stop_after: None,
         force_phased_step: None,
         reshard: false,
+        tail: None,
     };
     let mut i = 0;
     while i < args.len() {
@@ -110,6 +126,9 @@ fn parse_args(args: &[String]) -> Result<Args> {
                     out.force_phased_step = Some(
                         v.parse().map_err(|_| anyhow!("force_phased_step needs true/false"))?,
                     );
+                } else if k == "tail" {
+                    out.tail =
+                        Some(v.parse().map_err(|_| anyhow!("tail needs an event count"))?);
                 } else {
                     out.overrides.push((k.to_string(), v.to_string()));
                 }
@@ -184,11 +203,30 @@ fn run() -> Result<()> {
                     campaign::default_dir(&cfg)
                 }
             };
-            cmd_status(&dir)
+            cmd_status(&dir, a.tail)
         }
         "inspect" => {
             let path = argv.get(1).ok_or_else(|| anyhow!("inspect needs a snapshot path"))?;
             cmd_inspect(PathBuf::from(path))
+        }
+        "fleet" => {
+            let mut json = false;
+            let mut rest: Vec<&str> = Vec::new();
+            for a in &argv[1..] {
+                if a == "--json" {
+                    json = true;
+                } else {
+                    rest.push(a.as_str());
+                }
+            }
+            let mode = rest.first().copied().ok_or_else(|| {
+                anyhow!("fleet needs a mode: status | losses | divergences | metrics")
+            })?;
+            let root = PathBuf::from(rest.get(1).copied().unwrap_or("runs"));
+            if rest.len() > 2 {
+                return Err(anyhow!("unexpected fleet argument '{}'", rest[2]));
+            }
+            cmd_fleet(mode, &root, json)
         }
         _ => {
             println!(
@@ -196,11 +234,18 @@ fn run() -> Result<()> {
                  divergence auto-recovery\n\n\
                  usage:\n  campaign run     [--dir D] [--config FILE] [key=value ...]\n  \
                  campaign resume  [--dir D] [--config FILE] [--reshard] [key=value ...]\n  \
-                 campaign status  [--dir D]\n  campaign inspect <snapshot.ckpt>\n\n\
+                 campaign status  [--dir D] [tail=N]\n  \
+                 campaign inspect <snapshot.ckpt>\n  \
+                 campaign fleet   <status|losses|divergences|metrics> [ROOT] [--json]\n\n\
                  campaign keys: snapshot_every=50 snapshot_keep=3 max_recoveries=4\n               \
                  recovery_margin_backoff=1 recovery_history_shrink=0.5\n\
                  session keys:  stop_after=N (pause + snapshot at step N, resumable)\n               \
-                 force_phased_step=true (bit-identical non-overlapped schedule)\n\
+                 force_phased_step=true (bit-identical non-overlapped schedule)\n               \
+                 tail=N (status only: print the last N raw journal events)\n\
+                 fleet:         aggregates every campaign dir under ROOT (default\n               \
+                 `runs`) in one streaming pass per journal; `metrics`\n               \
+                 emits a Prometheus-style text exposition, --json a\n               \
+                 machine-readable dump (docs/OPERATIONS.md §Fleet operations)\n\
                  drill key:     inject_divergence_at=N\n\
                  elastic:       --reshard (resume only) continues on a changed\n               \
                  dp_workers/pods/bucket_bytes bit-exactly; grad_streams=/\n               \
@@ -213,7 +258,7 @@ fn run() -> Result<()> {
     }
 }
 
-fn cmd_status(dir: &std::path::Path) -> Result<()> {
+fn cmd_status(dir: &std::path::Path, tail: Option<usize>) -> Result<()> {
     let journal_path = dir.join("journal.jsonl");
     let snaps = store::list_snapshots(dir.join("snapshots"))?;
     println!("campaign dir: {}", dir.display());
@@ -230,37 +275,74 @@ fn cmd_status(dir: &std::path::Path) -> Result<()> {
         println!("journal: none");
         return Ok(());
     }
-    let events = journal::read(&journal_path)?;
+    // one streaming pass (journal::stream via the fleet aggregator) —
+    // status stays O(1) memory however long the campaign ran
+    let v = fleet::scan_campaign(dir)?;
+    println!("phase: {}", v.phase().as_str());
     println!(
         "journal: {} events ({} snapshots, {} divergences, {} recoveries)",
-        events.len(),
-        journal::count(&events, "snapshot"),
-        journal::count(&events, "divergence"),
-        journal::count(&events, "recovery"),
+        v.events,
+        v.count("snapshot"),
+        v.count("divergence"),
+        v.count("recovery"),
     );
+    if v.skipped_lines > 0 {
+        println!(
+            "  WARNING: {} unparseable line{} skipped — one torn tail per hard crash \
+             is the expected worst case; more means damage (docs/JOURNAL.md)",
+            v.skipped_lines,
+            plural(v.skipped_lines)
+        );
+    }
     // topology history: every reshard in chronological order, so a
     // long elastic campaign's worker/pod trajectory is reconstructible
     // from `status` alone
-    let reshards: Vec<_> = events
-        .iter()
-        .filter(|e| e.get("event").and_then(|v| v.as_str()) == Some("reshard"))
-        .collect();
-    if !reshards.is_empty() {
-        println!("topology history ({} reshard{}):", reshards.len(), plural(reshards.len()));
-        for e in &reshards {
-            let step = e.get("step").and_then(|v| v.as_usize()).unwrap_or(0);
-            let from = e.get("from_topology").and_then(|v| v.as_str()).unwrap_or("?");
-            let to = e.get("to_topology").and_then(|v| v.as_str()).unwrap_or("?");
-            println!("  step {step:8}  {from}  ->  {to}");
+    if !v.reshards.is_empty() {
+        println!("topology history ({} reshard{}):", v.reshards.len(), plural(v.reshards.len()));
+        for r in &v.reshards {
+            println!("  step {:8}  {}  ->  {}", r.step, r.from, r.to);
+        }
+        if v.reshards_dropped > 0 {
+            println!("  ... and {} earlier reshard(s) beyond the display cap", v.reshards_dropped);
         }
     }
-    for kind in ["divergence", "recovery", "reshard", "lock_reclaimed", "abort", "complete"] {
-        if let Some(e) = journal::last(&events, kind) {
+    for kind in
+        ["divergence", "recovery", "reshard", "lock_reclaimed", "tail_repaired", "abort", "complete"]
+    {
+        if let Some(e) = v.last_of.get(kind) {
             println!("  last {kind}: {}", e.to_string());
         }
     }
-    if let Some(e) = events.last() {
+    if let Some(e) = &v.last_event {
         println!("  tail: {}", e.to_string());
+    }
+    if let Some(n) = tail {
+        // seeked from the end of the file — cost ∝ n, not journal size
+        let out = journal::tail(&journal_path, n)?;
+        println!("last {} event{}:", out.events.len(), plural(out.events.len()));
+        for e in &out.events {
+            println!("  {}", e.to_string());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fleet(mode: &str, root: &std::path::Path, json: bool) -> Result<()> {
+    let view = fleet::scan_root(root)?;
+    if json {
+        println!("{}", view.to_json().to_string());
+        return Ok(());
+    }
+    match mode {
+        "status" => print!("{}", view.render_status()),
+        "losses" => print!("{}", view.render_losses()),
+        "divergences" => print!("{}", view.render_divergences()),
+        "metrics" => print!("{}", view.render_prometheus()),
+        other => {
+            return Err(anyhow!(
+                "unknown fleet mode '{other}' (expected status | losses | divergences | metrics)"
+            ))
+        }
     }
     Ok(())
 }

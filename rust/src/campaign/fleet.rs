@@ -1,0 +1,923 @@
+//! Fleet observability: discover campaign directories under a root
+//! and aggregate step/loss/divergence/recovery/reshard state across
+//! all of them — one O(1)-memory streaming pass per journal.
+//!
+//! The paper's instabilities only show up over *prolonged* runs, so a
+//! production deployment is never one campaign: it is a fleet of
+//! them, and the operator's question is "who is running, who
+//! diverged, who died" across the whole root. This module answers it
+//! without ever holding a journal in memory: each campaign is folded
+//! event-at-a-time ([`CampaignView::fold`]) off
+//! [`journal::stream::JournalStream`], so a trillion-token campaign's
+//! multi-GB journal costs one line buffer.
+//!
+//! Directory convention (see docs/OPERATIONS.md §Fleet operations): a
+//! **campaign dir** is any directory holding a `journal.jsonl`;
+//! [`discover`] walks the root a few levels deep and collects them,
+//! so both the flat `<root>/<name>/journal.jsonl` layout and deeper
+//! groupings work. The `campaign fleet` CLI subcommand renders the
+//! result as a status table, loss trails, a divergence log, or a
+//! Prometheus-style text exposition for dashboard scraping.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use super::journal::stream::JournalStream;
+use super::store;
+use crate::util::json::{obj, Json};
+
+/// Cap on the per-campaign recent-loss and recent-divergence rings —
+/// the fleet scan is O(1) memory per journal, so detail buffers are
+/// bounded; the journal remains the full record.
+pub const RECENT_CAP: usize = 16;
+
+/// Cap on the retained reshard (topology) history per campaign;
+/// overflow is counted, not silently dropped.
+pub const RESHARD_CAP: usize = 64;
+
+/// How deep [`discover`] walks below the fleet root.
+const DISCOVER_DEPTH: usize = 4;
+
+/// Journal event kinds whose most recent full event `status` prints —
+/// tracked in O(1) during the fold.
+const TRACKED_KINDS: [&str; 8] = [
+    "divergence",
+    "recovery",
+    "reshard",
+    "lock_reclaimed",
+    "tail_repaired",
+    "pause",
+    "abort",
+    "complete",
+];
+
+/// One divergence event as folded out of a journal stream.
+#[derive(Clone, Debug)]
+pub struct DivergenceEvent {
+    /// Step the verdict tripped at.
+    pub step: usize,
+    /// Loss at the trip (NaN when the journal line carried none).
+    pub loss: f64,
+    /// Whether this was an injected drill rather than a real trip.
+    pub injected: bool,
+    /// Wall-clock stamp of the journal line.
+    pub unix_ms: f64,
+}
+
+/// One reshard (topology change) event.
+#[derive(Clone, Debug)]
+pub struct ReshardEvent {
+    /// Step the campaign continued from.
+    pub step: usize,
+    /// Physical-topology fingerprint before the reshard.
+    pub from: String,
+    /// Physical-topology fingerprint after the reshard.
+    pub to: String,
+}
+
+/// State of a campaign dir's `LOCK` file, as far as it can be probed.
+#[derive(Clone, Copy, Debug)]
+pub struct LockInfo {
+    /// Owner pid recorded in the lock file (None: unreadable/garbage).
+    pub pid: Option<u32>,
+    /// Liveness of that pid: `Some(true)` alive, `Some(false)`
+    /// provably dead (Linux `/proc` probe), `None` unverifiable.
+    pub live: Option<bool>,
+}
+
+/// Operational phase of one campaign, derived from its lock state and
+/// the last journal event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Lock held by a live process — the campaign is running now.
+    Running,
+    /// Lock present but its owner is provably dead (crashed run; the
+    /// next resume will reclaim it).
+    StaleLock,
+    /// Lock present, owner liveness unverifiable on this platform.
+    Locked,
+    /// Journal ends in `complete`.
+    Complete,
+    /// Journal ends in `abort` (recovery budget spent).
+    Aborted,
+    /// Journal ends in `pause` (orderly `stop_after`; resumable).
+    Paused,
+    /// Journal exists with events but no terminal event and no lock —
+    /// killed or abandoned mid-run; resumable.
+    Idle,
+    /// No journal events at all.
+    Empty,
+    /// The scan itself failed (unreadable journal, oversized line) —
+    /// see [`CampaignView::error`].
+    Damaged,
+}
+
+impl Phase {
+    /// Stable lowercase label (table cells, Prometheus label values).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Phase::Running => "running",
+            Phase::StaleLock => "stale-lock",
+            Phase::Locked => "locked",
+            Phase::Complete => "complete",
+            Phase::Aborted => "aborted",
+            Phase::Paused => "paused",
+            Phase::Idle => "idle",
+            Phase::Empty => "empty",
+            Phase::Damaged => "damaged",
+        }
+    }
+}
+
+/// Everything the fleet layer knows about one campaign after a single
+/// streaming pass over its journal plus a directory listing — the
+/// shared aggregate behind `campaign status` and every `fleet`
+/// subcommand.
+#[derive(Clone, Debug)]
+pub struct CampaignView {
+    /// The campaign directory.
+    pub dir: PathBuf,
+    /// Display name (dir relative to the fleet root, or the dir
+    /// itself for a single-campaign scan).
+    pub name: String,
+    /// Whether `journal.jsonl` exists.
+    pub has_journal: bool,
+    /// Parsed journal events.
+    pub events: usize,
+    /// Non-blank journal lines that did not parse (torn tails, crash
+    /// fragments) — 0 on a healthy journal, ~1 per hard crash; more
+    /// means damage. See docs/JOURNAL.md.
+    pub skipped_lines: usize,
+    /// Step of the last journal event (recoveries legitimately move
+    /// this backwards; `max_step` is the high-water mark).
+    pub last_step: usize,
+    /// Highest step any event recorded.
+    pub max_step: usize,
+    /// Wall-clock stamp of the last event (ms since the epoch).
+    pub last_unix_ms: f64,
+    /// Event count per kind.
+    pub counts: BTreeMap<String, usize>,
+    /// Most recent finite loss from a `snapshot`/`complete` event
+    /// (NaN until one is seen).
+    pub last_loss: f64,
+    /// Step `last_loss` was recorded at.
+    pub last_loss_step: usize,
+    /// Recent (step, loss) trail from snapshot/complete events,
+    /// chronological, capped at [`RECENT_CAP`].
+    pub recent_losses: VecDeque<(usize, f64)>,
+    /// Recent divergence trips, chronological, capped at [`RECENT_CAP`].
+    pub recent_divergences: VecDeque<DivergenceEvent>,
+    /// Reshard (topology-change) history, capped at [`RESHARD_CAP`].
+    pub reshards: Vec<ReshardEvent>,
+    /// Reshard events beyond the cap (0 in any sane campaign).
+    pub reshards_dropped: usize,
+    /// Current physical-topology fingerprint, if any reshard recorded
+    /// one.
+    pub topology: Option<String>,
+    /// Most recent full event per tracked kind (what `status` prints
+    /// as `last <kind>: …`).
+    pub last_of: BTreeMap<&'static str, Json>,
+    /// The final journal event.
+    pub last_event: Option<Json>,
+    /// `snap_*.ckpt` files currently on disk.
+    pub snapshots_on_disk: usize,
+    /// `LOCK` file state, if present.
+    pub lock: Option<LockInfo>,
+    /// Scan failure, if the journal could not be streamed (the fleet
+    /// view degrades this campaign to [`Phase::Damaged`] instead of
+    /// failing the whole fleet).
+    pub error: Option<String>,
+}
+
+impl CampaignView {
+    fn empty(dir: &Path) -> Self {
+        Self {
+            dir: dir.to_path_buf(),
+            name: dir.display().to_string(),
+            has_journal: false,
+            events: 0,
+            skipped_lines: 0,
+            last_step: 0,
+            max_step: 0,
+            last_unix_ms: 0.0,
+            counts: BTreeMap::new(),
+            last_loss: f64::NAN,
+            last_loss_step: 0,
+            recent_losses: VecDeque::new(),
+            recent_divergences: VecDeque::new(),
+            reshards: Vec::new(),
+            reshards_dropped: 0,
+            topology: None,
+            last_of: BTreeMap::new(),
+            last_event: None,
+            snapshots_on_disk: 0,
+            lock: None,
+            error: None,
+        }
+    }
+
+    /// Count of one event kind.
+    pub fn count(&self, kind: &str) -> usize {
+        self.counts.get(kind).copied().unwrap_or(0)
+    }
+
+    /// Fold one journal event into the view — the single-pass
+    /// aggregation everything in this module is built on. O(1) per
+    /// event: rings are capped, `last_of` tracks a fixed kind set.
+    pub fn fold(&mut self, e: Json) {
+        self.events += 1;
+        let kind = e.get("event").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+        *self.counts.entry(kind.clone()).or_insert(0) += 1;
+        let step = e.get("step").and_then(|v| v.as_usize()).unwrap_or(0);
+        self.last_step = step;
+        self.max_step = self.max_step.max(step);
+        if let Some(ms) = e.get("unix_ms").and_then(|v| v.as_f64()) {
+            self.last_unix_ms = ms;
+        }
+        match kind.as_str() {
+            "snapshot" | "complete" => {
+                let field = if kind == "complete" { "final_loss" } else { "loss" };
+                if let Some(l) = e.get(field).and_then(|v| v.as_f64()).filter(|l| l.is_finite())
+                {
+                    self.last_loss = l;
+                    self.last_loss_step = step;
+                    if self.recent_losses.len() == RECENT_CAP {
+                        self.recent_losses.pop_front();
+                    }
+                    self.recent_losses.push_back((step, l));
+                }
+            }
+            "divergence" => {
+                if self.recent_divergences.len() == RECENT_CAP {
+                    self.recent_divergences.pop_front();
+                }
+                self.recent_divergences.push_back(DivergenceEvent {
+                    step,
+                    loss: e.get("loss").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
+                    injected: e.get("injected").and_then(|v| v.as_bool()).unwrap_or(false),
+                    unix_ms: self.last_unix_ms,
+                });
+            }
+            "reshard" => {
+                let ev = ReshardEvent {
+                    step,
+                    from: e.str_or("from_topology", "?"),
+                    to: e.str_or("to_topology", "?"),
+                };
+                self.topology = Some(ev.to.clone());
+                if self.reshards.len() == RESHARD_CAP {
+                    self.reshards.remove(0); // keep the most recent
+                    self.reshards_dropped += 1;
+                }
+                self.reshards.push(ev);
+            }
+            _ => {}
+        }
+        if let Some(&k) = TRACKED_KINDS.iter().find(|&&k| k == kind) {
+            self.last_of.insert(k, e.clone());
+        }
+        self.last_event = Some(e);
+    }
+
+    /// Operational phase — lock state first (a held lock means a
+    /// process is, or died, driving this campaign), then the last
+    /// journal event.
+    pub fn phase(&self) -> Phase {
+        if self.error.is_some() {
+            return Phase::Damaged;
+        }
+        if let Some(l) = self.lock {
+            return match l.live {
+                Some(true) => Phase::Running,
+                Some(false) => Phase::StaleLock,
+                None => Phase::Locked,
+            };
+        }
+        match self.last_event.as_ref().and_then(|e| e.get("event")).and_then(|v| v.as_str()) {
+            Some("complete") => Phase::Complete,
+            Some("abort") => Phase::Aborted,
+            Some("pause") => Phase::Paused,
+            Some(_) => Phase::Idle,
+            None => Phase::Empty,
+        }
+    }
+
+    /// The view as a JSON object (the `--json` export shape).
+    pub fn to_json(&self) -> Json {
+        let counts = Json::Obj(
+            self.counts.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect(),
+        );
+        let losses = Json::Arr(
+            self.recent_losses
+                .iter()
+                .map(|&(s, l)| Json::Arr(vec![Json::Num(s as f64), Json::Num(l)]))
+                .collect(),
+        );
+        let lock = match self.lock {
+            None => Json::Null,
+            Some(l) => obj(vec![
+                ("pid", l.pid.map(|p| Json::Num(p as f64)).unwrap_or(Json::Null)),
+                ("live", l.live.map(Json::Bool).unwrap_or(Json::Null)),
+            ]),
+        };
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("dir", Json::Str(self.dir.display().to_string())),
+            ("phase", Json::Str(self.phase().as_str().into())),
+            ("last_step", Json::Num(self.last_step as f64)),
+            ("max_step", Json::Num(self.max_step as f64)),
+            ("last_loss", Json::Num(self.last_loss)), // null when NaN
+            ("last_unix_ms", Json::Num(self.last_unix_ms)),
+            ("events", Json::Num(self.events as f64)),
+            ("skipped_lines", Json::Num(self.skipped_lines as f64)),
+            ("snapshots_on_disk", Json::Num(self.snapshots_on_disk as f64)),
+            ("counts", counts),
+            (
+                "topology",
+                self.topology.clone().map(Json::Str).unwrap_or(Json::Null),
+            ),
+            ("recent_losses", losses),
+            ("lock", lock),
+            (
+                "error",
+                self.error.clone().map(Json::Str).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// Probe a campaign dir's `LOCK` file. The file is a few bytes (owner
+/// pid), so this is the one read in the fleet layer that is not
+/// streamed.
+fn lock_info(dir: &Path) -> Option<LockInfo> {
+    let path = dir.join("LOCK");
+    if !path.exists() {
+        return None;
+    }
+    let pid: Option<u32> =
+        std::fs::read_to_string(&path).ok().and_then(|s| s.trim().parse().ok());
+    let live = pid.and_then(pid_live);
+    Some(LockInfo { pid, live })
+}
+
+/// `Some(alive?)` on Linux (authoritative `/proc` probe, zombies
+/// count as alive), `None` elsewhere.
+fn pid_live(pid: u32) -> Option<bool> {
+    #[cfg(target_os = "linux")]
+    {
+        Some(Path::new(&format!("/proc/{pid}")).exists())
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = pid;
+        None
+    }
+}
+
+/// Scan one campaign dir: a directory listing for the snapshot
+/// inventory, the `LOCK` probe, and one streaming pass over the
+/// journal. This is `campaign status`'s data source too — status and
+/// fleet share one aggregator by construction.
+pub fn scan_campaign(dir: &Path) -> Result<CampaignView> {
+    let mut v = CampaignView::empty(dir);
+    v.snapshots_on_disk = store::list_snapshots(dir.join("snapshots"))?.len();
+    v.lock = lock_info(dir);
+    let jpath = dir.join("journal.jsonl");
+    if jpath.is_file() {
+        v.has_journal = true;
+        let mut s = JournalStream::from_path(&jpath)?;
+        while let Some(e) = s.next_event()? {
+            v.fold(e);
+        }
+        v.skipped_lines = s.skipped();
+    }
+    Ok(v)
+}
+
+/// Campaign directories under `root`: every directory (up to a few
+/// levels deep) holding a `journal.jsonl`. A campaign dir's own
+/// subtree is not descended into, `snapshots/` and dot-dirs are
+/// skipped, and the root itself may be a campaign dir. Sorted for a
+/// stable presentation order.
+pub fn discover<P: AsRef<Path>>(root: P) -> Result<Vec<PathBuf>> {
+    let root = root.as_ref();
+    if !root.is_dir() {
+        return Err(anyhow!(
+            "fleet root {} is not a directory — expected a tree of campaign dirs \
+             (each holding a journal.jsonl; see docs/OPERATIONS.md §Fleet operations)",
+            root.display()
+        ));
+    }
+    let mut out = Vec::new();
+    walk(root, 0, &mut out);
+    out.sort();
+    Ok(out)
+}
+
+fn walk(dir: &Path, depth: usize, out: &mut Vec<PathBuf>) {
+    if dir.join("journal.jsonl").is_file() {
+        out.push(dir.to_path_buf());
+        return;
+    }
+    if depth >= DISCOVER_DEPTH {
+        return;
+    }
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if name.starts_with('.') || name == "snapshots" {
+            continue;
+        }
+        let p = entry.path();
+        if p.is_dir() {
+            walk(&p, depth + 1, out);
+        }
+    }
+}
+
+/// Fleet-level totals (the status footer / `fp8_fleet_*` metrics).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetTotals {
+    /// Campaign dirs discovered.
+    pub campaigns: usize,
+    /// Campaigns whose lock is held by a live process.
+    pub running: usize,
+    /// Campaigns whose journal ends in `complete`.
+    pub complete: usize,
+    /// Campaigns whose journal ends in `abort`.
+    pub aborted: usize,
+    /// Campaigns that could not be scanned.
+    pub damaged: usize,
+    /// Divergence trips across the fleet.
+    pub divergences: usize,
+    /// Recoveries across the fleet.
+    pub recoveries: usize,
+    /// Reshards across the fleet.
+    pub reshards: usize,
+    /// Skipped (unparseable) journal lines across the fleet.
+    pub skipped_lines: usize,
+}
+
+/// The aggregated fleet: every campaign under one root, each scanned
+/// in a single streaming pass.
+pub struct FleetView {
+    /// The root that was scanned.
+    pub root: PathBuf,
+    /// Per-campaign views, sorted by directory.
+    pub campaigns: Vec<CampaignView>,
+}
+
+/// Scan every campaign under `root` — [`discover`] + one
+/// [`scan_campaign`] each. A campaign whose scan fails degrades to
+/// [`Phase::Damaged`] (with the error preserved) instead of failing
+/// the fleet: the whole point of the fleet view is seeing the sick
+/// nodes next to the healthy ones.
+pub fn scan_root<P: AsRef<Path>>(root: P) -> Result<FleetView> {
+    let root = root.as_ref().to_path_buf();
+    let mut campaigns = Vec::new();
+    for dir in discover(&root)? {
+        let name = dir
+            .strip_prefix(&root)
+            .ok()
+            .map(|p| p.display().to_string())
+            .filter(|s| !s.is_empty())
+            .unwrap_or_else(|| dir.display().to_string());
+        let view = match scan_campaign(&dir) {
+            Ok(mut v) => {
+                v.name = name;
+                v
+            }
+            Err(e) => {
+                let mut v = CampaignView::empty(&dir);
+                v.name = name;
+                v.has_journal = dir.join("journal.jsonl").is_file();
+                v.error = Some(format!("{e:#}"));
+                v
+            }
+        };
+        campaigns.push(view);
+    }
+    Ok(FleetView { root, campaigns })
+}
+
+impl FleetView {
+    /// Fleet-level rollup of the per-campaign views.
+    pub fn totals(&self) -> FleetTotals {
+        let mut t = FleetTotals { campaigns: self.campaigns.len(), ..Default::default() };
+        for c in &self.campaigns {
+            match c.phase() {
+                Phase::Running => t.running += 1,
+                Phase::Complete => t.complete += 1,
+                Phase::Aborted => t.aborted += 1,
+                Phase::Damaged => t.damaged += 1,
+                _ => {}
+            }
+            t.divergences += c.count("divergence");
+            t.recoveries += c.count("recovery");
+            t.reshards += c.count("reshard");
+            t.skipped_lines += c.skipped_lines;
+        }
+        t
+    }
+
+    /// The `fleet status` table: one row per campaign plus the rollup
+    /// footer, with a damage warning when any journal skipped lines.
+    pub fn render_status(&self) -> String {
+        let mut out = String::new();
+        let t = self.totals();
+        out.push_str(&format!("fleet root: {}\n", self.root.display()));
+        out.push_str(&format!(
+            "{:<28} {:<10} {:>9} {:>10} {:>6} {:>4} {:>4} {:>5} {:>5}  {}\n",
+            "CAMPAIGN", "PHASE", "STEP", "LOSS", "SNAPS", "DIV", "REC", "RESH", "SKIP", "LAST"
+        ));
+        for c in &self.campaigns {
+            let loss = if c.last_loss.is_finite() {
+                format!("{:.4}", c.last_loss)
+            } else {
+                "-".to_string()
+            };
+            let last = c
+                .last_event
+                .as_ref()
+                .and_then(|e| e.get("event"))
+                .and_then(|v| v.as_str())
+                .unwrap_or("-");
+            out.push_str(&format!(
+                "{:<28} {:<10} {:>9} {:>10} {:>6} {:>4} {:>4} {:>5} {:>5}  {}\n",
+                clip(&c.name, 28),
+                c.phase().as_str(),
+                c.last_step,
+                loss,
+                c.snapshots_on_disk,
+                c.count("divergence"),
+                c.count("recovery"),
+                c.count("reshard"),
+                c.skipped_lines,
+                last,
+            ));
+            if let Some(e) = &c.error {
+                out.push_str(&format!("  !! {e}\n"));
+            }
+        }
+        out.push_str(&format!(
+            "fleet: {} campaigns — {} running, {} complete, {} aborted, {} damaged; \
+             {} divergences, {} recoveries, {} reshards\n",
+            t.campaigns,
+            t.running,
+            t.complete,
+            t.aborted,
+            t.damaged,
+            t.divergences,
+            t.recoveries,
+            t.reshards,
+        ));
+        if t.skipped_lines > 0 {
+            out.push_str(&format!(
+                "WARNING: {} unparseable journal line(s) skipped across the fleet — one \
+                 torn tail per hard crash is the expected worst case; more means damage \
+                 (docs/JOURNAL.md §Damage tolerance)\n",
+                t.skipped_lines
+            ));
+        }
+        out
+    }
+
+    /// The `fleet losses` view: each campaign's recent loss trail.
+    pub fn render_losses(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("fleet root: {}\n", self.root.display()));
+        for c in &self.campaigns {
+            if c.last_loss.is_finite() {
+                out.push_str(&format!(
+                    "{:<28} loss {:.4} @ step {}",
+                    clip(&c.name, 28),
+                    c.last_loss,
+                    c.last_loss_step
+                ));
+                let trail: Vec<String> = c
+                    .recent_losses
+                    .iter()
+                    .map(|&(s, l)| format!("{s}:{l:.3}"))
+                    .collect();
+                out.push_str(&format!("  | {}\n", trail.join(" ")));
+            } else {
+                out.push_str(&format!(
+                    "{:<28} no loss recorded ({})\n",
+                    clip(&c.name, 28),
+                    c.phase().as_str()
+                ));
+            }
+        }
+        out
+    }
+
+    /// The `fleet divergences` view: recent trips across the fleet in
+    /// wall-clock order, with each campaign's recovery tally.
+    pub fn render_divergences(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("fleet root: {}\n", self.root.display()));
+        let mut rows: Vec<(f64, &str, &DivergenceEvent)> = Vec::new();
+        for c in &self.campaigns {
+            for d in &c.recent_divergences {
+                rows.push((d.unix_ms, &c.name, d));
+            }
+        }
+        rows.sort_by(|a, b| a.0.total_cmp(&b.0));
+        if rows.is_empty() {
+            out.push_str("no divergences recorded\n");
+        }
+        for (_, name, d) in rows {
+            let loss =
+                if d.loss.is_finite() { format!("{:.4}", d.loss) } else { "-".to_string() };
+            out.push_str(&format!(
+                "{:<28} step {:>9}  loss {:>10}  {}\n",
+                clip(name, 28),
+                d.step,
+                loss,
+                if d.injected { "injected (drill)" } else { "real" },
+            ));
+        }
+        for c in &self.campaigns {
+            if c.count("divergence") > 0 {
+                out.push_str(&format!(
+                    "{:<28} {} divergence(s), {} recovery(ies), budget state: {}\n",
+                    clip(&c.name, 28),
+                    c.count("divergence"),
+                    c.count("recovery"),
+                    if c.count("abort") > 0 { "EXHAUSTED (aborted)" } else { "ok" },
+                ));
+            }
+        }
+        out
+    }
+
+    /// Prometheus-style text exposition of the fleet (the
+    /// `fleet metrics` default output) — gauge/counter families keyed
+    /// by a `campaign` label, suitable for a node-exporter textfile
+    /// collector or any scrape-to-file cron. Format reference:
+    /// docs/OPERATIONS.md §Fleet operations.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let t = self.totals();
+        let fleet_gauges: [(&str, &str, f64); 4] = [
+            ("fp8_fleet_campaigns", "Campaign dirs discovered under the root.", t.campaigns as f64),
+            ("fp8_fleet_running", "Campaigns whose LOCK is held by a live process.", t.running as f64),
+            ("fp8_fleet_damaged", "Campaigns whose scan failed.", t.damaged as f64),
+            (
+                "fp8_fleet_journal_skipped_lines",
+                "Unparseable journal lines across the fleet (damage signal).",
+                t.skipped_lines as f64,
+            ),
+        ];
+        for (name, help, v) in fleet_gauges {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        type Get = fn(&CampaignView) -> f64;
+        let families: [(&str, &str, &str, Get); 9] = [
+            (
+                "fp8_campaign_last_step",
+                "Step of the last journal event.",
+                "gauge",
+                (|c| c.last_step as f64) as Get,
+            ),
+            (
+                "fp8_campaign_max_step",
+                "High-water-mark step across the journal.",
+                "gauge",
+                |c| c.max_step as f64,
+            ),
+            (
+                "fp8_campaign_journal_events",
+                "Parsed journal events.",
+                "counter",
+                |c| c.events as f64,
+            ),
+            (
+                "fp8_campaign_journal_skipped_lines",
+                "Unparseable journal lines (damage signal; ~1 per hard crash).",
+                "gauge",
+                |c| c.skipped_lines as f64,
+            ),
+            (
+                "fp8_campaign_divergences",
+                "Divergence trips journaled.",
+                "counter",
+                |c| c.count("divergence") as f64,
+            ),
+            (
+                "fp8_campaign_recoveries",
+                "Rollback-and-perturb recoveries journaled.",
+                "counter",
+                |c| c.count("recovery") as f64,
+            ),
+            (
+                "fp8_campaign_reshards",
+                "Topology reshards journaled.",
+                "counter",
+                |c| c.count("reshard") as f64,
+            ),
+            (
+                "fp8_campaign_snapshots_on_disk",
+                "snap_*.ckpt files currently retained.",
+                "gauge",
+                |c| c.snapshots_on_disk as f64,
+            ),
+            (
+                "fp8_campaign_last_event_unix_ms",
+                "Wall-clock stamp of the last journal event.",
+                "gauge",
+                |c| c.last_unix_ms,
+            ),
+        ];
+        for (name, help, ty, get) in families {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {ty}\n"));
+            for c in &self.campaigns {
+                out.push_str(&format!(
+                    "{name}{{campaign=\"{}\"}} {}\n",
+                    prom_escape(&c.name),
+                    get(c)
+                ));
+            }
+        }
+        // last_loss separately: NaN (no loss yet) must be omitted, not
+        // emitted — Prometheus treats NaN as a real sample
+        out.push_str(
+            "# HELP fp8_campaign_last_loss Most recent finite loss from a snapshot/complete \
+             event.\n# TYPE fp8_campaign_last_loss gauge\n",
+        );
+        for c in &self.campaigns {
+            if c.last_loss.is_finite() {
+                out.push_str(&format!(
+                    "fp8_campaign_last_loss{{campaign=\"{}\"}} {}\n",
+                    prom_escape(&c.name),
+                    c.last_loss
+                ));
+            }
+        }
+        // phase as a one-hot info-style series
+        out.push_str(
+            "# HELP fp8_campaign_phase Operational phase (one series per campaign, value 1).\
+             \n# TYPE fp8_campaign_phase gauge\n",
+        );
+        for c in &self.campaigns {
+            out.push_str(&format!(
+                "fp8_campaign_phase{{campaign=\"{}\",phase=\"{}\"}} 1\n",
+                prom_escape(&c.name),
+                c.phase().as_str()
+            ));
+        }
+        out
+    }
+
+    /// The whole fleet as one JSON object (the `--json` export).
+    pub fn to_json(&self) -> Json {
+        let t = self.totals();
+        obj(vec![
+            ("root", Json::Str(self.root.display().to_string())),
+            (
+                "campaigns",
+                Json::Arr(self.campaigns.iter().map(|c| c.to_json()).collect()),
+            ),
+            (
+                "totals",
+                obj(vec![
+                    ("campaigns", Json::Num(t.campaigns as f64)),
+                    ("running", Json::Num(t.running as f64)),
+                    ("complete", Json::Num(t.complete as f64)),
+                    ("aborted", Json::Num(t.aborted as f64)),
+                    ("damaged", Json::Num(t.damaged as f64)),
+                    ("divergences", Json::Num(t.divergences as f64)),
+                    ("recoveries", Json::Num(t.recoveries as f64)),
+                    ("reshards", Json::Num(t.reshards as f64)),
+                    ("skipped_lines", Json::Num(t.skipped_lines as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Truncate a name to `max` chars for table cells (full name in JSON).
+fn clip(s: &str, max: usize) -> String {
+    if s.chars().count() <= max {
+        s.to_string()
+    } else {
+        let cut: String = s.chars().take(max.saturating_sub(1)).collect();
+        format!("{cut}…")
+    }
+}
+
+/// Escape a Prometheus label value (`\` → `\\`, `"` → `\"`, newline →
+/// `\n`, per the text-exposition spec).
+fn prom_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: &str, step: usize, extra: Vec<(&str, Json)>) -> Json {
+        let mut fields = vec![
+            ("event", Json::Str(kind.into())),
+            ("step", Json::Num(step as f64)),
+            ("unix_ms", Json::Num(1000.0 + step as f64)),
+        ];
+        fields.extend(extra);
+        obj(fields)
+    }
+
+    #[test]
+    fn fold_tracks_counts_losses_and_phase() {
+        let mut v = CampaignView::empty(Path::new("/tmp/x"));
+        v.fold(ev("campaign_start", 0, vec![]));
+        v.fold(ev("snapshot", 10, vec![("loss", Json::Num(3.0))]));
+        v.fold(ev("snapshot", 20, vec![("loss", Json::Null)])); // NaN loss → skipped
+        v.fold(ev("divergence", 25, vec![("loss", Json::Num(9.9)), ("injected", Json::Bool(true))]));
+        v.fold(ev("recovery", 20, vec![]));
+        v.fold(ev(
+            "reshard",
+            20,
+            vec![
+                ("from_topology", Json::Str("shard=w4".into())),
+                ("to_topology", Json::Str("shard=w3".into())),
+            ],
+        ));
+        v.fold(ev("complete", 30, vec![("final_loss", Json::Num(2.5))]));
+        assert_eq!(v.events, 7);
+        assert_eq!(v.count("snapshot"), 2);
+        assert_eq!(v.count("divergence"), 1);
+        assert_eq!(v.last_loss, 2.5);
+        assert_eq!(v.last_loss_step, 30);
+        assert_eq!(v.recent_losses.len(), 2, "null loss excluded from the trail");
+        assert_eq!(v.max_step, 30);
+        assert_eq!(v.last_step, 30);
+        assert_eq!(v.topology.as_deref(), Some("shard=w3"));
+        assert_eq!(v.reshards.len(), 1);
+        assert!(v.recent_divergences[0].injected);
+        assert_eq!(v.phase(), Phase::Complete);
+        assert!(v.last_of.contains_key("recovery"));
+        // lock state dominates the terminal event
+        v.lock = Some(LockInfo { pid: Some(1), live: Some(true) });
+        assert_eq!(v.phase(), Phase::Running);
+        v.lock = Some(LockInfo { pid: Some(1), live: Some(false) });
+        assert_eq!(v.phase(), Phase::StaleLock);
+    }
+
+    #[test]
+    fn rings_stay_bounded() {
+        let mut v = CampaignView::empty(Path::new("/tmp/x"));
+        for i in 0..(RECENT_CAP * 3) {
+            v.fold(ev("snapshot", i, vec![("loss", Json::Num(i as f64))]));
+            v.fold(ev("divergence", i, vec![("loss", Json::Num(9.0))]));
+        }
+        assert_eq!(v.recent_losses.len(), RECENT_CAP);
+        assert_eq!(v.recent_divergences.len(), RECENT_CAP);
+        assert_eq!(v.recent_losses.back().unwrap().0, RECENT_CAP * 3 - 1);
+        assert_eq!(v.events, RECENT_CAP * 6);
+    }
+
+    #[test]
+    fn prometheus_escaping_and_shape() {
+        let mut v = CampaignView::empty(Path::new("/tmp/we\"ird"));
+        v.name = "we\"ird\\name".into();
+        v.fold(ev("snapshot", 5, vec![("loss", Json::Num(1.5))]));
+        let fleet = FleetView { root: PathBuf::from("/tmp"), campaigns: vec![v] };
+        let text = fleet.render_prometheus();
+        assert!(text.contains(r#"campaign="we\"ird\\name""#), "label escaped: {text}");
+        assert!(text.contains("fp8_fleet_campaigns 1"));
+        assert!(text.contains("# TYPE fp8_campaign_last_step gauge"));
+        assert!(text.contains("fp8_campaign_last_loss{campaign"));
+        // every non-comment line is `name{labels} value` or `name value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (series, val) = line.rsplit_once(' ').expect("sample line");
+            assert!(!series.is_empty());
+            assert!(val.parse::<f64>().is_ok(), "bad sample value in: {line}");
+        }
+    }
+
+    #[test]
+    fn empty_and_idle_phases() {
+        let v = CampaignView::empty(Path::new("/tmp/x"));
+        assert_eq!(v.phase(), Phase::Empty);
+        let mut v = CampaignView::empty(Path::new("/tmp/x"));
+        v.fold(ev("campaign_start", 0, vec![]));
+        assert_eq!(v.phase(), Phase::Idle);
+        v.fold(ev("pause", 7, vec![]));
+        assert_eq!(v.phase(), Phase::Paused);
+        let mut d = CampaignView::empty(Path::new("/tmp/x"));
+        d.error = Some("boom".into());
+        assert_eq!(d.phase(), Phase::Damaged);
+    }
+}

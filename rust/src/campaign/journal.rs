@@ -1,13 +1,21 @@
 //! The campaign journal: an append-only, machine-readable JSONL log
 //! of every operationally significant event (snapshots, divergence
-//! trips, rollbacks, recoveries, completion).
+//! trips, rollbacks, recoveries, reshards, completion).
 //!
 //! One JSON object per line, always carrying `event`, `step`, and
 //! `unix_ms`; event-specific fields ride alongside. Append-only means
 //! a resumed campaign extends the same file — the journal is the
 //! single chronological record of the whole campaign across process
-//! restarts, which is what the `status` CLI subcommand and the
-//! §Campaigns analysis read.
+//! restarts, which is what the `status`/`fleet` CLI subcommands and
+//! the §Campaigns analysis read.
+//!
+//! The on-disk format is specified in `docs/JOURNAL.md` (framing,
+//! torn-tail semantics, compatibility rules, and a field-by-field
+//! schema per event kind — `scripts/check_journal_docs.sh` keeps that
+//! spec complete). Consumers go through [`stream`]: a trillion-token
+//! campaign's journal does not fit in memory, so every read path here
+//! is an event-at-a-time parse in O(1) memory — [`read`] is a
+//! convenience that collects the stream, [`tail`] seeks from the end.
 
 use std::path::{Path, PathBuf};
 
@@ -30,13 +38,23 @@ impl Journal {
     /// event onto that fragment and corrupt *two* records. Open
     /// repairs this by terminating an unterminated tail first, so the
     /// tear stays confined to the one line being written at crash
-    /// time (which [`read`] then skips).
+    /// time (which the [`stream`] readers then skip and count). The
+    /// repair itself is journaled as a `tail_repaired` event — the
+    /// on-disk record of "a tear happened here", so an elevated
+    /// skipped-line count in `status` can be dated.
     pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
-        repair_torn_tail(&path)?;
+        let repaired = repair_torn_tail(&path)?;
         let sink = JsonlSink::create(&path)
             .with_context(|| format!("opening journal {}", path.display()))?;
-        Ok(Self { sink, path })
+        let mut j = Self { sink, path };
+        if repaired {
+            // step is unknowable at open time (the snapshot has not
+            // been read yet) — 0 by convention, see docs/JOURNAL.md
+            j.record("tail_repaired", 0, vec![])?;
+            j.flush()?;
+        }
+        Ok(j)
     }
 
     /// The journal file location.
@@ -71,8 +89,9 @@ impl Journal {
 }
 
 /// Terminate an unterminated final line (crash tear) so appends can
-/// never glue onto a fragment. No-op on a missing/empty/clean file.
-fn repair_torn_tail(path: &Path) -> Result<()> {
+/// never glue onto a fragment. No-op on a missing/empty/clean file;
+/// returns whether a repair was performed.
+fn repair_torn_tail(path: &Path) -> Result<bool> {
     use std::io::{Read as _, Seek as _, SeekFrom, Write as _};
     let needs_newline = match std::fs::File::open(path) {
         Ok(mut f) => {
@@ -95,25 +114,327 @@ fn repair_torn_tail(path: &Path) -> Result<()> {
             .and_then(|mut f| f.write_all(b"\n"))
             .with_context(|| format!("repairing torn journal tail {}", path.display()))?;
     }
-    Ok(())
+    Ok(needs_newline)
 }
 
-/// Parse a journal file back into its event objects, in order.
+pub mod stream {
+    //! Incremental, O(1)-memory journal reader.
+    //!
+    //! [`JournalStream`] parses one event at a time off any
+    //! [`BufRead`], never holding more than one line in memory. The
+    //! line buffer is bounded ([`MAX_LINE_BYTES`]): a line beyond the
+    //! bound is an explicit [`OversizedLine`] error rather than an
+    //! unbounded allocation, because a journal whose lines do not fit
+    //! the bound is not a journal (the writer emits events of a few
+    //! hundred bytes; the only multi-KiB record is the config echo).
+    //!
+    //! Damage tolerance is unified with the writer's torn-tail repair
+    //! ([`super::Journal::open`]): a line that does not parse — a
+    //! crash tear, a fragment from a mid-record power loss — is
+    //! skipped and *counted* ([`JournalStream::skipped`]), never
+    //! fatal, so `status` stays usable after the very crashes the
+    //! campaign layer exists to survive, while the operator can still
+    //! tell a healthy journal (0–1 skips across the campaign) from a
+    //! damaged one.
+
+    use std::collections::VecDeque;
+    use std::fs::File;
+    use std::io::{BufRead, BufReader, Read as _, Seek as _, SeekFrom};
+    use std::path::Path;
+
+    use anyhow::{Context, Result};
+
+    use crate::util::json::Json;
+
+    /// Upper bound on one journal line. The writer's largest record is
+    /// the `campaign_start` config echo (a few KiB); 1 MiB leaves two
+    /// orders of magnitude of headroom while keeping a garbage file
+    /// (or a binary accidentally pointed at) from ballooning memory.
+    pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+    /// Block size for the backward newline scan in [`tail`](super::tail).
+    const TAIL_BLOCK: usize = 64 * 1024;
+
+    /// A journal line exceeded the per-line buffer bound — the file is
+    /// not a journal (or is corrupt beyond line-level damage). Typed
+    /// so callers can distinguish "refuse this file" from I/O errors.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub struct OversizedLine {
+        /// 1-based line number of the offending line.
+        pub line: usize,
+        /// Bytes seen before giving up (>= `limit`).
+        pub len_at_least: usize,
+        /// The configured bound the line exceeded.
+        pub limit: usize,
+    }
+
+    impl std::fmt::Display for OversizedLine {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(
+                f,
+                "journal line {} exceeds the {}-byte line bound ({}+ bytes) — \
+                 not a journal, or corrupt beyond line-level damage",
+                self.line, self.limit, self.len_at_least
+            )
+        }
+    }
+
+    impl std::error::Error for OversizedLine {}
+
+    /// Event-at-a-time journal parser over any [`BufRead`], O(1)
+    /// memory: one reusable line buffer, bounded by the configured
+    /// line limit. See the [module docs](self) for the damage model.
+    pub struct JournalStream<R: BufRead> {
+        r: R,
+        buf: Vec<u8>,
+        max_line: usize,
+        peak_line: usize,
+        lines: usize,
+        skipped: usize,
+        done: bool,
+    }
+
+    impl JournalStream<BufReader<File>> {
+        /// Stream the journal file at `path` from the beginning.
+        pub fn from_path<P: AsRef<Path>>(path: P) -> Result<Self> {
+            let f = File::open(&path)
+                .with_context(|| format!("reading journal {}", path.as_ref().display()))?;
+            Ok(Self::new(BufReader::new(f)))
+        }
+    }
+
+    impl<R: BufRead> JournalStream<R> {
+        /// Stream events off `r` with the default [`MAX_LINE_BYTES`]
+        /// line bound.
+        pub fn new(r: R) -> Self {
+            Self::with_max_line(r, MAX_LINE_BYTES)
+        }
+
+        /// [`new`](JournalStream::new) with an explicit line bound
+        /// (tests exercise the oversized refusal without writing a
+        /// megabyte).
+        pub fn with_max_line(r: R, max_line: usize) -> Self {
+            Self { r, buf: Vec::new(), max_line, peak_line: 0, lines: 0, skipped: 0, done: false }
+        }
+
+        /// The next parsed event, or `Ok(None)` at end of input.
+        ///
+        /// Blank lines are ignored; a non-blank line that is not valid
+        /// JSON (torn tail, mid-record crash fragment, invalid UTF-8)
+        /// is skipped and counted in [`skipped`](Self::skipped) —
+        /// identical acceptance to the historical whole-file reader. A
+        /// line beyond the bound returns an [`OversizedLine`] error
+        /// and ends the stream.
+        pub fn next_event(&mut self) -> Result<Option<Json>> {
+            if self.done {
+                return Ok(None);
+            }
+            loop {
+                if !self.fill_line()? {
+                    self.done = true;
+                    return Ok(None);
+                }
+                self.lines += 1;
+                self.peak_line = self.peak_line.max(self.buf.len());
+                let Ok(s) = std::str::from_utf8(&self.buf) else {
+                    self.skipped += 1;
+                    continue;
+                };
+                if s.trim().is_empty() {
+                    continue;
+                }
+                match Json::parse(s) {
+                    Ok(v) => return Ok(Some(v)),
+                    Err(_) => {
+                        self.skipped += 1;
+                        continue;
+                    }
+                }
+            }
+        }
+
+        /// Non-blank lines skipped so far because they did not parse
+        /// (torn tails, crash fragments). A healthy journal shows 0;
+        /// one tear per hard crash is the expected worst case — more
+        /// means damage (see docs/JOURNAL.md).
+        pub fn skipped(&self) -> usize {
+            self.skipped
+        }
+
+        /// Lines consumed so far (parsed + skipped + blank).
+        pub fn lines_seen(&self) -> usize {
+            self.lines
+        }
+
+        /// Largest single line seen, in bytes — the stream's resident
+        /// footprint proxy (the only growing allocation is the line
+        /// buffer, and it is bounded by the line limit).
+        pub fn peak_line_bytes(&self) -> usize {
+            self.peak_line
+        }
+
+        /// Pull one line (sans newline) into `self.buf`. Returns false
+        /// at clean EOF with no pending bytes; a final newline-less
+        /// fragment is returned as a line (the caller's parse-or-skip
+        /// handles it, matching the writer's torn-tail model).
+        fn fill_line(&mut self) -> Result<bool> {
+            self.buf.clear();
+            loop {
+                let chunk = self.r.fill_buf().context("reading journal stream")?;
+                if chunk.is_empty() {
+                    return Ok(!self.buf.is_empty());
+                }
+                let (take, terminated) = match chunk.iter().position(|&b| b == b'\n') {
+                    Some(i) => (i, true),
+                    None => (chunk.len(), false),
+                };
+                if self.buf.len() + take > self.max_line {
+                    let err = OversizedLine {
+                        line: self.lines + 1,
+                        len_at_least: self.buf.len() + take,
+                        limit: self.max_line,
+                    };
+                    self.done = true;
+                    return Err(anyhow::Error::new(err));
+                }
+                self.buf.extend_from_slice(&chunk[..take]);
+                self.r.consume(take + usize::from(terminated));
+                if terminated {
+                    return Ok(true);
+                }
+            }
+        }
+    }
+
+    impl<R: BufRead> Iterator for JournalStream<R> {
+        type Item = Result<Json>;
+
+        fn next(&mut self) -> Option<Result<Json>> {
+            self.next_event().transpose()
+        }
+    }
+
+    /// Byte offset of the start of the `k`-th-from-last line candidate
+    /// (a trailing newline-less fragment counts as one), found by
+    /// scanning backward in [`TAIL_BLOCK`] chunks — work proportional
+    /// to the tail scanned, not the file size. 0 when the file holds
+    /// fewer than `k` lines.
+    fn offset_of_last_lines(f: &File, len: u64, k: usize) -> Result<u64> {
+        if len == 0 || k == 0 {
+            return Ok(0);
+        }
+        let mut r = f;
+        // a newline as the very last byte terminates the final line —
+        // it starts no candidate, so the scan begins just before it
+        let mut b = [0u8; 1];
+        r.seek(SeekFrom::Start(len - 1)).context("journal tail seek")?;
+        r.read_exact(&mut b).context("journal tail read")?;
+        let mut pos = if b[0] == b'\n' { len - 1 } else { len };
+        let mut found = 0usize;
+        let mut block = vec![0u8; TAIL_BLOCK];
+        while pos > 0 {
+            let start = pos.saturating_sub(TAIL_BLOCK as u64);
+            let n = (pos - start) as usize;
+            r.seek(SeekFrom::Start(start)).context("journal tail seek")?;
+            r.read_exact(&mut block[..n]).context("journal tail read")?;
+            for i in (0..n).rev() {
+                if block[i] == b'\n' {
+                    found += 1;
+                    if found == k {
+                        return Ok(start + i as u64 + 1);
+                    }
+                }
+            }
+            pos = start;
+        }
+        Ok(0) // fewer than k lines: the whole file is the tail
+    }
+
+    /// The last `n` parsed events of the journal at `path`, seeking
+    /// from the end — cost scales with the tail read, not the file
+    /// size, which is what lets `status` answer instantly on a
+    /// trillion-token campaign's journal.
+    ///
+    /// Starts `n+1` line candidates from the end and doubles the
+    /// window while unparseable/blank lines leave fewer than `n`
+    /// events (bounded by walking back to the start of the file), so
+    /// the result is exactly `min(n, total events)` events in
+    /// chronological order. The returned
+    /// [`skipped`](super::ReadOutcome::skipped) counts only the region
+    /// scanned.
+    pub fn tail<P: AsRef<Path>>(path: P, n: usize) -> Result<super::ReadOutcome> {
+        let f = File::open(&path)
+            .with_context(|| format!("reading journal {}", path.as_ref().display()))?;
+        let len = f.metadata().context("journal metadata")?.len();
+        if n == 0 || len == 0 {
+            return Ok(super::ReadOutcome::default());
+        }
+        let mut want = n + 1;
+        loop {
+            let start = offset_of_last_lines(&f, len, want)?;
+            let mut r = &f;
+            r.seek(SeekFrom::Start(start)).context("journal tail seek")?;
+            let mut s = JournalStream::new(BufReader::new(r));
+            let mut events: VecDeque<Json> = VecDeque::with_capacity(n.min(1024));
+            while let Some(e) = s.next_event()? {
+                if events.len() == n {
+                    events.pop_front();
+                }
+                events.push_back(e);
+            }
+            if events.len() >= n || start == 0 {
+                return Ok(super::ReadOutcome {
+                    events: events.into(),
+                    skipped: s.skipped(),
+                });
+            }
+            want = want.saturating_mul(2);
+        }
+    }
+}
+
+/// A fully-collected journal read: the parsed events plus the count
+/// of non-blank lines that did not parse (torn tails, crash
+/// fragments) — the damage signal `status` and the fleet aggregator
+/// surface to operators.
+#[derive(Clone, Debug, Default)]
+pub struct ReadOutcome {
+    /// Parsed events in file (= chronological) order.
+    pub events: Vec<Json>,
+    /// Non-blank unparseable lines encountered.
+    pub skipped: usize,
+}
+
+/// Parse a journal file back into its event objects, in order,
+/// reporting how many damaged lines were skipped on the way.
 ///
 /// Unparseable lines are skipped rather than erroring: the journal is
 /// written one line per event with [`Journal::open`] repairing torn
-/// tails, so a malformed line can only be the fragment of a line
-/// that was being written when a process died — and `status` must
-/// stay usable after the very crashes the campaign layer exists to
-/// survive. All intact events around a tear are returned.
+/// tails, so a malformed line can only be the fragment of a line that
+/// was being written when a process died — and `status` must stay
+/// usable after the very crashes the campaign layer exists to
+/// survive. All intact events around a tear are returned. Collects
+/// the [`stream`] parser, so memory is O(events), never O(file) —
+/// callers that only fold (status, fleet) should stream instead.
+pub fn read_counted<P: AsRef<Path>>(path: P) -> Result<ReadOutcome> {
+    let mut s = stream::JournalStream::from_path(&path)?;
+    let mut events = Vec::new();
+    while let Some(e) = s.next_event()? {
+        events.push(e);
+    }
+    Ok(ReadOutcome { events, skipped: s.skipped() })
+}
+
+/// [`read_counted`] without the damage count — the historical
+/// convenience signature most tests use.
 pub fn read<P: AsRef<Path>>(path: P) -> Result<Vec<Json>> {
-    let text = std::fs::read_to_string(&path)
-        .with_context(|| format!("reading journal {}", path.as_ref().display()))?;
-    Ok(text
-        .lines()
-        .filter(|l| !l.trim().is_empty())
-        .filter_map(|l| Json::parse(l).ok())
-        .collect())
+    Ok(read_counted(path)?.events)
+}
+
+/// The last `n` events, seeking from the end of the file — see
+/// [`stream::tail`].
+pub fn tail<P: AsRef<Path>>(path: P, n: usize) -> Result<ReadOutcome> {
+    stream::tail(path, n)
 }
 
 /// Count events of one kind (`"snapshot"`, `"recovery"`, …) in a
@@ -157,8 +478,10 @@ mod tests {
             j.record("complete", 20, vec![]).unwrap();
             j.flush().unwrap();
         }
-        let events = read(&path).unwrap();
+        let out = read_counted(&path).unwrap();
+        let events = out.events;
         assert_eq!(events.len(), 6);
+        assert_eq!(out.skipped, 0, "clean journal reads with zero skips");
         assert_eq!(count(&events, "snapshot"), 2);
         assert_eq!(count(&events, "recovery"), 1);
         let lastsnap = last(&events, "snapshot").unwrap();
@@ -169,7 +492,7 @@ mod tests {
     }
 
     #[test]
-    fn torn_tail_is_repaired_and_skipped() {
+    fn torn_tail_is_repaired_skipped_and_counted() {
         let dir = std::env::temp_dir().join("fp8_campaign_journal_torn");
         std::fs::remove_dir_all(&dir).ok();
         let path = dir.join("journal.jsonl");
@@ -186,17 +509,63 @@ mod tests {
             f.write_all(b"{\"event\":\"snapsh").unwrap();
         }
         // status stays usable: intact events readable, tear skipped
-        let events = read(&path).unwrap();
-        assert_eq!(events.len(), 2);
-        // reopen (resume path) must not glue onto the fragment
+        // AND surfaced in the damage count
+        let out = read_counted(&path).unwrap();
+        assert_eq!(out.events.len(), 2);
+        assert_eq!(out.skipped, 1, "the tear must be counted, not silently dropped");
+        // reopen (resume path) must not glue onto the fragment, and
+        // must journal the repair
         {
             let mut j = Journal::open(&path).unwrap();
             j.record("resume", 5, vec![]).unwrap();
             j.flush().unwrap();
         }
-        let events = read(&path).unwrap();
-        assert_eq!(events.len(), 3, "post-crash append must be its own intact line");
-        assert_eq!(count(&events, "resume"), 1);
+        let out = read_counted(&path).unwrap();
+        assert_eq!(out.events.len(), 4, "post-crash appends are their own intact lines");
+        assert_eq!(count(&out.events, "resume"), 1);
+        assert_eq!(count(&out.events, "tail_repaired"), 1, "the repair is journaled");
+        assert_eq!(out.skipped, 1, "exactly the one tear");
+        // a clean reopen does not journal another repair
+        {
+            let mut j = Journal::open(&path).unwrap();
+            j.flush().unwrap();
+        }
+        assert_eq!(count(&read(&path).unwrap(), "tail_repaired"), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn oversized_line_is_a_typed_refusal() {
+        use std::io::Cursor;
+        let line = format!("{{\"event\":\"x\",\"pad\":\"{}\"}}\n", "y".repeat(256));
+        let mut s = stream::JournalStream::with_max_line(Cursor::new(line.into_bytes()), 64);
+        let err = s.next_event().unwrap_err();
+        let o = err.downcast_ref::<stream::OversizedLine>().expect("typed OversizedLine");
+        assert_eq!(o.limit, 64);
+        assert!(o.len_at_least >= 64);
+        assert_eq!(o.line, 1);
+        // the stream ends rather than spinning on the same line
+        assert!(s.next_event().unwrap().is_none());
+    }
+
+    #[test]
+    fn tail_seeks_the_last_n_events() {
+        let dir = std::env::temp_dir().join("fp8_campaign_journal_tail");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("journal.jsonl");
+        {
+            let mut j = Journal::open(&path).unwrap();
+            for i in 0..100 {
+                j.record("snapshot", i, vec![("reason", Json::Str("periodic".into()))]).unwrap();
+            }
+            j.flush().unwrap();
+        }
+        let all = read(&path).unwrap();
+        for n in [0, 1, 7, 100, 500] {
+            let t = tail(&path, n).unwrap();
+            let want = &all[all.len().saturating_sub(n)..];
+            assert_eq!(t.events, want, "tail({n}) == last {n} events");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 }

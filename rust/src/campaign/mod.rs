@@ -26,19 +26,26 @@
 //!   `campaign resume --reshard` re-partitions a snapshot's ZeRO-1
 //!   moment state for a changed `dp_workers`/`pods`/`bucket_bytes`,
 //!   roundtrip-verified bit-exact before anything touches disk.
+//! * [`fleet`] — fleet observability: discover every campaign dir
+//!   under a root and aggregate step/loss/divergence/recovery/reshard
+//!   state across them in one O(1)-memory streaming pass per journal
+//!   (the `campaign fleet status|losses|divergences|metrics` CLI,
+//!   including a Prometheus-style text exposition).
 //! * [`Campaign`] — the driver tying it together, used by the
-//!   `campaign` CLI binary (`run / resume / status / inspect`).
+//!   `campaign` CLI binary (`run / resume / status / inspect / fleet`).
 //!
 //! Operator docs: `rust/EXPERIMENTS.md` §Campaigns describes the
 //! bit-exact-resume methodology and the divergence-injection recovery
 //! drill; `rust/ARCHITECTURE.md` places this layer in the system.
 
+pub mod fleet;
 pub mod journal;
 pub mod recovery;
 pub mod reshard;
 pub mod snapshot;
 pub mod store;
 
+pub use fleet::{CampaignView, FleetView};
 pub use journal::Journal;
 pub use recovery::RecoveryPolicy;
 pub use reshard::{reshard_state, ReshardReport};

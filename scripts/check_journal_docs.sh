@@ -1,15 +1,21 @@
 #!/usr/bin/env bash
 # Docs gate: every journal event kind the campaign subsystem can emit
-# must be documented in docs/OPERATIONS.md (the journal event
-# reference) — an operator reading a journal line should never meet an
-# event the runbook does not explain, and a new event kind without a
-# docs row fails CI.
+# must be documented twice over —
+#   1. a runbook row in docs/OPERATIONS.md (the journal event
+#      reference): an operator reading a journal line should never
+#      meet an event the runbook does not explain;
+#   2. a field-by-field schema row in docs/JOURNAL.md (the normative
+#      format spec): a `| `kind` |` table row, so every kind's fields
+#      and semantics are specified, not just mentioned.
+# A new event kind missing either fails CI.
 #
 # Kind sources scanned: every `.record("<kind>"` call site under
 # rust/src/campaign/ and rust/src/bin/ (the journal's only producers).
 # The call spans lines in rustfmt output, so files are flattened before
-# matching. A kind counts as documented when it appears backticked
-# (`kind`) in docs/OPERATIONS.md.
+# matching. A kind counts as runbook-documented when it appears
+# backticked (`kind`) anywhere in docs/OPERATIONS.md, and as
+# spec-documented when docs/JOURNAL.md has a table row starting
+# "| `kind` |".
 #
 # Pure POSIX shell + grep/sed/tr — no toolchain needed, so this gate
 # runs unconditionally in scripts/verify.sh and the CI docs job.
@@ -18,11 +24,14 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 DOC=docs/OPERATIONS.md
+SPEC=docs/JOURNAL.md
 
-if [ ! -f "$DOC" ]; then
-  echo "check_journal_docs: missing $DOC" >&2
-  exit 1
-fi
+for f in "$DOC" "$SPEC"; do
+  if [ ! -f "$f" ]; then
+    echo "check_journal_docs: missing $f" >&2
+    exit 1
+  fi
+done
 
 kinds=$(
   for f in rust/src/campaign/*.rs rust/src/bin/*.rs; do
@@ -32,20 +41,24 @@ kinds=$(
     grep -oE '"[a-z_]+"' | tr -d '"' | sort -u
 )
 
-# Sanity floor: the subsystem emits many kinds; extracting almost none
-# means the call-site pattern drifted, which must fail loudly rather
-# than silently gate nothing.
+# Sanity floor: the subsystem emits many kinds (12 as of the streaming
+# journal); extracting almost none means the call-site pattern
+# drifted, which must fail loudly rather than silently gate nothing.
 n=$(echo "$kinds" | grep -c . || true)
-if [ "$n" -lt 5 ]; then
+if [ "$n" -lt 10 ]; then
   echo "check_journal_docs: extracted only $n event kind(s) — did the" >&2
-  echo "  Journal::record call-site pattern change? (expected >= 5)" >&2
+  echo "  Journal::record call-site pattern change? (expected >= 10)" >&2
   exit 1
 fi
 
 missing=0
 for k in $kinds; do
   if ! grep -qF "\`$k\`" "$DOC"; then
-    echo "UNDOCUMENTED journal event kind: $k — add it to $DOC" >&2
+    echo "UNDOCUMENTED journal event kind: $k — add a runbook row to $DOC" >&2
+    missing=1
+  fi
+  if ! grep -qE "^\| \`$k\` \|" "$SPEC"; then
+    echo "UNSPECIFIED journal event kind: $k — add a schema row (| \`$k\` | ...) to $SPEC" >&2
     missing=1
   fi
 done
@@ -54,4 +67,4 @@ if [ "$missing" -ne 0 ]; then
   echo "check_journal_docs: FAIL (see kinds above)" >&2
   exit 1
 fi
-echo "check_journal_docs: OK ($n event kinds documented in $DOC)"
+echo "check_journal_docs: OK ($n event kinds documented in $DOC + schema rows in $SPEC)"

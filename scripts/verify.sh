@@ -18,7 +18,8 @@
 #      documented in docs/OPERATIONS.md
 #      (scripts/check_config_docs.sh — pure shell, always runs)
 #   7. journal-docs gate: every journal event kind the campaign can
-#      emit must be documented in docs/OPERATIONS.md
+#      emit must have a runbook row in docs/OPERATIONS.md AND a
+#      field-by-field schema row in docs/JOURNAL.md
 #      (scripts/check_journal_docs.sh — pure shell, always runs)
 #   8. worker-loss drill: kill a W=4/pods=2 campaign mid-run, resume
 #      with `--reshard` on W=3/pods=1 through the real CLI, demand a
@@ -70,7 +71,7 @@ fi
 echo "== [6/8] config-key docs coverage (docs/OPERATIONS.md)"
 scripts/check_config_docs.sh
 
-echo "== [7/8] journal-event docs coverage (docs/OPERATIONS.md)"
+echo "== [7/8] journal-event docs coverage (docs/OPERATIONS.md + docs/JOURNAL.md)"
 scripts/check_journal_docs.sh
 
 echo "== [8/8] worker-loss reshard drill (self-skips on bare checkouts)"
