@@ -1,0 +1,256 @@
+//! §Serving — end-to-end latency/throughput of the folded-FP8 HTTP
+//! serving layer, emitting `BENCH_serving.json` (methodology:
+//! rust/EXPERIMENTS.md §Serving).
+//!
+//! Records per batch size ∈ {1, 8, 32}: request p50/p99 over a real
+//! socket, QPS, and generated tokens/s — with that many concurrent
+//! clients against a server whose batcher window matches, so the
+//! batched-forward amortization is what gets measured.
+//!
+//! Floors folded into `speedup_floors_met` (deterministic — wall-clock
+//! numbers are recorded ungated because a shared runner's latency says
+//! nothing about the deployment):
+//! * FP8 residency: the artifact's f32-equivalent weight bytes ÷
+//!   resident FP8 bytes ≥ 3.0 (the Table-4-shaped memory story for the
+//!   serving tier; norm gains stay f32, so exactly 4.0 is not claimed);
+//! * every benched request returns 200 and the folded engine's
+//!   generation is bit-identical to the scaled reference on a spot
+//!   probe (the export gate's invariant, re-checked where the numbers
+//!   are produced).
+//!
+//! A floor miss exits non-zero and writes `speedup_floors_met = false`
+//! — the CI bench-smoke job gates on both. `BENCH_QUICK=1` shrinks the
+//! model and the request counts (CI smoke mode).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use fp8_trainer::fp8::E4M3;
+use fp8_trainer::runtime::manifest::ModelDims;
+use fp8_trainer::serving::export::synth_state_for;
+use fp8_trainer::serving::{
+    export_state, serve, Engine, ExportOptions, ExportReport, ServeConfig, ServeMode,
+};
+use fp8_trainer::util::bench::write_json_report;
+use fp8_trainer::util::json::{obj, Json};
+use fp8_trainer::util::prng::Rng;
+
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+fn bench_dims() -> ModelDims {
+    if quick() {
+        ModelDims { vocab: 64, d_model: 32, n_layers: 2, n_heads: 4, d_ff: 24, seq_len: 32 }
+    } else {
+        // the tiny campaign preset — the smallest shape the training
+        // tier actually runs
+        ModelDims { vocab: 256, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 172, seq_len: 64 }
+    }
+}
+
+/// One blocking request over a fresh connection; returns (status,
+/// latency). The body is drained to EOF so the server's close is the
+/// end-of-response signal, exactly as the conformance suite does it.
+fn timed_request(addr: SocketAddr, body: &str) -> (u16, Duration) {
+    let t0 = Instant::now();
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let req = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: b\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("write");
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("read");
+    let elapsed = t0.elapsed();
+    let head_end = raw.windows(4).position(|w| w == b"\r\n\r\n").unwrap_or(0);
+    let status: u16 = std::str::from_utf8(&raw[..head_end])
+        .ok()
+        .and_then(|h| h.lines().next())
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    (status, elapsed)
+}
+
+fn percentile(sorted: &[Duration], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx].as_secs_f64()
+}
+
+fn prompts_for(dims: &ModelDims, n: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = 2 + (rng.next_u64() % 6) as usize;
+            (0..len).map(|_| rng.below(dims.vocab as u64) as usize).collect()
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let dims = bench_dims();
+    let dir = std::env::temp_dir().join(format!("fp8_bench_serving_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("model.fp8m");
+
+    println!(
+        "== export (fold gate + quantize, {}x{} x{}L) ==",
+        dims.vocab, dims.d_model, dims.n_layers
+    );
+    let st = synth_state_for(if quick() { "custom" } else { "tiny" }, &dims, 0xbe4c);
+    let opts = ExportOptions {
+        fmt: E4M3,
+        probe_tokens: 8,
+        dims: Some(dims.clone()),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let report: ExportReport = export_state(&st, &path, &opts)?;
+    let export_s = t0.elapsed().as_secs_f64();
+    let mem_ratio = report.f32_equiv_bytes as f64 / report.resident_fp8_bytes.max(1) as f64;
+    let mem_ok = mem_ratio >= 3.0;
+    println!(
+        "  export {export_s:.2}s; resident FP8 {} B vs f32-equivalent {} B \
+         ({mem_ratio:.2}x, floor 3.0x) {}",
+        report.resident_fp8_bytes,
+        report.f32_equiv_bytes,
+        if mem_ok { "PASS" } else { "FAIL" }
+    );
+
+    // ---- fold bit-identity spot probe, where the numbers are made
+    let spot = prompts_for(&dims, 3, 0x5b07);
+    let max_new_spot: Vec<usize> = vec![6; spot.len()];
+    let mut folded = Engine::load(&path, ServeMode::Folded)?;
+    let mut reference = Engine::load(&path, ServeMode::ScaledReference)?;
+    let rf = folded.generate_batch(&spot, &max_new_spot, |_, _, _, _| {})?;
+    let rr = reference.generate_batch(&spot, &max_new_spot, |_, _, _, _| {})?;
+    let fold_ok = rf
+        .iter()
+        .zip(&rr)
+        .all(|(a, b)| a.tokens == b.tokens && a.crcs == b.crcs);
+    println!(
+        "  fold spot probe: folded vs scaled-reference {}",
+        if fold_ok { "bit-identical PASS" } else { "DIVERGED FAIL" }
+    );
+
+    let mut records: Vec<Json> = Vec::new();
+    records.push(obj(vec![
+        ("name", Json::Str("serving export".into())),
+        ("export_s", Json::Num(export_s)),
+        ("file_bytes", Json::Num(report.file_bytes as f64)),
+        ("resident_fp8_bytes", Json::Num(report.resident_fp8_bytes as f64)),
+        ("f32_equiv_bytes", Json::Num(report.f32_equiv_bytes as f64)),
+        ("memory_ratio", Json::Num(mem_ratio)),
+        ("target_memory_ratio", Json::Num(3.0)),
+        ("pass", Json::Bool(mem_ok)),
+    ]));
+
+    // ---- latency/QPS at batch ∈ {1, 8, 32}
+    let batches: &[usize] = if quick() { &[1, 8] } else { &[1, 8, 32] };
+    let per_client = if quick() { 4usize } else { 12 };
+    let max_new = if quick() { 4usize } else { 12 };
+    let mut all_ok = true;
+    for &b in batches {
+        let engine = Engine::load(&path, ServeMode::Folded)?;
+        let cfg = ServeConfig { batch: b, batch_wait_ms: 2, ..ServeConfig::default() };
+        let server = serve(engine, &cfg)?;
+        let addr = server.addr();
+        let prompts = prompts_for(&dims, b, 0xc11e47 + b as u64);
+
+        // warmup: one request per client prompt, serially
+        for p in &prompts {
+            let body = body_for(p, max_new);
+            let (status, _) = timed_request(addr, &body);
+            all_ok &= status == 200;
+        }
+
+        let wall0 = Instant::now();
+        let handles: Vec<_> = prompts
+            .iter()
+            .cloned()
+            .map(|p| {
+                std::thread::spawn(move || {
+                    let body = body_for(&p, max_new);
+                    let mut lats = Vec::with_capacity(per_client);
+                    let mut ok = true;
+                    for _ in 0..per_client {
+                        let (status, lat) = timed_request(addr, &body);
+                        ok &= status == 200;
+                        lats.push(lat);
+                    }
+                    (ok, lats)
+                })
+            })
+            .collect();
+        let mut lats: Vec<Duration> = Vec::new();
+        for h in handles {
+            let (ok, l) = h.join().expect("client thread");
+            all_ok &= ok;
+            lats.extend(l);
+        }
+        let wall = wall0.elapsed().as_secs_f64();
+        lats.sort();
+        let p50 = percentile(&lats, 0.50);
+        let p99 = percentile(&lats, 0.99);
+        let n_req = lats.len();
+        let qps = n_req as f64 / wall;
+        let toks_per_s = (n_req * max_new) as f64 / wall;
+        println!(
+            "  batch={b}: {n_req} reqs in {wall:.2}s — p50 {:.1} ms, p99 {:.1} ms, \
+             {qps:.1} req/s, {toks_per_s:.0} tok/s",
+            p50 * 1e3,
+            p99 * 1e3
+        );
+        records.push(obj(vec![
+            ("name", Json::Str(format!("serving generate batch={b}"))),
+            ("batch", Json::Num(b as f64)),
+            ("requests", Json::Num(n_req as f64)),
+            ("max_new_tokens", Json::Num(max_new as f64)),
+            ("p50_s", Json::Num(p50)),
+            ("p99_s", Json::Num(p99)),
+            ("qps", Json::Num(qps)),
+            ("generated_tokens_per_s", Json::Num(toks_per_s)),
+        ]));
+        server.shutdown();
+    }
+    if !all_ok {
+        eprintln!("  FLOOR MISS: a benched request did not return 200");
+    }
+
+    let floors = mem_ok && fold_ok && all_ok;
+    write_json_report(
+        "BENCH_serving.json",
+        vec![
+            ("suite", Json::Str("serving".into())),
+            ("size", Json::Str(if quick() { "custom".into() } else { "tiny".into() })),
+            ("quick", Json::Bool(quick())),
+            ("speedup_floors_met", Json::Bool(floors)),
+            ("memory_floor_met", Json::Bool(mem_ok)),
+            ("fold_bit_identity_met", Json::Bool(fold_ok)),
+            ("all_requests_ok", Json::Bool(all_ok)),
+        ],
+        records,
+    )?;
+    println!("wrote BENCH_serving.json");
+    std::fs::remove_dir_all(&dir).ok();
+    if !floors {
+        eprintln!(
+            "FAIL: serving floors not met (memory >=3.0x: {mem_ok}; \
+             fold bit-identity: {fold_ok}; all 200s: {all_ok})"
+        );
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+fn body_for(prompt: &[usize], max_new: usize) -> String {
+    let ids: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!("{{\"prompt\":[{}],\"max_new\":{max_new}}}", ids.join(","))
+}

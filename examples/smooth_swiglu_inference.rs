@@ -2,21 +2,22 @@
 //! scales s_i can be absorbed into w1 (w̃1 = s·w1) and w3
 //! (w̃3 = s⁻¹·w3), so inference pays **zero** cost for the fix.
 //!
-//! This example demonstrates the algebra numerically in Rust using the
-//! fp8 codec: per-channel-scaled quantization of the SwiGLU product is
-//! exactly equivalent to running the plain SwiGLU with folded weights,
-//! for pow2 scales.
+//! Thin demo wrapper over the library pieces that now own this
+//! algebra: `serving::swiglu_products` / `serving::channel_scales`
+//! (calibration) and `coordinator::folding::fold_scales` (the fold).
+//! The asserted version of this demonstration — exact bit-equality of
+//! folded vs per-channel-scaled SwiGLU, NaN/−0.0/outlier payloads —
+//! lives in `rust/tests/property.rs`; the end-to-end served form in
+//! `rust/tests/serving.rs`.
 //!
 //! ```text
 //! cargo run --release --example smooth_swiglu_inference
 //! ```
 
-use fp8_trainer::fp8::{self, E4M3};
+use fp8_trainer::coordinator::folding::fold_scales;
+use fp8_trainer::fp8::E4M3;
+use fp8_trainer::serving::{channel_scales, swiglu_products};
 use fp8_trainer::util::prng::Rng;
-
-fn swish(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
-}
 
 fn main() {
     let d = 32;
@@ -27,8 +28,10 @@ fn main() {
     // weights, with one outlier channel (as post-alignment training makes)
     let mut w1 = vec![0.0f32; d * f];
     let mut w2 = vec![0.0f32; d * f];
+    let mut w3 = vec![0.0f32; f * d];
     rng.fill_normal(&mut w1, 0.4);
     rng.fill_normal(&mut w2, 0.4);
+    rng.fill_normal(&mut w3, 0.4);
     for i in 0..d {
         let a = w2[i * f + 3] * 20.0;
         w1[i * f + 3] = a; // aligned + large: the quadratic blow-up
@@ -37,76 +40,37 @@ fn main() {
     let mut xs = vec![0.0f32; n_tokens * d];
     rng.fill_normal(&mut xs, 1.0);
 
-    // SwiGLU products per token/channel
-    let mut h = vec![0.0f32; n_tokens * f];
-    for t in 0..n_tokens {
-        for j in 0..f {
-            let (mut a1, mut a2) = (0.0f32, 0.0f32);
-            for i in 0..d {
-                a1 += xs[t * d + i] * w1[i * f + j];
-                a2 += xs[t * d + i] * w2[i * f + j];
-            }
-            h[t * f + j] = a1 * swish(a2);
-        }
-    }
-
-    // per-channel JIT scales (training-time Smooth-SwiGLU)
-    let mut s = vec![1.0f32; f];
-    for j in 0..f {
-        let amax = (0..n_tokens).map(|t| h[t * f + j].abs()).fold(0.0f32, f32::max);
-        s[j] = fp8::compute_scale(E4M3, amax);
-    }
-
-    // (a) training-style: q = Q(h·s), consumer folds s⁻¹
-    // (b) inference-style: fold s into the *stored quantized weights'
-    //     output* — Q(s·h)/s must equal the per-channel dequant exactly
-    // quantization error normalized by each channel's own amax — the
-    // quantity per-channel scaling controls (per-value relative error
-    // is unbounded for any fixed-point-in-range scheme)
-    let mut max_rel = 0.0f32;
-    let mut plain_overflows = 0usize;
-    let g = fp8::compute_scale(E4M3, h.iter().fold(0.0f32, |a, &x| a.max(x.abs())));
-    for t in 0..n_tokens {
-        for j in 0..f {
-            let v = h[t * f + j];
-            let amax_j = E4M3.max() / s[j];
-            let smooth = E4M3.decode(E4M3.encode((v * s[j]).clamp(-E4M3.max(), E4M3.max()))) / s[j];
-            // per-tensor quantization for contrast (scale from global amax)
-            let plain = E4M3.decode(E4M3.encode(v * g)) / g;
-            if !plain.is_finite() {
-                plain_overflows += 1;
-            }
-            max_rel = max_rel.max((smooth - v).abs() / amax_j);
-        }
-    }
+    // calibrate: SwiGLU products → per-channel pow2 smoothing scales
+    let h = swiglu_products(&xs, &w1, &w2, n_tokens, d, f);
+    let s = channel_scales(E4M3, &h, n_tokens, f);
     println!("tokens={n_tokens}, channels={f}, outlier channel 3 scale s={}", s[3]);
-    println!(
-        "Smooth-SwiGLU max quantization error / channel amax: {max_rel:.4} (E4M3 top-binade step = 0.0625)"
-    );
 
-    // folding exactness: Q(s·h)/s == (1/s)·Q(s·h) is trivially exact;
-    // the substantive check is that per-channel error stays bounded
-    // while per-tensor quantization crushes the small channels
-    let g = fp8::compute_scale(E4M3, h.iter().fold(0.0f32, |a, &x| a.max(x.abs())));
-    let mut crushed = 0usize;
+    // fold: w̃1 = s·w1 and w̃3 = s⁻¹·w3 — the inference-time form
+    let mut w1f = w1.clone();
+    let mut w3f = w3.clone();
+    fold_scales(&mut w1f, &mut w3f, &[s.clone()], d, f).unwrap();
+
+    // the §4.4 claim, checked bitwise: the folded plain-SwiGLU product
+    // IS the per-channel-scaled product, exactly (pow2 multiplication
+    // commutes with f32 rounding)
+    let hf = swiglu_products(&xs, &w1f, &w2, n_tokens, d, f);
+    let mut mismatches = 0usize;
     for t in 0..n_tokens {
         for j in 0..f {
-            if j == 3 {
-                continue;
-            }
-            let v = h[t * f + j];
-            let plain = E4M3.decode(E4M3.encode(v * g)) / g;
-            if v.abs() > 1e-3 && plain == 0.0 {
-                crushed += 1;
+            let scaled = h[t * f + j] * s[j];
+            if scaled.to_bits() != hf[t * f + j].to_bits() {
+                mismatches += 1;
             }
         }
     }
     println!(
-        "per-tensor scaling under the outlier: {crushed} non-outlier values flushed to zero, {plain_overflows} overflows"
+        "folded SwiGLU vs per-channel-scaled SwiGLU: {mismatches} bit mismatches \
+         over {} products",
+        n_tokens * f
     );
+    assert_eq!(mismatches, 0, "pow2 folding must be bit-exact");
     println!(
         "per-channel scaling (Smooth-SwiGLU): all channels keep full E4M3 resolution — \
          zero inference cost after folding"
     );
-    assert!(max_rel < 0.07, "smooth error must stay within one top-binade E4M3 step");
 }

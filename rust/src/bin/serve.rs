@@ -1,0 +1,229 @@
+//! `serve` — inference serving on folded FP8 checkpoints.
+//!
+//! ```text
+//! serve export --snapshot S.ckpt --out M.fp8m [--fmt e4m3|e5m2]
+//!              [--probe-tokens N] [--probe-seed N]
+//! serve run    --model M.fp8m [--addr A] [--port P] [--batch N]
+//!              [--batch-wait-ms N] [--max-body-bytes N]
+//!              [--max-new-tokens N] [--reference]
+//! serve probe  --model M.fp8m --prompt 1,2,3 [--max-new N] [--reference]
+//! ```
+//!
+//! `export` folds the Smooth-SwiGLU per-channel scales into a campaign
+//! snapshot's w1/w3, quantizes to FP8, and writes a model artifact —
+//! refusing unless the folded-FP8 forward is bit-identical to the
+//! unfolded scaled reference on a deterministic probe (paper §4.4's
+//! zero-cost-at-inference claim, proved per artifact). `run` serves the
+//! artifact over HTTP (`/v1/generate`, `/v1/healthz`, `/v1/metrics`);
+//! `probe` runs one in-process generation for smoke checks. The
+//! `--reference` flag serves/probes in the unfolded scaled-reference
+//! mode — its outputs must be bit-identical to the default folded mode
+//! (the conformance suite pins this over a real socket).
+//!
+//! Bad usage exits 2; runtime failures (including export-gate
+//! refusals) exit 1. Flags intentionally mirror the `serve_*` config
+//! keys documented in docs/OPERATIONS.md §Serving.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use fp8_trainer::serving::{
+    export_snapshot, fmt_name, serve, Engine, ExportOptions, ServeConfig, ServeMode,
+};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        usage();
+        std::process::exit(2);
+    };
+    let rest = &args[1..];
+    let result = match cmd.as_str() {
+        "export" => export(rest),
+        "run" => run(rest),
+        "probe" => probe(rest),
+        "--help" | "-h" | "help" => {
+            usage();
+            return;
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "serve — inference serving on folded FP8 checkpoints\n\
+         \n\
+         serve export --snapshot S.ckpt --out M.fp8m [--fmt e4m3|e5m2]\n\
+         \x20             [--probe-tokens N] [--probe-seed N]\n\
+         serve run    --model M.fp8m [--addr A] [--port P] [--batch N]\n\
+         \x20             [--batch-wait-ms N] [--max-body-bytes N]\n\
+         \x20             [--max-new-tokens N] [--reference]\n\
+         serve probe  --model M.fp8m --prompt 1,2,3 [--max-new N] [--reference]"
+    );
+}
+
+/// `--flag value` pairs plus boolean `--reference`.
+struct Flags {
+    kv: Vec<(String, String)>,
+    reference: bool,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut kv = Vec::new();
+        let mut reference = false;
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--reference" {
+                reference = true;
+                i += 1;
+                continue;
+            }
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected argument '{a}' (flags are --name value)");
+            };
+            let Some(value) = args.get(i + 1) else {
+                bail!("flag --{name} needs a value");
+            };
+            kv.push((name.to_string(), value.clone()));
+            i += 2;
+        }
+        Ok(Self { kv, reference })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.kv.iter().rev().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    fn path(&self, name: &str) -> Result<PathBuf> {
+        self.get(name).map(PathBuf::from).ok_or_else(|| anyhow!("--{name} is required"))
+    }
+
+    fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} must be an integer, got '{v}'")),
+        }
+    }
+
+    fn reject_unknown(&self, known: &[&str]) -> Result<()> {
+        for (n, _) in &self.kv {
+            if !known.contains(&n.as_str()) {
+                bail!("unknown flag --{n}");
+            }
+        }
+        Ok(())
+    }
+
+    fn mode(&self) -> ServeMode {
+        if self.reference { ServeMode::ScaledReference } else { ServeMode::Folded }
+    }
+}
+
+fn export(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    flags.reject_unknown(&["snapshot", "out", "fmt", "probe-tokens", "probe-seed"])?;
+    let snapshot = flags.path("snapshot")?;
+    let out = flags.path("out")?;
+    let mut opts = ExportOptions::default();
+    if let Some(f) = flags.get("fmt") {
+        opts.fmt = match f {
+            "e4m3" => fp8_trainer::fp8::E4M3,
+            "e5m2" => fp8_trainer::fp8::E5M2,
+            other => bail!("--fmt must be 'e4m3' or 'e5m2', got '{other}'"),
+        };
+    }
+    opts.probe_tokens = flags.usize_or("probe-tokens", opts.probe_tokens)?;
+    opts.probe_seed = flags.usize_or("probe-seed", opts.probe_seed as usize)? as u64;
+    let report = export_snapshot(&snapshot, &out, &opts)?;
+    println!(
+        "exported {} (step {}) as {} [{}]\n\
+         fold gate: {} probe logits bit-identical (crc {:08x})\n\
+         file {} bytes; resident FP8 {} bytes vs f32-equivalent {} bytes ({:.2}x)",
+        report.size,
+        report.step,
+        out.display(),
+        fmt_name(report.fmt),
+        report.probe_len,
+        report.probe_crc,
+        report.file_bytes,
+        report.resident_fp8_bytes,
+        report.f32_equiv_bytes,
+        report.f32_equiv_bytes as f64 / report.resident_fp8_bytes.max(1) as f64,
+    );
+    Ok(())
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    flags.reject_unknown(&[
+        "model",
+        "addr",
+        "port",
+        "batch",
+        "batch-wait-ms",
+        "max-body-bytes",
+        "max-new-tokens",
+    ])?;
+    let model = flags.path("model")?;
+    let defaults = ServeConfig::default();
+    let cfg = ServeConfig::from_keys(
+        flags.get("addr").unwrap_or(&defaults.addr),
+        flags.usize_or("port", defaults.port as usize)?,
+        flags.usize_or("batch", defaults.batch)?,
+        flags.usize_or("batch-wait-ms", defaults.batch_wait_ms as usize)?,
+        flags.usize_or("max-body-bytes", defaults.max_body_bytes)?,
+        flags.usize_or("max-new-tokens", defaults.max_new_tokens)?,
+        fmt_name(defaults.fmt),
+    )
+    .map_err(|e| anyhow!(e))?;
+    let engine = Engine::load(&model, flags.mode())?;
+    let info = engine.info().clone();
+    let handle = serve(engine, &cfg)?;
+    println!(
+        "serving {} (step {}, {}, mode {}) on http://{}/v1/generate",
+        info.size,
+        info.step,
+        fmt_name(info.fmt),
+        info.mode.as_str(),
+        handle.addr()
+    );
+    // foreground process: the threads do the work; park until killed
+    loop {
+        std::thread::park();
+    }
+}
+
+fn probe(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    flags.reject_unknown(&["model", "prompt", "max-new"])?;
+    let model = flags.path("model")?;
+    let prompt: Vec<usize> = flags
+        .get("prompt")
+        .ok_or_else(|| anyhow!("--prompt is required (comma-separated token ids)"))?
+        .split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow!("bad prompt token '{t}' (ids are integers)"))
+        })
+        .collect::<Result<_>>()?;
+    let max_new = flags.usize_or("max-new", 8)?;
+    let mut engine = Engine::load(&model, flags.mode())?;
+    let results = engine.generate_batch(&[prompt], &[max_new], |_, _, _, _| {})?;
+    let res = &results[0];
+    println!("tokens: {:?}", res.tokens);
+    println!("logits_crcs: {:?}", res.crcs.iter().map(|c| format!("{c:08x}")).collect::<Vec<_>>());
+    Ok(())
+}

@@ -810,8 +810,9 @@ fn clip(s: &str, max: usize) -> String {
 }
 
 /// Escape a Prometheus label value (`\` → `\\`, `"` → `\"`, newline →
-/// `\n`, per the text-exposition spec).
-fn prom_escape(s: &str) -> String {
+/// `\n`, per the text-exposition spec). Shared with the serving
+/// layer's `/v1/metrics` endpoint.
+pub fn prom_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {

@@ -306,6 +306,14 @@ pub struct Checkpoint {
     pub meta: Json,
     /// name → (storage dtype, decoded f32 data)
     pub tensors: BTreeMap<String, (Dtype, Vec<f32>)>,
+    /// For fixed-width FP8 sections ([`Dtype::E4M3`] / [`Dtype::E5M2`])
+    /// only: name → (format, global scale, raw payload bytes). Lets
+    /// FP8-resident consumers (the serving engine) adopt the stored
+    /// bytes verbatim instead of round-tripping through the decoded
+    /// f32 copy in [`Checkpoint::tensors`]. Decoding the payload with
+    /// [`crate::fp8::bulk::unpack_scaled_buf`] reproduces the
+    /// `tensors` entry bit-for-bit.
+    pub raw_fp8: BTreeMap<String, (fp8::Fp8Format, f32, Vec<u8>)>,
     /// on-disk size (the Table 4 measurement)
     pub file_bytes: u64,
 }
@@ -353,6 +361,7 @@ impl Checkpoint {
         .map_err(|e| anyhow!("meta json: {e}"))?;
 
         let mut tensors = BTreeMap::new();
+        let mut raw_fp8 = BTreeMap::new();
         while i < buf.len() {
             let name_len = read_u16(&buf, &mut i)? as usize;
             if i + name_len > buf.len() {
@@ -380,11 +389,20 @@ impl Checkpoint {
                     .ok_or_else(|| anyhow!("truncated tensor '{name}'"))?;
                 let payload = &buf[i..i + nbytes];
                 i += nbytes;
+                match dtype {
+                    Dtype::E4M3 => {
+                        raw_fp8.insert(name.clone(), (E4M3, scale, payload.to_vec()));
+                    }
+                    Dtype::E5M2 => {
+                        raw_fp8.insert(name.clone(), (E5M2, scale, payload.to_vec()));
+                    }
+                    _ => {}
+                }
                 decode_fixed_width(dtype, payload, scale)
             };
             tensors.insert(name, (dtype, data));
         }
-        Ok(Self { meta, tensors, file_bytes })
+        Ok(Self { meta, tensors, raw_fp8, file_bytes })
     }
 
     /// Borrow a tensor's decoded f32 data by name (error if absent).
@@ -538,6 +556,35 @@ mod tests {
             for (x, y) in data.iter().zip(got) {
                 assert!((x - y).abs() <= x.abs() as f64 as f32 * tol as f32 + 1e-4,
                         "{name}: {x} vs {y}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn raw_fp8_bytes_decode_to_the_tensors_entry_bitwise() {
+        let dir = std::env::temp_dir().join("fp8_ckpt_raw");
+        let path = dir.join("t.ckpt");
+        let data: Vec<f32> = (0..64).map(|i| ((i as f32) * 0.91).sin() * 2.3).collect();
+        let mut w = Writer::new(&obj(vec![]));
+        w.tensor("q", Dtype::E4M3, &data).tensor("r", Dtype::E5M2, &data).tensor(
+            "s",
+            Dtype::F32,
+            &data,
+        );
+        w.finish(&path).unwrap();
+        let c = Checkpoint::load(&path).unwrap();
+        // f32 sections have no raw entry; FP8 sections carry exactly
+        // the stored payload, whose decode matches the decoded tensor
+        assert!(!c.raw_fp8.contains_key("s"));
+        for name in ["q", "r"] {
+            let (fmt, scale, bytes) = c.raw_fp8.get(name).unwrap();
+            assert_eq!(bytes.len(), data.len());
+            let mut dec = vec![0.0f32; bytes.len()];
+            fp8::bulk::unpack_scaled_buf(*fmt, bytes, *scale, &mut dec);
+            let stored = c.tensor(name).unwrap();
+            for (a, b) in dec.iter().zip(stored) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name}: {a} vs {b}");
             }
         }
         std::fs::remove_dir_all(&dir).ok();

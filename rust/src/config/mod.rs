@@ -211,6 +211,22 @@ pub struct TrainConfig {
     /// FP8 format of the GEMM gradient operand ("e4m3" | "e5m2";
     /// default e5m2 — gradients need the range, PAPER.md §3)
     pub gemm_g_fmt: String,
+    /// serving: bind address of the `serve run` HTTP layer
+    pub serve_addr: String,
+    /// serving: bind port (0 = OS-assigned ephemeral port)
+    pub serve_port: usize,
+    /// serving: max requests coalesced into one batched forward
+    pub serve_batch: usize,
+    /// serving: max milliseconds to wait for the batch to fill after
+    /// the first request arrives
+    pub serve_batch_wait_ms: usize,
+    /// serving: request-body byte cap — larger bodies get a typed 413
+    /// refusal (`serving::OversizedBody`)
+    pub serve_max_body_bytes: usize,
+    /// serving: server-side cap on tokens generated per request
+    pub serve_max_new_tokens: usize,
+    /// serving: export quantization format ("e4m3" | "e5m2")
+    pub serve_fmt: String,
 }
 
 impl Default for TrainConfig {
@@ -255,6 +271,13 @@ impl Default for TrainConfig {
             gemm_w_fmt: "e4m3".into(),
             gemm_x_fmt: "e4m3".into(),
             gemm_g_fmt: "e5m2".into(),
+            serve_addr: "127.0.0.1".into(),
+            serve_port: 0,
+            serve_batch: 8,
+            serve_batch_wait_ms: 5,
+            serve_max_body_bytes: 1_048_576,
+            serve_max_new_tokens: 64,
+            serve_fmt: "e4m3".into(),
         }
     }
 }
@@ -345,6 +368,19 @@ impl TrainConfig {
                 "gemm.w_fmt" | "gemm_w_fmt" => c.gemm_w_fmt = v.as_str()?,
                 "gemm.x_fmt" | "gemm_x_fmt" => c.gemm_x_fmt = v.as_str()?,
                 "gemm.g_fmt" | "gemm_g_fmt" => c.gemm_g_fmt = v.as_str()?,
+                "serve.addr" | "serve_addr" => c.serve_addr = v.as_str()?,
+                "serve.port" | "serve_port" => c.serve_port = v.as_usize()?,
+                "serve.batch" | "serve_batch" => c.serve_batch = v.as_usize()?,
+                "serve.batch_wait_ms" | "serve_batch_wait_ms" => {
+                    c.serve_batch_wait_ms = v.as_usize()?
+                }
+                "serve.max_body_bytes" | "serve_max_body_bytes" => {
+                    c.serve_max_body_bytes = v.as_usize()?
+                }
+                "serve.max_new_tokens" | "serve_max_new_tokens" => {
+                    c.serve_max_new_tokens = v.as_usize()?
+                }
+                "serve.fmt" | "serve_fmt" => c.serve_fmt = v.as_str()?,
                 _ => return Err(format!("unknown config key '{k}'")),
             }
         }
@@ -392,6 +428,9 @@ impl TrainConfig {
         // the gemm keys validate even when no gemm recipe is active, so
         // a typo'd format cannot lurk until someone flips the recipe
         c.gemm_config()?;
+        // same for the serve keys: `serve run` must not discover a
+        // typo'd format hours after the training campaign finished
+        c.serve_config()?;
         Ok(c)
     }
 
@@ -407,6 +446,22 @@ impl TrainConfig {
             &self.gemm_w_fmt,
             &self.gemm_x_fmt,
             &self.gemm_g_fmt,
+        )
+    }
+
+    /// The serving configuration built from the `serve_*` keys
+    /// (validated — see [`crate::serving::ServeConfig`]). Not part of
+    /// the snapshot numerics fingerprint: serving never changes
+    /// training bits.
+    pub fn serve_config(&self) -> Result<crate::serving::ServeConfig, String> {
+        crate::serving::ServeConfig::from_keys(
+            &self.serve_addr,
+            self.serve_port,
+            self.serve_batch,
+            self.serve_batch_wait_ms,
+            self.serve_max_body_bytes,
+            self.serve_max_new_tokens,
+            &self.serve_fmt,
         )
     }
 
@@ -669,6 +724,55 @@ mod tests {
         assert!(
             TrainConfig::load(None, &[("bucket_bytes".into(), "0".into())]).is_err(),
             "a zero-byte bucket cannot partition anything"
+        );
+    }
+
+    #[test]
+    fn serve_keys_parse_and_validate() {
+        let d = TrainConfig::default();
+        assert_eq!(d.serve_addr, "127.0.0.1", "loopback by default — serving is opt-in");
+        assert_eq!(d.serve_port, 0, "ephemeral port by default");
+        assert_eq!(d.serve_batch, 8);
+        assert_eq!(d.serve_batch_wait_ms, 5);
+        assert_eq!(d.serve_max_body_bytes, 1_048_576);
+        assert_eq!(d.serve_max_new_tokens, 64);
+        assert_eq!(d.serve_fmt, "e4m3");
+        d.serve_config().unwrap();
+        let c = TrainConfig::load(
+            None,
+            &[
+                ("serve.addr".into(), "0.0.0.0".into()),
+                ("serve_port".into(), "8080".into()),
+                ("serve.batch".into(), "32".into()),
+                ("serve_batch_wait_ms".into(), "0".into()),
+                ("serve.max_body_bytes".into(), "4096".into()),
+                ("serve_max_new_tokens".into(), "16".into()),
+                ("serve.fmt".into(), "e5m2".into()),
+            ],
+        )
+        .unwrap();
+        let sc = c.serve_config().unwrap();
+        assert_eq!(sc.addr, "0.0.0.0");
+        assert_eq!(sc.port, 8080);
+        assert_eq!(sc.batch, 32);
+        assert_eq!(sc.batch_wait_ms, 0);
+        assert_eq!(sc.max_body_bytes, 4096);
+        assert_eq!(sc.max_new_tokens, 16);
+        assert!(
+            TrainConfig::load(None, &[("serve_batch".into(), "0".into())]).is_err(),
+            "an empty batch cannot coalesce anything"
+        );
+        assert!(
+            TrainConfig::load(None, &[("serve_port".into(), "70000".into())]).is_err(),
+            "ports are u16"
+        );
+        assert!(
+            TrainConfig::load(None, &[("serve_fmt".into(), "bf16".into())]).is_err(),
+            "only the two FP8 formats exist as export targets"
+        );
+        assert!(
+            TrainConfig::load(None, &[("serve_max_body_bytes".into(), "0".into())]).is_err(),
+            "a zero body cap refuses every request"
         );
     }
 

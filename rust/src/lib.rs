@@ -28,6 +28,11 @@
 //!   histograms (paper Figs. 1, 2, 7, 9).
 //! * [`perfmodel`] — analytic Gaudi2/A6000 throughput models
 //!   (Tables 3 and 5) and the Pallas kernel VMEM/MXU estimator.
+//! * [`serving`] — the fourth workload layer (train / resume / observe
+//!   → serve): snapshot → folded-FP8 model export gated on fold
+//!   bit-exactness (paper §4.4), an FP8-resident inference engine, and
+//!   a pure-std HTTP serving layer with batched generation (the
+//!   `serve` CLI drives it).
 //!
 //! Offline-build note: only the `xla` crate's vendored closure is
 //! available, so `util` re-implements the small substrates a normal
@@ -47,4 +52,5 @@ pub mod optimizer;
 pub mod perfmodel;
 pub mod runtime;
 pub mod scaling;
+pub mod serving;
 pub mod util;

@@ -1,0 +1,779 @@
+//! FP8-resident inference engine over folded model artifacts.
+//!
+//! Parameters stay as the artifact's raw FP8 bytes for their whole
+//! lifetime; each forward decodes one weight at a time through the
+//! [`crate::fp8::bulk`] LUT codec into a single reusable scratch
+//! buffer (allocation-free in steady state — the scratch grows once to
+//! the largest per-layer weight and is then reused), multiplies
+//! through the pinned-order [`crate::gemm::matmul_f32`] kernel, and
+//! discards the f32 view. Resident model memory is therefore the FP8
+//! payload (~1 byte/element on every matrix) plus the f32 norm gains —
+//! the FP8-LM memory/bandwidth story, measured by
+//! [`Engine::resident_bytes`] and floored in `benches/perf_serving.rs`.
+//!
+//! The forward graph is the inference side of `python/compile/model.py`
+//! (Llama-style: pre-norm RMSNorm, RoPE, causal MHA, SwiGLU, untied
+//! head) with activations in plain f32 — no activation quantization,
+//! exactly the "zero-cost at inference" configuration the folded
+//! artifact promises. Batched decoding is layer-major: each weight is
+//! decoded once per layer and applied to every sequence in the batch,
+//! so batching amortizes the decode bandwidth; per-sequence math never
+//! reads another sequence's state, which is why batched and serial
+//! results are bit-identical (pinned by `rust/tests/serving.rs`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::fp8::{self, Fp8Format, E4M3, E5M2};
+use crate::gemm::{matmul_f32, Matrix};
+use crate::runtime::manifest::ModelDims;
+
+/// RMSNorm epsilon (matches `python/compile/model.py::ModelConfig`).
+const NORM_EPS: f32 = 1e-5;
+/// RoPE base (ditto).
+const ROPE_BASE: f32 = 10000.0;
+
+/// The weight names a servable artifact must carry, with per-tensor
+/// element counts derived from the model dims.
+pub(crate) fn weight_specs(dims: &ModelDims) -> Vec<(&'static str, usize)> {
+    let (v, d, l, f) = (dims.vocab, dims.d_model, dims.n_layers, dims.d_ff);
+    vec![
+        ("embed", v * d),
+        ("head", d * v),
+        ("ln_f", d),
+        ("ln_1", l * d),
+        ("ln_2", l * d),
+        ("wq", l * d * d),
+        ("wk", l * d * d),
+        ("wv", l * d * d),
+        ("wo", l * d * d),
+        ("w1", l * d * f),
+        ("w2", l * d * f),
+        ("w3", l * f * d),
+    ]
+}
+
+/// Weights that stay f32 in the artifact (tiny, and RMSNorm gain
+/// precision is not worth one byte per element).
+pub(crate) const NORM_GAINS: [&str; 3] = ["ln_f", "ln_1", "ln_2"];
+
+/// Model dims of the known size presets (`python/compile/model.py::SIZES`).
+/// Artifacts are self-describing (dims ride in the metadata), so this
+/// table is only needed when *exporting* from a snapshot, whose meta
+/// carries a size name.
+pub fn dims_of(size: &str) -> Option<ModelDims> {
+    let (vocab, d_model, n_layers, n_heads, d_ff, seq_len) = match size {
+        "tiny" => (256, 64, 2, 4, 172, 64),
+        "s1m" => (512, 128, 3, 4, 344, 128),
+        "s8m" => (2048, 256, 4, 8, 688, 128),
+        "m100" => (8192, 768, 12, 12, 2048, 256),
+        _ => return None,
+    };
+    Some(ModelDims { vocab, d_model, n_layers, n_heads, d_ff, seq_len })
+}
+
+/// Config-file spelling of an FP8 format.
+pub fn fmt_name(fmt: Fp8Format) -> &'static str {
+    match fmt {
+        Fp8Format::E4M3 => "e4m3",
+        Fp8Format::E5M2 => "e5m2",
+    }
+}
+
+/// Which algebraic form of the Smooth-SwiGLU scales the forward runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeMode {
+    /// Weights as stored (scales folded into w̃1/w̃3), plain SwiGLU —
+    /// the production path: zero extra work per token.
+    Folded,
+    /// The unfolded scaled reference: w̃1 is un-folded at load by the
+    /// exact pow2 per-channel division, and the SwiGLU product is
+    /// explicitly re-multiplied by the per-channel scales. Every other
+    /// tensor and kernel is byte-identical to [`ServeMode::Folded`],
+    /// so any output difference is a fold-exactness violation — the
+    /// export gate and the conformance suite demand bit equality.
+    ScaledReference,
+}
+
+impl ServeMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ServeMode::Folded => "folded",
+            ServeMode::ScaledReference => "scaled_reference",
+        }
+    }
+}
+
+/// One resident weight tensor: raw FP8 bytes (decoded on demand) or
+/// plain f32 (norm gains; the unfolded w1 in reference mode).
+#[derive(Clone, Debug)]
+pub enum Stored {
+    /// FP8 payload with the per-tensor pow2 scale chosen at export.
+    Fp8 { fmt: Fp8Format, scale: f32, bytes: Vec<u8> },
+    /// Raw f32 storage.
+    F32(Vec<f32>),
+}
+
+impl Stored {
+    pub fn numel(&self) -> usize {
+        match self {
+            Stored::Fp8 { bytes, .. } => bytes.len(),
+            Stored::F32(v) => v.len(),
+        }
+    }
+
+    /// Resident payload bytes (what this process actually holds).
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            Stored::Fp8 { bytes, .. } => bytes.len(),
+            Stored::F32(v) => v.len() * 4,
+        }
+    }
+}
+
+/// Static description of a loaded model, cloned out of the engine for
+/// the server's request validation, health endpoint, and metrics.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub size: String,
+    pub recipe: String,
+    pub step: usize,
+    pub fmt: Fp8Format,
+    pub mode: ServeMode,
+    pub dims: ModelDims,
+    /// bytes held as raw FP8 payloads
+    pub resident_fp8_bytes: usize,
+    /// bytes held as f32 (norm gains; unfolded w1 in reference mode)
+    pub resident_f32_bytes: usize,
+    /// what the same parameters would occupy fully f32-resident
+    pub f32_equiv_bytes: usize,
+}
+
+/// One request's generation output: greedy tokens plus a CRC-32 of the
+/// last-position logits at each step — the end-to-end bit-identity
+/// witness the conformance suite compares across serving modes.
+#[derive(Clone, Debug, Default)]
+pub struct GenResult {
+    pub tokens: Vec<usize>,
+    pub crcs: Vec<u32>,
+}
+
+/// The FP8-resident inference engine. Construct via [`Engine::load`]
+/// (from an exported artifact) or [`Engine::from_parts`] (the export
+/// gate's in-memory path).
+pub struct Engine {
+    info: ModelInfo,
+    weights: BTreeMap<String, Stored>,
+    /// per-layer per-channel Smooth-SwiGLU fold scales `[L][d_ff]`
+    scales: Vec<Vec<f32>>,
+    /// RoPE tables `[seq_len, head_dim/2]`
+    rope_cos: Vec<f32>,
+    rope_sin: Vec<f32>,
+    /// reusable weight-decode scratch (the allocation-free steady state)
+    wbuf: Vec<f32>,
+}
+
+impl Engine {
+    /// Build an engine from already-quantized tensors. Validates tensor
+    /// presence/lengths and that every fold scale is a positive normal
+    /// pow2 (the exactness precondition of the whole fold story).
+    pub fn from_parts(
+        dims: ModelDims,
+        size: &str,
+        recipe: &str,
+        step: usize,
+        fmt: Fp8Format,
+        mut weights: BTreeMap<String, Stored>,
+        scales: Vec<Vec<f32>>,
+        mode: ServeMode,
+    ) -> Result<Self> {
+        if dims.n_heads == 0 || dims.d_model % dims.n_heads != 0 {
+            bail!(
+                "d_model ({}) must be a positive multiple of n_heads ({})",
+                dims.d_model,
+                dims.n_heads
+            );
+        }
+        if dims.head_dim() % 2 != 0 {
+            bail!("head_dim ({}) must be even for rotate-half RoPE", dims.head_dim());
+        }
+        if dims.seq_len == 0 || dims.vocab == 0 || dims.n_layers == 0 || dims.d_ff == 0 {
+            bail!("degenerate model dims: {dims:?}");
+        }
+        for (name, want) in weight_specs(&dims) {
+            let got = weights
+                .get(name)
+                .ok_or_else(|| anyhow!("model is missing weight '{name}'"))?
+                .numel();
+            if got != want {
+                bail!("weight '{name}': {got} elements, expected {want} for dims {dims:?}");
+            }
+        }
+        if scales.len() != dims.n_layers || scales.iter().any(|s| s.len() != dims.d_ff) {
+            bail!(
+                "fold scales must be [n_layers × d_ff] = [{} × {}]",
+                dims.n_layers,
+                dims.d_ff
+            );
+        }
+        for (l, row) in scales.iter().enumerate() {
+            for (j, &s) in row.iter().enumerate() {
+                // positive normal pow2: sign 0, mantissa 0, exponent nonzero
+                if !(s > 0.0) || !s.is_finite() || (s.to_bits() & 0x007f_ffff) != 0 {
+                    bail!("fold scale [layer {l}, channel {j}] = {s} is not a positive pow2");
+                }
+            }
+        }
+        if mode == ServeMode::ScaledReference {
+            // Un-fold w̃1 by the exact per-channel pow2 division; the
+            // result is kept f32-resident (per-column scales cannot be
+            // re-absorbed into one per-tensor FP8 scale).
+            let (d, f) = (dims.d_model, dims.d_ff);
+            let stored = weights.remove("w1").expect("validated above");
+            let mut w1 = decode_all(&stored);
+            for (l, row) in scales.iter().enumerate() {
+                let base = l * d * f;
+                for i in 0..d {
+                    for (j, &s) in row.iter().enumerate() {
+                        w1[base + i * f + j] /= s;
+                    }
+                }
+            }
+            weights.insert("w1".into(), Stored::F32(w1));
+        }
+
+        let (mut fp8_bytes, mut f32_bytes, mut equiv) = (0usize, 0usize, 0usize);
+        for st in weights.values() {
+            equiv += st.numel() * 4;
+            match st {
+                Stored::Fp8 { .. } => fp8_bytes += st.resident_bytes(),
+                Stored::F32(_) => f32_bytes += st.resident_bytes(),
+            }
+        }
+
+        let half = dims.head_dim() / 2;
+        let mut rope_cos = vec![0.0f32; dims.seq_len * half];
+        let mut rope_sin = vec![0.0f32; dims.seq_len * half];
+        for pos in 0..dims.seq_len {
+            for e in 0..half {
+                let freq = ROPE_BASE.powf(-(e as f32) / half as f32);
+                let angle = pos as f32 * freq;
+                rope_cos[pos * half + e] = angle.cos();
+                rope_sin[pos * half + e] = angle.sin();
+            }
+        }
+
+        Ok(Self {
+            info: ModelInfo {
+                size: size.to_string(),
+                recipe: recipe.to_string(),
+                step,
+                fmt,
+                mode,
+                dims,
+                resident_fp8_bytes: fp8_bytes,
+                resident_f32_bytes: f32_bytes,
+                f32_equiv_bytes: equiv,
+            },
+            weights,
+            scales,
+            rope_cos,
+            rope_sin,
+            wbuf: Vec::new(),
+        })
+    }
+
+    /// Load an exported `fp8_model` artifact (CRC-verified by the
+    /// checkpoint layer — a flipped payload bit is a load *error*, not
+    /// a silently different model). FP8 sections are adopted as raw
+    /// bytes via [`Checkpoint`]'s `raw_fp8` map, so the decoded f32
+    /// copies the loader produces are dropped here and steady-state
+    /// residency is the FP8 payload.
+    pub fn load<P: AsRef<Path>>(path: P, mode: ServeMode) -> Result<Self> {
+        let path = path.as_ref();
+        let mut ckpt =
+            Checkpoint::load(path).with_context(|| format!("loading model {}", path.display()))?;
+        let kind = ckpt.meta.str_or("kind", "");
+        if kind != "fp8_model" {
+            bail!(
+                "{} is not an fp8_model artifact (kind '{kind}') — produce one with \
+                 `serve export`",
+                path.display()
+            );
+        }
+        let dims = ModelDims {
+            vocab: ckpt.meta.usize_of("vocab").map_err(|e| anyhow!(e))?,
+            d_model: ckpt.meta.usize_of("d_model").map_err(|e| anyhow!(e))?,
+            n_layers: ckpt.meta.usize_of("n_layers").map_err(|e| anyhow!(e))?,
+            n_heads: ckpt.meta.usize_of("n_heads").map_err(|e| anyhow!(e))?,
+            d_ff: ckpt.meta.usize_of("d_ff").map_err(|e| anyhow!(e))?,
+            seq_len: ckpt.meta.usize_of("seq_len").map_err(|e| anyhow!(e))?,
+        };
+        let size = ckpt.meta.str_or("size", "?");
+        let recipe = ckpt.meta.str_or("recipe", "?");
+        let step = ckpt.meta.usize_of("step").map_err(|e| anyhow!(e))?;
+        let fmt = match ckpt.meta.str_or("fmt", "e4m3").as_str() {
+            "e5m2" => E5M2,
+            _ => E4M3,
+        };
+
+        let flat = ckpt
+            .tensors
+            .remove("fold.scales")
+            .ok_or_else(|| anyhow!("artifact missing 'fold.scales'"))?
+            .1;
+        if flat.len() != dims.n_layers * dims.d_ff {
+            bail!(
+                "fold.scales has {} values, expected n_layers*d_ff = {}",
+                flat.len(),
+                dims.n_layers * dims.d_ff
+            );
+        }
+        let scales: Vec<Vec<f32>> =
+            flat.chunks(dims.d_ff).map(|c| c.to_vec()).collect();
+
+        let mut weights = BTreeMap::new();
+        for (name, _) in weight_specs(&dims) {
+            let key = format!("model.{name}");
+            let st = if let Some((f, s, b)) = ckpt.raw_fp8.remove(&key) {
+                ckpt.tensors.remove(&key); // drop the decoded copy
+                Stored::Fp8 { fmt: f, scale: s, bytes: b }
+            } else {
+                let (_, data) = ckpt
+                    .tensors
+                    .remove(&key)
+                    .ok_or_else(|| anyhow!("artifact missing tensor '{key}'"))?;
+                Stored::F32(data)
+            };
+            weights.insert(name.to_string(), st);
+        }
+        Self::from_parts(dims, &size, &recipe, step, fmt, weights, scales, mode)
+    }
+
+    pub fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    /// `(fp8_payload_bytes, f32_resident_bytes, f32_equivalent_bytes)`
+    /// — the Table-4-style serving memory measurement.
+    pub fn resident_bytes(&self) -> (usize, usize, usize) {
+        (
+            self.info.resident_fp8_bytes,
+            self.info.resident_f32_bytes,
+            self.info.f32_equiv_bytes,
+        )
+    }
+
+    /// The per-layer per-channel fold scales the artifact carries.
+    pub fn fold_scales(&self) -> &[Vec<f32>] {
+        &self.scales
+    }
+
+    /// Full-sequence logits for each sequence in the batch (row-major
+    /// `[len_i, vocab]`, flattened). Sequences are independent: the
+    /// batched result is bit-identical to running each alone.
+    pub fn forward_full(&mut self, seqs: &[Vec<usize>]) -> Result<Vec<Vec<f32>>> {
+        self.forward_inner(seqs, None)
+    }
+
+    /// Forward that additionally collects the per-layer per-channel
+    /// amax of the SwiGLU product — the export calibration signal.
+    #[doc(hidden)]
+    pub fn forward_collect_amax(
+        &mut self,
+        seqs: &[Vec<usize>],
+        amax: &mut Vec<Vec<f32>>,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.forward_inner(seqs, Some(amax))
+    }
+
+    fn forward_inner(
+        &mut self,
+        seqs: &[Vec<usize>],
+        mut h_amax: Option<&mut Vec<Vec<f32>>>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let dims = self.info.dims.clone();
+        let (v, d, f) = (dims.vocab, dims.d_model, dims.d_ff);
+        let (nh, hd) = (dims.n_heads, dims.head_dim());
+        let half = hd / 2;
+        if seqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        for s in seqs {
+            if s.is_empty() {
+                bail!("empty sequence");
+            }
+            if s.len() > dims.seq_len {
+                bail!("sequence length {} exceeds model seq_len {}", s.len(), dims.seq_len);
+            }
+            if let Some(&t) = s.iter().find(|&&t| t >= v) {
+                bail!("token {t} out of range for vocab {v}");
+            }
+        }
+        if let Some(a) = h_amax.as_mut() {
+            a.clear();
+            a.resize(dims.n_layers, vec![0.0f32; f]);
+        }
+
+        let mut wbuf = std::mem::take(&mut self.wbuf);
+
+        // ---- embedding gather
+        self.weight_into("embed", None, 0, &mut wbuf)?;
+        let mut xs: Vec<Vec<f32>> = seqs
+            .iter()
+            .map(|s| {
+                let mut x = Vec::with_capacity(s.len() * d);
+                for &t in s {
+                    x.extend_from_slice(&wbuf[t * d..(t + 1) * d]);
+                }
+                x
+            })
+            .collect();
+
+        for l in 0..dims.n_layers {
+            // ---- attention
+            self.weight_into("ln_1", Some(l), d, &mut wbuf)?;
+            let xn: Vec<Vec<f32>> = xs.iter().map(|x| rmsnorm(x, &wbuf, d)).collect();
+
+            self.weight_into("wq", Some(l), d * d, &mut wbuf)?;
+            let mut qs = mm_each(&xn, &wbuf, d, d)?;
+            self.weight_into("wk", Some(l), d * d, &mut wbuf)?;
+            let mut ks = mm_each(&xn, &wbuf, d, d)?;
+            self.weight_into("wv", Some(l), d * d, &mut wbuf)?;
+            let vs = mm_each(&xn, &wbuf, d, d)?;
+            for m in qs.iter_mut().chain(ks.iter_mut()) {
+                self.rope_in_place(m, nh, hd, half);
+            }
+
+            self.weight_into("wo", Some(l), d * d, &mut wbuf)?;
+            for (si, x) in xs.iter_mut().enumerate() {
+                let slen = seqs[si].len();
+                let att = attention(&qs[si], &ks[si], &vs[si], slen, nh, hd);
+                let y = matmul_f32(&att, slen, d, false, &wbuf, d, d, false)
+                    .map_err(|e| anyhow!("wo matmul: {e}"))?;
+                add_in_place(x, &y.data);
+            }
+
+            // ---- MLP
+            self.weight_into("ln_2", Some(l), d, &mut wbuf)?;
+            let xn2: Vec<Vec<f32>> = xs.iter().map(|x| rmsnorm(x, &wbuf, d)).collect();
+
+            self.weight_into("w1", Some(l), d * f, &mut wbuf)?;
+            let a1s = mm_each(&xn2, &wbuf, d, f)?;
+            self.weight_into("w2", Some(l), d * f, &mut wbuf)?;
+            let a2s = mm_each(&xn2, &wbuf, d, f)?;
+
+            let mut hs: Vec<Vec<f32>> = Vec::with_capacity(xs.len());
+            for (a1, a2) in a1s.iter().zip(&a2s) {
+                let mut h = vec![0.0f32; a1.data.len()];
+                for ((h, &x1), &x2) in h.iter_mut().zip(&a1.data).zip(&a2.data) {
+                    // same form as coordinator::folding's reference MLP
+                    *h = x1 * x2 / (1.0 + (-x2).exp());
+                }
+                hs.push(h);
+            }
+            if let Some(acc) = h_amax.as_deref_mut() {
+                let row = &mut acc[l];
+                for h in &hs {
+                    for (j, slot) in row.iter_mut().enumerate() {
+                        for t in 0..h.len() / f {
+                            let a = h[t * f + j].abs();
+                            if a.is_finite() && a > *slot {
+                                *slot = a;
+                            }
+                        }
+                    }
+                }
+            }
+            if self.info.mode == ServeMode::ScaledReference {
+                // re-apply the scales the folded weights carry built-in
+                let row = &self.scales[l];
+                for h in hs.iter_mut() {
+                    for t in 0..h.len() / f {
+                        for (j, &s) in row.iter().enumerate() {
+                            h[t * f + j] *= s;
+                        }
+                    }
+                }
+            }
+
+            self.weight_into("w3", Some(l), f * d, &mut wbuf)?;
+            for (si, x) in xs.iter_mut().enumerate() {
+                let slen = seqs[si].len();
+                let y = matmul_f32(&hs[si], slen, f, false, &wbuf, f, d, false)
+                    .map_err(|e| anyhow!("w3 matmul: {e}"))?;
+                add_in_place(x, &y.data);
+            }
+        }
+
+        // ---- final norm + head
+        self.weight_into("ln_f", None, 0, &mut wbuf)?;
+        let xf: Vec<Vec<f32>> = xs.iter().map(|x| rmsnorm(x, &wbuf, d)).collect();
+        self.weight_into("head", None, 0, &mut wbuf)?;
+        let mut out = Vec::with_capacity(xs.len());
+        for (si, x) in xf.iter().enumerate() {
+            let slen = seqs[si].len();
+            let logits = matmul_f32(x, slen, d, false, &wbuf, d, v, false)
+                .map_err(|e| anyhow!("head matmul: {e}"))?;
+            out.push(logits.data);
+        }
+
+        self.wbuf = wbuf;
+        Ok(out)
+    }
+
+    /// Greedy batched generation. `max_new[i]` bounds request `i`'s new
+    /// tokens (additionally capped by the model's `seq_len`);
+    /// `on_token(request, step, token, logits_crc)` fires per generated
+    /// token in step order — the server's streaming hook.
+    pub fn generate_batch<F: FnMut(usize, usize, usize, u32)>(
+        &mut self,
+        prompts: &[Vec<usize>],
+        max_new: &[usize],
+        mut on_token: F,
+    ) -> Result<Vec<GenResult>> {
+        if prompts.len() != max_new.len() {
+            bail!("prompts/max_new length mismatch");
+        }
+        let v = self.info.dims.vocab;
+        let seq_cap = self.info.dims.seq_len;
+        let mut seqs: Vec<Vec<usize>> = prompts.to_vec();
+        let targets: Vec<usize> = prompts
+            .iter()
+            .zip(max_new)
+            .map(|(p, &mn)| (p.len() + mn).min(seq_cap))
+            .collect();
+        let mut results = vec![GenResult::default(); prompts.len()];
+        loop {
+            let active: Vec<usize> =
+                (0..seqs.len()).filter(|&i| seqs[i].len() < targets[i]).collect();
+            if active.is_empty() {
+                break;
+            }
+            let batch: Vec<Vec<usize>> = active.iter().map(|&i| seqs[i].clone()).collect();
+            let logits = self.forward_full(&batch)?;
+            for (bi, &i) in active.iter().enumerate() {
+                let s = batch[bi].len();
+                let last = &logits[bi][(s - 1) * v..s * v];
+                let tok = argmax(last);
+                let crc = crc32_f32(last);
+                seqs[i].push(tok);
+                let step = results[i].tokens.len();
+                results[i].tokens.push(tok);
+                results[i].crcs.push(crc);
+                on_token(i, step, tok, crc);
+            }
+        }
+        Ok(results)
+    }
+
+    /// Decode a weight (or one stacked layer of it) into `out`. With
+    /// `layer = Some(l)`, `per_layer` is the per-layer element count.
+    fn weight_into(
+        &self,
+        name: &str,
+        layer: Option<usize>,
+        per_layer: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let st =
+            self.weights.get(name).ok_or_else(|| anyhow!("missing weight '{name}'"))?;
+        match st {
+            Stored::Fp8 { fmt, scale, bytes } => {
+                let b = match layer {
+                    Some(l) => &bytes[l * per_layer..(l + 1) * per_layer],
+                    None => &bytes[..],
+                };
+                out.clear();
+                out.resize(b.len(), 0.0);
+                fp8::bulk::unpack_scaled_buf(*fmt, b, *scale, &mut out[..]);
+            }
+            Stored::F32(v) => {
+                let s = match layer {
+                    Some(l) => &v[l * per_layer..(l + 1) * per_layer],
+                    None => &v[..],
+                };
+                out.clear();
+                out.extend_from_slice(s);
+            }
+        }
+        Ok(())
+    }
+
+    /// Rotate-half RoPE in place on a `[s, d_model]` activation viewed
+    /// as `[s, n_heads, head_dim]`.
+    fn rope_in_place(&self, m: &mut Matrix, nh: usize, hd: usize, half: usize) {
+        for pos in 0..m.rows {
+            let row = &mut m.data[pos * nh * hd..(pos + 1) * nh * hd];
+            for h in 0..nh {
+                for e in 0..half {
+                    let c = self.rope_cos[pos * half + e];
+                    let s = self.rope_sin[pos * half + e];
+                    let x1 = row[h * hd + e];
+                    let x2 = row[h * hd + half + e];
+                    row[h * hd + e] = x1 * c - x2 * s;
+                    row[h * hd + half + e] = x1 * s + x2 * c;
+                }
+            }
+        }
+    }
+
+    /// Test hook: flip one bit of a resident FP8 weight payload. The
+    /// export gate uses it to prove the fold comparison actually
+    /// refuses on a divergence.
+    #[doc(hidden)]
+    pub fn corrupt_weight_byte_for_test(&mut self, name: &str) {
+        if let Some(Stored::Fp8 { bytes, .. }) = self.weights.get_mut(name) {
+            if !bytes.is_empty() {
+                bytes[0] ^= 0x01;
+            }
+        }
+    }
+}
+
+/// `x * rsqrt(mean(x²) + eps) * gain` over each row of `[s, d]`.
+fn rmsnorm(x: &[f32], gain: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    for (row_o, row_x) in out.chunks_mut(d).zip(x.chunks(d)) {
+        let mut ss = 0.0f32;
+        for &xi in row_x {
+            ss += xi * xi;
+        }
+        let inv = 1.0 / (ss / d as f32 + NORM_EPS).sqrt();
+        for ((o, &xi), &g) in row_o.iter_mut().zip(row_x).zip(gain) {
+            *o = xi * inv * g;
+        }
+    }
+    out
+}
+
+/// Multiply each sequence's `[s_i, k]` activation by one `[k, n]`
+/// weight through the pinned-order kernel.
+fn mm_each(xs: &[Vec<f32>], w: &[f32], k: usize, n: usize) -> Result<Vec<Matrix>> {
+    xs.iter()
+        .map(|x| {
+            matmul_f32(x, x.len() / k, k, false, w, k, n, false)
+                .map_err(|e| anyhow!("matmul: {e}"))
+        })
+        .collect()
+}
+
+/// Causal multi-head attention core on one sequence: q/k/v are
+/// `[s, n_heads*head_dim]` (RoPE already applied to q/k). Scores are
+/// scaled by 1/√head_dim and softmaxed over the causal prefix.
+fn attention(q: &Matrix, k: &Matrix, vv: &Matrix, s: usize, nh: usize, hd: usize) -> Vec<f32> {
+    let d = nh * hd;
+    let scale = (hd as f32).sqrt();
+    let mut out = vec![0.0f32; s * d];
+    let mut scores = vec![0.0f32; s];
+    for h in 0..nh {
+        let off = h * hd;
+        for i in 0..s {
+            for (j, slot) in scores.iter_mut().enumerate().take(i + 1) {
+                let mut dot = 0.0f32;
+                let qr = &q.data[i * d + off..i * d + off + hd];
+                let kr = &k.data[j * d + off..j * d + off + hd];
+                for (qe, ke) in qr.iter().zip(kr) {
+                    dot += qe * ke;
+                }
+                *slot = dot / scale;
+            }
+            let m = scores[..=i].iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut denom = 0.0f32;
+            for slot in scores.iter_mut().take(i + 1) {
+                *slot = (*slot - m).exp();
+                denom += *slot;
+            }
+            let orow = &mut out[i * d + off..i * d + off + hd];
+            for (j, &p) in scores.iter().enumerate().take(i + 1) {
+                let w = p / denom;
+                let vr = &vv.data[j * d + off..j * d + off + hd];
+                for (o, &ve) in orow.iter_mut().zip(vr) {
+                    *o += w * ve;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn add_in_place(x: &mut [f32], y: &[f32]) {
+    for (a, b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
+/// First index of the maximum (ties and NaN resolve to the earliest
+/// candidate — deterministic greedy decoding).
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// CRC-32 over the little-endian bytes of an f32 slice — the logits
+/// fingerprint carried in generate responses and export reports.
+pub(crate) fn crc32_f32(xs: &[f32]) -> u32 {
+    let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+    crate::util::crc32(&bytes)
+}
+
+fn decode_all(st: &Stored) -> Vec<f32> {
+    match st {
+        Stored::Fp8 { fmt, scale, bytes } => {
+            let mut out = Vec::new();
+            fp8::bulk::unpack_scaled_into(*fmt, bytes, *scale, &mut out);
+            out
+        }
+        Stored::F32(v) => v.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn head_dim_of(d: &ModelDims) -> usize {
+        d.d_model / d.n_heads
+    }
+
+    #[test]
+    fn preset_dims_are_consistent() {
+        for size in ["tiny", "s1m", "s8m", "m100"] {
+            let d = dims_of(size).unwrap();
+            assert_eq!(d.d_model % d.n_heads, 0, "{size}");
+            assert_eq!(head_dim_of(&d) % 2, 0, "{size}");
+        }
+        assert!(dims_of("nope").is_none());
+    }
+
+    #[test]
+    fn argmax_is_first_max() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[f32::NAN, 1.0]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+    }
+
+    #[test]
+    fn rmsnorm_matches_definition() {
+        let x = [3.0f32, 4.0];
+        let g = [2.0f32, 0.5];
+        let out = rmsnorm(&x, &g, 2);
+        let inv = 1.0 / ((9.0f32 + 16.0) / 2.0 + NORM_EPS).sqrt();
+        assert_eq!(out[0].to_bits(), (3.0 * inv * 2.0f32).to_bits());
+        assert_eq!(out[1].to_bits(), (4.0 * inv * 0.5f32).to_bits());
+    }
+}
+
+impl ModelDims {
+    fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}

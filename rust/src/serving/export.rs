@@ -1,0 +1,455 @@
+//! Snapshot → FP8 model artifact export, gated on fold bit-exactness.
+//!
+//! The pipeline (paper §4.4 made operational):
+//!
+//! 1. load a campaign snapshot ([`crate::campaign::TrainState`]),
+//! 2. run a deterministic probe through the master weights and collect
+//!    the per-layer per-channel amax of the SwiGLU product,
+//! 3. derive pow2 smoothing scales ([`crate::fp8::compute_scale`],
+//!    exponent-clamped), fold them into w1/w3 via
+//!    [`crate::coordinator::folding::fold_scales`],
+//! 4. quantize every matrix to real FP8 bytes ([`crate::fp8::pack_scaled`]),
+//! 5. **gate**: run the probe through the folded-FP8 engine *and*
+//!    through the unfolded scaled-reference engine built from the same
+//!    quantized bytes; refuse to write anything unless the logits are
+//!    bit-identical (the PR-7 reshard-gate pattern — equivalence is
+//!    proved, never assumed),
+//! 6. write the self-describing artifact (dims + probe CRC in the
+//!    metadata, CRC-32 footer) and re-load it for a readback check.
+//!
+//! A corrupted fold (injectable via
+//! [`ExportOptions::corrupt_fold_for_test`]) or a non-finite snapshot
+//! aborts before any file exists; a readback mismatch deletes the file.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::campaign::snapshot::{SnapshotMeta, TrainState};
+use crate::checkpoint::{Dtype, Writer};
+use crate::coordinator::folding::fold_scales;
+use crate::coordinator::DetectorState;
+use crate::fp8::{self, Fp8Format, E4M3};
+use crate::runtime::manifest::ModelDims;
+use crate::scaling::ScaleState;
+use crate::serving::engine::{
+    crc32_f32, dims_of, fmt_name, weight_specs, Engine, ServeMode, Stored, NORM_GAINS,
+};
+use crate::util::json::{obj, Json};
+use crate::util::prng::Rng;
+
+/// Artifact `kind` in the checkpoint metadata.
+pub const ARTIFACT_KIND: &str = "fp8_model";
+/// Artifact format version.
+pub const ARTIFACT_VERSION: usize = 1;
+/// Smoothing-scale exponents are clamped to ±[`SCALE_EXP_CLAMP`]: a
+/// dead channel (amax ≈ 0) would otherwise get a ~2¹²⁷ scale and fold
+/// w1 columns straight to inf.
+pub const SCALE_EXP_CLAMP: i32 = 32;
+
+/// Knobs for [`export_snapshot`] / [`export_state`].
+#[derive(Clone, Debug)]
+pub struct ExportOptions {
+    /// weight quantization format (E4M3 default; E5M2 supported)
+    pub fmt: Fp8Format,
+    /// probe length in tokens (clamped to `[1, seq_len]`)
+    pub probe_tokens: usize,
+    /// probe PRNG seed — recorded in the artifact so the gate is
+    /// replayable at load time
+    pub probe_seed: u64,
+    /// explicit model dims; default derives them from the snapshot's
+    /// size preset via [`dims_of`]
+    pub dims: Option<ModelDims>,
+    /// Test hook: flip one bit of the folded engine's quantized w1
+    /// *after* the reference engine is built, so the gate sees a real
+    /// divergence and must refuse. Never set outside tests.
+    #[doc(hidden)]
+    pub corrupt_fold_for_test: bool,
+}
+
+impl Default for ExportOptions {
+    fn default() -> Self {
+        Self {
+            fmt: E4M3,
+            probe_tokens: 16,
+            probe_seed: 0x5e11e,
+            dims: None,
+            corrupt_fold_for_test: false,
+        }
+    }
+}
+
+/// What an export produced — echoed by `serve export` and consumed by
+/// the conformance tests.
+#[derive(Clone, Debug)]
+pub struct ExportReport {
+    pub size: String,
+    pub step: usize,
+    pub fmt: Fp8Format,
+    /// per-layer per-channel smoothing scales that were folded
+    pub scales: Vec<Vec<f32>>,
+    pub file_bytes: u64,
+    pub resident_fp8_bytes: usize,
+    pub f32_equiv_bytes: usize,
+    /// CRC-32 of the gate probe's folded logits (also in the artifact
+    /// metadata — the readback witness)
+    pub probe_crc: u32,
+    /// total probe positions × vocab compared by the gate
+    pub probe_len: usize,
+}
+
+/// Deterministic gate-probe batch for a model: two sequences (one full
+/// `n`-token, one roughly half) so the gate also exercises ragged
+/// batching.
+pub fn probe_tokens_for(dims: &ModelDims, seed: u64, n: usize) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(seed ^ 0x5e52_11e7);
+    let long = n.clamp(1, dims.seq_len);
+    let short = (long / 2).max(1);
+    [long, short]
+        .iter()
+        .map(|&len| (0..len).map(|_| rng.below(dims.vocab as u64) as usize).collect())
+        .collect()
+}
+
+/// Load a snapshot from disk and export it. See [`export_state`].
+pub fn export_snapshot<P: AsRef<Path>, Q: AsRef<Path>>(
+    snapshot: P,
+    out: Q,
+    opts: &ExportOptions,
+) -> Result<ExportReport> {
+    let st = TrainState::load(snapshot.as_ref())
+        .map_err(|e| anyhow!("loading snapshot {}: {e}", snapshot.as_ref().display()))?;
+    export_state(&st, out, opts)
+}
+
+/// Fold, quantize, gate, and write one snapshot as a served FP8 model
+/// artifact. Refuses (without writing) on missing/ill-shaped/non-finite
+/// parameters or any fold-gate bit mismatch; deletes the file on a
+/// readback mismatch.
+pub fn export_state<Q: AsRef<Path>>(
+    st: &TrainState,
+    out: Q,
+    opts: &ExportOptions,
+) -> Result<ExportReport> {
+    let out = out.as_ref();
+    let dims = match &opts.dims {
+        Some(d) => d.clone(),
+        None => dims_of(&st.meta.size).ok_or_else(|| {
+            anyhow!(
+                "unknown size preset '{}' — pass explicit model dims in ExportOptions",
+                st.meta.size
+            )
+        })?,
+    };
+    let (d, f, l) = (dims.d_model, dims.d_ff, dims.n_layers);
+
+    // ---- gather + validate parameters
+    let mut params: BTreeMap<&str, &[f32]> = BTreeMap::new();
+    for (name, data) in &st.params {
+        params.insert(name.as_str(), data.as_slice());
+    }
+    let mut tensors: BTreeMap<&'static str, Vec<f32>> = BTreeMap::new();
+    for (name, want) in weight_specs(&dims) {
+        let data = params.get(name).copied().ok_or_else(|| {
+            if name == "w2" {
+                anyhow!(
+                    "snapshot has no 'w2' — serving expects the SwiGLU parameterization \
+                     (GeLU-recipe snapshots are not servable)"
+                )
+            } else {
+                anyhow!("snapshot is missing parameter '{name}'")
+            }
+        })?;
+        if data.len() != want {
+            bail!(
+                "parameter '{name}': {} elements, expected {want} for dims {dims:?}",
+                data.len()
+            );
+        }
+        if let Some(x) = data.iter().find(|x| !x.is_finite()) {
+            bail!("parameter '{name}' contains {x} — refusing to export a diverged snapshot");
+        }
+        tensors.insert(name, data.to_vec());
+    }
+
+    // ---- calibration: probe through the master weights, collect the
+    // SwiGLU product's per-channel amax
+    let probe = probe_tokens_for(&dims, opts.probe_seed, opts.probe_tokens);
+    let unit_scales = vec![vec![1.0f32; f]; l];
+    let f32_weights: BTreeMap<String, Stored> = tensors
+        .iter()
+        .map(|(&n, v)| (n.to_string(), Stored::F32(v.clone())))
+        .collect();
+    let mut calib = Engine::from_parts(
+        dims.clone(),
+        &st.meta.size,
+        &st.meta.recipe,
+        st.meta.step,
+        opts.fmt,
+        f32_weights,
+        unit_scales,
+        ServeMode::Folded,
+    )?;
+    let mut amax = Vec::new();
+    calib.forward_collect_amax(&probe, &mut amax)?;
+    let scales: Vec<Vec<f32>> = amax
+        .iter()
+        .map(|row| row.iter().map(|&a| clamp_pow2(fp8::compute_scale(opts.fmt, a))).collect())
+        .collect();
+    drop(calib);
+
+    // ---- fold into w1/w3 (exact for pow2 scales)
+    let mut w1f = tensors["w1"].clone();
+    let mut w3f = tensors["w3"].clone();
+    fold_scales(&mut w1f, &mut w3f, &scales, d, f)?;
+    for (name, w) in [("w1", &w1f), ("w3", &w3f)] {
+        if let Some(x) = w.iter().find(|x| !x.is_finite()) {
+            bail!("folded {name} contains {x} — smoothing scales overflow these weights");
+        }
+    }
+    tensors.insert("w1", w1f);
+    tensors.insert("w3", w3f);
+
+    // ---- quantize matrices to FP8 bytes (norm gains stay f32)
+    let mut stored: BTreeMap<String, Stored> = BTreeMap::new();
+    for (&name, data) in &tensors {
+        let st = if NORM_GAINS.contains(&name) {
+            Stored::F32(data.clone())
+        } else {
+            let (bytes, scale) = fp8::pack_scaled(opts.fmt, data);
+            Stored::Fp8 { fmt: opts.fmt, scale, bytes }
+        };
+        stored.insert(name.to_string(), st);
+    }
+
+    // ---- the gate: folded-FP8 vs unfolded scaled reference, built
+    // from the SAME quantized bytes, must agree bit-for-bit
+    let mk = |weights: BTreeMap<String, Stored>, mode: ServeMode| {
+        Engine::from_parts(
+            dims.clone(),
+            &st.meta.size,
+            &st.meta.recipe,
+            st.meta.step,
+            opts.fmt,
+            weights,
+            scales.clone(),
+            mode,
+        )
+    };
+    let mut reference = mk(stored.clone(), ServeMode::ScaledReference)?;
+    let mut folded = mk(stored.clone(), ServeMode::Folded)?;
+    if opts.corrupt_fold_for_test {
+        folded.corrupt_weight_byte_for_test("w1");
+    }
+    let folded_logits: Vec<f32> =
+        folded.forward_full(&probe)?.into_iter().flatten().collect();
+    let ref_logits: Vec<f32> =
+        reference.forward_full(&probe)?.into_iter().flatten().collect();
+    if let Some(x) = folded_logits.iter().find(|x| !x.is_finite()) {
+        bail!("folded probe logits contain {x} — refusing to export");
+    }
+    let total = folded_logits.len();
+    let diverged: Vec<usize> = folded_logits
+        .iter()
+        .zip(&ref_logits)
+        .enumerate()
+        .filter(|(_, (a, b))| a.to_bits() != b.to_bits())
+        .map(|(i, _)| i)
+        .collect();
+    if let Some(&first) = diverged.first() {
+        bail!(
+            "fold mismatch: folded-FP8 and scaled-reference forwards diverge at {}/{} \
+             probe positions (first at flat index {first}: folded {:e} [bits {:08x}] vs \
+             reference {:e} [bits {:08x}]) — refusing to export",
+            diverged.len(),
+            total,
+            folded_logits[first],
+            folded_logits[first].to_bits(),
+            ref_logits[first],
+            ref_logits[first].to_bits(),
+        );
+    }
+    let probe_crc = crc32_f32(&folded_logits);
+
+    // ---- write the artifact
+    let meta = obj(vec![
+        ("kind", Json::Str(ARTIFACT_KIND.into())),
+        ("version", Json::Num(ARTIFACT_VERSION as f64)),
+        ("size", Json::Str(st.meta.size.clone())),
+        ("recipe", Json::Str(st.meta.recipe.clone())),
+        ("step", Json::Num(st.meta.step as f64)),
+        // u64 seeds ride as strings (the repo's JSON numbers are f64)
+        ("seed", Json::Str(st.meta.seed.to_string())),
+        ("fmt", Json::Str(fmt_name(opts.fmt).into())),
+        ("vocab", Json::Num(dims.vocab as f64)),
+        ("d_model", Json::Num(dims.d_model as f64)),
+        ("n_layers", Json::Num(dims.n_layers as f64)),
+        ("n_heads", Json::Num(dims.n_heads as f64)),
+        ("d_ff", Json::Num(dims.d_ff as f64)),
+        ("seq_len", Json::Num(dims.seq_len as f64)),
+        ("probe_seed", Json::Str(opts.probe_seed.to_string())),
+        ("probe_tokens", Json::Num(opts.probe_tokens as f64)),
+        ("probe_crc", Json::Num(probe_crc as f64)),
+    ]);
+    let mut w = Writer::new(&meta);
+    let fp8_dtype = match opts.fmt {
+        Fp8Format::E4M3 => Dtype::E4M3,
+        Fp8Format::E5M2 => Dtype::E5M2,
+    };
+    for (&name, data) in &tensors {
+        let dtype = if NORM_GAINS.contains(&name) { Dtype::F32 } else { fp8_dtype };
+        w.tensor(&format!("model.{name}"), dtype, data);
+    }
+    let flat_scales: Vec<f32> = scales.iter().flatten().copied().collect();
+    w.tensor("fold.scales", Dtype::F32, &flat_scales);
+    let file_bytes = w.finish(out)?;
+
+    // ---- readback: the artifact on disk must reproduce the gate CRC
+    let mut back = Engine::load(out, ServeMode::Folded)?;
+    let back_logits: Vec<f32> = back.forward_full(&probe)?.into_iter().flatten().collect();
+    let back_crc = crc32_f32(&back_logits);
+    if back_crc != probe_crc {
+        let _ = std::fs::remove_file(out);
+        bail!(
+            "artifact readback mismatch: probe CRC {back_crc:08x} != exported {probe_crc:08x} \
+             — artifact deleted"
+        );
+    }
+    let (fp8_bytes, _, equiv) = back.resident_bytes();
+
+    Ok(ExportReport {
+        size: st.meta.size.clone(),
+        step: st.meta.step,
+        fmt: opts.fmt,
+        scales,
+        file_bytes,
+        resident_fp8_bytes: fp8_bytes,
+        f32_equiv_bytes: equiv,
+        probe_crc,
+        probe_len: total,
+    })
+}
+
+/// Clamp a pow2 scale's exponent to ±[`SCALE_EXP_CLAMP`] (exactness-
+/// preserving: the result is still a pow2).
+fn clamp_pow2(s: f32) -> f32 {
+    let e = s.log2().round() as i32;
+    fp8::exp2i(e.clamp(-SCALE_EXP_CLAMP, SCALE_EXP_CLAMP))
+}
+
+/// SwiGLU products `h[t, f] = a1 · a2 · σ(a2)` for `[t, d]` activations
+/// against `[d, f]` w1/w2, in the exact accumulation order of
+/// [`crate::coordinator::folding`]'s reference MLP — the unit under the
+/// fold bit-exactness property tests.
+pub fn swiglu_products(
+    xs: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    t: usize,
+    d: usize,
+    f: usize,
+) -> Vec<f32> {
+    let mut h = vec![0.0f32; t * f];
+    for ti in 0..t {
+        for j in 0..f {
+            let (mut a1, mut a2) = (0.0f32, 0.0f32);
+            for i in 0..d {
+                a1 += xs[ti * d + i] * w1[i * f + j];
+                a2 += xs[ti * d + i] * w2[i * f + j];
+            }
+            h[ti * f + j] = a1 * a2 / (1.0 + (-a2).exp());
+        }
+    }
+    h
+}
+
+/// Per-channel pow2 smoothing scales for a `[t, f]` SwiGLU product
+/// (amax over finite magnitudes → [`fp8::compute_scale`], clamped).
+pub fn channel_scales(fmt: Fp8Format, h: &[f32], t: usize, f: usize) -> Vec<f32> {
+    let mut amax = vec![0.0f32; f];
+    for ti in 0..t {
+        for (j, slot) in amax.iter_mut().enumerate() {
+            let a = h[ti * f + j].abs();
+            if a.is_finite() && a > *slot {
+                *slot = a;
+            }
+        }
+    }
+    amax.into_iter().map(|a| clamp_pow2(fp8::compute_scale(fmt, a))).collect()
+}
+
+/// Fabricate a servable synthetic snapshot (deterministic N(0, std²)
+/// init matching the model's init spec). Test/bench helper — real
+/// exports load campaign snapshots.
+#[doc(hidden)]
+pub fn synth_state_for(size: &str, dims: &ModelDims, seed: u64) -> TrainState {
+    let mut rng = Rng::new(seed);
+    let resid_std = 0.02 / (2.0 * dims.n_layers as f32).sqrt();
+    let mut params = Vec::new();
+    for (name, numel) in weight_specs(dims) {
+        let data = if NORM_GAINS.contains(&name) {
+            vec![1.0f32; numel]
+        } else {
+            let std = if name == "wo" || name == "w3" { resid_std } else { 0.02 };
+            let mut v = vec![0.0f32; numel];
+            rng.fill_normal(&mut v, std);
+            v
+        };
+        params.push((name.to_string(), data));
+    }
+    TrainState {
+        meta: SnapshotMeta {
+            step: 7,
+            recipe: "fp8_full".into(),
+            size: size.into(),
+            seed,
+            corpus_seed: seed ^ 0xc0ffee,
+            dp_workers: 1,
+            streams: 1,
+            stream_pods: 1,
+            grad_accum: 1,
+            steps: 10,
+            warmup_steps: 2,
+            amax_history: 16,
+            margin_pow2: 0,
+            recoveries: 0,
+            m_fmt: "f32".into(),
+            v_fmt: "f32".into(),
+            moment_chunk: 64,
+            numerics: "synthetic".into(),
+            topology: "shard=w1;topo=p1;bucket=b4194304".into(),
+        },
+        params,
+        m: Vec::new(),
+        v: Vec::new(),
+        scale: ScaleState { histories: Vec::new(), scales: Vec::new(), overflow_events: 0 },
+        detector: DetectorState { ema: 0.0, warmed: false, diverged_at: None },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamp_pow2_is_pow2_and_bounded() {
+        for s in [fp8::exp2i(120), fp8::exp2i(-120), 1.0, 0.25, 8.0] {
+            let c = clamp_pow2(s);
+            assert_eq!(c.to_bits() & 0x007f_ffff, 0, "{s} -> {c} not pow2");
+            let e = c.log2().round() as i32;
+            assert!(e.abs() <= SCALE_EXP_CLAMP, "{s} -> {c} exceeds clamp");
+        }
+    }
+
+    #[test]
+    fn probe_is_deterministic_and_in_range() {
+        let dims = dims_of("tiny").unwrap();
+        let a = probe_tokens_for(&dims, 1, 16);
+        let b = probe_tokens_for(&dims, 1, 16);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 2);
+        assert!(a.iter().all(|s| s.iter().all(|&t| t < dims.vocab)));
+        assert!(a[0].len() <= dims.seq_len && !a[1].is_empty());
+    }
+}

@@ -1,0 +1,48 @@
+//! Inference serving on folded FP8 checkpoints — the fourth workload
+//! layer (train / resume / observe → **serve**).
+//!
+//! The paper's §4.4 observation is that Smooth-SwiGLU's per-channel
+//! pow2 scales fold into the stored w1/w3 weights, making the
+//! training-stability fix *zero-cost at inference*. This module turns
+//! that claim into a served, measured artifact path:
+//!
+//! * [`export`] — load a campaign snapshot ([`crate::campaign::TrainState`]),
+//!   calibrate per-channel Smooth-SwiGLU scales on a deterministic
+//!   probe, fold them via [`crate::coordinator::folding::fold_scales`],
+//!   quantize the matrices to real FP8 bytes, and **prove the fold
+//!   bit-exact before any file is written**: the folded-FP8 engine and
+//!   an unfolded scaled-reference engine run the same probe and must
+//!   produce bit-identical logits, else export refuses (the reshard
+//!   gate pattern). The artifact is a self-describing
+//!   [`crate::checkpoint`] file (CRC-32 footer, dims in the metadata).
+//! * [`engine`] — keeps parameters resident as FP8 bytes and decodes
+//!   them on the fly through [`crate::fp8::bulk`] into one reusable
+//!   scratch buffer; all matmuls run through the pinned-order
+//!   [`crate::gemm::matmul_f32`] kernel, so the two serving modes
+//!   ([`ServeMode::Folded`] vs [`ServeMode::ScaledReference`]) differ
+//!   only in where the pow2 scales live — the substance of the
+//!   bit-identity gate.
+//! * [`server`] — a pure-std `TcpListener` HTTP/1.1 layer (no new
+//!   deps): typed JSON API (`/v1/generate`, `/v1/healthz`,
+//!   `/v1/metrics` in Prometheus text exposition), a batching queue
+//!   (collect up to `serve_batch` requests or `serve_batch_wait_ms`,
+//!   one batched forward, fan the results back out), chunked streaming
+//!   token responses, and bounded request bodies as a typed refusal
+//!   ([`OversizedBody`], mirroring the journal stream's
+//!   `OversizedLine`).
+//!
+//! The `serve` binary (`rust/src/bin/serve.rs`) drives all of it:
+//! `serve export` / `serve run` / `serve probe`. The end-to-end
+//! conformance suite lives in `rust/tests/serving.rs`; latency/QPS and
+//! the FP8-resident memory floor in `benches/perf_serving.rs`.
+
+pub mod engine;
+pub mod export;
+pub mod server;
+
+pub use engine::{dims_of, fmt_name, Engine, GenResult, ModelInfo, ServeMode, Stored};
+pub use export::{
+    channel_scales, export_snapshot, export_state, probe_tokens_for, swiglu_products,
+    ExportOptions, ExportReport,
+};
+pub use server::{serve, OversizedBody, ServeConfig, ServeMetrics, ServerHandle};

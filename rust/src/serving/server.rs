@@ -1,0 +1,821 @@
+//! Pure-std HTTP/1.1 serving layer over the FP8 [`Engine`].
+//!
+//! No new dependencies: a [`std::net::TcpListener`] acceptor, a
+//! hand-rolled request parser with bounded header/body sizes (typed
+//! refusals, mirroring the journal stream's `OversizedLine` — see
+//! [`OversizedBody`]), a typed JSON API, and a batching queue: handler
+//! threads enqueue jobs, one batcher thread owns the engine, collects
+//! up to `serve_batch` requests (waiting at most `serve_batch_wait_ms`
+//! after the first), runs **one** batched forward per decode step, and
+//! fans results back out per request. Because the engine's batched
+//! forward is bit-identical to serial (sequences never mix), batching
+//! is invisible to clients except in latency — the conformance suite
+//! pins exactly that.
+//!
+//! Endpoints:
+//! * `POST /v1/generate` — `{"prompt":[ids], "max_new":n, "stream":bool}`;
+//!   non-streaming returns `{"tokens", "logits_crcs", "model"}`;
+//!   streaming returns chunked transfer encoding, one JSON line per
+//!   token and a final `{"done":true, ...}` summary line.
+//! * `GET /v1/healthz` — model identity + residency.
+//! * `GET /v1/metrics` — Prometheus text exposition (label escaping
+//!   shared with [`crate::campaign::fleet::prom_escape`]).
+//!
+//! Malformed or oversized requests get typed 4xx JSON refusals
+//! (`{"error", "detail", "status"}`) — never a panic, never a dropped
+//! connection without a status line.
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::campaign::fleet::prom_escape;
+use crate::fp8::{Fp8Format, E4M3, E5M2};
+use crate::serving::engine::{fmt_name, Engine, GenResult, ModelInfo};
+use crate::util::json::{obj, Json};
+
+/// Cap on the request head (request line + headers). Refused with 431.
+const MAX_HEADER_BYTES: usize = 8192;
+/// How long a handler waits for its generation result before giving up.
+const RESULT_TIMEOUT: Duration = Duration::from_secs(120);
+/// Socket read timeout (slow-loris bound).
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Validated serving configuration (the `serve_*` config keys).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// bind address (`serve_addr`)
+    pub addr: String,
+    /// bind port; 0 = ephemeral (`serve_port`)
+    pub port: u16,
+    /// max requests coalesced into one batched forward (`serve_batch`)
+    pub batch: usize,
+    /// max wait for the batch to fill after the first request arrives
+    /// (`serve_batch_wait_ms`)
+    pub batch_wait_ms: u64,
+    /// request-body byte cap — exceeding it is a typed 413
+    /// (`serve_max_body_bytes`)
+    pub max_body_bytes: usize,
+    /// server-side cap on tokens generated per request
+    /// (`serve_max_new_tokens`)
+    pub max_new_tokens: usize,
+    /// export quantization format (`serve_fmt`)
+    pub fmt: Fp8Format,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1".into(),
+            port: 0,
+            batch: 8,
+            batch_wait_ms: 5,
+            max_body_bytes: 1_048_576,
+            max_new_tokens: 64,
+            fmt: E4M3,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Validate raw config-key values into a [`ServeConfig`] (the
+    /// loader/ctor gate — errors name the offending `serve_*` key).
+    pub fn from_keys(
+        addr: &str,
+        port: usize,
+        batch: usize,
+        batch_wait_ms: usize,
+        max_body_bytes: usize,
+        max_new_tokens: usize,
+        fmt: &str,
+    ) -> Result<Self, String> {
+        if addr.is_empty() {
+            return Err("serve_addr must be a non-empty bind address".into());
+        }
+        if port > u16::MAX as usize {
+            return Err(format!("serve_port must be <= 65535 (got {port})"));
+        }
+        if batch == 0 {
+            return Err("serve_batch must be >= 1".into());
+        }
+        if max_body_bytes == 0 {
+            return Err("serve_max_body_bytes must be >= 1".into());
+        }
+        if max_new_tokens == 0 {
+            return Err("serve_max_new_tokens must be >= 1".into());
+        }
+        let fmt = match fmt {
+            "e4m3" => E4M3,
+            "e5m2" => E5M2,
+            other => {
+                return Err(format!("serve_fmt must be 'e4m3' or 'e5m2' (got '{other}')"))
+            }
+        };
+        Ok(Self {
+            addr: addr.to_string(),
+            port: port as u16,
+            batch,
+            batch_wait_ms: batch_wait_ms as u64,
+            max_body_bytes,
+            max_new_tokens,
+            fmt,
+        })
+    }
+}
+
+/// Typed refusal for a request body larger than `serve_max_body_bytes`
+/// (the serving twin of the journal stream's `OversizedLine`): the
+/// declared size and the limit it broke, surfaced as an HTTP 413.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OversizedBody {
+    /// declared (or observed lower-bound) body size in bytes
+    pub len_at_least: usize,
+    /// the `serve_max_body_bytes` cap that was exceeded
+    pub limit: usize,
+}
+
+impl fmt::Display for OversizedBody {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "request body of {}+ bytes exceeds serve_max_body_bytes = {}",
+            self.len_at_least, self.limit
+        )
+    }
+}
+
+impl std::error::Error for OversizedBody {}
+
+/// Serving counters, exposed at `/v1/metrics`.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// every accepted connection that produced a request
+    pub requests_total: AtomicU64,
+    /// requests answered with a 4xx typed refusal
+    pub refusals_total: AtomicU64,
+    /// batched forwards executed
+    pub batches_total: AtomicU64,
+    /// tokens generated across all requests
+    pub generated_tokens_total: AtomicU64,
+    /// fill of the most recent batch (gauge)
+    pub batch_last_fill: AtomicU64,
+}
+
+impl ServeMetrics {
+    /// Prometheus text exposition of the serving metrics plus model
+    /// identity/residency gauges.
+    pub fn render(&self, info: &ModelInfo) -> String {
+        let mut out = String::new();
+        let counters = [
+            ("fp8_serve_requests_total", "Requests received.", &self.requests_total),
+            ("fp8_serve_refusals_total", "Typed 4xx refusals.", &self.refusals_total),
+            ("fp8_serve_batches_total", "Batched forwards executed.", &self.batches_total),
+            (
+                "fp8_serve_generated_tokens_total",
+                "Tokens generated across all requests.",
+                &self.generated_tokens_total,
+            ),
+        ];
+        for (name, help, v) in counters {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {}\n",
+                v.load(Ordering::Relaxed)
+            ));
+        }
+        out.push_str(&format!(
+            "# HELP fp8_serve_batch_last_fill Requests coalesced into the most recent \
+             batch.\n# TYPE fp8_serve_batch_last_fill gauge\nfp8_serve_batch_last_fill {}\n",
+            self.batch_last_fill.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!(
+            "# HELP fp8_serve_resident_fp8_bytes Model bytes resident as raw FP8.\
+             \n# TYPE fp8_serve_resident_fp8_bytes gauge\nfp8_serve_resident_fp8_bytes {}\n",
+            info.resident_fp8_bytes
+        ));
+        out.push_str(&format!(
+            "# HELP fp8_serve_resident_f32_bytes Model bytes resident as f32.\
+             \n# TYPE fp8_serve_resident_f32_bytes gauge\nfp8_serve_resident_f32_bytes {}\n",
+            info.resident_f32_bytes
+        ));
+        out.push_str(&format!(
+            "# HELP fp8_serve_model_info Served model identity (value is always 1).\
+             \n# TYPE fp8_serve_model_info gauge\n\
+             fp8_serve_model_info{{size=\"{}\",recipe=\"{}\",fmt=\"{}\",mode=\"{}\"}} 1\n",
+            prom_escape(&info.size),
+            prom_escape(&info.recipe),
+            fmt_name(info.fmt),
+            info.mode.as_str()
+        ));
+        out
+    }
+}
+
+/// One queued generation request.
+struct Job {
+    prompt: Vec<usize>,
+    max_new: usize,
+    events: Sender<Event>,
+}
+
+/// Batcher → handler notifications for one job.
+enum Event {
+    /// one generated token (streaming hook)
+    Token { step: usize, token: usize, crc: u32 },
+    /// generation finished
+    Done(GenResult),
+    /// the batched forward failed
+    Failed(String),
+}
+
+/// A typed HTTP refusal/response error.
+struct Refusal {
+    status: u16,
+    kind: &'static str,
+    detail: String,
+}
+
+impl Refusal {
+    fn new(status: u16, kind: &'static str, detail: impl Into<String>) -> Self {
+        Self { status, kind, detail: detail.into() }
+    }
+}
+
+struct ServerCtx {
+    cfg: ServeConfig,
+    info: ModelInfo,
+    metrics: Arc<ServeMetrics>,
+    jobs: Sender<Job>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Running server: background acceptor + batcher threads. Dropping the
+/// handle (or calling [`ServerHandle::shutdown`]) stops both.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    jobs: Option<Sender<Job>>,
+    acceptor: Option<JoinHandle<()>>,
+    batcher: Option<JoinHandle<()>>,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves the ephemeral port when
+    /// `serve_port = 0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared view of the serving counters.
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Stop accepting, drain the queue, and join both threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if self.acceptor.is_none() && self.batcher.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the acceptor's blocking accept()
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        drop(self.jobs.take());
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Bind and start serving `engine` per `cfg`. Returns once the socket
+/// is listening; request handling runs on background threads.
+pub fn serve(engine: Engine, cfg: &ServeConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind((cfg.addr.as_str(), cfg.port))
+        .map_err(|e| anyhow!("binding {}:{}: {e}", cfg.addr, cfg.port))?;
+    let addr = listener.local_addr()?;
+    let info = engine.info().clone();
+    let metrics = Arc::new(ServeMetrics::default());
+    let stop = Arc::new(AtomicBool::new(false));
+    let (jobs_tx, jobs_rx) = mpsc::channel::<Job>();
+
+    let batcher = {
+        let cfg = cfg.clone();
+        let metrics = Arc::clone(&metrics);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || run_batcher(engine, jobs_rx, &cfg, &metrics, &stop))
+    };
+
+    let ctx = Arc::new(ServerCtx {
+        cfg: cfg.clone(),
+        info,
+        metrics: Arc::clone(&metrics),
+        jobs: jobs_tx.clone(),
+        stop: Arc::clone(&stop),
+    });
+    let acceptor = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if ctx.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let ctx = Arc::clone(&ctx);
+            std::thread::spawn(move || handle(stream, &ctx));
+        }
+    });
+
+    Ok(ServerHandle {
+        addr,
+        stop,
+        jobs: Some(jobs_tx),
+        acceptor: Some(acceptor),
+        batcher: Some(batcher),
+        metrics,
+    })
+}
+
+/// The batching queue: own the engine, coalesce jobs, one batched
+/// forward per decode step, fan results out.
+fn run_batcher(
+    mut engine: Engine,
+    rx: Receiver<Job>,
+    cfg: &ServeConfig,
+    metrics: &ServeMetrics,
+    stop: &AtomicBool,
+) {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(j) => j,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return,
+        };
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + Duration::from_millis(cfg.batch_wait_ms);
+        while jobs.len() < cfg.batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(_) => break,
+            }
+        }
+        metrics.batches_total.fetch_add(1, Ordering::Relaxed);
+        metrics.batch_last_fill.store(jobs.len() as u64, Ordering::Relaxed);
+
+        let prompts: Vec<Vec<usize>> = jobs.iter().map(|j| j.prompt.clone()).collect();
+        let max_new: Vec<usize> = jobs.iter().map(|j| j.max_new).collect();
+        let result = engine.generate_batch(&prompts, &max_new, |req, step, token, crc| {
+            let _ = jobs[req].events.send(Event::Token { step, token, crc });
+        });
+        match result {
+            Ok(results) => {
+                let total: usize = results.iter().map(|r| r.tokens.len()).sum();
+                metrics.generated_tokens_total.fetch_add(total as u64, Ordering::Relaxed);
+                for (job, res) in jobs.iter().zip(results) {
+                    let _ = job.events.send(Event::Done(res));
+                }
+            }
+            Err(e) => {
+                for job in &jobs {
+                    let _ = job.events.send(Event::Failed(e.to_string()));
+                }
+            }
+        }
+    }
+}
+
+fn handle(mut stream: TcpStream, ctx: &ServerCtx) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    ctx.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+    if let Err(r) = handle_inner(&mut stream, ctx) {
+        if r.status < 500 {
+            ctx.metrics.refusals_total.fetch_add(1, Ordering::Relaxed);
+        }
+        let body = obj(vec![
+            ("error", Json::Str(r.kind.into())),
+            ("detail", Json::Str(r.detail.clone())),
+            ("status", Json::Num(r.status as f64)),
+        ])
+        .to_string();
+        let _ = write_response(&mut stream, r.status, "application/json", body.as_bytes());
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+fn handle_inner(stream: &mut TcpStream, ctx: &ServerCtx) -> Result<(), Refusal> {
+    let (head, leftover) = read_head(stream)?;
+    let (method, path, headers) = parse_head(&head)?;
+    match (method.as_str(), path.as_str()) {
+        ("GET", "/v1/healthz") => {
+            let body = healthz_json(&ctx.info).to_string();
+            write_response(stream, 200, "application/json", body.as_bytes())
+                .map_err(io_refusal)
+        }
+        ("GET", "/v1/metrics") => {
+            let body = ctx.metrics.render(&ctx.info);
+            write_response(
+                stream,
+                200,
+                "text/plain; version=0.0.4; charset=utf-8",
+                body.as_bytes(),
+            )
+            .map_err(io_refusal)
+        }
+        ("POST", "/v1/generate") => {
+            let body = read_body(stream, &headers, leftover, ctx.cfg.max_body_bytes)?;
+            generate(stream, ctx, &body)
+        }
+        (_, "/v1/healthz") | (_, "/v1/metrics") | (_, "/v1/generate") => Err(Refusal::new(
+            405,
+            "method_not_allowed",
+            format!("{method} is not supported on {path}"),
+        )),
+        _ => Err(Refusal::new(404, "not_found", format!("no route for {path}"))),
+    }
+}
+
+fn generate(stream: &mut TcpStream, ctx: &ServerCtx, body: &[u8]) -> Result<(), Refusal> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| Refusal::new(400, "malformed_request", "body is not UTF-8"))?;
+    let json = Json::parse(text)
+        .map_err(|e| Refusal::new(400, "malformed_request", format!("body is not JSON: {e}")))?;
+    let prompt_json = json
+        .get("prompt")
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| {
+            Refusal::new(400, "malformed_request", "'prompt' must be an array of token ids")
+        })?;
+    let mut prompt = Vec::with_capacity(prompt_json.len());
+    for v in prompt_json {
+        let n = v.as_f64().filter(|x| x.is_finite() && *x >= 0.0 && x.fract() == 0.0);
+        match n {
+            Some(x) => prompt.push(x as usize),
+            None => {
+                return Err(Refusal::new(
+                    400,
+                    "malformed_request",
+                    format!("prompt element {v:?} is not a non-negative integer"),
+                ))
+            }
+        }
+    }
+    if prompt.is_empty() {
+        return Err(Refusal::new(400, "malformed_request", "prompt is empty"));
+    }
+    let dims = &ctx.info.dims;
+    if let Some(&t) = prompt.iter().find(|&&t| t >= dims.vocab) {
+        return Err(Refusal::new(
+            400,
+            "bad_token",
+            format!("token {t} out of range for vocab {}", dims.vocab),
+        ));
+    }
+    if prompt.len() >= dims.seq_len {
+        return Err(Refusal::new(
+            400,
+            "prompt_too_long",
+            format!(
+                "prompt of {} tokens leaves no room to generate within seq_len {}",
+                prompt.len(),
+                dims.seq_len
+            ),
+        ));
+    }
+    let max_new = match json.get("max_new") {
+        None => ctx.cfg.max_new_tokens,
+        Some(v) => match v.as_f64().filter(|x| x.fract() == 0.0 && *x >= 1.0) {
+            Some(x) => (x as usize).min(ctx.cfg.max_new_tokens),
+            None => {
+                return Err(Refusal::new(
+                    400,
+                    "malformed_request",
+                    "'max_new' must be a positive integer",
+                ))
+            }
+        },
+    };
+    let streaming = json.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+
+    let (tx, rx) = mpsc::channel();
+    ctx.jobs
+        .send(Job { prompt, max_new, events: tx })
+        .map_err(|_| Refusal::new(500, "shutting_down", "server is shutting down"))?;
+
+    if streaming {
+        stream_response(stream, &rx).map_err(io_refusal)
+    } else {
+        loop {
+            match rx.recv_timeout(RESULT_TIMEOUT) {
+                Ok(Event::Token { .. }) => continue,
+                Ok(Event::Done(res)) => {
+                    let body = obj(vec![
+                        ("tokens", nums(&res.tokens)),
+                        ("logits_crcs", crcs(&res.crcs)),
+                        ("model", healthz_model(&ctx.info)),
+                    ])
+                    .to_string();
+                    return write_response(stream, 200, "application/json", body.as_bytes())
+                        .map_err(io_refusal);
+                }
+                Ok(Event::Failed(e)) => return Err(Refusal::new(500, "generation_failed", e)),
+                Err(_) => {
+                    return Err(Refusal::new(500, "timeout", "generation timed out"))
+                }
+            }
+        }
+    }
+}
+
+/// Chunked transfer encoding: one JSON line per token event, then a
+/// final summary line, then the zero-length terminating chunk.
+fn stream_response(stream: &mut TcpStream, rx: &Receiver<Event>) -> std::io::Result<()> {
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+          Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+    )?;
+    loop {
+        match rx.recv_timeout(RESULT_TIMEOUT) {
+            Ok(Event::Token { step, token, crc }) => {
+                let line = obj(vec![
+                    ("step", Json::Num(step as f64)),
+                    ("token", Json::Num(token as f64)),
+                    ("crc", Json::Num(crc as f64)),
+                ])
+                .to_string();
+                write_chunk(stream, &line)?;
+            }
+            Ok(Event::Done(res)) => {
+                let line = obj(vec![
+                    ("done", Json::Bool(true)),
+                    ("tokens", nums(&res.tokens)),
+                    ("logits_crcs", crcs(&res.crcs)),
+                ])
+                .to_string();
+                write_chunk(stream, &line)?;
+                break;
+            }
+            Ok(Event::Failed(e)) => {
+                let line = obj(vec![
+                    ("done", Json::Bool(true)),
+                    ("error", Json::Str(e)),
+                ])
+                .to_string();
+                write_chunk(stream, &line)?;
+                break;
+            }
+            Err(_) => {
+                write_chunk(stream, r#"{"done":true,"error":"generation timed out"}"#)?;
+                break;
+            }
+        }
+    }
+    stream.write_all(b"0\r\n\r\n")
+}
+
+fn write_chunk(stream: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    let data = format!("{line}\n");
+    stream.write_all(format!("{:x}\r\n", data.len()).as_bytes())?;
+    stream.write_all(data.as_bytes())?;
+    stream.write_all(b"\r\n")
+}
+
+fn nums(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn crcs(xs: &[u32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn healthz_model(info: &ModelInfo) -> Json {
+    obj(vec![
+        ("size", Json::Str(info.size.clone())),
+        ("recipe", Json::Str(info.recipe.clone())),
+        ("step", Json::Num(info.step as f64)),
+        ("fmt", Json::Str(fmt_name(info.fmt).into())),
+        ("mode", Json::Str(info.mode.as_str().into())),
+        ("vocab", Json::Num(info.dims.vocab as f64)),
+        ("seq_len", Json::Num(info.dims.seq_len as f64)),
+    ])
+}
+
+fn healthz_json(info: &ModelInfo) -> Json {
+    obj(vec![
+        ("status", Json::Str("ok".into())),
+        ("model", healthz_model(info)),
+        ("resident_fp8_bytes", Json::Num(info.resident_fp8_bytes as f64)),
+        ("resident_f32_bytes", Json::Num(info.resident_f32_bytes as f64)),
+        ("f32_equiv_bytes", Json::Num(info.f32_equiv_bytes as f64)),
+    ])
+}
+
+fn io_refusal(e: std::io::Error) -> Refusal {
+    Refusal::new(500, "io_error", e.to_string())
+}
+
+/// Read the request head (through `\r\n\r\n`), returning it plus any
+/// body bytes that arrived in the same reads.
+fn read_head(stream: &mut TcpStream) -> Result<(Vec<u8>, Vec<u8>), Refusal> {
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        if let Some(pos) = find_head_end(&buf) {
+            let leftover = buf.split_off(pos + 4);
+            return Ok((buf, leftover));
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err(Refusal::new(
+                431,
+                "oversized_header",
+                format!("request head exceeds {MAX_HEADER_BYTES} bytes"),
+            ));
+        }
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| Refusal::new(400, "malformed_request", format!("read error: {e}")))?;
+        if n == 0 {
+            return Err(Refusal::new(400, "malformed_request", "truncated request head"));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Parse the request line and headers (header names lowercased).
+#[allow(clippy::type_complexity)]
+fn parse_head(head: &[u8]) -> Result<(String, String, Vec<(String, String)>), Refusal> {
+    let text = std::str::from_utf8(head)
+        .map_err(|_| Refusal::new(400, "malformed_request", "request head is not UTF-8"))?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(Refusal::new(
+            400,
+            "malformed_request",
+            format!("bad request line '{request_line}'"),
+        ));
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(Refusal::new(
+                400,
+                "malformed_request",
+                format!("bad header line '{line}'"),
+            ));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    Ok((method, path, headers))
+}
+
+/// Read the request body. Requires `Content-Length` (411 without);
+/// a declared length beyond the cap is a typed 413 ([`OversizedBody`])
+/// refused **before** reading the payload.
+fn read_body(
+    stream: &mut TcpStream,
+    headers: &[(String, String)],
+    mut body: Vec<u8>,
+    limit: usize,
+) -> Result<Vec<u8>, Refusal> {
+    let len = headers
+        .iter()
+        .find(|(n, _)| n == "content-length")
+        .ok_or_else(|| {
+            Refusal::new(411, "length_required", "Content-Length header is required")
+        })?
+        .1
+        .parse::<usize>()
+        .map_err(|_| Refusal::new(400, "malformed_request", "bad Content-Length"))?;
+    if len > limit {
+        let refusal = OversizedBody { len_at_least: len, limit };
+        return Err(Refusal::new(413, "oversized_body", refusal.to_string()));
+    }
+    // over-read from the head phase can't exceed the declared length
+    // on well-formed requests; tolerate trailing junk by truncating
+    body.truncate(len);
+    let mut chunk = [0u8; 4096];
+    while body.len() < len {
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| Refusal::new(400, "malformed_request", format!("read error: {e}")))?;
+        if n == 0 {
+            return Err(Refusal::new(400, "malformed_request", "truncated request body"));
+        }
+        let want = (len - body.len()).min(n);
+        body.extend_from_slice(&chunk[..want]);
+    }
+    Ok(body)
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        _ => "Internal Server Error",
+    };
+    stream.write_all(
+        format!(
+            "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        )
+        .as_bytes(),
+    )?;
+    stream.write_all(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_keys_validates_each_field() {
+        assert!(ServeConfig::from_keys("", 0, 8, 5, 1024, 64, "e4m3").is_err());
+        assert!(ServeConfig::from_keys("127.0.0.1", 70000, 8, 5, 1024, 64, "e4m3")
+            .unwrap_err()
+            .contains("serve_port"));
+        assert!(ServeConfig::from_keys("127.0.0.1", 0, 0, 5, 1024, 64, "e4m3")
+            .unwrap_err()
+            .contains("serve_batch"));
+        assert!(ServeConfig::from_keys("127.0.0.1", 0, 8, 5, 0, 64, "e4m3")
+            .unwrap_err()
+            .contains("serve_max_body_bytes"));
+        assert!(ServeConfig::from_keys("127.0.0.1", 0, 8, 5, 1024, 0, "e4m3")
+            .unwrap_err()
+            .contains("serve_max_new_tokens"));
+        assert!(ServeConfig::from_keys("127.0.0.1", 0, 8, 5, 1024, 64, "fp16")
+            .unwrap_err()
+            .contains("serve_fmt"));
+        let c = ServeConfig::from_keys("0.0.0.0", 8080, 4, 0, 1024, 8, "e5m2").unwrap();
+        assert_eq!(c.port, 8080);
+        assert_eq!(c.fmt, E5M2);
+    }
+
+    #[test]
+    fn oversized_body_display_names_the_key() {
+        let e = OversizedBody { len_at_least: 2048, limit: 1024 };
+        let s = e.to_string();
+        assert!(s.contains("2048") && s.contains("serve_max_body_bytes = 1024"), "{s}");
+    }
+
+    #[test]
+    fn head_end_detection() {
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n\r\nbody"), Some(14));
+        assert_eq!(find_head_end(b"partial\r\n"), None);
+    }
+
+    #[test]
+    fn parse_head_rejects_garbage() {
+        assert!(parse_head(b"\r\n").is_err());
+        assert!(parse_head(b"GET /x\r\n").is_err());
+        let (m, p, h) =
+            parse_head(b"POST /v1/generate HTTP/1.1\r\nContent-Length: 12\r\n").unwrap();
+        assert_eq!(m, "POST");
+        assert_eq!(p, "/v1/generate");
+        assert_eq!(h[0], ("content-length".to_string(), "12".to_string()));
+    }
+}

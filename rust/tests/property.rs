@@ -6,10 +6,12 @@ use fp8_trainer::analysis::correlation::channel_correlations;
 use fp8_trainer::coordinator::allreduce::{
     allreduce_mean, clip_factor, global_norm, tree_reduce_sum,
 };
+use fp8_trainer::coordinator::folding::fold_scales;
 use fp8_trainer::data::corpus::{Corpus, CorpusConfig};
 use fp8_trainer::fp8::{self, E4M3, E5M2};
 use fp8_trainer::optimizer::ShardLayout;
 use fp8_trainer::scaling::{AmaxHistory, Policy, ScaleDecision};
+use fp8_trainer::serving::{channel_scales, swiglu_products};
 use fp8_trainer::util::json::Json;
 use fp8_trainer::util::proptest::{gen, Prop};
 use fp8_trainer::util::prng::Rng;
@@ -583,4 +585,142 @@ fn prop_correlation_bounded_and_symmetric() {
             })
         },
     );
+}
+
+// --- Smooth-SwiGLU folding (paper §4.4), promoted from the
+// --- smooth_swiglu_inference example into asserted properties.
+
+/// Folding pow2 scales into w1 (w̃1 = s·w1) makes the plain SwiGLU
+/// product **bitwise** equal to the per-channel-scaled product: pow2
+/// multiplication commutes with f32 rounding, so s·(a1·a2·σ(a2)) ==
+/// (s·a1)·a2·σ(a2) down to the last mantissa bit.
+#[test]
+fn prop_swiglu_fold_bit_exact_for_pow2_scales() {
+    Prop::new(200).check(
+        "swiglu-fold-bits",
+        |r| {
+            let d = gen::usize_in(r, 2, 24);
+            let f = gen::usize_in(r, 1, 12);
+            let t = gen::usize_in(r, 1, 8);
+            let w1: Vec<f32> = (0..d * f).map(|_| gen::f32_finite(r, -2.0, 2.0)).collect();
+            let w2: Vec<f32> = (0..d * f).map(|_| gen::f32_finite(r, -2.0, 2.0)).collect();
+            let w3: Vec<f32> = (0..f * d).map(|_| gen::f32_finite(r, -2.0, 2.0)).collect();
+            let xs: Vec<f32> = (0..t * d).map(|_| gen::f32_finite(r, -2.0, 2.0)).collect();
+            let fmt = if r.next_u64() % 2 == 0 { E4M3 } else { E5M2 };
+            (d, f, t, w1, w2, w3, xs, fmt)
+        },
+        |(d, f, t, w1, w2, w3, xs, fmt)| {
+            let h = swiglu_products(xs, w1, w2, *t, *d, *f);
+            // pow2 commutation holds except through the subnormal floor;
+            // random moderate inputs essentially never land there, but a
+            // property test must not flake on the measure-zero tail
+            if h.iter().any(|x| x.abs() != 0.0 && x.abs() < 1e-20) {
+                return true;
+            }
+            let s = channel_scales(*fmt, &h, *t, *f);
+            let mut w1f = w1.clone();
+            let mut w3f = w3.clone();
+            fold_scales(&mut w1f, &mut w3f, std::slice::from_ref(&s), *d, *f).unwrap();
+            let hf = swiglu_products(xs, &w1f, w2, *t, *d, *f);
+            for ti in 0..*t {
+                for j in 0..*f {
+                    let want = h[ti * f + j] * s[j];
+                    let got = hf[ti * f + j];
+                    if want.to_bits() != got.to_bits() && !(want.is_nan() && got.is_nan()) {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// The example's outlier-channel payload, asserted: one aligned large
+/// channel (the quadratic blow-up) gets a taming scale < 1, and the
+/// folded product still matches the scaled product bit-for-bit.
+#[test]
+fn swiglu_fold_bit_exact_with_outlier_channel() {
+    let (d, f, n_tokens) = (32, 16, 64);
+    let mut rng = Rng::new(42);
+    let mut w1 = vec![0.0f32; d * f];
+    let mut w2 = vec![0.0f32; d * f];
+    let mut w3 = vec![0.0f32; f * d];
+    rng.fill_normal(&mut w1, 0.4);
+    rng.fill_normal(&mut w2, 0.4);
+    rng.fill_normal(&mut w3, 0.4);
+    for i in 0..d {
+        let a = w2[i * f + 3] * 20.0; // aligned + large
+        w1[i * f + 3] = a;
+        w2[i * f + 3] = a;
+    }
+    let mut xs = vec![0.0f32; n_tokens * d];
+    rng.fill_normal(&mut xs, 1.0);
+
+    let h = swiglu_products(&xs, &w1, &w2, n_tokens, d, f);
+    let s = channel_scales(E4M3, &h, n_tokens, f);
+    assert!(s[3] < 1.0, "the outlier channel must get a taming scale, got {}", s[3]);
+    assert!(s.iter().all(|&v| v > 0.0 && (v.to_bits() & 0x007f_ffff) == 0), "pow2 scales");
+
+    let mut w1f = w1.clone();
+    let mut w3f = w3.clone();
+    fold_scales(&mut w1f, &mut w3f, std::slice::from_ref(&s), d, f).unwrap();
+    let hf = swiglu_products(&xs, &w1f, &w2, n_tokens, d, f);
+    for t in 0..n_tokens {
+        for j in 0..f {
+            assert_eq!(
+                (h[t * f + j] * s[j]).to_bits(),
+                hf[t * f + j].to_bits(),
+                "fold mismatch at token {t} channel {j}"
+            );
+        }
+    }
+}
+
+/// NaN payloads propagate identically through both paths: a NaN input
+/// lane poisons its token's products in the folded form exactly where
+/// it poisons the scaled form.
+#[test]
+fn swiglu_fold_propagates_nan_payloads() {
+    let (d, f, t) = (4, 3, 2);
+    let mut w1 = vec![0.5f32; d * f];
+    let w2 = vec![0.25f32; d * f];
+    let mut w3 = vec![1.0f32; f * d];
+    let mut xs = vec![1.0f32; t * d];
+    xs[0] = f32::NAN; // token 0 poisoned, token 1 clean
+
+    let h = swiglu_products(&xs, &w1, &w2, t, d, f);
+    assert!(h[..f].iter().all(|x| x.is_nan()), "token 0 products must be NaN");
+    assert!(h[f..].iter().all(|x| x.is_finite()), "token 1 must be untouched");
+
+    let s = vec![0.5f32, 4.0, 1.0];
+    fold_scales(&mut w1, &mut w3, std::slice::from_ref(&s), d, f).unwrap();
+    let hf = swiglu_products(&xs, &w1, &w2, t, d, f);
+    for (k, (&got, &base)) in hf.iter().zip(&h).enumerate() {
+        let want = base * s[k % f];
+        assert!(
+            got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()),
+            "lane {k}: folded {got:e} vs scaled {want:e}"
+        );
+    }
+}
+
+/// Signed zero survives the fold: a −0.0 SwiGLU product stays −0.0 in
+/// the folded path (pow2 scaling never flips the sign bit).
+#[test]
+fn swiglu_fold_preserves_signed_zero() {
+    let (d, f, t) = (1, 1, 1);
+    // a1 = +0.0, a2 = −1.0 → h = (+0.0 · −1.0)·σ = −0.0
+    let mut w1 = vec![0.0f32];
+    let w2 = vec![-1.0f32];
+    let mut w3 = vec![1.0f32];
+    let xs = vec![1.0f32];
+    let h = swiglu_products(&xs, &w1, &w2, t, d, f);
+    assert_eq!(h[0].to_bits(), (-0.0f32).to_bits(), "payload must be a negative zero");
+
+    let s = vec![4.0f32];
+    fold_scales(&mut w1, &mut w3, std::slice::from_ref(&s), d, f).unwrap();
+    let hf = swiglu_products(&xs, &w1, &w2, t, d, f);
+    assert_eq!(hf[0].to_bits(), (h[0] * s[0]).to_bits());
+    assert_eq!(hf[0].to_bits(), (-0.0f32).to_bits(), "fold must not launder −0.0 into +0.0");
 }

@@ -1,0 +1,450 @@
+//! End-to-end serving conformance suite: real-socket round-trips
+//! against the `serving::` HTTP layer on an ephemeral port.
+//!
+//! The headline property (paper §4.4): folded-FP8 serving is
+//! **bit-identical** to the unfolded scaled reference — same artifact,
+//! two servers, identical tokens and per-step logits CRCs over the
+//! wire. Around it: healthz/metrics, deterministic generation, batched
+//! concurrent clients vs serial, streaming chunk reassembly, typed
+//! 4xx refusals for malformed/oversized requests, and export refusing
+//! on fold mismatch or payload corruption.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+use fp8_trainer::fp8::{Fp8Format, E4M3, E5M2};
+use fp8_trainer::runtime::manifest::ModelDims;
+use fp8_trainer::serving::export::synth_state_for;
+use fp8_trainer::serving::{
+    export_state, probe_tokens_for, serve, Engine, ExportOptions, ExportReport, ServeConfig,
+    ServeMode, ServerHandle,
+};
+use fp8_trainer::util::json::Json;
+use fp8_trainer::util::proptest::Prop;
+use fp8_trainer::util::prng::Rng;
+
+// ---------------------------------------------------------------- helpers
+
+/// Small ragged dims (not a preset — exercises the explicit-dims
+/// export path and keeps the suite fast).
+fn dims_small() -> ModelDims {
+    ModelDims { vocab: 48, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 12, seq_len: 24 }
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fp8_serving_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn export_small(tag: &str, seed: u64, fmt: Fp8Format) -> (PathBuf, ExportReport) {
+    let dir = fresh_dir(tag);
+    let dims = dims_small();
+    let st = synth_state_for("custom", &dims, seed);
+    let opts =
+        ExportOptions { fmt, probe_tokens: 6, dims: Some(dims), ..Default::default() };
+    let path = dir.join("model.fp8m");
+    let report = export_state(&st, &path, &opts).unwrap();
+    (path, report)
+}
+
+fn serve_small(path: &std::path::Path, mode: ServeMode, batch: usize) -> ServerHandle {
+    let engine = Engine::load(path, mode).unwrap();
+    let cfg = ServeConfig { batch, batch_wait_ms: 30, ..ServeConfig::default() };
+    serve(engine, &cfg).unwrap()
+}
+
+/// Raw HTTP/1.1 round-trip: write the request, read to EOF (the server
+/// closes per response), parse status + body (chunk-decoding when the
+/// response is chunked).
+fn http(addr: SocketAddr, req: &[u8]) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(req).unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).unwrap();
+    parse_http(&raw)
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    http(
+        addr,
+        format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").as_bytes(),
+    )
+}
+
+fn post_json(addr: SocketAddr, path: &str, body: &str) -> (u16, String) {
+    http(
+        addr,
+        format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )
+}
+
+fn parse_http(raw: &[u8]) -> (u16, String) {
+    let pos = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("response has a head/body split");
+    let head = std::str::from_utf8(&raw[..pos]).unwrap();
+    let body = &raw[pos + 4..];
+    let status: u16 = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .expect("status line");
+    let chunked = head
+        .lines()
+        .any(|l| l.to_ascii_lowercase().replace(' ', "") == "transfer-encoding:chunked");
+    let body = if chunked { decode_chunked(body) } else { body.to_vec() };
+    (status, String::from_utf8(body).unwrap())
+}
+
+fn decode_chunked(mut body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    loop {
+        let eol = body.windows(2).position(|w| w == b"\r\n").expect("chunk size line");
+        let size = usize::from_str_radix(
+            std::str::from_utf8(&body[..eol]).unwrap().trim(),
+            16,
+        )
+        .expect("hex chunk size");
+        body = &body[eol + 2..];
+        if size == 0 {
+            return out;
+        }
+        out.extend_from_slice(&body[..size]);
+        body = &body[size + 2..]; // skip trailing \r\n
+    }
+}
+
+fn gen_body(prompt: &[usize], max_new: usize, stream: bool) -> String {
+    let ids: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!(
+        "{{\"prompt\":[{}],\"max_new\":{max_new},\"stream\":{stream}}}",
+        ids.join(",")
+    )
+}
+
+fn tokens_and_crcs(body: &str) -> (Vec<usize>, Vec<u64>) {
+    let j = Json::parse(body).unwrap();
+    let toks = j
+        .get("tokens")
+        .and_then(|t| t.as_arr())
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap())
+        .collect();
+    let crcs = j
+        .get("logits_crcs")
+        .and_then(|t| t.as_arr())
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as u64)
+        .collect();
+    (toks, crcs)
+}
+
+// ------------------------------------------------------------------ tests
+
+#[test]
+fn healthz_and_metrics_over_socket() {
+    let (path, report) = export_small("healthz", 11, E4M3);
+    let server = serve_small(&path, ServeMode::Folded, 4);
+    let addr = server.addr();
+
+    let (status, body) = get(addr, "/v1/healthz");
+    assert_eq!(status, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.str_or("status", ""), "ok");
+    let model = j.get("model").unwrap();
+    assert_eq!(model.str_or("size", ""), "custom");
+    assert_eq!(model.str_or("mode", ""), "folded");
+    assert_eq!(
+        j.usize_of("resident_fp8_bytes").unwrap(),
+        report.resident_fp8_bytes,
+        "healthz reports the measured FP8 residency"
+    );
+
+    let (_, _) = post_json(addr, "/v1/generate", &gen_body(&[1, 2, 3], 2, false));
+    let (status, text) = get(addr, "/v1/metrics");
+    assert_eq!(status, 200);
+    for needle in [
+        "# TYPE fp8_serve_requests_total counter",
+        "fp8_serve_batches_total",
+        "fp8_serve_generated_tokens_total",
+        "fp8_serve_resident_fp8_bytes",
+        "fp8_serve_model_info{size=\"custom\"",
+    ] {
+        assert!(text.contains(needle), "metrics missing {needle}:\n{text}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn generate_is_deterministic_and_matches_in_process() {
+    let (path, _) = export_small("determinism", 12, E4M3);
+    let server = serve_small(&path, ServeMode::Folded, 4);
+    let addr = server.addr();
+    let prompt = [3usize, 14, 15, 9, 2];
+
+    let (s1, b1) = post_json(addr, "/v1/generate", &gen_body(&prompt, 6, false));
+    let (s2, b2) = post_json(addr, "/v1/generate", &gen_body(&prompt, 6, false));
+    assert_eq!((s1, s2), (200, 200), "{b1}\n{b2}");
+    let (t1, c1) = tokens_and_crcs(&b1);
+    let (t2, c2) = tokens_and_crcs(&b2);
+    assert_eq!(t1, t2, "served generation must be deterministic");
+    assert_eq!(c1, c2);
+    assert_eq!(t1.len(), 6);
+
+    // the socket layer adds nothing: in-process generation agrees
+    let mut engine = Engine::load(&path, ServeMode::Folded).unwrap();
+    let direct = engine.generate_batch(&[prompt.to_vec()], &[6], |_, _, _, _| {}).unwrap();
+    assert_eq!(direct[0].tokens, t1);
+    assert_eq!(direct[0].crcs.iter().map(|&c| c as u64).collect::<Vec<_>>(), c1);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_batched_clients_match_serial() {
+    let (path, _) = export_small("batched", 13, E4M3);
+    let server = serve_small(&path, ServeMode::Folded, 4);
+    let addr = server.addr();
+    let prompts: Vec<Vec<usize>> =
+        vec![vec![1, 2, 3], vec![40, 7], vec![5, 6, 7, 8, 9], vec![21]];
+
+    // serial: each request rides its own batch
+    let serial: Vec<(Vec<usize>, Vec<u64>)> = prompts
+        .iter()
+        .map(|p| {
+            let (s, b) = post_json(addr, "/v1/generate", &gen_body(p, 5, false));
+            assert_eq!(s, 200, "{b}");
+            tokens_and_crcs(&b)
+        })
+        .collect();
+
+    // concurrent: the batcher may coalesce any subset of these
+    let handles: Vec<_> = prompts
+        .iter()
+        .cloned()
+        .map(|p| {
+            std::thread::spawn(move || {
+                let (s, b) = post_json(addr, "/v1/generate", &gen_body(&p, 5, false));
+                assert_eq!(s, 200, "{b}");
+                tokens_and_crcs(&b)
+            })
+        })
+        .collect();
+    let concurrent: Vec<(Vec<usize>, Vec<u64>)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    assert_eq!(
+        serial, concurrent,
+        "batched concurrent serving must be token- and bit-identical to serial"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn streaming_chunks_reassemble_to_the_nonstreaming_result() {
+    let (path, _) = export_small("streaming", 14, E4M3);
+    let server = serve_small(&path, ServeMode::Folded, 2);
+    let addr = server.addr();
+    let prompt = [8usize, 9, 10];
+
+    let (s_plain, b_plain) = post_json(addr, "/v1/generate", &gen_body(&prompt, 5, false));
+    assert_eq!(s_plain, 200, "{b_plain}");
+    let (tokens, crcs) = tokens_and_crcs(&b_plain);
+
+    let (s_stream, b_stream) = post_json(addr, "/v1/generate", &gen_body(&prompt, 5, true));
+    assert_eq!(s_stream, 200, "{b_stream}");
+    let lines: Vec<&str> = b_stream.lines().filter(|l| !l.is_empty()).collect();
+    assert_eq!(lines.len(), tokens.len() + 1, "one event per token + summary: {b_stream}");
+    for (step, line) in lines[..tokens.len()].iter().enumerate() {
+        let e = Json::parse(line).unwrap();
+        assert_eq!(e.usize_of("step").unwrap(), step);
+        assert_eq!(e.usize_of("token").unwrap(), tokens[step], "stream diverges at {step}");
+        assert_eq!(e.f64_of("crc").unwrap() as u64, crcs[step]);
+    }
+    let done = Json::parse(lines[tokens.len()]).unwrap();
+    assert_eq!(done.get("done").and_then(|d| d.as_bool()), Some(true));
+    let (final_tokens, final_crcs) = tokens_and_crcs(lines[tokens.len()]);
+    assert_eq!(final_tokens, tokens, "summary line must equal the non-streaming result");
+    assert_eq!(final_crcs, crcs);
+    server.shutdown();
+}
+
+#[test]
+fn malformed_and_oversized_requests_get_typed_refusals() {
+    let (path, _) = export_small("refusals", 15, E4M3);
+    let engine = Engine::load(&path, ServeMode::Folded).unwrap();
+    let cfg = ServeConfig { max_body_bytes: 256, ..ServeConfig::default() };
+    let server = serve(engine, &cfg).unwrap();
+    let addr = server.addr();
+
+    let expect = |status: u16, kind: &str, (got, body): (u16, String)| {
+        assert_eq!(got, status, "{body}");
+        let j = Json::parse(&body).unwrap_or_else(|e| panic!("refusal not JSON ({e}): {body}"));
+        assert_eq!(j.str_or("error", ""), kind, "{body}");
+        assert_eq!(j.usize_of("status").unwrap(), status as usize);
+    };
+
+    expect(400, "malformed_request", post_json(addr, "/v1/generate", "{not json"));
+    expect(400, "malformed_request", post_json(addr, "/v1/generate", r#"{"prompt":"hi"}"#));
+    expect(
+        400,
+        "malformed_request",
+        post_json(addr, "/v1/generate", r#"{"prompt":[1,2.5]}"#),
+    );
+    expect(400, "malformed_request", post_json(addr, "/v1/generate", r#"{"prompt":[]}"#));
+    expect(400, "bad_token", post_json(addr, "/v1/generate", r#"{"prompt":[1,999]}"#));
+    let long: Vec<usize> = (0..30).map(|i| i % 40).collect();
+    expect(400, "prompt_too_long", post_json(addr, "/v1/generate", &gen_body(&long, 1, false)));
+    expect(404, "not_found", get(addr, "/nope"));
+    expect(405, "method_not_allowed", get(addr, "/v1/generate"));
+
+    // oversized body: refused from the declared Content-Length, and the
+    // refusal names the limit it broke
+    let big = gen_body(&(0..40).map(|i| i % 40).collect::<Vec<_>>(), 1, false) + &" ".repeat(300);
+    let (status, body) = post_json(addr, "/v1/generate", &big);
+    assert_eq!(status, 413, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.str_or("error", ""), "oversized_body");
+    assert!(
+        j.str_or("detail", "").contains("serve_max_body_bytes = 256"),
+        "refusal must name the limit: {body}"
+    );
+
+    // no Content-Length at all
+    let (status, _) = http(
+        addr,
+        b"POST /v1/generate HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(status, 411);
+
+    // none of that killed the server
+    let (status, _) = get(addr, "/v1/healthz");
+    assert_eq!(status, 200, "server must survive refused requests");
+    let (status, body) = post_json(addr, "/v1/generate", &gen_body(&[1, 2], 2, false));
+    assert_eq!(status, 200, "{body}");
+    server.shutdown();
+}
+
+#[test]
+fn folded_serving_is_bit_identical_to_scaled_reference_over_socket() {
+    let (path, _) = export_small("foldgate", 16, E4M3);
+    let folded = serve_small(&path, ServeMode::Folded, 4);
+    let reference = serve_small(&path, ServeMode::ScaledReference, 4);
+
+    for prompt in [vec![1usize, 2, 3, 4], vec![47, 0, 13], vec![9]] {
+        let body = gen_body(&prompt, 8, false);
+        let (sf, bf) = post_json(folded.addr(), "/v1/generate", &body);
+        let (sr, br) = post_json(reference.addr(), "/v1/generate", &body);
+        assert_eq!((sf, sr), (200, 200), "{bf}\n{br}");
+        let (tf, cf) = tokens_and_crcs(&bf);
+        let (tr, cr) = tokens_and_crcs(&br);
+        assert_eq!(tf, tr, "folded vs reference tokens diverged for {prompt:?}");
+        assert_eq!(
+            cf, cr,
+            "folded vs reference logits CRCs diverged for {prompt:?} — \
+             the fold is not bit-exact end to end"
+        );
+    }
+    folded.shutdown();
+    reference.shutdown();
+}
+
+#[test]
+fn export_refuses_on_fold_mismatch_and_writes_nothing() {
+    let dir = fresh_dir("foldrefuse");
+    let dims = dims_small();
+    let st = synth_state_for("custom", &dims, 17);
+    let opts = ExportOptions {
+        probe_tokens: 6,
+        dims: Some(dims),
+        corrupt_fold_for_test: true,
+        ..Default::default()
+    };
+    let path = dir.join("model.fp8m");
+    let err = export_state(&st, &path, &opts).unwrap_err().to_string();
+    assert!(err.contains("fold mismatch"), "got: {err}");
+    assert!(err.contains("refusing to export"), "got: {err}");
+    assert!(!path.exists(), "a refused export must not leave an artifact behind");
+}
+
+#[test]
+fn flipped_payload_bit_trips_the_crc_refusal() {
+    let (path, _) = export_small("crc", 18, E5M2);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = Engine::load(&path, ServeMode::Folded).unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch"), "got: {err}");
+}
+
+#[test]
+fn prop_export_roundtrip_reproduces_forward_bits_across_shapes() {
+    // fold → write → load → serve reproduces the probe forward bits
+    // across seeds × formats × ragged shapes; then one flipped payload
+    // bit must trip the CRC refusal
+    Prop::new(6).check(
+        "serving-export-roundtrip",
+        |r: &mut Rng| {
+            let heads = 1 + (r.next_u64() % 2) as usize;
+            let hd = if r.next_u64() % 2 == 0 { 4 } else { 8 };
+            let dims = ModelDims {
+                vocab: if r.next_u64() % 2 == 0 { 17 } else { 33 },
+                d_model: heads * hd,
+                n_layers: 1 + (r.next_u64() % 2) as usize,
+                n_heads: heads,
+                d_ff: [5, 7, 12][(r.next_u64() % 3) as usize],
+                seq_len: 8 + (r.next_u64() % 5) as usize,
+            };
+            let fmt = if r.next_u64() % 2 == 0 { E4M3 } else { E5M2 };
+            (dims, fmt, r.next_u64())
+        },
+        |(dims, fmt, seed)| {
+            let dir = fresh_dir(&format!("prop_{seed:x}"));
+            let st = synth_state_for("custom", dims, *seed);
+            let opts = ExportOptions {
+                fmt: *fmt,
+                probe_tokens: 5,
+                dims: Some(dims.clone()),
+                ..Default::default()
+            };
+            let path = dir.join("model.fp8m");
+            let report = match export_state(&st, &path, &opts) {
+                Ok(r) => r,
+                Err(e) => panic!("export failed for {dims:?} {fmt:?} seed {seed}: {e}"),
+            };
+            // reload and replay the recorded probe: bits must reproduce
+            let mut engine = Engine::load(&path, ServeMode::Folded).unwrap();
+            let probe = probe_tokens_for(dims, opts.probe_seed, opts.probe_tokens);
+            let logits: Vec<f32> =
+                engine.forward_full(&probe).unwrap().into_iter().flatten().collect();
+            let bytes: Vec<u8> = logits.iter().flat_map(|x| x.to_le_bytes()).collect();
+            let crc = fp8_trainer::util::crc32(&bytes);
+            if crc != report.probe_crc {
+                return false;
+            }
+            // one flipped payload bit → load refuses
+            let mut raw = std::fs::read(&path).unwrap();
+            let mid = raw.len() / 2;
+            raw[mid] ^= 0x01;
+            std::fs::write(&path, &raw).unwrap();
+            let refused = Engine::load(&path, ServeMode::Folded)
+                .unwrap_err()
+                .to_string()
+                .contains("checksum mismatch");
+            let _ = std::fs::remove_dir_all(&dir);
+            refused
+        },
+    );
+}
